@@ -1,0 +1,84 @@
+//! Extensibility demo — the paper's central usability claim: "One can
+//! program almost all the graph algorithms through changing the Apply
+//! interface."
+//!
+//! Builds two *custom* algorithms the library does not ship, straight from
+//! the function-level DSL (builder + Apply expression language), translates
+//! them with the light-weight flow, and runs them — no new RTL, no new
+//! kernels, no framework changes.
+//!
+//! ```sh
+//! cargo run --release --example custom_algorithm
+//! ```
+
+use jgraph::dsl::apply::{ApplyExpr, BinOp, UnOp};
+use jgraph::dsl::builder::GasProgramBuilder;
+use jgraph::dsl::program::{Convergence, FrontierPolicy, InitPolicy, ReduceOp, StateType, Writeback};
+use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::graph::generate;
+use jgraph::translator::Translator;
+
+fn main() -> anyhow::Result<()> {
+    let graph = generate::rmat(11, 40_000, 0.57, 0.19, 0.19, 5);
+
+    // --- Custom #1: "hop-penalized distance" — SSSP where every hop also
+    //     costs sqrt(weight): Apply = src + w + sqrt(w), Reduce = min.
+    let hop_penalized = GasProgramBuilder::new("hop-penalized-sssp")
+        .state(StateType::F32)
+        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+        .apply(ApplyExpr::bin(
+            BinOp::Add,
+            ApplyExpr::src().add(ApplyExpr::weight()),
+            ApplyExpr::un(UnOp::Sqrt, ApplyExpr::weight()),
+        ))
+        .reduce(ReduceOp::Min)
+        .writeback(Writeback::MinCombine)
+        .frontier(FrontierPolicy::All)
+        .convergence(Convergence::NoChange)
+        .build()?;
+
+    // --- Custom #2: "reach score" — every vertex accumulates the squared
+    //     weights of incoming edges (one sweep): Apply = w*w, Reduce = sum.
+    let reach_score = GasProgramBuilder::new("reach-score")
+        .state(StateType::F32)
+        .apply(ApplyExpr::un(UnOp::Square, ApplyExpr::weight()))
+        .reduce(ReduceOp::Sum)
+        .convergence(Convergence::FixedIterations(1))
+        .build()?;
+
+    for program in [&hop_penalized, &reach_score] {
+        // the same translator that handled the library algorithms handles
+        // these: the Apply expression becomes an ALU chain
+        let design = Translator::jgraph().translate(program)?;
+        println!(
+            "custom algorithm {:?}: apply = {}, {} ALU op(s)/lane, {} HDL lines",
+            program.name,
+            program.apply.render(),
+            program.apply.op_count(),
+            design.hdl_lines
+        );
+        let mut ex = Executor::new(ExecutorConfig {
+            use_xla: false, // custom programs run on the software GAS engine
+            graph_name: "rmat-11".into(),
+            ..Default::default()
+        });
+        let report = ex.run(program, &design, &graph)?;
+        println!(
+            "  -> {} supersteps, {:.1} MTEPS simulated, {} edges traversed",
+            report.supersteps, report.simulated_mteps, report.edges_traversed
+        );
+    }
+
+    // sanity: hop-penalized distances dominate plain SSSP distances
+    let csr = jgraph::graph::csr::Csr::from_edgelist(&graph);
+    let plain = jgraph::engine::gas::run(&jgraph::dsl::algorithms::sssp(), &csr, 0, |_| {})?;
+    let penal = jgraph::engine::gas::run(&hop_penalized, &csr, 0, |_| {})?;
+    let dominated = plain
+        .values
+        .iter()
+        .zip(&penal.values)
+        .filter(|(p, _)| p.is_finite())
+        .all(|(p, q)| q + 1e-9 >= *p);
+    println!("hop-penalized >= plain SSSP on every reachable vertex: {dominated}");
+    Ok(())
+}

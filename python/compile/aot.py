@@ -1,0 +1,168 @@
+"""AOT compile path: lower every (algorithm x size-bucket) superstep to HLO
+*text* and write ``artifacts/manifest.json``.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once; afterwards the rust binary is self-contained (runtime/registry.rs reads
+the manifest, PJRT-compiles the HLO text at startup, and executes supersteps
+on the request path with zero Python).
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lower with ``return_tuple=True`` and
+unwrap with ``to_tuple*()`` on the rust side. See
+/opt/xla-example/load_hlo and aot_recipe.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.edge_program import DEFAULT_BLOCK, vmem_footprint_bytes
+
+# Size buckets (padded N vertices, M edges). M must be a multiple of the
+# Pallas block. Chosen to cover the paper's two evaluation graphs plus a
+# tiny bucket for tests/quickstart and a mid bucket for the examples:
+#   email-Eu-core      1,005 v /   25,571 e -> small
+#   soc-Slashdot0922  82,168 v /  948,464 e -> large
+BUCKETS = {
+    "tiny": (256, 4_096),
+    "small": (1_024, 32_768),
+    "medium": (8_192, 131_072),
+    "large": (131_072, 1_048_576),
+}
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Per-bucket Pallas edge-block cap. §Perf (EXPERIMENTS.md): under
+# interpret=True on CPU-PJRT, each grid step pays a full interpreter
+# dispatch + a copy of the resident state operand, so larger blocks win
+# (4096 -> 262144 = 13x on the large bucket, 0.69x of the pure-jnp
+# roofline). On a real TPU we would pick 4-16K blocks for double
+# buffering; the cap keeps per-step VMEM (state + 3 edge operands)
+# within a ~2.5 MB budget either way.
+BLOCK_CAP = 262_144
+
+
+def bucket_block(m, requested=None):
+    """Block size for a bucket: the requested override or min(m, cap)."""
+    if requested and requested != DEFAULT_BLOCK:
+        return requested
+    return min(m, BLOCK_CAP)
+
+
+def lower_one(algo, bucket, block=DEFAULT_BLOCK, use_pallas=True):
+    """Lower one superstep; returns (hlo_text, manifest entry)."""
+    n, m = BUCKETS[bucket]
+    block = bucket_block(m, block)
+    step = model.BUILDERS[algo](n, m, block=block, use_pallas=use_pallas)
+    specs = model.arg_specs(algo, n, m)
+    dt = {"i32": jax.numpy.int32, "f32": jax.numpy.float32}
+    avals = [jax.ShapeDtypeStruct(shape, dt[d]) for _, shape, d in specs]
+    t0 = time.perf_counter()
+    lowered = jax.jit(step).lower(*avals)
+    text = to_hlo_text(lowered)
+    lower_s = time.perf_counter() - t0
+    entry = {
+        "algo": algo,
+        "bucket": bucket,
+        "n": n,
+        "m": m,
+        "block": block,
+        "use_pallas": use_pallas,
+        "file": f"{algo}_{bucket}.hlo.txt",
+        "inputs": [
+            {"name": name, "shape": list(shape), "dtype": d}
+            for name, shape, d in specs
+        ],
+        "outputs": [
+            {"name": name, "shape": list(shape), "dtype": d}
+            for name, shape, d in model.out_specs(algo, n)
+        ],
+        "vmem_bytes": vmem_footprint_bytes(algo, n, m, block)
+        if algo in ("bfs", "sssp", "wcc", "pr", "spmv") else None,
+        "lower_seconds": round(lower_s, 3),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the sentinel artifact (Makefile stamp); "
+                         "all artifacts land in its directory")
+    ap.add_argument("--algos", default=",".join(model.ALGORITHMS))
+    ap.add_argument("--buckets", default=",".join(BUCKETS))
+    ap.add_argument("--block", type=int, default=DEFAULT_BLOCK)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of the "
+                         "Pallas kernel (debug/ablation)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    algos = [a for a in args.algos.split(",") if a]
+    buckets = [b for b in args.buckets.split(",") if b]
+
+    manifest = {"block": args.block, "buckets": {b: list(BUCKETS[b])
+                                                 for b in buckets},
+                "artifacts": []}
+    total = 0
+    for algo in algos:
+        for bucket in buckets:
+            text, entry = lower_one(algo, bucket, block=args.block,
+                                    use_pallas=not args.no_pallas)
+            path = os.path.join(out_dir, entry["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(entry)
+            total += len(text)
+            print(f"  lowered {algo:5s} {bucket:7s} "
+                  f"(N={entry['n']:>7} M={entry['m']:>9}) "
+                  f"-> {entry['file']} [{len(text)} chars, "
+                  f"{entry['lower_seconds']}s]", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the (dependency-free, offline) rust manifest parser:
+    # algo bucket n m block use_pallas file sha256 inputs outputs, where
+    # inputs/outputs are `name:dtype:elements` joined by `;` (scalar -> 0).
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# jgraph artifact manifest (see rust/src/runtime/artifact.rs)\n")
+        for e in manifest["artifacts"]:
+            def specs(key):
+                return ";".join(
+                    f"{t['name']}:{t['dtype']}:"
+                    f"{0 if not t['shape'] else t['shape'][0]}"
+                    for t in e[key])
+            f.write("\t".join([
+                e["algo"], e["bucket"], str(e["n"]), str(e["m"]),
+                str(e["block"]), "1" if e["use_pallas"] else "0",
+                e["file"], e["sha256"], specs("inputs"), specs("outputs"),
+            ]) + "\n")
+    # The Makefile sentinel: last so a partial run never looks complete.
+    with open(args.out, "w") as f:
+        f.write(f"# jgraph artifact sentinel: {len(manifest['artifacts'])} "
+                f"artifacts, {total} HLO chars\n")
+    print(f"wrote {len(manifest['artifacts'])} artifacts "
+          f"({total} HLO chars) to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""L1 — the edge-processing pipeline stage as a Pallas kernel.
+
+Hardware correspondence (see DESIGN.md §Hardware-Adaptation): the paper's
+FPGA datapath streams edges from DDR4 through a fixed-function "edge program"
+module while vertex state sits in BRAM. Here:
+
+  - the **edge arrays are blocked** over the Pallas grid (the BlockSpec is the
+    HBM->VMEM streaming schedule the paper expressed with pipeline lanes);
+  - the **vertex state is a whole-array operand** (the BRAM analogue — it is
+    resident for every grid step; <=512 KiB for our largest bucket);
+  - the per-edge operator (the DSL's ``Apply``) is selected at *build* time,
+    exactly like the translator wires a different Apply module per algorithm.
+
+``interpret=True`` is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO that the rust
+runtime executes. Real-TPU performance is estimated analytically in
+DESIGN.md/EXPERIMENTS.md §Perf from the VMEM footprint, not measured here.
+
+Every op here has a pure-jnp oracle in :mod:`compile.kernels.ref`; pytest +
+hypothesis compare them across shapes and dtypes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Python-scalar sentinels (pallas kernel bodies must not capture traced
+# jnp constants — scalars bake into the HLO as literals). Numerically equal
+# to ref.INF_I32 / ref.INF_F32.
+INF_I32 = 2**30
+INF_F32 = 3.0e38
+
+# Default edge-block size. 4096 edges x 4 B = 16 KiB per streamed operand —
+# large enough to amortize DMA, small enough to double-buffer. Swept in the
+# §Perf pass (see EXPERIMENTS.md).
+DEFAULT_BLOCK = 4096
+
+# op name -> (state dtype, message dtype, needs edge weights, needs cur_level)
+OPS = {
+    "bfs": (jnp.int32, jnp.int32, False, True),
+    "sssp": (jnp.float32, jnp.float32, True, False),
+    "wcc": (jnp.int32, jnp.int32, False, False),
+    "pr": (jnp.float32, jnp.float32, False, False),
+    "spmv": (jnp.float32, jnp.float32, True, False),
+}
+
+
+def _apply_op(op, gathered, weights, mask, cur_level):
+    """The DSL ``Apply`` stage: per-edge message from gathered source state.
+
+    Mirrors rust/src/dsl/apply.rs lowering and ref.py's edge_program_*.
+    """
+    if op == "bfs":
+        active = (gathered > 0) & mask
+        return jnp.where(active, cur_level + 1, INF_I32).astype(jnp.int32)
+    if op == "sssp":
+        return jnp.where(mask, gathered + weights, INF_F32).astype(jnp.float32)
+    if op == "wcc":
+        return jnp.where(mask, gathered, INF_I32).astype(jnp.int32)
+    if op == "pr":
+        return jnp.where(mask, gathered, 0.0).astype(jnp.float32)
+    if op == "spmv":
+        return jnp.where(mask, gathered * weights, 0.0).astype(jnp.float32)
+    raise ValueError(f"unknown edge op {op!r}")
+
+
+def _kernel(op, block, state_ref, src_ref, w_ref, ne_ref, lvl_ref, out_ref):
+    """Pallas kernel body for one edge block.
+
+    Refs (by BlockSpec):
+      state_ref : [N]    whole-array vertex state (BRAM analogue)
+      src_ref   : [B]    this block's source-vertex ids
+      w_ref     : [B]    this block's edge weights (None for unweighted ops)
+      ne_ref    : [1]    num_edges scalar
+      lvl_ref   : [1]    cur_level scalar (None unless op needs it)
+      out_ref   : [B]    per-edge messages out
+    """
+    pid = pl.program_id(0)
+    # Global edge indices covered by this block, for the padding mask.
+    idx = pid * block + jax.lax.iota(jnp.int32, block)
+    mask = idx < ne_ref[0]
+    state = state_ref[...]  # resident vertex state
+    src = src_ref[...]
+    gathered = state[src]  # the Gather/Receive stage
+    weights = w_ref[...] if w_ref is not None else None
+    cur_level = lvl_ref[0] if lvl_ref is not None else None
+    out_ref[...] = _apply_op(op, gathered, weights, mask, cur_level)
+
+
+@functools.lru_cache(maxsize=None)
+def make_edge_program(op, n, m, block=DEFAULT_BLOCK):
+    """Build the blocked edge-program callable for (op, N, M).
+
+    Returns a function with the op-specific positional signature:
+      bfs : (state[N]i32, src[M]i32, num_edges[1]i32, cur_level[1]i32)
+      sssp: (state[N]f32, src[M]i32, w[M]f32, num_edges[1]i32)
+      wcc : (state[N]i32, src[M]i32, num_edges[1]i32)
+      pr  : (state[N]f32, src[M]i32, num_edges[1]i32)
+      spmv: (state[N]f32, src[M]i32, w[M]f32, num_edges[1]i32)
+    producing per-edge messages [M].
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown edge op {op!r}; have {sorted(OPS)}")
+    if m % block != 0:
+        raise ValueError(f"padded edge count {m} must be a multiple of "
+                         f"block {block}")
+    state_dt, msg_dt, needs_w, needs_lvl = OPS[op]
+    grid = (m // block,)
+
+    whole_state = pl.BlockSpec((n,), lambda i: (0,))
+    edge_block = pl.BlockSpec((block,), lambda i: (i,))
+    scalar1 = pl.BlockSpec((1,), lambda i: (0,))
+
+    in_specs = [whole_state, edge_block]
+    if needs_w:
+        in_specs.append(edge_block)
+    in_specs.append(scalar1)
+    if needs_lvl:
+        in_specs.append(scalar1)
+
+    def body(*refs):
+        state_ref, src_ref = refs[0], refs[1]
+        k = 2
+        w_ref = None
+        if needs_w:
+            w_ref = refs[k]
+            k += 1
+        ne_ref = refs[k]
+        k += 1
+        lvl_ref = None
+        if needs_lvl:
+            lvl_ref = refs[k]
+            k += 1
+        out_ref = refs[k]
+        _kernel(op, block, state_ref, src_ref, w_ref, ne_ref, lvl_ref,
+                out_ref)
+
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=edge_block,
+        out_shape=jax.ShapeDtypeStruct((m,), msg_dt),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+    return call
+
+
+def vmem_footprint_bytes(op, n, m, block=DEFAULT_BLOCK):
+    """Analytic per-grid-step VMEM footprint of the kernel (perf model).
+
+    state (resident) + src block + optional weight block + output block +
+    scalars. Used by DESIGN.md §Perf to justify the block size and by
+    `jgraph report --fig 5` annotations.
+    """
+    _, _, needs_w, needs_lvl = OPS[op]
+    state_b = n * 4
+    blocks = 2 + (1 if needs_w else 0)  # src + out (+ w)
+    scalars = 4 + (4 if needs_lvl else 0)
+    return state_b + blocks * block * 4 + scalars

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for the Pallas edge-program kernel and the GAS supersteps.
+
+These are the CORE correctness references: every Pallas kernel and every
+lowered superstep in :mod:`compile.model` is pytest-compared against the
+functions here (see ``python/tests/``), and the rust engine cross-checks the
+AOT artifacts against its own software GAS oracle.
+
+Conventions (shared with model.py, aot.py, and rust/src/runtime/):
+  - Graphs arrive as padded COO: ``edge_src[M] i32``, ``edge_dst[M] i32``,
+    ``edge_w[M] f32``; the first ``num_edges`` entries are real, the rest are
+    padding. Padding edges carry ``src = dst = 0`` and must be masked out.
+  - Vertex state arrays have padded length ``N``; the first ``num_vertices``
+    entries are real.
+  - BFS levels use ``-1`` for "unvisited"; distances use ``INF_F32``.
+"""
+
+import jax.numpy as jnp
+
+# Sentinel "infinity" used for i32 min-reductions (large but safely away from
+# i32 overflow when incremented).
+INF_I32 = jnp.int32(2**30)
+INF_F32 = jnp.float32(3.0e38)
+
+# The edge-program operators the DSL's Apply stage supports. Mirrors
+# rust/src/dsl/apply.rs::ApplyOp and kernels/edge_program.py::OPS.
+EDGE_OPS = ("bfs", "sssp", "wcc", "pr", "spmv")
+
+
+def edge_mask(M, num_edges):
+    """Valid-edge mask: the first ``num_edges`` of ``M`` slots are real."""
+    return jnp.arange(M, dtype=jnp.int32) < num_edges
+
+
+# ---------------------------------------------------------------------------
+# Edge programs (the L1 Pallas kernel's contract)
+# ---------------------------------------------------------------------------
+
+def edge_program_bfs(frontier, edge_src, num_edges, cur_level):
+    """Per-edge BFS candidate levels.
+
+    An edge proposes ``cur_level + 1`` for its destination iff its source is
+    in the current frontier; inactive/padding edges propose INF_I32.
+    """
+    m = edge_mask(edge_src.shape[0], num_edges)
+    active = (frontier[edge_src] > 0) & m
+    return jnp.where(active, cur_level + 1, INF_I32).astype(jnp.int32)
+
+
+def edge_program_sssp(dist, edge_src, edge_w, num_edges):
+    """Per-edge relaxation candidates: dist[src] + w (INF when masked)."""
+    m = edge_mask(edge_src.shape[0], num_edges)
+    cand = dist[edge_src] + edge_w
+    return jnp.where(m, cand, INF_F32).astype(jnp.float32)
+
+
+def edge_program_wcc(label, edge_src, num_edges):
+    """Per-edge label proposals: label[src] (INF when masked)."""
+    m = edge_mask(edge_src.shape[0], num_edges)
+    return jnp.where(m, label[edge_src], INF_I32).astype(jnp.int32)
+
+
+def edge_program_pr(contrib, edge_src, num_edges):
+    """Per-edge PageRank contributions: rank[src]/outdeg[src], pre-divided.
+
+    ``contrib`` is the per-vertex contribution vector; the edge program
+    gathers it per edge. Masked edges contribute 0.
+    """
+    m = edge_mask(edge_src.shape[0], num_edges)
+    return jnp.where(m, contrib[edge_src], 0.0).astype(jnp.float32)
+
+
+def edge_program_spmv(x, edge_src, edge_w, num_edges):
+    """Per-edge products A[dst,src] * x[src] for CSR-as-COO SpMV."""
+    m = edge_mask(edge_src.shape[0], num_edges)
+    return jnp.where(m, x[edge_src] * edge_w, 0.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full supersteps (the L2 contract: edge program + Reduce + Apply-to-state)
+# ---------------------------------------------------------------------------
+
+def bfs_step(levels, frontier, edge_src, edge_dst, num_edges, cur_level):
+    """One BFS frontier expansion.
+
+    Returns (new_levels, new_frontier, frontier_size, edges_traversed).
+    """
+    N = levels.shape[0]
+    cand = edge_program_bfs(frontier, edge_src, num_edges, cur_level)
+    # Reduce: min over messages per destination vertex.
+    best = jnp.full((N,), INF_I32, dtype=jnp.int32).at[edge_dst].min(cand)
+    newly = (levels < 0) & (best < INF_I32)
+    new_levels = jnp.where(newly, best, levels).astype(jnp.int32)
+    new_frontier = newly.astype(jnp.int32)
+    m = edge_mask(edge_src.shape[0], num_edges)
+    traversed = jnp.sum(((frontier[edge_src] > 0) & m).astype(jnp.int32))
+    return new_levels, new_frontier, jnp.sum(new_frontier), traversed
+
+
+def sssp_step(dist, edge_src, edge_dst, edge_w, num_edges):
+    """One Bellman-Ford relaxation sweep. Returns (new_dist, changed)."""
+    N = dist.shape[0]
+    cand = edge_program_sssp(dist, edge_src, edge_w, num_edges)
+    best = jnp.full((N,), INF_F32, dtype=jnp.float32).at[edge_dst].min(cand)
+    new_dist = jnp.minimum(dist, best).astype(jnp.float32)
+    changed = jnp.sum((new_dist < dist).astype(jnp.int32))
+    return new_dist, changed
+
+
+def wcc_step(label, edge_src, edge_dst, num_edges):
+    """One label-propagation sweep (min label wins). Returns (new, changed)."""
+    N = label.shape[0]
+    cand = edge_program_wcc(label, edge_src, num_edges)
+    best = jnp.full((N,), INF_I32, dtype=jnp.int32).at[edge_dst].min(cand)
+    new_label = jnp.minimum(label, best).astype(jnp.int32)
+    changed = jnp.sum((new_label < label).astype(jnp.int32))
+    return new_label, changed
+
+
+def pr_step(rank, out_deg, edge_src, edge_dst, num_edges, num_vertices,
+            damping=0.85):
+    """One PageRank power iteration (damping d, uniform teleport).
+
+    Dangling vertices' mass is redistributed uniformly, matching the rust
+    oracle. Returns (new_rank, l1_delta).
+    """
+    N = rank.shape[0]
+    vmask = jnp.arange(N, dtype=jnp.int32) < num_vertices
+    nv = num_vertices.astype(jnp.float32)
+    safe_deg = jnp.maximum(out_deg, 1).astype(jnp.float32)
+    contrib = jnp.where(vmask, rank / safe_deg, 0.0)
+    msgs = edge_program_pr(contrib, edge_src, num_edges)
+    sums = jnp.zeros((N,), dtype=jnp.float32).at[edge_dst].add(msgs)
+    dangling = jnp.sum(jnp.where(vmask & (out_deg == 0), rank, 0.0))
+    base = (1.0 - damping) / nv + damping * dangling / nv
+    new_rank = jnp.where(vmask, base + damping * sums, 0.0).astype(jnp.float32)
+    delta = jnp.sum(jnp.abs(new_rank - rank))
+    return new_rank, delta
+
+
+def spmv_step(x, edge_src, edge_dst, edge_w, num_edges):
+    """y = A @ x with A given as COO (dst row, src col). Returns y."""
+    N = x.shape[0]
+    prod = edge_program_spmv(x, edge_src, edge_w, num_edges)
+    return jnp.zeros((N,), dtype=jnp.float32).at[edge_dst].add(prod)

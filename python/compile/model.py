@@ -1,0 +1,197 @@
+"""L2 — GAS supersteps as JAX functions, calling the L1 Pallas edge kernel.
+
+Each function is one hardware "iteration" of the paper's GAS pipeline
+(Fig. 4): the edge program (L1 Pallas, the Receive+Apply stages) produces
+per-edge messages; the Reduce stage is a segment min/sum scatter; the final
+Apply-to-state updates the vertex arrays. All of it traces into a single
+fused HLO module per (algorithm, size bucket), so the rust coordinator makes
+exactly one PJRT call per superstep.
+
+Shapes are static per bucket (see aot.py); ``num_edges`` / ``num_vertices`` /
+``cur_level`` travel as [1]-shaped i32 operands so the same artifact serves
+any graph that fits the bucket (the rust registry pads).
+
+Every superstep has a pure-jnp twin in kernels/ref.py; pytest asserts
+equality, and hypothesis sweeps shapes. The rust engine additionally
+cross-checks the compiled artifacts against its own software GAS oracle.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.edge_program import DEFAULT_BLOCK, make_edge_program
+
+# Algorithm registry: name -> builder of the superstep function. Used by
+# aot.py to enumerate artifacts and by tests to sweep all algorithms.
+ALGORITHMS = ("bfs", "pr", "sssp", "wcc", "spmv")
+
+
+def build_bfs_step(n, m, block=DEFAULT_BLOCK, use_pallas=True):
+    """BFS frontier expansion.
+
+    Args (positional, the artifact ABI):
+      levels[N]i32, frontier[N]i32, edge_src[M]i32, edge_dst[M]i32,
+      num_edges[1]i32, cur_level[1]i32
+    Returns: (new_levels[N]i32, new_frontier[N]i32, frontier_size i32,
+              edges_traversed i32)
+    """
+    edge_prog = make_edge_program("bfs", n, m, block) if use_pallas else None
+
+    def step(levels, frontier, edge_src, edge_dst, num_edges, cur_level):
+        ne = num_edges[0]
+        if use_pallas:
+            cand = edge_prog(frontier, edge_src, num_edges, cur_level)
+        else:
+            cand = ref.edge_program_bfs(frontier, edge_src, ne, cur_level[0])
+        best = (jnp.full((n,), ref.INF_I32, dtype=jnp.int32)
+                .at[edge_dst].min(cand))
+        newly = (levels < 0) & (best < ref.INF_I32)
+        new_levels = jnp.where(newly, best, levels).astype(jnp.int32)
+        new_frontier = newly.astype(jnp.int32)
+        mask = ref.edge_mask(m, ne)
+        traversed = jnp.sum(((frontier[edge_src] > 0) & mask)
+                            .astype(jnp.int32))
+        return new_levels, new_frontier, jnp.sum(new_frontier), traversed
+
+    return step
+
+
+def build_sssp_step(n, m, block=DEFAULT_BLOCK, use_pallas=True):
+    """Bellman-Ford relaxation sweep.
+
+    ABI: dist[N]f32, edge_src[M]i32, edge_dst[M]i32, edge_w[M]f32,
+         num_edges[1]i32 -> (new_dist[N]f32, changed i32)
+    """
+    edge_prog = make_edge_program("sssp", n, m, block) if use_pallas else None
+
+    def step(dist, edge_src, edge_dst, edge_w, num_edges):
+        if use_pallas:
+            cand = edge_prog(dist, edge_src, edge_w, num_edges)
+        else:
+            cand = ref.edge_program_sssp(dist, edge_src, edge_w, num_edges[0])
+        best = (jnp.full((n,), ref.INF_F32, dtype=jnp.float32)
+                .at[edge_dst].min(cand))
+        new_dist = jnp.minimum(dist, best).astype(jnp.float32)
+        changed = jnp.sum((new_dist < dist).astype(jnp.int32))
+        return new_dist, changed
+
+    return step
+
+
+def build_wcc_step(n, m, block=DEFAULT_BLOCK, use_pallas=True):
+    """Label-propagation sweep (min label wins).
+
+    ABI: label[N]i32, edge_src[M]i32, edge_dst[M]i32, num_edges[1]i32
+         -> (new_label[N]i32, changed i32)
+    """
+    edge_prog = make_edge_program("wcc", n, m, block) if use_pallas else None
+
+    def step(label, edge_src, edge_dst, num_edges):
+        if use_pallas:
+            cand = edge_prog(label, edge_src, num_edges)
+        else:
+            cand = ref.edge_program_wcc(label, edge_src, num_edges[0])
+        best = (jnp.full((n,), ref.INF_I32, dtype=jnp.int32)
+                .at[edge_dst].min(cand))
+        new_label = jnp.minimum(label, best).astype(jnp.int32)
+        changed = jnp.sum((new_label < label).astype(jnp.int32))
+        return new_label, changed
+
+    return step
+
+
+def build_pr_step(n, m, block=DEFAULT_BLOCK, use_pallas=True, damping=0.85):
+    """PageRank power iteration with uniform dangling redistribution.
+
+    ABI: rank[N]f32, out_deg[N]i32, edge_src[M]i32, edge_dst[M]i32,
+         num_edges[1]i32, num_vertices[1]i32 -> (new_rank[N]f32, delta f32)
+    """
+    edge_prog = make_edge_program("pr", n, m, block) if use_pallas else None
+
+    def step(rank, out_deg, edge_src, edge_dst, num_edges, num_vertices):
+        nv_i = num_vertices[0]
+        vmask = jnp.arange(n, dtype=jnp.int32) < nv_i
+        nv = nv_i.astype(jnp.float32)
+        safe_deg = jnp.maximum(out_deg, 1).astype(jnp.float32)
+        contrib = jnp.where(vmask, rank / safe_deg, 0.0)
+        if use_pallas:
+            msgs = edge_prog(contrib, edge_src, num_edges)
+        else:
+            msgs = ref.edge_program_pr(contrib, edge_src, num_edges[0])
+        sums = jnp.zeros((n,), dtype=jnp.float32).at[edge_dst].add(msgs)
+        dangling = jnp.sum(jnp.where(vmask & (out_deg == 0), rank, 0.0))
+        base = (1.0 - damping) / nv + damping * dangling / nv
+        new_rank = jnp.where(vmask, base + damping * sums, 0.0) \
+            .astype(jnp.float32)
+        delta = jnp.sum(jnp.abs(new_rank - rank))
+        return new_rank, delta
+
+    return step
+
+
+def build_spmv_step(n, m, block=DEFAULT_BLOCK, use_pallas=True):
+    """Sparse matrix-vector product, A in COO (dst=row, src=col).
+
+    ABI: x[N]f32, edge_src[M]i32, edge_dst[M]i32, edge_w[M]f32,
+         num_edges[1]i32 -> (y[N]f32,)
+    """
+    edge_prog = make_edge_program("spmv", n, m, block) if use_pallas else None
+
+    def step(x, edge_src, edge_dst, edge_w, num_edges):
+        if use_pallas:
+            prod = edge_prog(x, edge_src, edge_w, num_edges)
+        else:
+            prod = ref.edge_program_spmv(x, edge_src, edge_w, num_edges[0])
+        y = jnp.zeros((n,), dtype=jnp.float32).at[edge_dst].add(prod)
+        return (y,)
+
+    return step
+
+
+BUILDERS = {
+    "bfs": build_bfs_step,
+    "pr": build_pr_step,
+    "sssp": build_sssp_step,
+    "wcc": build_wcc_step,
+    "spmv": build_spmv_step,
+}
+
+
+def arg_specs(algo, n, m):
+    """The artifact ABI: ordered (name, shape, dtype) for each input.
+
+    Mirrored by rust/src/runtime/registry.rs — keep in sync with
+    manifest.json (aot.py embeds this spec there).
+    """
+    i32, f32 = "i32", "f32"
+    specs = {
+        "bfs": [("levels", (n,), i32), ("frontier", (n,), i32),
+                ("edge_src", (m,), i32), ("edge_dst", (m,), i32),
+                ("num_edges", (1,), i32), ("cur_level", (1,), i32)],
+        "pr": [("rank", (n,), f32), ("out_deg", (n,), i32),
+               ("edge_src", (m,), i32), ("edge_dst", (m,), i32),
+               ("num_edges", (1,), i32), ("num_vertices", (1,), i32)],
+        "sssp": [("dist", (n,), f32), ("edge_src", (m,), i32),
+                 ("edge_dst", (m,), i32), ("edge_w", (m,), f32),
+                 ("num_edges", (1,), i32)],
+        "wcc": [("label", (n,), i32), ("edge_src", (m,), i32),
+                ("edge_dst", (m,), i32), ("num_edges", (1,), i32)],
+        "spmv": [("x", (n,), f32), ("edge_src", (m,), i32),
+                 ("edge_dst", (m,), i32), ("edge_w", (m,), f32),
+                 ("num_edges", (1,), i32)],
+    }
+    return specs[algo]
+
+
+def out_specs(algo, n):
+    """Ordered (name, shape, dtype) for each output of the tuple."""
+    i32, f32 = "i32", "f32"
+    specs = {
+        "bfs": [("new_levels", (n,), i32), ("new_frontier", (n,), i32),
+                ("frontier_size", (), i32), ("edges_traversed", (), i32)],
+        "pr": [("new_rank", (n,), f32), ("delta", (), f32)],
+        "sssp": [("new_dist", (n,), f32), ("changed", (), i32)],
+        "wcc": [("new_label", (n,), i32), ("changed", (), i32)],
+        "spmv": [("y", (n,), f32)],
+    }
+    return specs[algo]

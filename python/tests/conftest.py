@@ -1,0 +1,42 @@
+"""Shared fixtures/helpers for the python test-suite.
+
+Random padded COO graphs in the artifact ABI (see compile/kernels/ref.py for
+the conventions: padding edges carry src=dst=0 and weight 0).
+"""
+
+import numpy as np
+import pytest
+
+
+def make_graph(rng, num_vertices, num_edges, n_pad, m_pad, weighted=True):
+    """Random directed multigraph in padded COO form.
+
+    Returns dict of numpy arrays matching the artifact ABI.
+    """
+    assert num_vertices <= n_pad and num_edges <= m_pad
+    src = rng.integers(0, num_vertices, size=num_edges, dtype=np.int32)
+    dst = rng.integers(0, num_vertices, size=num_edges, dtype=np.int32)
+    w = rng.uniform(0.1, 10.0, size=num_edges).astype(np.float32)
+    edge_src = np.zeros(m_pad, dtype=np.int32)
+    edge_dst = np.zeros(m_pad, dtype=np.int32)
+    edge_w = np.zeros(m_pad, dtype=np.float32)
+    edge_src[:num_edges] = src
+    edge_dst[:num_edges] = dst
+    edge_w[:num_edges] = w
+    out_deg = np.zeros(n_pad, dtype=np.int32)
+    np.add.at(out_deg, src, 1)
+    return {
+        "num_vertices": num_vertices,
+        "num_edges": num_edges,
+        "n_pad": n_pad,
+        "m_pad": m_pad,
+        "edge_src": edge_src,
+        "edge_dst": edge_dst,
+        "edge_w": edge_w,
+        "out_deg": out_deg,
+    }
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

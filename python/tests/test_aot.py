@@ -1,0 +1,64 @@
+"""AOT path: lowering produces valid HLO text with the expected ABI."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("algo", model.ALGORITHMS)
+def test_lower_tiny_produces_hlo_text(algo):
+    text, entry = aot.lower_one(algo, "tiny")
+    # HLO text module header + one computation per module at minimum
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    assert entry["n"], entry["m"] == aot.BUCKETS["tiny"]
+    assert len(entry["inputs"]) == len(model.arg_specs(algo, 1, 1))
+    assert len(entry["outputs"]) == len(model.out_specs(algo, 1))
+    # every input must appear as a parameter in the entry computation
+    assert text.count("parameter(") >= len(entry["inputs"])
+
+
+def test_lower_without_pallas_also_valid():
+    text, entry = aot.lower_one("bfs", "tiny", use_pallas=False)
+    assert text.startswith("HloModule")
+    assert entry["use_pallas"] is False
+
+
+def test_bucket_block_policy():
+    # §Perf: blocks grow to min(m, cap); explicit --block overrides
+    from compile.aot import bucket_block, BLOCK_CAP
+    assert bucket_block(4096) == 4096
+    assert bucket_block(1_048_576) == BLOCK_CAP
+    assert bucket_block(1_048_576, requested=8192) == 8192
+    for _, (n, m) in aot.BUCKETS.items():
+        assert m % bucket_block(m) == 0, "grid must divide evenly"
+
+
+def test_buckets_cover_paper_graphs():
+    n_s, m_s = aot.BUCKETS["small"]
+    n_l, m_l = aot.BUCKETS["large"]
+    assert n_s >= 1_005 and m_s >= 25_571  # email-Eu-core
+    assert n_l >= 82_168 and m_l >= 948_464  # soc-Slashdot0922
+    for n, m in aot.BUCKETS.values():
+        assert m % 4096 == 0, "edge pad must be a block multiple"
+
+
+def test_cli_writes_manifest_and_sentinel():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "model.hlo.txt")
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", out,
+             "--algos", "wcc", "--buckets", "tiny"],
+            check=True, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), env=env)
+        man = json.load(open(os.path.join(d, "manifest.json")))
+        assert man["artifacts"][0]["algo"] == "wcc"
+        assert os.path.exists(os.path.join(d, man["artifacts"][0]["file"]))
+        assert os.path.exists(out)

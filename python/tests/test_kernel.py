@@ -1,0 +1,179 @@
+"""L1 correctness: the Pallas edge-program kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts: if the
+kernel matches ref.py for every op across shapes/dtypes/edge cases, and the
+supersteps match their oracles (test_model.py), the HLO the rust runtime
+executes is trustworthy.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.edge_program import (
+    OPS,
+    make_edge_program,
+    vmem_footprint_bytes,
+)
+from .conftest import make_graph
+
+RNG = np.random.default_rng(7)
+
+
+def _state_for(op, n_pad, rng):
+    if op == "bfs":
+        s = (rng.random(n_pad) < 0.3).astype(np.int32)
+        s[0] = 1  # never an empty frontier
+        return s
+    if op == "wcc":
+        return rng.integers(0, n_pad, size=n_pad, dtype=np.int32)
+    # float-state ops
+    return rng.uniform(0.0, 5.0, size=n_pad).astype(np.float32)
+
+
+def _run_both(op, g, state, cur_level=3):
+    """Run pallas kernel and jnp oracle, return (kernel_out, ref_out)."""
+    n, m = g["n_pad"], g["m_pad"]
+    block = min(m, 1024)
+    kern = make_edge_program(op, n, m, block=block)
+    ne = np.array([g["num_edges"]], dtype=np.int32)
+    lvl = np.array([cur_level], dtype=np.int32)
+    if op == "bfs":
+        out = kern(state, g["edge_src"], ne, lvl)
+        exp = ref.edge_program_bfs(state, g["edge_src"], g["num_edges"],
+                                   cur_level)
+    elif op == "sssp":
+        out = kern(state, g["edge_src"], g["edge_w"], ne)
+        exp = ref.edge_program_sssp(state, g["edge_src"], g["edge_w"],
+                                    g["num_edges"])
+    elif op == "wcc":
+        out = kern(state, g["edge_src"], ne)
+        exp = ref.edge_program_wcc(state, g["edge_src"], g["num_edges"])
+    elif op == "pr":
+        out = kern(state, g["edge_src"], ne)
+        exp = ref.edge_program_pr(state, g["edge_src"], g["num_edges"])
+    elif op == "spmv":
+        out = kern(state, g["edge_src"], g["edge_w"], ne)
+        exp = ref.edge_program_spmv(state, g["edge_src"], g["edge_w"],
+                                    g["num_edges"])
+    else:
+        raise AssertionError(op)
+    return np.asarray(out), np.asarray(exp)
+
+
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_kernel_matches_ref_basic(op):
+    g = make_graph(RNG, 100, 900, 128, 1024)
+    state = _state_for(op, g["n_pad"], RNG)
+    out, exp = _run_both(op, g, state)
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_kernel_multiblock_grid(op):
+    """M spanning several grid blocks must agree with the unblocked oracle."""
+    g = make_graph(RNG, 500, 3000, 512, 4096)
+    state = _state_for(op, g["n_pad"], RNG)
+    out, exp = _run_both(op, g, state)
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_kernel_all_edges_padding(op):
+    """num_edges == 0: every slot must be the op's neutral message."""
+    g = make_graph(RNG, 10, 0, 64, 256)
+    state = _state_for(op, g["n_pad"], RNG)
+    out, _ = _run_both(op, g, state)
+    _, _, _, _ = OPS[op]
+    if op in ("bfs", "wcc"):
+        assert (out == int(ref.INF_I32)).all()
+    elif op == "sssp":
+        assert (out == np.float32(ref.INF_F32)).all()
+    else:
+        assert (out == 0.0).all()
+
+
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_kernel_no_padding(op):
+    """num_edges == M exactly (mask never trims anything)."""
+    g = make_graph(RNG, 64, 256, 64, 256)
+    state = _state_for(op, g["n_pad"], RNG)
+    out, exp = _run_both(op, g, state)
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError, match="unknown edge op"):
+        make_edge_program("dfs", 64, 256)
+
+
+def test_block_must_divide_m():
+    with pytest.raises(ValueError, match="multiple of"):
+        make_edge_program("bfs", 64, 1000, block=512)
+
+
+def test_vmem_footprint_monotone():
+    """Footprint grows with N (resident state) and with block size."""
+    a = vmem_footprint_bytes("bfs", 1024, 32768, 1024)
+    b = vmem_footprint_bytes("bfs", 131072, 32768, 1024)
+    c = vmem_footprint_bytes("bfs", 1024, 32768, 4096)
+    assert b > a and c > a
+    # weighted ops stream one more operand
+    assert (vmem_footprint_bytes("sssp", 1024, 32768, 1024)
+            > vmem_footprint_bytes("wcc", 1024, 32768, 1024))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, degenerate graphs, extreme values
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    op=st.sampled_from(sorted(OPS)),
+    nv=st.integers(min_value=1, max_value=96),
+    ne_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(op, nv, ne_frac, seed):
+    rng = np.random.default_rng(seed)
+    m_pad = 512
+    n_pad = 128
+    num_edges = int(ne_frac * m_pad)
+    g = make_graph(rng, nv, num_edges, n_pad, m_pad)
+    state = _state_for(op, n_pad, rng)
+    out, exp = _run_both(op, g, state, cur_level=int(seed % 100))
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_log=st.integers(min_value=6, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_block_size_invariance(block_log, seed):
+    """The blocked schedule must not change the numbers (BFS op)."""
+    rng = np.random.default_rng(seed)
+    m_pad, n_pad = 2048, 256
+    g = make_graph(rng, 200, 1500, n_pad, m_pad)
+    state = _state_for("bfs", n_pad, rng)
+    ne = np.array([g["num_edges"]], dtype=np.int32)
+    lvl = np.array([5], dtype=np.int32)
+    k = make_edge_program("bfs", n_pad, m_pad, block=2 ** block_log)
+    out = np.asarray(k(state, g["edge_src"], ne, lvl))
+    exp = np.asarray(ref.edge_program_bfs(state, g["edge_src"],
+                                          g["num_edges"], 5))
+    np.testing.assert_array_equal(out, exp)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_sssp_kernel_extreme_weights(seed):
+    """Huge-but-finite weights must not poison masked lanes."""
+    rng = np.random.default_rng(seed)
+    g = make_graph(rng, 50, 400, 64, 512)
+    g["edge_w"][: g["num_edges"]] = rng.uniform(1e30, 1e32, g["num_edges"]) \
+        .astype(np.float32)
+    state = rng.uniform(0.0, 1e30, 64).astype(np.float32)
+    out, exp = _run_both("sssp", g, state)
+    np.testing.assert_allclose(out, exp, rtol=1e-6)

@@ -1,0 +1,262 @@
+"""L2 correctness: supersteps (pallas path) vs ref.py oracles and vs
+plain-python graph algorithms run to convergence.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_graph
+
+RNG = np.random.default_rng(42)
+N_PAD, M_PAD = 128, 1024
+BLOCK = 256
+
+
+def scalars(*vals):
+    return [np.array([v], dtype=np.int32) for v in vals]
+
+
+# ---------------------------------------------------------------------------
+# superstep (pallas) == superstep (pure jnp ref)
+# ---------------------------------------------------------------------------
+
+def test_bfs_step_matches_ref():
+    g = make_graph(RNG, 100, 800, N_PAD, M_PAD)
+    levels = np.full(N_PAD, -1, dtype=np.int32)
+    levels[0] = 0
+    frontier = np.zeros(N_PAD, dtype=np.int32)
+    frontier[0] = 1
+    ne, lvl = scalars(g["num_edges"], 0)
+    step = model.build_bfs_step(N_PAD, M_PAD, block=BLOCK)
+    got = step(levels, frontier, g["edge_src"], g["edge_dst"], ne, lvl)
+    exp = ref.bfs_step(levels, frontier, g["edge_src"], g["edge_dst"],
+                       np.int32(g["num_edges"]), np.int32(0))
+    for a, b in zip(got, exp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sssp_step_matches_ref():
+    g = make_graph(RNG, 100, 800, N_PAD, M_PAD)
+    dist = np.full(N_PAD, float(ref.INF_F32), dtype=np.float32)
+    dist[0] = 0.0
+    (ne,) = scalars(g["num_edges"])
+    step = model.build_sssp_step(N_PAD, M_PAD, block=BLOCK)
+    got = step(dist, g["edge_src"], g["edge_dst"], g["edge_w"], ne)
+    exp = ref.sssp_step(dist, g["edge_src"], g["edge_dst"], g["edge_w"],
+                        np.int32(g["num_edges"]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(exp[0]),
+                               rtol=1e-6)
+    assert int(got[1]) == int(exp[1])
+
+
+def test_wcc_step_matches_ref():
+    g = make_graph(RNG, 100, 800, N_PAD, M_PAD)
+    label = np.arange(N_PAD, dtype=np.int32)
+    (ne,) = scalars(g["num_edges"])
+    step = model.build_wcc_step(N_PAD, M_PAD, block=BLOCK)
+    got = step(label, g["edge_src"], g["edge_dst"], ne)
+    exp = ref.wcc_step(label, g["edge_src"], g["edge_dst"],
+                       np.int32(g["num_edges"]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+
+
+def test_pr_step_matches_ref():
+    g = make_graph(RNG, 100, 800, N_PAD, M_PAD)
+    rank = np.zeros(N_PAD, dtype=np.float32)
+    rank[:100] = 1.0 / 100
+    ne, nv = scalars(g["num_edges"], 100)
+    step = model.build_pr_step(N_PAD, M_PAD, block=BLOCK)
+    got = step(rank, g["out_deg"], g["edge_src"], g["edge_dst"], ne, nv)
+    exp = ref.pr_step(rank, g["out_deg"], g["edge_src"], g["edge_dst"],
+                      np.int32(g["num_edges"]), np.int32(100))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(exp[0]),
+                               rtol=1e-5)
+
+
+def test_spmv_step_matches_ref():
+    g = make_graph(RNG, 100, 800, N_PAD, M_PAD)
+    x = RNG.uniform(-1, 1, N_PAD).astype(np.float32)
+    (ne,) = scalars(g["num_edges"])
+    step = model.build_spmv_step(N_PAD, M_PAD, block=BLOCK)
+    got = step(x, g["edge_src"], g["edge_dst"], g["edge_w"], ne)
+    exp = ref.spmv_step(x, g["edge_src"], g["edge_dst"], g["edge_w"],
+                        np.int32(g["num_edges"]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(exp),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full-algorithm convergence vs plain-python references
+# ---------------------------------------------------------------------------
+
+def py_bfs(num_v, src, dst, root):
+    adj = collections.defaultdict(list)
+    for s, d in zip(src, dst):
+        adj[int(s)].append(int(d))
+    levels = {root: 0}
+    q = collections.deque([root])
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if v not in levels:
+                levels[v] = levels[u] + 1
+                q.append(v)
+    out = np.full(num_v, -1, dtype=np.int32)
+    for k, v in levels.items():
+        out[k] = v
+    return out
+
+
+def py_sssp(num_v, src, dst, w, root):
+    dist = np.full(num_v, np.inf)
+    dist[root] = 0.0
+    for _ in range(num_v):
+        changed = False
+        for s, d, ww in zip(src, dst, w):
+            nd = dist[int(s)] + ww
+            if nd < dist[int(d)]:
+                dist[int(d)] = nd
+                changed = True
+        if not changed:
+            break
+    return dist
+
+
+def drive_bfs(g, root, max_iters=64):
+    """Run bfs_step to fixpoint, like engine/xla_engine.rs does."""
+    step = model.build_bfs_step(g["n_pad"], g["m_pad"], block=BLOCK)
+    levels = np.full(g["n_pad"], -1, dtype=np.int32)
+    levels[root] = 0
+    frontier = np.zeros(g["n_pad"], dtype=np.int32)
+    frontier[root] = 1
+    (ne,) = scalars(g["num_edges"])
+    for it in range(max_iters):
+        (lvl,) = scalars(it)
+        levels, frontier, fsize, _ = step(levels, frontier, g["edge_src"],
+                                          g["edge_dst"], ne, lvl)
+        levels = np.asarray(levels)
+        frontier = np.asarray(frontier)
+        if int(fsize) == 0:
+            break
+    return levels
+
+
+def test_bfs_converges_to_python_reference():
+    g = make_graph(RNG, 80, 600, N_PAD, M_PAD)
+    ne_real = g["num_edges"]
+    got = drive_bfs(g, root=0)
+    exp = py_bfs(80, g["edge_src"][:ne_real], g["edge_dst"][:ne_real], 0)
+    np.testing.assert_array_equal(got[:80], exp)
+
+
+def test_sssp_converges_to_python_reference():
+    g = make_graph(RNG, 60, 400, N_PAD, M_PAD)
+    ne_real = g["num_edges"]
+    step = model.build_sssp_step(g["n_pad"], g["m_pad"], block=BLOCK)
+    dist = np.full(g["n_pad"], float(ref.INF_F32), dtype=np.float32)
+    dist[0] = 0.0
+    (ne,) = scalars(ne_real)
+    for _ in range(70):
+        dist, changed = step(dist, g["edge_src"], g["edge_dst"],
+                             g["edge_w"], ne)
+        dist = np.asarray(dist)
+        if int(changed) == 0:
+            break
+    exp = py_sssp(60, g["edge_src"][:ne_real], g["edge_dst"][:ne_real],
+                  g["edge_w"][:ne_real], 0)
+    reach = np.isfinite(exp)
+    np.testing.assert_allclose(dist[:60][reach], exp[reach], rtol=1e-5)
+    assert (dist[:60][~reach] >= 1e38).all()
+
+
+def test_pr_ranks_sum_to_one():
+    g = make_graph(RNG, 100, 900, N_PAD, M_PAD)
+    step = model.build_pr_step(N_PAD, M_PAD, block=BLOCK)
+    rank = np.zeros(N_PAD, dtype=np.float32)
+    rank[:100] = 1.0 / 100
+    ne, nv = scalars(g["num_edges"], 100)
+    for _ in range(30):
+        rank, delta = step(rank, g["out_deg"], g["edge_src"], g["edge_dst"],
+                           ne, nv)
+        rank = np.asarray(rank)
+    assert abs(rank.sum() - 1.0) < 1e-3
+    assert float(delta) < 1e-3
+
+
+def test_wcc_finds_components():
+    # two disjoint cliques: {0..4}, {5..9}
+    edges = [(i, j) for i in range(5) for j in range(5) if i != j]
+    edges += [(i, j) for i in range(5, 10) for j in range(5, 10) if i != j]
+    m = len(edges)
+    g = make_graph(RNG, 10, 0, 64, 256)
+    g["num_edges"] = m
+    g["edge_src"][:m] = [e[0] for e in edges]
+    g["edge_dst"][:m] = [e[1] for e in edges]
+    step = model.build_wcc_step(64, 256, block=64)
+    label = np.arange(64, dtype=np.int32)
+    (ne,) = scalars(m)
+    for _ in range(12):
+        label, changed = step(label, g["edge_src"], g["edge_dst"], ne)
+        label = np.asarray(label)
+        if int(changed) == 0:
+            break
+    assert (label[:5] == 0).all()
+    assert (label[5:10] == 5).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: pallas path == jnp path for every algorithm on random graphs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    algo=st.sampled_from(model.ALGORITHMS),
+    nv=st.integers(min_value=2, max_value=100),
+    ne=st.integers(min_value=0, max_value=800),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_path_equals_jnp_path(algo, nv, ne, seed):
+    rng = np.random.default_rng(seed)
+    g = make_graph(rng, nv, ne, N_PAD, M_PAD)
+    sp = model.BUILDERS[algo](N_PAD, M_PAD, block=BLOCK, use_pallas=True)
+    sj = model.BUILDERS[algo](N_PAD, M_PAD, block=BLOCK, use_pallas=False)
+    if algo == "bfs":
+        levels = np.full(N_PAD, -1, dtype=np.int32)
+        levels[0] = 0
+        frontier = np.zeros(N_PAD, dtype=np.int32)
+        frontier[0] = 1
+        args = (levels, frontier, g["edge_src"], g["edge_dst"],
+                *scalars(ne, 0))
+    elif algo == "pr":
+        rank = np.zeros(N_PAD, dtype=np.float32)
+        rank[:nv] = 1.0 / nv
+        args = (rank, g["out_deg"], g["edge_src"], g["edge_dst"],
+                *scalars(ne, nv))
+    elif algo == "sssp":
+        dist = np.full(N_PAD, float(ref.INF_F32), dtype=np.float32)
+        dist[0] = 0.0
+        args = (dist, g["edge_src"], g["edge_dst"], g["edge_w"],
+                *scalars(ne))
+    elif algo == "wcc":
+        args = (np.arange(N_PAD, dtype=np.int32), g["edge_src"],
+                g["edge_dst"], *scalars(ne))
+    else:  # spmv
+        x = rng.uniform(-1, 1, N_PAD).astype(np.float32)
+        args = (x, g["edge_src"], g["edge_dst"], g["edge_w"], *scalars(ne))
+    got, exp = sp(*args), sj(*args)
+    for a, b in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_arg_specs_cover_all_algorithms():
+    for algo in model.ALGORITHMS:
+        ins = model.arg_specs(algo, 64, 256)
+        outs = model.out_specs(algo, 64)
+        assert ins and outs
+        names = [n for n, _, _ in ins]
+        assert "edge_src" in names and "num_edges" in names

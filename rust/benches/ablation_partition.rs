@@ -1,0 +1,72 @@
+//! Ablation: Partition strategies (paper §IV-C3). Reports cut fraction
+//! and edge balance per strategy and part count, plus partitioning cost.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::graph::generate;
+use jgraph::prep::partition::{partition, PartitionStrategy};
+
+const STRATEGIES: [PartitionStrategy; 4] = [
+    PartitionStrategy::Range,
+    PartitionStrategy::Hash,
+    PartitionStrategy::DegreeBalanced,
+    PartitionStrategy::BfsGrow,
+];
+
+fn main() {
+    let graphs = vec![
+        ("rmat-13 (power-law)", generate::rmat(13, 160_000, 0.57, 0.19, 0.19, 2)),
+        ("grid-90 (planar)", generate::grid2d(90, 90, 2)),
+    ];
+    for (gname, g) in &graphs {
+        for k in [2usize, 4, 8] {
+            section(&format!("{gname}, k = {k}"));
+            for s in STRATEGIES {
+                let p = partition(g, k, s).unwrap();
+                println!(
+                    "  {:>16} | cut {:>6.2}% | imbalance {:>5.2} | max part edges {:>8}",
+                    format!("{s:?}"),
+                    100.0 * p.cut_fraction(g.num_edges()),
+                    p.edge_imbalance(),
+                    p.part_edges.iter().max().unwrap()
+                );
+            }
+        }
+    }
+
+    section("partitioning cost (rmat-14, k=8)");
+    let g = generate::rmat(14, 500_000, 0.57, 0.19, 0.19, 3);
+    for s in STRATEGIES {
+        bench(&format!("partition [{s:?}]"), 1, 5, || partition(&g, 8, s).unwrap());
+    }
+
+    // --- multi-PE end-to-end effect: strategy -> critical path
+    use jgraph::accel::device::DeviceModel;
+    use jgraph::accel::multipe::{InterconnectModel, MultiPeSimulator};
+    use jgraph::sched::ParallelismPlan;
+    use jgraph::translator::{pipeline::schedule, TranslatorKind};
+    section("multi-PE critical path (4 PEs x 8 lanes, one full sweep)");
+    for (gname, g) in &graphs {
+        for s in STRATEGIES {
+            let p = partition(g, 4, s).unwrap();
+            let dev = DeviceModel::u200();
+            let spec =
+                schedule(TranslatorKind::JGraph, ParallelismPlan::new(8, 4), 20, dev.clock_hz);
+            let mut sim = MultiPeSimulator::new(dev, spec, InterconnectModel::default());
+            let step = sim.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &[0, 1, 2, 3]);
+            println!(
+                "  {:<22} {:>16} | critical {:>9} cyc | interconnect {:>8} cyc | \
+                 crossing {:>6.1}% | PE spread {:.2}",
+                gname,
+                format!("{s:?}"),
+                step.critical_cycles,
+                step.interconnect_cycles,
+                100.0 * step.crossing_msgs as f64 / g.num_edges() as f64,
+                *step.pe_cycles.iter().max().unwrap() as f64
+                    / (*step.pe_cycles.iter().min().unwrap() as f64).max(1.0),
+            );
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Ablation: Reorder strategies (paper §IV-C4). Measures the simulated
+//! MTEPS and row-start stall cycles of BFS/SSSP under each strategy, on a
+//! shuffled grid (locality-sensitive) and an R-MAT power-law graph.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::algorithms;
+use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::graph::generate;
+use jgraph::prep::reorder::{all_strategies, ReorderStrategy};
+use jgraph::translator::Translator;
+
+fn shuffled_grid() -> jgraph::graph::edgelist::EdgeList {
+    let grid = generate::grid2d(64, 64, 7);
+    let mut rng = jgraph::graph::SplitMix64::new(1);
+    let mut perm: Vec<u32> = (0..grid.num_vertices as u32).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        perm.swap(i, j);
+    }
+    grid.permute(&perm)
+}
+
+fn main() {
+    let graphs = vec![
+        ("shuffled-grid-64", shuffled_grid()),
+        ("rmat-12", generate::rmat(12, 80_000, 0.57, 0.19, 0.19, 4)),
+    ];
+    for (gname, graph) in &graphs {
+        for program in [algorithms::bfs(), algorithms::sssp()] {
+            section(&format!("{} on {gname}", program.name));
+            let design = Translator::jgraph().translate(&program).unwrap();
+            for &strategy in all_strategies() {
+                let mut ex = Executor::new(ExecutorConfig {
+                    use_xla: false,
+                    reorder: if strategy == ReorderStrategy::None { None } else { Some(strategy) },
+                    graph_name: gname.to_string(),
+                    ..Default::default()
+                });
+                let r = ex.run(&program, &design, graph).unwrap();
+                println!(
+                    "  {:>14} | {:>8.2} MTEPS | row-start {:>9} | conflict {:>9} | prep {:>6.1} ms",
+                    format!("{strategy:?}"),
+                    r.simulated_mteps,
+                    r.sim.cycles.row_start,
+                    r.sim.cycles.conflict,
+                    r.prep_seconds * 1e3
+                );
+            }
+        }
+    }
+
+    section("reorder preprocessing cost");
+    let g = generate::rmat(14, 400_000, 0.57, 0.19, 0.19, 5);
+    for &s in all_strategies() {
+        bench(&format!("permutation [{s:?}] rmat-14"), 1, 5, || {
+            jgraph::prep::reorder::permutation(&g, s)
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench for Figure 5: regenerates the development-cost breakdown and
+//! reports the per-period ratios the figure's bars encode.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+fn main() {
+    section("Figure 5 regeneration (development-cost periods)");
+    let (fig, rows) = jgraph::report::fig5_devcost().expect("fig5");
+    println!("{fig}");
+
+    let total = |tool: &str| rows.iter().find(|r| r.tool == tool).unwrap().total();
+    report_metric("total cost Vivado/FAgraph", total("Vivado HLS") / total("FAgraph"), "x");
+    report_metric("total cost Spatial/FAgraph", total("Spatial") / total("FAgraph"), "x");
+    let fa = rows.iter().find(|r| r.tool == "FAgraph").unwrap();
+    report_metric("FAgraph compile share of total", fa.compilation / fa.total(), "frac");
+
+    section("figure generation timing");
+    bench("fig5_devcost end-to-end", 1, 5, || jgraph::report::fig5_devcost().unwrap());
+}

@@ -1,0 +1,54 @@
+//! Minimal benchmark harness (the offline build has no criterion):
+//! warmup + N timed iterations, reporting min/median/mean like criterion's
+//! terse output. Shared by every bench target via `#[path] mod harness`.
+
+use std::time::{Duration, Instant};
+
+/// Time `f` over `iters` iterations after `warmup` runs; prints a
+/// criterion-style line and returns the median.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Duration {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean: Duration = samples.iter().sum::<Duration>() / samples.len() as u32;
+    println!(
+        "{name:<48} min {:>12} median {:>12} mean {:>12} ({iters} iters)",
+        fmt(min),
+        fmt(median),
+        fmt(mean)
+    );
+    median
+}
+
+/// Record a derived metric (throughput, ratio) in the bench output.
+#[allow(dead_code)] // not every bench target reports derived metrics
+pub fn report_metric(name: &str, value: f64, unit: &str) {
+    println!("{name:<48} {value:>12.3} {unit}");
+}
+
+fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,175 @@
+//! Microbenchmarks of the L3 hot path: the cycle simulator's per-edge
+//! bank-conflict loop, the software GAS engine inner loop, and the XLA
+//! superstep round-trip. This is the bench the §Perf pass iterates on
+//! (EXPERIMENTS.md records before/after).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::accel::bram::BankModel;
+use jgraph::accel::device::DeviceModel;
+use jgraph::accel::simulator::{AccelSimulator, EdgeBatch};
+use jgraph::dsl::algorithms;
+use jgraph::engine::gas;
+use jgraph::graph::csr::Csr;
+use jgraph::graph::generate;
+use jgraph::sched::ParallelismPlan;
+use jgraph::translator::pipeline::schedule;
+use jgraph::translator::TranslatorKind;
+
+fn main() {
+    let mut rng = jgraph::graph::SplitMix64::new(9);
+    let dsts_1m: Vec<u32> = (0..1_000_000).map(|_| rng.next_below(100_000) as u32).collect();
+
+    section("bank-conflict window loop (1M edges)");
+    let mut bank = BankModel::new(16);
+    let d = bench("window_cycles 1M edges, 8 lanes", 2, 20, || {
+        let mut total = 0u64;
+        for w in dsts_1m.chunks(8) {
+            total += bank.window_cycles(w, 1) as u64;
+        }
+        total
+    });
+    report_metric(
+        "conflict-loop throughput",
+        1.0e9 / (d.as_nanos() as f64 / 1_000_000.0) / 1e6,
+        "Medges/s",
+    );
+
+    section("full simulator superstep (1M edges)");
+    let dev = DeviceModel::u200();
+    let spec = schedule(TranslatorKind::JGraph, ParallelismPlan::default(), 20, dev.clock_hz);
+    let d = bench("simulate 1M-edge superstep", 2, 20, || {
+        let mut sim = AccelSimulator::new(DeviceModel::u200(), spec);
+        sim.superstep(&EdgeBatch {
+            dsts: &dsts_1m,
+            active_rows: 100_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 3_000.0,
+        });
+        sim.finish().cycles.total()
+    });
+    report_metric(
+        "simulator throughput",
+        1.0e9 / (d.as_nanos() as f64 / 1_000_000.0) / 1e6,
+        "Medges/s",
+    );
+
+    section("software GAS engine (BFS, rmat-13 ~200k edges)");
+    let g = generate::rmat(13, 200_000, 0.57, 0.19, 0.19, 3);
+    let csr = Csr::from_edgelist(&g);
+    let program = algorithms::bfs();
+    let d = bench("gas::run BFS rmat-13", 1, 10, || {
+        gas::run(&program, &csr, 0, |_| {}).unwrap().edges_traversed
+    });
+    let traversed = gas::run(&program, &csr, 0, |_| {}).unwrap().edges_traversed;
+    report_metric(
+        "software-oracle throughput",
+        traversed as f64 / d.as_secs_f64() / 1e6,
+        "Medges/s",
+    );
+
+    section("CSR construction (rmat-14 ~500k edges)");
+    let big = generate::rmat(14, 500_000, 0.57, 0.19, 0.19, 4);
+    bench("Csr::from_edgelist rmat-14", 1, 10, || Csr::from_edgelist(&big));
+    bench("to_padded_coo 1M slots", 1, 10, || Csr::from_edgelist(&big).to_padded_coo(1_048_576));
+
+    section("XLA superstep round-trip (requires artifacts)");
+    match jgraph::runtime::KernelRegistry::open_default() {
+        Ok(reg) => {
+            let small = generate::email_eu_core_like(42);
+            let csr_s = Csr::from_edgelist(&small);
+            let exe = reg.for_graph("bfs", csr_s.num_vertices(), csr_s.num_edges()).unwrap();
+            let coo = csr_s.to_padded_coo(exe.meta.m);
+            let n_pad = exe.meta.n;
+            let mut levels = vec![-1i32; n_pad];
+            levels[0] = 0;
+            let mut frontier = vec![0i32; n_pad];
+            frontier[0] = 1;
+            let args = vec![
+                jgraph::runtime::Buffer::I32(levels),
+                jgraph::runtime::Buffer::I32(frontier),
+                jgraph::runtime::Buffer::I32(coo.src),
+                jgraph::runtime::Buffer::I32(coo.dst),
+                jgraph::runtime::Buffer::I32(vec![coo.num_edges as i32]),
+                jgraph::runtime::Buffer::I32(vec![0]),
+            ];
+            let d = bench("bfs superstep [small bucket, fresh literals]", 3, 30, || {
+                exe.run(&args).unwrap()
+            });
+            report_metric(
+                "XLA-path edge rate (fresh literals)",
+                coo.num_edges as f64 / d.as_secs_f64() / 1e6,
+                "Medges/s",
+            );
+            // §Perf: static COO operands prepared once, reused per superstep
+            use jgraph::runtime::client::ArgRef;
+            let (src_l, dst_l, ne_l) = (
+                exe.prepare(2, &args[2]).unwrap(),
+                exe.prepare(3, &args[3]).unwrap(),
+                exe.prepare(4, &args[4]).unwrap(),
+            );
+            let d = bench("bfs superstep [small bucket, cached statics]", 3, 30, || {
+                exe.run_args(&[
+                    ArgRef::Buf(&args[0]),
+                    ArgRef::Buf(&args[1]),
+                    ArgRef::Lit(&src_l),
+                    ArgRef::Lit(&dst_l),
+                    ArgRef::Lit(&ne_l),
+                    ArgRef::Buf(&args[5]),
+                ])
+                .unwrap()
+            });
+            report_metric(
+                "XLA-path edge rate (cached statics)",
+                coo.num_edges as f64 / d.as_secs_f64() / 1e6,
+                "Medges/s",
+            );
+            // large bucket: the copy saving is ~12 MB/superstep
+            let exe_l = reg.for_bucket("bfs", "large").unwrap();
+            let big = generate::soc_slashdot_like(42);
+            let csr_l = Csr::from_edgelist(&big);
+            let coo_l = csr_l.to_padded_coo(exe_l.meta.m);
+            let nl = exe_l.meta.n;
+            let mut lv = vec![-1i32; nl];
+            lv[0] = 0;
+            let mut fr = vec![0i32; nl];
+            fr[0] = 1;
+            let args_l = vec![
+                jgraph::runtime::Buffer::I32(lv),
+                jgraph::runtime::Buffer::I32(fr),
+                jgraph::runtime::Buffer::I32(coo_l.src),
+                jgraph::runtime::Buffer::I32(coo_l.dst),
+                jgraph::runtime::Buffer::I32(vec![coo_l.num_edges as i32]),
+                jgraph::runtime::Buffer::I32(vec![0]),
+            ];
+            let d_fresh = bench("bfs superstep [large bucket, fresh literals]", 1, 10, || {
+                exe_l.run(&args_l).unwrap()
+            });
+            let (src_l, dst_l, ne_l) = (
+                exe_l.prepare(2, &args_l[2]).unwrap(),
+                exe_l.prepare(3, &args_l[3]).unwrap(),
+                exe_l.prepare(4, &args_l[4]).unwrap(),
+            );
+            let d_cached = bench("bfs superstep [large bucket, cached statics]", 1, 10, || {
+                exe_l
+                    .run_args(&[
+                        ArgRef::Buf(&args_l[0]),
+                        ArgRef::Buf(&args_l[1]),
+                        ArgRef::Lit(&src_l),
+                        ArgRef::Lit(&dst_l),
+                        ArgRef::Lit(&ne_l),
+                        ArgRef::Buf(&args_l[5]),
+                    ])
+                    .unwrap()
+            });
+            report_metric(
+                "large-bucket superstep speedup (cached/fresh)",
+                d_fresh.as_secs_f64() / d_cached.as_secs_f64(),
+                "x",
+            );
+        }
+        Err(e) => println!("skipped ({e:#})"),
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench for Table IV: interface-count comparison + registry query costs.
+//! Regenerates the table the paper prints and checks the headline (ours >
+//! every comparator).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::registry;
+
+fn main() {
+    section("Table IV: graph atomic operators (regeneration)");
+    println!("{}", jgraph::report::table4());
+
+    let ours = registry::interface_count();
+    for row in registry::table4_comparators() {
+        report_metric(
+            &format!("interface ratio vs {}", row.system),
+            ours as f64 / row.operator_count as f64,
+            "x",
+        );
+    }
+
+    section("registry query microbenchmarks");
+    bench("interface_count", 100, 1000, registry::interface_count);
+    bench("by_level(Function)", 100, 1000, || {
+        registry::by_level(jgraph::dsl::ops::Level::Function).len()
+    });
+    bench("find(\"Receive\")", 100, 1000, || registry::find("Receive").is_some());
+}

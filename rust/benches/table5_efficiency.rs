@@ -1,0 +1,45 @@
+//! Bench for Table V: regenerates the full table (both graphs, all three
+//! translators, BFS) from the live system and times each stage of the flow
+//! per translator.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::algorithms;
+use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::graph::generate;
+use jgraph::translator::{Translator, TranslatorKind};
+
+fn main() {
+    section("Table V regeneration (simulation timing; XLA path benched separately)");
+    let (table, rows) = jgraph::report::table5(false, false).expect("table5");
+    println!("{table}");
+
+    // shape checks mirrored from the paper
+    let j_small = rows.iter().find(|r| r.translator == "FAgraph" && r.graph.contains("email")).unwrap();
+    let v_small = rows.iter().find(|r| r.translator == "Vivado HLS" && r.graph.contains("email")).unwrap();
+    let s_small = rows.iter().find(|r| r.translator == "Spatial" && r.graph.contains("email")).unwrap();
+    report_metric("TP ratio FAgraph/Vivado (paper ~1.6x)", j_small.mteps / v_small.mteps, "x");
+    report_metric("TP ratio FAgraph/Spatial (paper ~16x)", j_small.mteps / s_small.mteps, "x");
+    report_metric("lines ratio Spatial/FAgraph (paper ~3.7x)", s_small.code_lines as f64 / j_small.code_lines as f64, "x");
+    report_metric("RT ratio Vivado/FAgraph (paper ~2.4x)", v_small.rt_seconds / j_small.rt_seconds, "x");
+
+    section("per-stage timing (email-Eu-core, BFS)");
+    let graph = generate::email_eu_core_like(42);
+    let program = algorithms::bfs();
+    for kind in TranslatorKind::all() {
+        bench(&format!("translate [{}]", kind.label()), 3, 20, || {
+            Translator::of_kind(kind).translate(&program).unwrap()
+        });
+        let design = Translator::of_kind(kind).translate(&program).unwrap();
+        bench(&format!("simulate+oracle run [{}]", kind.label()), 1, 5, || {
+            let mut ex = Executor::new(ExecutorConfig {
+                use_xla: false,
+                graph_name: "email".into(),
+                ..Default::default()
+            });
+            ex.run(&program, &design, &graph).unwrap()
+        });
+    }
+}

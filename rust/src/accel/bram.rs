@@ -1,0 +1,109 @@
+//! Reduce-unit BRAM bank-conflict model. The reduce stage performs a
+//! read-modify-write on the destination vertex's accumulator; the BRAM is
+//! banked (`dst % banks`), and two messages hitting the same bank in the
+//! same dispatch window serialize — the "parallel data conflict" problem
+//! the paper cites (Yao et al., PACT'18 \[12\]).
+//!
+//! This is the simulator's innermost loop (see EXPERIMENTS.md §Perf for
+//! its optimization history): a generation-stamped counter table avoids
+//! clearing per window.
+
+/// Banked-conflict counter. Counts, per dispatch window of `lanes`
+/// destinations, the maximum number of messages that landed in one bank;
+/// the window then needs `max(ii, max_per_bank)` cycles instead of `ii`.
+///
+/// Perf notes (EXPERIMENTS.md §Perf, L3): bank count is a power of two so
+/// the modulo is a mask, and stamp+count share one u32 slot
+/// (`generation << 8 | count`) so each edge touches exactly one cache
+/// word — no per-window reset.
+#[derive(Debug)]
+pub struct BankModel {
+    /// `banks - 1`; banks is a power of two.
+    mask: u32,
+    /// Per-bank `generation << COUNT_BITS | count` (O(1) window reset:
+    /// stale generations read as count 0).
+    slot: Vec<u32>,
+    generation: u32,
+}
+
+/// Low bits of a slot hold the in-window count. Window sizes (lane
+/// counts) are far below 2^8.
+const COUNT_BITS: u32 = 8;
+const COUNT_MASK: u32 = (1 << COUNT_BITS) - 1;
+
+impl BankModel {
+    pub fn new(banks: u32) -> Self {
+        assert!(banks > 0 && banks.is_power_of_two(), "banks must be a power of two");
+        Self { mask: banks - 1, slot: vec![0; banks as usize], generation: 0 }
+    }
+
+    /// Cycles a window of destination ids occupies the reduce stage given
+    /// base initiation interval `ii`: `max(ii, worst bank collision)`.
+    #[inline]
+    pub fn window_cycles(&mut self, dsts: &[u32], ii: u32) -> u32 {
+        debug_assert!(dsts.len() < COUNT_MASK as usize);
+        // wrap before the generation tag would collide with live counts
+        self.generation = (self.generation + 1) & (u32::MAX >> COUNT_BITS);
+        if self.generation == 0 {
+            self.slot.fill(0);
+            self.generation = 1;
+        }
+        let tag = self.generation << COUNT_BITS;
+        let mut worst = 0u32;
+        for &d in dsts {
+            // banks is a power of two and slot.len() == mask + 1, so the
+            // index is always in range; the mask also elides bounds checks
+            let b = (d & self.mask) as usize;
+            let s = self.slot[b];
+            // stale generation -> restart the count at 0
+            let cnt = if s & !COUNT_MASK == tag { (s & COUNT_MASK) + 1 } else { 1 };
+            self.slot[b] = tag | cnt;
+            worst = worst.max(cnt);
+        }
+        worst.max(ii)
+    }
+
+    pub fn banks(&self) -> u32 {
+        self.mask + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_conflict_when_distinct_banks() {
+        let mut m = BankModel::new(16);
+        assert_eq!(m.window_cycles(&[0, 1, 2, 3, 4, 5, 6, 7], 1), 1);
+    }
+
+    #[test]
+    fn full_conflict_serializes() {
+        let mut m = BankModel::new(16);
+        // all 8 messages to bank 0
+        assert_eq!(m.window_cycles(&[0, 16, 32, 48, 64, 80, 96, 112], 1), 8);
+    }
+
+    #[test]
+    fn ii_floor_respected() {
+        let mut m = BankModel::new(16);
+        assert_eq!(m.window_cycles(&[0, 1], 2), 2);
+        assert_eq!(m.window_cycles(&[0, 16, 32], 2), 3);
+    }
+
+    #[test]
+    fn generations_do_not_leak_between_windows() {
+        let mut m = BankModel::new(4);
+        assert_eq!(m.window_cycles(&[0, 4], 1), 2);
+        // a fresh window must not see the previous counts
+        assert_eq!(m.window_cycles(&[1, 2], 1), 1);
+        assert_eq!(m.window_cycles(&[0], 1), 1);
+    }
+
+    #[test]
+    fn empty_window_costs_ii() {
+        let mut m = BankModel::new(8);
+        assert_eq!(m.window_cycles(&[], 1), 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! FPGA device models — datasheet numbers for the resource-fit check and
+//! the cycle simulator. Default is the paper's testbed: Xilinx Alveo U200
+//! (A-U200-A64G-PQ-G), per §VI: "1,182K LUTs, 2,364K registers, 6,840
+//! slice DSPs, 960 UltraRAMs and 64 GB DDR4 DRAM... PCI Express Gen3x16".
+
+
+/// Static device description.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub luts: u64,
+    pub registers: u64,
+    pub dsps: u64,
+    /// BRAM capacity in kilobits (U200: 4,320 x 18Kb blocks = 75.9 Mb).
+    pub bram_kb: u64,
+    /// UltraRAM blocks (288 Kb each).
+    pub urams: u64,
+    /// DDR4 capacity in bytes.
+    pub dram_bytes: u64,
+    /// DDR4 channels and per-channel peak bandwidth (bytes/s).
+    pub dram_channels: u32,
+    pub dram_channel_bw: f64,
+    /// Kernel clock (Hz). SDAccel-era U200 designs close timing ~250 MHz.
+    pub clock_hz: f64,
+    /// DDR4 random-access penalty (seconds) — row activate + CAS on a miss.
+    pub dram_random_latency: f64,
+    /// Reduce-unit BRAM banks (destination-conflict model).
+    pub reduce_banks: u32,
+}
+
+impl DeviceModel {
+    /// The paper's card: Alveo U200.
+    pub fn u200() -> Self {
+        DeviceModel {
+            name: "xilinx-alveo-u200",
+            luts: 1_182_000,
+            registers: 2_364_000,
+            dsps: 6_840,
+            bram_kb: 4_320 * 18,
+            urams: 960,
+            dram_bytes: 64 << 30,
+            dram_channels: 4,
+            dram_channel_bw: 19.2e9, // DDR4-2400 x 64b
+            clock_hz: 250.0e6,
+            dram_random_latency: 50.0e-9,
+            reduce_banks: 16,
+        }
+    }
+
+    /// A smaller card (half a U200) for over-capacity failure tests and
+    /// the resource-pressure ablation.
+    pub fn small() -> Self {
+        DeviceModel {
+            name: "small-fpga",
+            luts: 120_000,
+            registers: 240_000,
+            dsps: 680,
+            bram_kb: 432 * 18,
+            urams: 96,
+            dram_bytes: 8 << 30,
+            dram_channels: 1,
+            dram_channel_bw: 19.2e9,
+            clock_hz: 200.0e6,
+            dram_random_latency: 55.0e-9,
+            reduce_banks: 8,
+        }
+    }
+
+    /// Total DRAM bandwidth (bytes/s).
+    pub fn dram_bw(&self) -> f64 {
+        self.dram_channels as f64 * self.dram_channel_bw
+    }
+
+    /// On-chip memory capacity in bytes (BRAM + URAM) — the budget for
+    /// the vertex BRAM cache.
+    pub fn onchip_bytes(&self) -> u64 {
+        self.bram_kb * 1024 / 8 + self.urams * (288 * 1024 / 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u200_matches_paper_datasheet() {
+        let d = DeviceModel::u200();
+        assert_eq!(d.luts, 1_182_000);
+        assert_eq!(d.registers, 2_364_000);
+        assert_eq!(d.dsps, 6_840);
+        assert_eq!(d.urams, 960);
+        assert_eq!(d.dram_bytes, 64 << 30);
+    }
+
+    #[test]
+    fn bandwidth_and_onchip_sane() {
+        let d = DeviceModel::u200();
+        assert!(d.dram_bw() > 7.0e10); // ~76.8 GB/s
+        // 75.9Mb BRAM + 270Mb URAM ~ 43 MB on-chip
+        let mb = d.onchip_bytes() / (1 << 20);
+        assert!((30..60).contains(&mb), "{mb} MB");
+        // largest bucket's vertex state (512 KB) must fit comfortably
+        assert!(d.onchip_bytes() > 8 * 524_288);
+    }
+
+    #[test]
+    fn small_is_smaller() {
+        let (u, s) = (DeviceModel::u200(), DeviceModel::small());
+        assert!(s.luts < u.luts && s.urams < u.urams && s.dram_bw() < u.dram_bw());
+    }
+}

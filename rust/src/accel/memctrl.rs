@@ -1,0 +1,79 @@
+//! DDR4 memory-controller model: streaming bandwidth, CSR row-start
+//! activates, and random vertex-state access for designs without the BRAM
+//! vertex cache. Constants are derived from the U200 datasheet values in
+//! [`super::device::DeviceModel`]; locality sensitivity comes from the
+//! average edge gap so the Reorder ablation has a physical effect.
+
+use super::device::DeviceModel;
+
+/// Cycles to stream `bytes` from DDR at the device's aggregate bandwidth.
+pub fn stream_cycles(device: &DeviceModel, bytes: u64) -> u64 {
+    let bytes_per_cycle = device.dram_bw() / device.clock_hz;
+    (bytes as f64 / bytes_per_cycle).ceil() as u64
+}
+
+/// Row-activate penalty in cycles for starting one CSR row (fetching a new
+/// adjacency segment usually opens a new DRAM row). Scaled by a locality
+/// factor: well-reordered graphs place consecutive rows in the same DRAM
+/// row, amortizing activates.
+pub fn row_start_cycles(device: &DeviceModel, rows: u64, locality: f64) -> u64 {
+    // tRCD+tRP ~ 30ns -> cycles at kernel clock; 4 channels overlap.
+    let activate = device.dram_random_latency * 0.6 * device.clock_hz;
+    let per_row = activate / device.dram_channels as f64;
+    (rows as f64 * per_row * locality.clamp(0.05, 1.0)) as u64
+}
+
+/// Random vertex-state access cycles for `accesses` 4-byte reads+writes,
+/// assuming `mshrs` outstanding misses overlap.
+pub fn vertex_random_cycles(device: &DeviceModel, accesses: u64, mshrs: u32) -> u64 {
+    let per_access = device.dram_random_latency * device.clock_hz / mshrs as f64;
+    (accesses as f64 * per_access) as u64
+}
+
+/// Locality factor from the average |src-dst| id gap: 0.05 (perfectly
+/// local, rows co-resident) … 1.0 (random). Log-shaped: locality effects
+/// saturate once the working set spans many DRAM rows.
+pub fn locality_factor(avg_edge_gap: f64) -> f64 {
+    // a DRAM row holds ~1024 x 4B vertex entries
+    let rows_spanned = 1.0 + avg_edge_gap / 1024.0;
+    (rows_spanned.log2() / 8.0 + 0.05).clamp(0.05, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_matches_bandwidth() {
+        let d = DeviceModel::u200();
+        // 76.8 GB/s at 250 MHz = 307.2 B/cycle
+        let c = stream_cycles(&d, 307_200);
+        assert!((999..=1001).contains(&c), "{c}");
+    }
+
+    #[test]
+    fn row_start_scales_with_locality() {
+        let d = DeviceModel::u200();
+        let random = row_start_cycles(&d, 10_000, 1.0);
+        let local = row_start_cycles(&d, 10_000, 0.1);
+        assert!(local < random / 5);
+    }
+
+    #[test]
+    fn random_vertex_overlap() {
+        let d = DeviceModel::u200();
+        let a = vertex_random_cycles(&d, 1_000_000, 1);
+        let b = vertex_random_cycles(&d, 1_000_000, 16);
+        assert!((a as f64 / b as f64 - 16.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn locality_factor_monotone_and_bounded() {
+        let f0 = locality_factor(0.0);
+        let f1 = locality_factor(1_000.0);
+        let f2 = locality_factor(100_000.0);
+        assert!(f0 <= f1 && f1 <= f2);
+        assert!((0.05..=1.0).contains(&f0));
+        assert!((0.05..=1.0).contains(&f2));
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-level model of the generated FPGA design — the stand-in for the
+//! paper's Alveo U200 silicon (DESIGN.md §2). Timing comes from four
+//! components, each traceable to a real mechanism in the paper's Fig. 4
+//! datapath:
+//!
+//! 1. **compute**: edges enter `lanes` pipelines at the design's
+//!    initiation interval (+ per-edge control overhead for the baseline
+//!    flows);
+//! 2. **reduce-bank conflicts**: concurrent messages to the same BRAM bank
+//!    serialize (the data-conflict problem the paper cites \[12\]);
+//! 3. **memory**: DDR4 streaming of the edge arrays, CSR row-start
+//!    activates, and (for flows without the BRAM vertex cache) random
+//!    vertex-state accesses;
+//! 4. **launch**: per-superstep host→device kick over PCIe.
+//!
+//! The simulator is deliberately *per-edge* for (2): conflicts depend on
+//! the destination-id distribution, which is what makes the Reorder and
+//! Partition ablations measurable. That loop is the L3 hot path profiled
+//! in EXPERIMENTS.md §Perf.
+
+pub mod bram;
+pub mod multipe;
+pub mod device;
+pub mod memctrl;
+pub mod simulator;
+pub mod stats;
+
+pub use device::DeviceModel;
+pub use simulator::{AccelSimulator, EdgeBatch};
+pub use stats::{CycleBreakdown, SimStats, SuperstepSim};

@@ -1,0 +1,243 @@
+//! Multi-PE partitioned execution model. The paper's runtime scheduler
+//! deploys several processing elements, each owning a graph partition
+//! (§V-C2); messages crossing partitions travel over the on-card
+//! interconnect (the Foregraph-style "interconnection controller" of
+//! Table III). This module models that: per-PE pipelines process their
+//! own edges in parallel; cut edges add interconnect traffic; superstep
+//! time is the slowest PE plus the crossing cost — so partition quality
+//! (balance and cut, `prep::partition`) becomes measurable end-to-end.
+
+use super::bram::BankModel;
+use super::device::DeviceModel;
+use super::stats::CycleBreakdown;
+use crate::prep::partition::Partitioning;
+use crate::translator::pipeline::PipelineSpec;
+
+/// On-card interconnect between PEs (AXI-stream mesh class numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct InterconnectModel {
+    /// Payload bytes per message (dst id + value).
+    pub bytes_per_msg: u32,
+    /// Interconnect bandwidth in bytes/cycle (shared).
+    pub bytes_per_cycle: f64,
+    /// Router latency per superstep (fill).
+    pub latency_cycles: u32,
+}
+
+impl Default for InterconnectModel {
+    fn default() -> Self {
+        // 512-bit ring at kernel clock, 8-byte messages
+        Self { bytes_per_msg: 8, bytes_per_cycle: 64.0, latency_cycles: 24 }
+    }
+}
+
+impl InterconnectModel {
+    /// Multi-FPGA preset (Foregraph-class, Table III "multiple FPGA"):
+    /// PEs on separate cards linked by serial transceivers — two orders
+    /// of magnitude less bandwidth and far higher latency than the
+    /// on-card ring, which is why cut fraction dominates multi-card
+    /// partitioning decisions.
+    pub fn multi_fpga() -> Self {
+        Self { bytes_per_msg: 8, bytes_per_cycle: 4.0, latency_cycles: 600 }
+    }
+}
+
+/// Result of one multi-PE superstep.
+#[derive(Debug, Clone)]
+pub struct MultiPeSuperstep {
+    /// Issue+conflict cycles per PE (the slowest bounds the superstep).
+    pub pe_cycles: Vec<u64>,
+    /// Cut messages routed this superstep.
+    pub crossing_msgs: u64,
+    /// Interconnect cycles (serialized on the shared ring).
+    pub interconnect_cycles: u64,
+    /// The superstep's critical path: max(PE) + interconnect.
+    pub critical_cycles: u64,
+}
+
+/// Simulator for `pes` processing elements executing one design.
+#[derive(Debug)]
+pub struct MultiPeSimulator {
+    pipeline: PipelineSpec,
+    interconnect: InterconnectModel,
+    banks: Vec<BankModel>,
+    /// Aggregate over the run.
+    pub total: CycleBreakdown,
+    pub total_crossing: u64,
+    pub supersteps: u32,
+    clock_hz: f64,
+}
+
+impl MultiPeSimulator {
+    pub fn new(
+        device: DeviceModel,
+        pipeline: PipelineSpec,
+        interconnect: InterconnectModel,
+    ) -> Self {
+        let pes = pipeline.pes.max(1) as usize;
+        Self {
+            pipeline,
+            interconnect,
+            banks: (0..pes).map(|_| BankModel::new(device.reduce_banks)).collect(),
+            total: CycleBreakdown::default(),
+            total_crossing: 0,
+            supersteps: 0,
+            clock_hz: device.clock_hz,
+        }
+    }
+
+    /// Simulate one superstep: `edges` are `(src, dst)` pairs in stream
+    /// order; `partitioning.assignment` maps vertices to PEs (the
+    /// scheduler's placement collapses parts onto PEs round-robin before
+    /// calling this).
+    pub fn superstep(
+        &mut self,
+        edges: impl Iterator<Item = (u32, u32)>,
+        partitioning: &Partitioning,
+        pe_of_part: &[u32],
+    ) -> MultiPeSuperstep {
+        let pes = self.banks.len();
+        let lanes = self.pipeline.lanes.max(1) as usize;
+        let ii = self.pipeline.ii;
+        // per-PE window accumulation buffers
+        let mut windows: Vec<Vec<u32>> = vec![Vec::with_capacity(lanes); pes];
+        let mut pe_cycles = vec![0u64; pes];
+        let mut crossing = 0u64;
+        for (src, dst) in edges {
+            let pe_s = pe_of_part[partitioning.assignment[src as usize] as usize] as usize;
+            let pe_d = pe_of_part[partitioning.assignment[dst as usize] as usize] as usize;
+            if pe_s != pe_d {
+                crossing += 1;
+            }
+            // the owning PE of the source streams the edge
+            let w = &mut windows[pe_s];
+            w.push(dst);
+            if w.len() == lanes {
+                pe_cycles[pe_s] += self.banks[pe_s].window_cycles(w, ii) as u64;
+                w.clear();
+            }
+        }
+        for (pe, w) in windows.iter().enumerate() {
+            if !w.is_empty() {
+                pe_cycles[pe] += self.banks[pe].window_cycles(w, ii) as u64;
+            }
+        }
+        let interconnect_cycles = self.interconnect.latency_cycles as u64
+            + (crossing as f64 * self.interconnect.bytes_per_msg as f64
+                / self.interconnect.bytes_per_cycle) as u64;
+        let critical = pe_cycles.iter().copied().max().unwrap_or(0) + interconnect_cycles;
+        self.total.compute += critical;
+        self.total.fill_drain += self.pipeline.depth as u64;
+        self.total_crossing += crossing;
+        self.supersteps += 1;
+        MultiPeSuperstep {
+            pe_cycles,
+            crossing_msgs: crossing,
+            interconnect_cycles,
+            critical_cycles: critical,
+        }
+    }
+
+    /// Simulated seconds so far.
+    pub fn seconds(&self) -> f64 {
+        self.total.total() as f64 / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::prep::partition::{partition, PartitionStrategy};
+    use crate::sched::ParallelismPlan;
+    use crate::translator::pipeline::schedule;
+    use crate::translator::TranslatorKind;
+
+    fn sim(pes: u32) -> MultiPeSimulator {
+        let dev = DeviceModel::u200();
+        let spec = schedule(TranslatorKind::JGraph, ParallelismPlan::new(8, pes), 20, dev.clock_hz);
+        MultiPeSimulator::new(dev, spec, InterconnectModel::default())
+    }
+
+    #[test]
+    fn balanced_partitions_split_work() {
+        let g = generate::erdos_renyi(1_000, 40_000, 3);
+        let p = partition(&g, 4, PartitionStrategy::Hash).unwrap();
+        let mut s = sim(4);
+        let step = s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &[0, 1, 2, 3]);
+        // each PE gets roughly a quarter of the edges' issue cycles
+        let max = *step.pe_cycles.iter().max().unwrap() as f64;
+        let min = *step.pe_cycles.iter().min().unwrap() as f64;
+        assert!(max / min < 1.3, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn skewed_partition_bounds_critical_path() {
+        // everything in one part: critical path == that PE's cycles
+        let g = generate::erdos_renyi(500, 10_000, 5);
+        let mut p = partition(&g, 4, PartitionStrategy::Range).unwrap();
+        p.assignment.iter_mut().for_each(|a| *a = 0);
+        let mut s = sim(4);
+        let step = s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &[0, 1, 2, 3]);
+        assert_eq!(step.pe_cycles[1], 0);
+        assert_eq!(step.crossing_msgs, 0);
+        assert!(step.critical_cycles >= step.pe_cycles[0]);
+    }
+
+    #[test]
+    fn cut_edges_cost_interconnect() {
+        let g = generate::grid2d(30, 30, 2);
+        let hash = partition(&g, 4, PartitionStrategy::Hash).unwrap();
+        let grow = partition(&g, 4, PartitionStrategy::BfsGrow).unwrap();
+        let run = |p: &Partitioning| {
+            let mut s = sim(4);
+            let st = s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), p, &[0, 1, 2, 3]);
+            st.interconnect_cycles
+        };
+        assert!(
+            run(&grow) < run(&hash),
+            "locality-aware partition must cut interconnect cycles"
+        );
+    }
+
+    #[test]
+    fn more_pes_shorter_critical_path() {
+        let g = generate::erdos_renyi(2_000, 100_000, 7);
+        let crit = |pes: u32, k: usize| {
+            let p = partition(&g, k, PartitionStrategy::Hash).unwrap();
+            let pe_of: Vec<u32> = (0..k as u32).map(|i| i % pes).collect();
+            let mut s = sim(pes);
+            s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &pe_of).critical_cycles
+        };
+        assert!(crit(4, 4) < crit(1, 4));
+    }
+
+    #[test]
+    fn multi_fpga_interconnect_punishes_cuts_harder() {
+        let g = generate::erdos_renyi(800, 30_000, 4);
+        let p = partition(&g, 4, PartitionStrategy::Hash).unwrap();
+        let dev = DeviceModel::u200();
+        let spec =
+            schedule(TranslatorKind::JGraph, ParallelismPlan::new(8, 4), 20, dev.clock_hz);
+        let run = |ic: InterconnectModel| {
+            let mut s = MultiPeSimulator::new(DeviceModel::u200(), spec, ic);
+            s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &[0, 1, 2, 3])
+                .interconnect_cycles
+        };
+        let on_card = run(InterconnectModel::default());
+        let multi_card = run(InterconnectModel::multi_fpga());
+        assert!(multi_card > 10 * on_card, "{multi_card} vs {on_card}");
+    }
+
+    #[test]
+    fn seconds_accumulate() {
+        let g = generate::erdos_renyi(100, 2_000, 9);
+        let p = partition(&g, 2, PartitionStrategy::Hash).unwrap();
+        let mut s = sim(2);
+        for _ in 0..3 {
+            s.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &[0, 1]);
+        }
+        assert_eq!(s.supersteps, 3);
+        assert!(s.seconds() > 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Simulation statistics: per-superstep and aggregate cycle accounting.
+
+
+/// Where the cycles went (per superstep or aggregated).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CycleBreakdown {
+    /// Ideal pipeline issue cycles (edges × II / lanes).
+    pub compute: u64,
+    /// Added serialization from reduce-unit bank conflicts.
+    pub conflict: u64,
+    /// DDR row-activate cost of starting CSR rows.
+    pub row_start: u64,
+    /// Random vertex-state DRAM accesses (flows without the BRAM cache).
+    pub vertex_random: u64,
+    /// Edge-array streaming bandwidth cycles (when it exceeds compute).
+    pub stream: u64,
+    /// Pipeline fill/drain.
+    pub fill_drain: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.compute
+            + self.conflict
+            + self.row_start
+            + self.vertex_random
+            + self.stream
+            + self.fill_drain
+    }
+
+    pub fn add(&mut self, other: &CycleBreakdown) {
+        self.compute += other.compute;
+        self.conflict += other.conflict;
+        self.row_start += other.row_start;
+        self.vertex_random += other.vertex_random;
+        self.stream += other.stream;
+        self.fill_drain += other.fill_drain;
+    }
+}
+
+/// One superstep's simulation result.
+#[derive(Debug, Clone, Copy)]
+pub struct SuperstepSim {
+    pub index: u32,
+    pub edges: u64,
+    pub active_vertices: u64,
+    pub cycles: CycleBreakdown,
+    /// Host launch overhead (seconds — not cycles; it happens off-chip).
+    pub launch_seconds: f64,
+}
+
+/// Aggregate over a run.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub supersteps: u32,
+    pub total_edges: u64,
+    pub cycles: CycleBreakdown,
+    pub launch_seconds: f64,
+    pub clock_hz: f64,
+}
+
+impl SimStats {
+    /// On-device execution seconds.
+    pub fn device_seconds(&self) -> f64 {
+        self.cycles.total() as f64 / self.clock_hz
+    }
+
+    /// Full simulated execution seconds (device + launches).
+    pub fn exec_seconds(&self) -> f64 {
+        self.device_seconds() + self.launch_seconds
+    }
+
+    /// Simulated throughput in traversed-edges-per-second.
+    pub fn teps(&self) -> f64 {
+        if self.total_edges == 0 {
+            return 0.0;
+        }
+        self.total_edges as f64 / self.exec_seconds()
+    }
+
+    /// MTEPS, the paper's headline unit.
+    pub fn mteps(&self) -> f64 {
+        self.teps() / 1.0e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_add() {
+        let mut a = CycleBreakdown { compute: 10, conflict: 5, ..Default::default() };
+        let b = CycleBreakdown { compute: 1, stream: 2, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.total(), 18);
+    }
+
+    #[test]
+    fn mteps_math() {
+        let s = SimStats {
+            supersteps: 1,
+            total_edges: 1_000_000,
+            cycles: CycleBreakdown { compute: 2_500_000, ..Default::default() },
+            launch_seconds: 0.0,
+            clock_hz: 250.0e6,
+        };
+        // 2.5e6 cycles @ 250MHz = 10ms -> 100 MTEPS
+        assert!((s.mteps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_edges_zero_teps() {
+        let s = SimStats::default();
+        assert_eq!(s.teps(), 0.0);
+    }
+}

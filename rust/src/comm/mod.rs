@@ -1,0 +1,108 @@
+//! Communication manager (paper §V-C1): host↔FPGA data transfer and
+//! configuration management. The physical PCIe link and the XRT/XOCL
+//! control shell are simulated (DESIGN.md §2): [`pcie`] is a
+//! bandwidth/latency model of Gen3×16 DMA, [`xrt`] mimics the XRT user-
+//! space shell (device status, configuration registers, xclbin flash),
+//! and [`CommManager`] is the paper's "several easy-to-use interfaces to
+//! help status transfer and configuration management".
+
+pub mod pcie;
+pub mod xrt;
+
+use anyhow::Result;
+
+use crate::graph::csr::Csr;
+
+pub use pcie::PcieModel;
+pub use xrt::{DeviceStatus, XrtShell};
+
+/// The high-level interface the DSL's control functions map to
+/// (`Get_FPGA_Message`, `Transport`).
+#[derive(Debug)]
+pub struct CommManager {
+    pub pcie: PcieModel,
+    pub shell: XrtShell,
+    /// Accumulated simulated transfer time (the Transport part of the
+    /// paper's running time).
+    pub transfer_seconds: f64,
+    pub bytes_moved: u64,
+}
+
+/// Record of one `Transport` call.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferRecord {
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+impl CommManager {
+    /// Gen3×16 link to a freshly "flashed" U200 shell.
+    pub fn new() -> Self {
+        Self {
+            pcie: PcieModel::gen3_x16(),
+            shell: XrtShell::new(),
+            transfer_seconds: 0.0,
+            bytes_moved: 0,
+        }
+    }
+
+    /// `Get_FPGA_Message()` — device status through the shell.
+    pub fn fpga_message(&self) -> DeviceStatus {
+        self.shell.status()
+    }
+
+    /// `Transport(CPU_ip, FPGA_ip, Graph)` — DMA the CSR arrays to device
+    /// DDR. Fails if the device has not been configured (matching XRT's
+    /// behaviour when no xclbin is loaded).
+    pub fn transport_graph(&mut self, graph: &Csr) -> Result<TransferRecord> {
+        self.shell.require_configured()?;
+        let bytes = graph.byte_size() as u64;
+        let seconds = self.pcie.transfer_seconds(bytes);
+        self.transfer_seconds += seconds;
+        self.bytes_moved += bytes;
+        Ok(TransferRecord { bytes, seconds })
+    }
+
+    /// DMA raw result buffers back (vertex values).
+    pub fn read_back(&mut self, bytes: u64) -> TransferRecord {
+        let seconds = self.pcie.transfer_seconds(bytes);
+        self.transfer_seconds += seconds;
+        self.bytes_moved += bytes;
+        TransferRecord { bytes, seconds }
+    }
+}
+
+impl Default for CommManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{csr::Csr, generate};
+
+    #[test]
+    fn transport_requires_configuration() {
+        let g = Csr::from_edgelist(&generate::chain(10));
+        let mut cm = CommManager::new();
+        assert!(cm.transport_graph(&g).is_err(), "unconfigured device must reject DMA");
+        cm.shell.configure("bfs.xclbin", 8, 1).unwrap();
+        let rec = cm.transport_graph(&g).unwrap();
+        assert_eq!(rec.bytes, g.byte_size() as u64);
+        assert!(rec.seconds > 0.0);
+    }
+
+    #[test]
+    fn transfer_time_accumulates() {
+        let g = Csr::from_edgelist(&generate::erdos_renyi(100, 1000, 1));
+        let mut cm = CommManager::new();
+        cm.shell.configure("x.xclbin", 8, 1).unwrap();
+        cm.transport_graph(&g).unwrap();
+        let t1 = cm.transfer_seconds;
+        cm.read_back(4 * 100);
+        assert!(cm.transfer_seconds > t1);
+        assert_eq!(cm.bytes_moved, g.byte_size() as u64 + 400);
+    }
+}

@@ -1,0 +1,51 @@
+//! PCIe DMA model: Gen3×16 (the paper's card edge). Effective DMA
+//! throughput on XRT-era shells is ~10–12 GB/s of the 15.75 GB/s raw
+//! (TLP/DLLP overhead + driver); small transfers pay a fixed setup cost.
+
+
+/// Bandwidth/latency model of a host↔device DMA link.
+#[derive(Debug, Clone, Copy)]
+pub struct PcieModel {
+    /// Effective bulk bandwidth, bytes/s.
+    pub effective_bw: f64,
+    /// Per-transfer setup latency, seconds (descriptor + doorbell + IRQ).
+    pub setup_latency: f64,
+}
+
+impl PcieModel {
+    /// PCI Express Gen3 ×16 as deployed with XRT/XDMA.
+    pub fn gen3_x16() -> Self {
+        PcieModel { effective_bw: 11.0e9, setup_latency: 30.0e-6 }
+    }
+
+    /// Simulated wall time for one DMA of `bytes`.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        self.setup_latency + bytes as f64 / self.effective_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_transfers_are_latency_bound() {
+        let p = PcieModel::gen3_x16();
+        let t4 = p.transfer_seconds(4);
+        assert!((t4 - p.setup_latency).abs() / p.setup_latency < 0.01);
+    }
+
+    #[test]
+    fn bulk_transfers_are_bandwidth_bound() {
+        let p = PcieModel::gen3_x16();
+        let gb = p.transfer_seconds(1 << 30);
+        // ~0.098s for 1 GiB at 11 GB/s
+        assert!((0.08..0.12).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let p = PcieModel::gen3_x16();
+        assert!(p.transfer_seconds(1000) < p.transfer_seconds(1_000_000));
+    }
+}

@@ -1,0 +1,174 @@
+//! Simulated XRT shell — the user-space control layer the paper's
+//! communication manager wraps ("the control shell for host consists of OS
+//! kernel controller XOCL and user space controller Xilinx Runtime (XRT)
+//! ... We can get FPGA running status and send control instructions
+//! through these tools").
+
+use anyhow::{bail, Result};
+
+/// Device lifecycle, mirroring `xbutil` states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Card present, no xclbin loaded.
+    Unconfigured,
+    /// Bitstream flashed and clocks up.
+    Ready,
+    /// Kernel launched, supersteps in flight.
+    Running,
+    /// Fault injected / overtemperature — rejects everything until reset.
+    Error,
+}
+
+/// A `Get_FPGA_Message` response.
+#[derive(Debug, Clone)]
+pub struct DeviceStatus {
+    pub state: DeviceState,
+    pub xclbin: Option<String>,
+    pub pipelines: u32,
+    pub pes: u32,
+    /// Modeled die temperature (°C) — grows with configured parallelism.
+    pub temperature_c: f64,
+    pub completed_launches: u64,
+}
+
+/// The simulated shell. Control-register writes validate state
+/// transitions the way XRT does (e.g. you cannot launch an unconfigured
+/// device); the failure-injection tests drive the `Error` path.
+#[derive(Debug)]
+pub struct XrtShell {
+    state: DeviceState,
+    xclbin: Option<String>,
+    pipelines: u32,
+    pes: u32,
+    launches: u64,
+}
+
+impl XrtShell {
+    pub fn new() -> Self {
+        Self { state: DeviceState::Unconfigured, xclbin: None, pipelines: 0, pes: 0, launches: 0 }
+    }
+
+    /// Flash an xclbin and set the parallelism CSRs (`Set_Pipeline`,
+    /// `Set_PE`).
+    pub fn configure(&mut self, xclbin: &str, pipelines: u32, pes: u32) -> Result<()> {
+        if self.state == DeviceState::Error {
+            bail!("device in error state; reset required before configure");
+        }
+        if pipelines == 0 || pes == 0 {
+            bail!("configure: pipelines and pes must be >= 1");
+        }
+        self.xclbin = Some(xclbin.to_string());
+        self.pipelines = pipelines;
+        self.pes = pes;
+        self.state = DeviceState::Ready;
+        Ok(())
+    }
+
+    /// Kick one superstep (the host driver's `JG_CSR_LAUNCH` write).
+    pub fn launch(&mut self) -> Result<()> {
+        match self.state {
+            DeviceState::Ready | DeviceState::Running => {
+                self.state = DeviceState::Running;
+                self.launches += 1;
+                Ok(())
+            }
+            DeviceState::Unconfigured => bail!("launch on unconfigured device"),
+            DeviceState::Error => bail!("launch on errored device"),
+        }
+    }
+
+    /// Superstep completion interrupt.
+    pub fn complete(&mut self) {
+        if self.state == DeviceState::Running {
+            self.state = DeviceState::Ready;
+        }
+    }
+
+    /// Inject a device fault (failure-injection tests).
+    pub fn inject_error(&mut self) {
+        self.state = DeviceState::Error;
+    }
+
+    /// `xbutil reset`.
+    pub fn reset(&mut self) {
+        *self = Self::new();
+    }
+
+    pub fn require_configured(&self) -> Result<()> {
+        match self.state {
+            DeviceState::Unconfigured => bail!("device not configured (no xclbin loaded)"),
+            DeviceState::Error => bail!("device in error state"),
+            _ => Ok(()),
+        }
+    }
+
+    pub fn status(&self) -> DeviceStatus {
+        DeviceStatus {
+            state: self.state,
+            xclbin: self.xclbin.clone(),
+            pipelines: self.pipelines,
+            pes: self.pes,
+            temperature_c: 45.0 + 1.5 * (self.pipelines * self.pes) as f64,
+            completed_launches: self.launches,
+        }
+    }
+}
+
+impl Default for XrtShell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut s = XrtShell::new();
+        assert_eq!(s.status().state, DeviceState::Unconfigured);
+        s.configure("bfs.xclbin", 8, 1).unwrap();
+        assert_eq!(s.status().state, DeviceState::Ready);
+        s.launch().unwrap();
+        assert_eq!(s.status().state, DeviceState::Running);
+        s.complete();
+        assert_eq!(s.status().state, DeviceState::Ready);
+        assert_eq!(s.status().completed_launches, 1);
+    }
+
+    #[test]
+    fn launch_requires_configure() {
+        let mut s = XrtShell::new();
+        assert!(s.launch().is_err());
+    }
+
+    #[test]
+    fn error_state_blocks_until_reset() {
+        let mut s = XrtShell::new();
+        s.configure("x", 8, 1).unwrap();
+        s.inject_error();
+        assert!(s.launch().is_err());
+        assert!(s.configure("x", 8, 1).is_err());
+        assert!(s.require_configured().is_err());
+        s.reset();
+        s.configure("x", 4, 2).unwrap();
+        s.launch().unwrap();
+    }
+
+    #[test]
+    fn configure_validates_parallelism() {
+        let mut s = XrtShell::new();
+        assert!(s.configure("x", 0, 1).is_err());
+        assert!(s.configure("x", 1, 0).is_err());
+    }
+
+    #[test]
+    fn temperature_scales_with_lanes() {
+        let mut a = XrtShell::new();
+        a.configure("x", 1, 1).unwrap();
+        let mut b = XrtShell::new();
+        b.configure("x", 64, 2).unwrap();
+        assert!(b.status().temperature_c > a.status().temperature_c);
+    }
+}

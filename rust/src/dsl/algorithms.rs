@@ -1,0 +1,242 @@
+//! The **algorithm level** (paper §IV-D): "coarse-grained encapsulation...
+//! providing algorithm functions with parameters, such as BFS(graph,
+//! input, pipelineNum, etc.)". Each function returns a ready
+//! [`GasProgram`]; parallelism parameters (pipelines/PEs) live in
+//! [`crate::sched::ParallelismPlan`], passed at execution — the paper's
+//! `Set Pipeline = 8, PE = 1` line of Algorithm 1.
+
+use super::apply::{ApplyExpr, BinOp};
+use super::builder::GasProgramBuilder;
+use super::program::{
+    Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
+    StateType, Writeback,
+};
+
+/// Breadth-first search: level = iter + 1, min-reduced, written to
+/// unvisited vertices only; active frontier; stops when the frontier
+/// empties. The paper's running example (Algorithm 1).
+pub fn bfs() -> GasProgram {
+    GasProgramBuilder::new("bfs")
+        .state(StateType::I32)
+        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: -1.0 })
+        .apply(ApplyExpr::iter().add(ApplyExpr::constant(1.0)))
+        .reduce(ReduceOp::Min)
+        .writeback(Writeback::IfUnvisited)
+        .frontier(FrontierPolicy::Active)
+        .direction(Direction::Push)
+        .convergence(Convergence::EmptyFrontier)
+        .kind(EdgeOpKind::Bfs)
+        .build()
+        .expect("bfs template must validate")
+}
+
+/// PageRank power iteration: message = src contribution (pre-divided by
+/// out-degree on the vertex-loader module), sum-reduced, overwritten with
+/// damping applied by the writeback stage.
+pub fn pagerank(damping: f64, tolerance: f64) -> GasProgram {
+    assert!((0.0..1.0).contains(&damping), "damping must be in (0,1)");
+    GasProgramBuilder::new(format!("pagerank(d={damping})"))
+        .state(StateType::F32)
+        .init(InitPolicy::UniformFraction)
+        .apply(ApplyExpr::src()) // contribution gather; scale in writeback
+        .reduce(ReduceOp::Sum)
+        .writeback(Writeback::Overwrite)
+        .frontier(FrontierPolicy::All)
+        .direction(Direction::Push)
+        .convergence(Convergence::DeltaBelow(tolerance))
+        .kind(EdgeOpKind::Pr)
+        .build()
+        .expect("pagerank template must validate")
+}
+
+/// Single-source shortest paths (Bellman-Ford): message = src + w,
+/// min-reduced and min-combined; sweeps all vertices until no change.
+pub fn sssp() -> GasProgram {
+    GasProgramBuilder::new("sssp")
+        .state(StateType::F32)
+        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+        .apply(ApplyExpr::src().add(ApplyExpr::weight()))
+        .reduce(ReduceOp::Min)
+        .writeback(Writeback::MinCombine)
+        .frontier(FrontierPolicy::All)
+        .direction(Direction::Push)
+        .convergence(Convergence::NoChange)
+        .kind(EdgeOpKind::Sssp)
+        .build()
+        .expect("sssp template must validate")
+}
+
+/// Weakly-connected components by min-label propagation.
+pub fn wcc() -> GasProgram {
+    GasProgramBuilder::new("wcc")
+        .state(StateType::I32)
+        .init(InitPolicy::VertexId)
+        .apply(ApplyExpr::src())
+        .reduce(ReduceOp::Min)
+        .writeback(Writeback::MinCombine)
+        .frontier(FrontierPolicy::All)
+        .direction(Direction::Push)
+        .convergence(Convergence::NoChange)
+        .kind(EdgeOpKind::Wcc)
+        .build()
+        .expect("wcc template must validate")
+}
+
+/// One sparse matrix-vector product: message = src * w, sum-reduced,
+/// single iteration.
+pub fn spmv() -> GasProgram {
+    GasProgramBuilder::new("spmv")
+        .state(StateType::F32)
+        .init(InitPolicy::Constant(1.0))
+        .apply(ApplyExpr::src().mul(ApplyExpr::weight()))
+        .reduce(ReduceOp::Sum)
+        .writeback(Writeback::Overwrite)
+        .frontier(FrontierPolicy::All)
+        .direction(Direction::Push)
+        .convergence(Convergence::FixedIterations(1))
+        .kind(EdgeOpKind::Spmv)
+        .build()
+        .expect("spmv template must validate")
+}
+
+/// In-degree count: message = 1, sum-reduced, one sweep. A "trivial but
+/// custom" template showing extensibility beyond the canonical five; runs
+/// on the software engine (no AOT kernel tag).
+pub fn degree_count() -> GasProgram {
+    GasProgramBuilder::new("degree-count")
+        .state(StateType::F32)
+        .init(InitPolicy::Constant(0.0))
+        .apply(ApplyExpr::constant(1.0))
+        .reduce(ReduceOp::Sum)
+        .writeback(Writeback::Overwrite)
+        .frontier(FrontierPolicy::All)
+        .convergence(Convergence::FixedIterations(1))
+        .build()
+        .expect("degree-count template must validate")
+}
+
+/// Widest-path (maximum-bottleneck): message = min(src, w), max-reduced.
+/// Another extensibility demo: a real algorithm the paper's comparators
+/// cannot express without new RTL.
+pub fn widest_path() -> GasProgram {
+    GasProgramBuilder::new("widest-path")
+        .state(StateType::F32)
+        .init(InitPolicy::RootAndDefault { root_value: f64::MAX, default: 0.0 })
+        .apply(ApplyExpr::bin(BinOp::Min, ApplyExpr::src(), ApplyExpr::weight()))
+        .reduce(ReduceOp::Max)
+        .writeback(Writeback::MaxCombine)
+        .frontier(FrontierPolicy::All)
+        .convergence(Convergence::NoChange)
+        .build()
+        .expect("widest-path template must validate")
+}
+
+/// Reachability flag propagation: which vertices can the root reach?
+/// Visited = 1 propagates along out-edges; active frontier like BFS but
+/// without level arithmetic — the cheapest traversal template.
+pub fn reachability() -> GasProgram {
+    GasProgramBuilder::new("reachability")
+        .state(StateType::I32)
+        .init(InitPolicy::RootAndDefault { root_value: 1.0, default: 0.0 })
+        .apply(ApplyExpr::src())
+        .reduce(ReduceOp::Max)
+        .writeback(Writeback::MaxCombine)
+        .frontier(FrontierPolicy::Active)
+        .convergence(Convergence::EmptyFrontier)
+        .build()
+        .expect("reachability template must validate")
+}
+
+/// Max-label propagation ("influence"): every vertex learns the largest
+/// vertex id in its reachable-from set — the max-dual of WCC, another
+/// template the paper's fixed-function comparators cannot express.
+pub fn max_label() -> GasProgram {
+    GasProgramBuilder::new("max-label")
+        .state(StateType::I32)
+        .init(InitPolicy::VertexId)
+        .apply(ApplyExpr::src())
+        .reduce(ReduceOp::Max)
+        .writeback(Writeback::MaxCombine)
+        .frontier(FrontierPolicy::All)
+        .convergence(Convergence::NoChange)
+        .build()
+        .expect("max-label template must validate")
+}
+
+/// The canonical programs with AOT kernels (used by tests and reports).
+pub fn all_canonical() -> Vec<GasProgram> {
+    vec![bfs(), pagerank(0.85, 1e-6), sssp(), wcc(), spmv()]
+}
+
+/// Every library algorithm, canonical + extension templates.
+pub fn all() -> Vec<GasProgram> {
+    let mut v = all_canonical();
+    v.push(degree_count());
+    v.push(widest_path());
+    v.push(reachability());
+    v.push(max_label());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_kinds_are_distinct_and_tagged() {
+        let kinds: Vec<_> = all_canonical().iter().map(|p| p.kind.unwrap()).collect();
+        let set: std::collections::HashSet<_> = kinds.iter().collect();
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn bfs_matches_paper_description() {
+        let p = bfs();
+        // "the Apply function is the current value plus one after traversal"
+        assert_eq!(p.apply.render(), "(iter + 1)");
+        assert_eq!(p.reduce, ReduceOp::Min);
+        assert_eq!(p.frontier, FrontierPolicy::Active);
+        assert!(!p.uses_weights);
+    }
+
+    #[test]
+    fn sssp_uses_weights_bfs_does_not() {
+        assert!(sssp().uses_weights);
+        assert!(!bfs().uses_weights);
+        assert!(spmv().uses_weights);
+    }
+
+    #[test]
+    fn extension_templates_have_no_kernel() {
+        assert!(!degree_count().has_aot_kernel());
+        assert!(!widest_path().has_aot_kernel());
+        assert!(!reachability().has_aot_kernel());
+        assert!(!max_label().has_aot_kernel());
+    }
+
+    #[test]
+    fn reachability_marks_reachable_set() {
+        use crate::engine::gas;
+        use crate::graph::{csr::Csr, edgelist::EdgeList};
+        let mut el = EdgeList::from_pairs([(0, 1), (1, 2)]);
+        el.num_vertices = 4; // vertex 3 unreachable
+        let r = gas::run(&reachability(), &Csr::from_edgelist(&el), 0, |_| {}).unwrap();
+        assert_eq!(r.values, vec![1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn max_label_is_dual_of_wcc() {
+        use crate::engine::gas;
+        use crate::graph::{csr::Csr, edgelist::EdgeList};
+        let mut el = EdgeList::from_pairs([(0, 1), (1, 0), (2, 3), (3, 2)]);
+        el.num_vertices = 4;
+        let r = gas::run(&max_label(), &Csr::from_edgelist(&el), 0, |_| {}).unwrap();
+        assert_eq!(r.values, vec![1.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "damping")]
+    fn pagerank_rejects_bad_damping() {
+        pagerank(1.5, 1e-6);
+    }
+}

@@ -1,0 +1,322 @@
+//! The **Apply** expression language (paper §IV-B): "The basic operators
+//! are included such as +, -, *, /, %, sqrt, sqare, etc. Apply contains
+//! these operators to be choosed... One can program almost all the graph
+//! algorithms through changing the Apply interface."
+//!
+//! An [`ApplyExpr`] computes the per-edge *message* from the gathered
+//! source-vertex value, the edge weight, and iteration context. The
+//! software GAS engine interprets it directly; the translator lowers it to
+//! a chain of ALU hardware modules; and for the five canonical algorithm
+//! kinds it matches the AOT-compiled Pallas kernel (checked by tests).
+
+
+/// Leaf terms available to an apply expression.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Term {
+    /// Gathered source-vertex state (the `Receive` result).
+    SrcValue,
+    /// Destination-vertex state before update (for read-modify patterns).
+    DstValue,
+    /// The edge's weight.
+    EdgeWeight,
+    /// Current iteration number (BFS level counter).
+    IterCount,
+    /// A literal constant.
+    Const(f64),
+}
+
+/// Binary operators (the paper's `+ - * / %` plus min/max which the
+/// Reduce accumulators need).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Max,
+}
+
+/// Unary operators (the paper's `sqrt, sqare`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Sqrt,
+    Square,
+    Neg,
+    Abs,
+}
+
+/// An apply expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApplyExpr {
+    Term(Term),
+    Unary(UnOp, Box<ApplyExpr>),
+    Binary(BinOp, Box<ApplyExpr>, Box<ApplyExpr>),
+}
+
+impl ApplyExpr {
+    pub fn term(t: Term) -> Self {
+        ApplyExpr::Term(t)
+    }
+
+    pub fn constant(c: f64) -> Self {
+        ApplyExpr::Term(Term::Const(c))
+    }
+
+    pub fn src() -> Self {
+        ApplyExpr::Term(Term::SrcValue)
+    }
+
+    pub fn weight() -> Self {
+        ApplyExpr::Term(Term::EdgeWeight)
+    }
+
+    pub fn iter() -> Self {
+        ApplyExpr::Term(Term::IterCount)
+    }
+
+    pub fn bin(op: BinOp, a: ApplyExpr, b: ApplyExpr) -> Self {
+        ApplyExpr::Binary(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn un(op: UnOp, a: ApplyExpr) -> Self {
+        ApplyExpr::Unary(op, Box::new(a))
+    }
+
+    pub fn add(self, rhs: ApplyExpr) -> Self {
+        Self::bin(BinOp::Add, self, rhs)
+    }
+
+    pub fn mul(self, rhs: ApplyExpr) -> Self {
+        Self::bin(BinOp::Mul, self, rhs)
+    }
+
+    /// Evaluate with the given environment — the software GAS engine's
+    /// interpreter. All arithmetic in f64; integer state is converted by
+    /// the caller.
+    pub fn eval(&self, env: &ApplyEnv) -> f64 {
+        match self {
+            ApplyExpr::Term(t) => match *t {
+                Term::SrcValue => env.src_value,
+                Term::DstValue => env.dst_value,
+                Term::EdgeWeight => env.edge_weight,
+                Term::IterCount => env.iter_count,
+                Term::Const(c) => c,
+            },
+            ApplyExpr::Unary(op, a) => {
+                let x = a.eval(env);
+                match op {
+                    UnOp::Sqrt => x.sqrt(),
+                    UnOp::Square => x * x,
+                    UnOp::Neg => -x,
+                    UnOp::Abs => x.abs(),
+                }
+            }
+            ApplyExpr::Binary(op, a, b) => {
+                let (x, y) = (a.eval(env), b.eval(env));
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Mod => x % y,
+                    BinOp::Min => x.min(y),
+                    BinOp::Max => x.max(y),
+                }
+            }
+        }
+    }
+
+    /// Count of arithmetic operations — the translator sizes the Apply
+    /// hardware module's ALU chain from this (one ALU per op, pipelined).
+    pub fn op_count(&self) -> usize {
+        match self {
+            ApplyExpr::Term(_) => 0,
+            ApplyExpr::Unary(_, a) => 1 + a.op_count(),
+            ApplyExpr::Binary(_, a, b) => 1 + a.op_count() + b.op_count(),
+        }
+    }
+
+    /// Expression depth — the Apply module's pipeline latency in stages.
+    pub fn depth(&self) -> usize {
+        match self {
+            ApplyExpr::Term(_) => 0,
+            ApplyExpr::Unary(_, a) => 1 + a.depth(),
+            ApplyExpr::Binary(_, a, b) => 1 + a.depth().max(b.depth()),
+        }
+    }
+
+    /// Does the expression read the edge weight? (Validation: weighted
+    /// expressions need a weighted graph / the weight-carrying datapath.)
+    pub fn uses_weight(&self) -> bool {
+        self.any_term(|t| matches!(t, Term::EdgeWeight))
+    }
+
+    /// Does the expression read the iteration counter?
+    pub fn uses_iter(&self) -> bool {
+        self.any_term(|t| matches!(t, Term::IterCount))
+    }
+
+    /// Does the expression read gathered source state?
+    pub fn uses_src(&self) -> bool {
+        self.any_term(|t| matches!(t, Term::SrcValue))
+    }
+
+    pub(crate) fn any_term(&self, f: impl Fn(&Term) -> bool + Copy) -> bool {
+        match self {
+            ApplyExpr::Term(t) => f(t),
+            ApplyExpr::Unary(_, a) => a.any_term(f),
+            ApplyExpr::Binary(_, a, b) => a.any_term(f) || b.any_term(f),
+        }
+    }
+
+    /// Human-readable rendering (used by codegen comments and reports).
+    pub fn render(&self) -> String {
+        match self {
+            ApplyExpr::Term(t) => match t {
+                Term::SrcValue => "src".into(),
+                Term::DstValue => "dst".into(),
+                Term::EdgeWeight => "w".into(),
+                Term::IterCount => "iter".into(),
+                Term::Const(c) => format!("{c}"),
+            },
+            ApplyExpr::Unary(op, a) => {
+                let name = match op {
+                    UnOp::Sqrt => "sqrt",
+                    UnOp::Square => "sq",
+                    UnOp::Neg => "neg",
+                    UnOp::Abs => "abs",
+                };
+                format!("{name}({})", a.render())
+            }
+            ApplyExpr::Binary(op, a, b) => {
+                let sym = match op {
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                    BinOp::Mod => "%",
+                    BinOp::Min => "min",
+                    BinOp::Max => "max",
+                };
+                match op {
+                    BinOp::Min | BinOp::Max => {
+                        format!("{sym}({}, {})", a.render(), b.render())
+                    }
+                    _ => format!("({} {sym} {})", a.render(), b.render()),
+                }
+            }
+        }
+    }
+}
+
+/// Evaluation environment for one edge.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ApplyEnv {
+    pub src_value: f64,
+    pub dst_value: f64,
+    pub edge_weight: f64,
+    pub iter_count: f64,
+}
+
+/// Specialized forms of common apply expressions — the software engine's
+/// analogue of the translator's fixed ALU chains. Detecting the shape
+/// once per run removes the per-edge tree walk from the hot loop
+/// (EXPERIMENTS.md §Perf, L3): the five canonical algorithms all compile
+/// to one of the closed forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompiledApply {
+    /// Reads neither src nor dst nor weight — constant within a superstep
+    /// (BFS: `iter + 1`).
+    ConstPerIter,
+    /// `src` (WCC labels, PR contributions).
+    Src,
+    /// `src + w` (SSSP relaxation).
+    SrcPlusWeight,
+    /// `src * w` (SpMV products).
+    SrcTimesWeight,
+    /// Anything else: fall back to the tree interpreter.
+    General,
+}
+
+impl CompiledApply {
+    /// Classify an expression. Conservative: only exact shapes map to the
+    /// closed forms; everything else keeps full generality.
+    pub fn compile(e: &ApplyExpr) -> CompiledApply {
+        use ApplyExpr as E;
+        let uses_dst = e.any_term(|t| matches!(t, Term::DstValue));
+        if !e.uses_src() && !e.uses_weight() && !uses_dst {
+            return CompiledApply::ConstPerIter;
+        }
+        match e {
+            E::Term(Term::SrcValue) => CompiledApply::Src,
+            E::Binary(op, a, b) => match (op, a.as_ref(), b.as_ref()) {
+                (BinOp::Add, E::Term(Term::SrcValue), E::Term(Term::EdgeWeight))
+                | (BinOp::Add, E::Term(Term::EdgeWeight), E::Term(Term::SrcValue)) => {
+                    CompiledApply::SrcPlusWeight
+                }
+                (BinOp::Mul, E::Term(Term::SrcValue), E::Term(Term::EdgeWeight))
+                | (BinOp::Mul, E::Term(Term::EdgeWeight), E::Term(Term::SrcValue)) => {
+                    CompiledApply::SrcTimesWeight
+                }
+                _ => CompiledApply::General,
+            },
+            _ => CompiledApply::General,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> ApplyEnv {
+        ApplyEnv { src_value: 3.0, dst_value: 10.0, edge_weight: 2.0, iter_count: 5.0 }
+    }
+
+    #[test]
+    fn eval_basic_ops() {
+        let e = ApplyExpr::src().add(ApplyExpr::weight());
+        assert_eq!(e.eval(&env()), 5.0);
+        let e = ApplyExpr::bin(BinOp::Mul, ApplyExpr::src(), ApplyExpr::constant(4.0));
+        assert_eq!(e.eval(&env()), 12.0);
+        let e = ApplyExpr::un(UnOp::Square, ApplyExpr::weight());
+        assert_eq!(e.eval(&env()), 4.0);
+        let e = ApplyExpr::un(UnOp::Sqrt, ApplyExpr::constant(16.0));
+        assert_eq!(e.eval(&env()), 4.0);
+        let e = ApplyExpr::bin(BinOp::Mod, ApplyExpr::constant(7.0), ApplyExpr::constant(4.0));
+        assert_eq!(e.eval(&env()), 3.0);
+        let e = ApplyExpr::bin(BinOp::Min, ApplyExpr::src(), ApplyExpr::weight());
+        assert_eq!(e.eval(&env()), 2.0);
+    }
+
+    #[test]
+    fn bfs_expression_is_iter_plus_one() {
+        // the paper: "the Apply function is the current value plus one"
+        let e = ApplyExpr::iter().add(ApplyExpr::constant(1.0));
+        assert_eq!(e.eval(&env()), 6.0);
+        assert!(e.uses_iter() && !e.uses_weight() && !e.uses_src());
+    }
+
+    #[test]
+    fn op_count_and_depth() {
+        // (src + w) * (src + 1) -> 3 ops, depth 2
+        let e = ApplyExpr::bin(
+            BinOp::Mul,
+            ApplyExpr::src().add(ApplyExpr::weight()),
+            ApplyExpr::src().add(ApplyExpr::constant(1.0)),
+        );
+        assert_eq!(e.op_count(), 3);
+        assert_eq!(e.depth(), 2);
+    }
+
+    #[test]
+    fn render_is_readable() {
+        let e = ApplyExpr::src().add(ApplyExpr::weight());
+        assert_eq!(e.render(), "(src + w)");
+        let e = ApplyExpr::bin(BinOp::Min, ApplyExpr::src(), ApplyExpr::constant(2.0));
+        assert_eq!(e.render(), "min(src, 2)");
+    }
+
+}

@@ -1,0 +1,167 @@
+//! Fluent builder for [`GasProgram`] — the "function level" authoring API.
+//! Validation happens at `build()` via [`super::validate`].
+
+use anyhow::Result;
+
+use super::apply::ApplyExpr;
+use super::program::{
+    Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
+    StateType, Writeback,
+};
+use super::validate;
+
+/// Builder with sane defaults: f32 state, push direction, all-active
+/// frontier, no-change convergence, sum reduce, overwrite writeback.
+#[derive(Debug, Clone)]
+pub struct GasProgramBuilder {
+    name: String,
+    state: StateType,
+    init: InitPolicy,
+    apply: Option<ApplyExpr>,
+    reduce: ReduceOp,
+    writeback: Option<Writeback>,
+    frontier: FrontierPolicy,
+    direction: Direction,
+    convergence: Convergence,
+    kind: Option<EdgeOpKind>,
+}
+
+impl GasProgramBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            state: StateType::F32,
+            init: InitPolicy::Constant(0.0),
+            apply: None,
+            reduce: ReduceOp::Sum,
+            writeback: None,
+            frontier: FrontierPolicy::All,
+            direction: Direction::Push,
+            convergence: Convergence::NoChange,
+            kind: None,
+        }
+    }
+
+    pub fn state(mut self, s: StateType) -> Self {
+        self.state = s;
+        self
+    }
+
+    pub fn init(mut self, i: InitPolicy) -> Self {
+        self.init = i;
+        self
+    }
+
+    /// The `Apply` interface (required).
+    pub fn apply(mut self, e: ApplyExpr) -> Self {
+        self.apply = Some(e);
+        self
+    }
+
+    /// The `Reduce` accumulator.
+    pub fn reduce(mut self, r: ReduceOp) -> Self {
+        self.reduce = r;
+        self
+    }
+
+    pub fn writeback(mut self, w: Writeback) -> Self {
+        self.writeback = Some(w);
+        self
+    }
+
+    pub fn frontier(mut self, f: FrontierPolicy) -> Self {
+        self.frontier = f;
+        self
+    }
+
+    pub fn direction(mut self, d: Direction) -> Self {
+        self.direction = d;
+        self
+    }
+
+    pub fn convergence(mut self, c: Convergence) -> Self {
+        self.convergence = c;
+        self
+    }
+
+    /// Tag as a canonical kind (enables the AOT kernel path). The
+    /// algorithm library sets this; custom programs normally leave it
+    /// unset and run on the software engine.
+    pub fn kind(mut self, k: EdgeOpKind) -> Self {
+        self.kind = Some(k);
+        self
+    }
+
+    /// Finalize. Fails with a descriptive error when the combination is
+    /// not implementable (see [`validate::check`]).
+    pub fn build(self) -> Result<GasProgram> {
+        let apply = self
+            .apply
+            .ok_or_else(|| anyhow::anyhow!("program {:?}: apply expression is required", self.name))?;
+        let writeback = self.writeback.unwrap_or(match self.reduce {
+            ReduceOp::Min => Writeback::MinCombine,
+            ReduceOp::Max => Writeback::MaxCombine,
+            ReduceOp::Sum => Writeback::Overwrite,
+        });
+        let uses_weights = apply.uses_weight();
+        let p = GasProgram {
+            name: self.name,
+            state: self.state,
+            init: self.init,
+            apply,
+            reduce: self.reduce,
+            writeback,
+            frontier: self.frontier,
+            direction: self.direction,
+            convergence: self.convergence,
+            uses_weights,
+            kind: self.kind,
+        };
+        validate::check(&p)?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::apply::{ApplyExpr, BinOp};
+
+    #[test]
+    fn builder_defaults_and_derived_writeback() {
+        let p = GasProgramBuilder::new("custom")
+            .apply(ApplyExpr::src().add(ApplyExpr::weight()))
+            .reduce(ReduceOp::Min)
+            .build()
+            .unwrap();
+        assert_eq!(p.writeback, Writeback::MinCombine);
+        assert!(p.uses_weights);
+        assert!(p.kind.is_none());
+    }
+
+    #[test]
+    fn missing_apply_fails() {
+        let err = GasProgramBuilder::new("nope").build().unwrap_err();
+        assert!(err.to_string().contains("apply expression is required"));
+    }
+
+    #[test]
+    fn custom_algorithm_composes() {
+        // "degree-weighted distance": min(src + sqrt(w))
+        let e = ApplyExpr::bin(
+            BinOp::Add,
+            ApplyExpr::src(),
+            ApplyExpr::un(super::super::apply::UnOp::Sqrt, ApplyExpr::weight()),
+        );
+        let p = GasProgramBuilder::new("sqrt-sssp")
+            .state(StateType::F32)
+            .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+            .apply(e)
+            .reduce(ReduceOp::Min)
+            .convergence(Convergence::NoChange)
+            .build()
+            .unwrap();
+        assert_eq!(p.name, "sqrt-sssp");
+        assert!(!p.has_aot_kernel());
+    }
+}

@@ -1,0 +1,34 @@
+//! The JGraph **graph DSL** (paper §IV): atomic operators for graph
+//! processing, organized in the paper's three abstraction levels
+//! (§IV-D):
+//!
+//! 1. **algorithm level** — ready algorithms with parameters
+//!    ([`algorithms`]: `bfs()`, `pagerank()`, …, each a [`GasProgram`]);
+//! 2. **function level** — the GAS operations and graph-data functions
+//!    ([`program`], [`apply`]: `Receive`/`Apply`/`Reduce`/`Send`, vertex
+//!    and edge getters);
+//! 3. **atomic-op level** — the instruction-like operators ([`ops`]:
+//!    `load_Vertices`, `get_address`, …).
+//!
+//! A [`program::GasProgram`] is the translatable unit: it decouples graph
+//! *scheduling* (frontier policy, direction, convergence) from the graph
+//! *algorithm* (the [`apply::ApplyExpr`] and reduce operator), exactly the
+//! decoupling the paper credits for translator optimization.
+//!
+//! [`registry`] enumerates every public interface — the Table IV count.
+
+pub mod algorithms;
+pub mod apply;
+pub mod builder;
+pub mod isa;
+pub mod ops;
+pub mod program;
+pub mod registry;
+pub mod validate;
+
+pub use apply::{ApplyExpr, BinOp, Term, UnOp};
+pub use builder::GasProgramBuilder;
+pub use program::{
+    Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
+    StateType,
+};

@@ -1,0 +1,179 @@
+//! [`GasProgram`] — the translatable unit: a graph algorithm expressed in
+//! the GAS model with scheduling decoupled from the algorithm (paper §IV:
+//! "The decoupling of graph scheduling and graph algorithm is convenient
+//! for translator optimization").
+
+
+use super::apply::ApplyExpr;
+
+/// Vertex-state element type carried through the datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateType {
+    I32,
+    F32,
+}
+
+/// How vertex state is initialized before iteration 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitPolicy {
+    /// Root gets `root_value`, everyone else `default` (BFS/SSSP).
+    RootAndDefault { root_value: f64, default: f64 },
+    /// Every vertex gets its own id (WCC labels).
+    VertexId,
+    /// Every vertex gets `1 / num_vertices` (PageRank).
+    UniformFraction,
+    /// Every vertex gets a constant.
+    Constant(f64),
+}
+
+/// The Reduce accumulator combining multiple messages for one vertex
+/// (paper §IV-B: "we should reduce these message with accumulator").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Min,
+    Max,
+    Sum,
+}
+
+/// Which vertices emit messages each superstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontierPolicy {
+    /// Only vertices updated last superstep (BFS frontier queue).
+    Active,
+    /// Every vertex every superstep (PR/WCC/SpMV sweeps).
+    All,
+}
+
+/// Message direction: push along out-edges or pull along in-edges. The
+/// paper's BFS pseudocode pulls over CSC; push over CSR is equivalent for
+/// our purposes and maps to the same module graph with src/dst swapped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Push,
+    Pull,
+}
+
+/// Convergence test evaluated by the runtime scheduler after each superstep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Convergence {
+    /// Stop when no vertex joined the frontier (BFS).
+    EmptyFrontier,
+    /// Stop when no vertex value changed (WCC/SSSP).
+    NoChange,
+    /// Fixed superstep count (SpMV = 1).
+    FixedIterations(u32),
+    /// Stop when the L1 delta drops below the threshold (PageRank).
+    DeltaBelow(f64),
+}
+
+/// The five canonical algorithm kinds with AOT-compiled Pallas kernels.
+/// Custom programs (`kind == None`) run on the software GAS engine; the
+/// translator handles both identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeOpKind {
+    Bfs,
+    Pr,
+    Sssp,
+    Wcc,
+    Spmv,
+}
+
+impl EdgeOpKind {
+    /// Artifact name prefix (matches python/compile/aot.py output files).
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            EdgeOpKind::Bfs => "bfs",
+            EdgeOpKind::Pr => "pr",
+            EdgeOpKind::Sssp => "sssp",
+            EdgeOpKind::Wcc => "wcc",
+            EdgeOpKind::Spmv => "spmv",
+        }
+    }
+
+    pub fn all() -> [EdgeOpKind; 5] {
+        [EdgeOpKind::Bfs, EdgeOpKind::Pr, EdgeOpKind::Sssp, EdgeOpKind::Wcc, EdgeOpKind::Spmv]
+    }
+}
+
+/// A complete GAS program: what the user authors (directly or through the
+/// algorithm library) and what the translator consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GasProgram {
+    /// Human-readable name (appears in generated HDL module names).
+    pub name: String,
+    /// Vertex state element type.
+    pub state: StateType,
+    /// Initial state.
+    pub init: InitPolicy,
+    /// The per-edge message expression (the `Apply` interface).
+    pub apply: ApplyExpr,
+    /// Message accumulator (the `Reduce` interface).
+    pub reduce: ReduceOp,
+    /// Writeback: does a *smaller* (Min), *larger* (Max) or *any* reduced
+    /// message replace the vertex value? Derived from `reduce` by default;
+    /// kept explicit so e.g. PR can overwrite unconditionally.
+    pub writeback: Writeback,
+    /// Which vertices send each superstep.
+    pub frontier: FrontierPolicy,
+    /// Push or pull.
+    pub direction: Direction,
+    /// Termination rule.
+    pub convergence: Convergence,
+    /// Does the datapath need edge weights?
+    pub uses_weights: bool,
+    /// Canonical kind if this program matches an AOT kernel.
+    pub kind: Option<EdgeOpKind>,
+}
+
+/// How the reduced message updates the vertex value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Writeback {
+    /// Keep min(old, reduced) — SSSP/WCC relaxations.
+    MinCombine,
+    /// Keep max(old, reduced).
+    MaxCombine,
+    /// Overwrite only if the vertex was unvisited (BFS level write).
+    IfUnvisited,
+    /// Unconditional overwrite (PR power iteration, SpMV).
+    Overwrite,
+}
+
+impl GasProgram {
+    /// Supersteps upper bound the scheduler enforces as a safety net
+    /// (diameter can be at most V-1; PR uses the convergence delta).
+    pub fn max_supersteps(&self, num_vertices: usize) -> u32 {
+        match self.convergence {
+            Convergence::FixedIterations(k) => k,
+            Convergence::DeltaBelow(_) => 200,
+            _ => num_vertices.max(2) as u32,
+        }
+    }
+
+    /// Whether the engine can offload this program to an AOT artifact.
+    pub fn has_aot_kernel(&self) -> bool {
+        self.kind.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+
+    #[test]
+    fn artifact_names_match_python_side() {
+        let names: Vec<_> = EdgeOpKind::all().iter().map(|k| k.artifact_name()).collect();
+        assert_eq!(names, vec!["bfs", "pr", "sssp", "wcc", "spmv"]);
+    }
+
+    #[test]
+    fn max_supersteps_bounds() {
+        let bfs = algorithms::bfs();
+        assert_eq!(bfs.max_supersteps(100), 100);
+        let pr = algorithms::pagerank(0.85, 1e-6);
+        assert_eq!(pr.max_supersteps(100), 200);
+        let spmv = algorithms::spmv();
+        assert_eq!(spmv.max_supersteps(100), 1);
+    }
+
+}

@@ -1,0 +1,139 @@
+//! Semantic validation of [`GasProgram`]s — the DSL's compile-time checks.
+//! The light-weight translator deliberately skips general-purpose semantic
+//! analysis (paper §V), so these few domain rules are the *entire* front
+//! end; each rejects a program that cannot be mapped onto the hardware
+//! module library.
+
+use anyhow::{bail, Result};
+
+use super::program::{Convergence, GasProgram, InitPolicy, ReduceOp, StateType, Writeback};
+
+/// Check a program. Errors name the offending interface so that DSL users
+/// see "their" function names, not translator internals.
+pub fn check(p: &GasProgram) -> Result<()> {
+    // Reduce/writeback compatibility: a Sum accumulator cannot feed the
+    // visited-gate (it would double-count on revisits).
+    if p.reduce == ReduceOp::Sum && p.writeback == Writeback::IfUnvisited {
+        bail!(
+            "program {:?}: Reduce(Sum) cannot drive Writeback::IfUnvisited — \
+             accumulated sums are not idempotent across supersteps",
+            p.name
+        );
+    }
+
+    // Integer state with division: the fixed-point datapath has no divider.
+    if p.state == StateType::I32 && expr_has_div(&p.apply) {
+        bail!(
+            "program {:?}: Apply uses division but state is I32 — the integer \
+             datapath has no divider; use F32 state",
+            p.name
+        );
+    }
+
+    // Delta-based convergence needs float state.
+    if matches!(p.convergence, Convergence::DeltaBelow(_)) && p.state == StateType::I32 {
+        bail!(
+            "program {:?}: Convergence::DeltaBelow requires F32 state",
+            p.name
+        );
+    }
+
+    // Infinity defaults only make sense for f32 state; the i32 datapath
+    // uses the INF_I32 sentinel internally but the DSL surfaces -1/INF.
+    if let InitPolicy::RootAndDefault { default, .. } = p.init {
+        if default.is_infinite() && p.state == StateType::I32 {
+            bail!(
+                "program {:?}: infinite init default with I32 state; use -1 \
+                 (unvisited sentinel) instead",
+                p.name
+            );
+        }
+    }
+
+    // Fixed iteration counts of 0 do nothing.
+    if p.convergence == Convergence::FixedIterations(0) {
+        bail!("program {:?}: FixedIterations(0) would never run", p.name);
+    }
+
+    Ok(())
+}
+
+fn expr_has_div(e: &super::apply::ApplyExpr) -> bool {
+    use super::apply::{ApplyExpr, BinOp};
+    match e {
+        ApplyExpr::Term(_) => false,
+        ApplyExpr::Unary(_, a) => expr_has_div(a),
+        ApplyExpr::Binary(op, a, b) => {
+            *op == BinOp::Div || expr_has_div(a) || expr_has_div(b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::apply::{ApplyExpr, BinOp};
+    use crate::dsl::builder::GasProgramBuilder;
+    use crate::dsl::program::{Convergence, InitPolicy, ReduceOp, StateType, Writeback};
+
+    #[test]
+    fn sum_with_ifunvisited_rejected() {
+        let err = GasProgramBuilder::new("bad")
+            .apply(ApplyExpr::src())
+            .reduce(ReduceOp::Sum)
+            .writeback(Writeback::IfUnvisited)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("not idempotent"));
+    }
+
+    #[test]
+    fn i32_division_rejected() {
+        let err = GasProgramBuilder::new("bad-div")
+            .state(StateType::I32)
+            .apply(ApplyExpr::bin(BinOp::Div, ApplyExpr::src(), ApplyExpr::constant(2.0)))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("no divider"));
+    }
+
+    #[test]
+    fn delta_convergence_needs_f32() {
+        let err = GasProgramBuilder::new("bad-delta")
+            .state(StateType::I32)
+            .apply(ApplyExpr::src())
+            .convergence(Convergence::DeltaBelow(0.1))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("requires F32"));
+    }
+
+    #[test]
+    fn infinite_i32_default_rejected() {
+        let err = GasProgramBuilder::new("bad-init")
+            .state(StateType::I32)
+            .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+            .apply(ApplyExpr::src())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("unvisited sentinel"));
+    }
+
+    #[test]
+    fn zero_iterations_rejected() {
+        let err = GasProgramBuilder::new("bad-iters")
+            .apply(ApplyExpr::src())
+            .convergence(Convergence::FixedIterations(0))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("never run"));
+    }
+
+    #[test]
+    fn canonical_algorithms_all_validate() {
+        use crate::dsl::algorithms;
+        for p in algorithms::all_canonical() {
+            check(&p).unwrap();
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Run reports: the numbers Table V and Fig. 5 are built from, for a
+//! single (program, design, graph) execution.
+
+
+use crate::accel::stats::SimStats;
+
+/// Which functional path produced the values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalPath {
+    /// AOT-compiled XLA supersteps (canonical algorithms).
+    Xla,
+    /// Software GAS interpreter (custom programs, or XLA unavailable).
+    Software,
+}
+
+/// Everything a run produces. Field groups mirror the paper's running-time
+/// decomposition (Fig. 5: preparation / compilation / deployment) plus the
+/// Table V columns (code lines, RT, TP).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub program: String,
+    pub translator: &'static str,
+    pub graph_name: String,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+
+    // --- Fig. 5 periods (seconds)
+    /// Program preparation: graph read/generate + Layout (+ Reorder /
+    /// Partition when enabled). Measured wall time.
+    pub prep_seconds: f64,
+    /// Compilation: measured translate + modeled synthesis.
+    pub compile_seconds: f64,
+    /// Deployment: modeled xclbin flash + measured-model PCIe transport.
+    pub deploy_seconds: f64,
+
+    // --- execution
+    /// Simulated on-FPGA execution (cycle model, incl. launches).
+    pub sim_exec_seconds: f64,
+    /// Wall time of the XLA functional path (host-side PJRT execute).
+    pub functional_exec_seconds: f64,
+    pub functional_path: FunctionalPath,
+    pub supersteps: u32,
+    pub edges_traversed: u64,
+
+    // --- Table V metrics
+    pub hdl_lines: usize,
+    /// RT = prep + compile + deploy + simulated exec (the paper's
+    /// "running time includes the compilation time, the data preprocessing
+    /// time and the algorithm execution time").
+    pub rt_seconds: f64,
+    /// TP in MTEPS from the cycle model.
+    pub simulated_mteps: f64,
+
+    /// Full simulator statistics for drill-down.
+    pub sim: SimStats,
+    /// Max relative deviation XLA-vs-oracle (None when not cross-checked).
+    pub oracle_deviation: Option<f64>,
+}
+
+impl RunReport {
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] on {} ({}v/{}e): {} supersteps, {:.1} MTEPS simulated, \
+             RT {:.1}s (prep {:.2} + compile {:.1} + deploy {:.2} + exec {:.4}), \
+             {} HDL lines{}",
+            self.program,
+            self.translator,
+            self.graph_name,
+            self.num_vertices,
+            self.num_edges,
+            self.supersteps,
+            self.simulated_mteps,
+            self.rt_seconds,
+            self.prep_seconds,
+            self.compile_seconds,
+            self.deploy_seconds,
+            self.sim_exec_seconds,
+            self.hdl_lines,
+            match self.oracle_deviation {
+                Some(d) => format!(", oracle dev {d:.2e}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_renders() {
+        let r = RunReport {
+            program: "bfs".into(),
+            translator: "FAgraph",
+            graph_name: "email".into(),
+            num_vertices: 10,
+            num_edges: 20,
+            prep_seconds: 0.1,
+            compile_seconds: 3.0,
+            deploy_seconds: 1.0,
+            sim_exec_seconds: 0.001,
+            functional_exec_seconds: 0.01,
+            functional_path: FunctionalPath::Software,
+            supersteps: 3,
+            edges_traversed: 20,
+            hdl_lines: 35,
+            rt_seconds: 4.101,
+            simulated_mteps: 314.0,
+            sim: SimStats::default(),
+            oracle_deviation: Some(0.0),
+        };
+        let s = r.summary();
+        assert!(s.contains("314.0 MTEPS"));
+        assert!(s.contains("35 HDL lines"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Execution engine: ties the DSL, translator, scheduler, communication
+//! manager, cycle simulator, and the AOT/XLA runtime into the paper's
+//! Algorithm 1 flow. See [`executor::Executor`] for the entry point,
+//! [`gas`] for the software oracle, and [`xla_engine`] for the AOT path.
+
+pub mod executor;
+pub mod gas;
+pub mod metrics;
+pub mod trace;
+pub mod xla_engine;
+
+pub use executor::{Executor, ExecutorConfig};
+pub use gas::{GasResult, SuperstepTrace};
+pub use metrics::{FunctionalPath, RunReport};
+pub use trace::Trace;
+pub use xla_engine::XlaRunResult;

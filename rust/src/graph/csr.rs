@@ -1,0 +1,232 @@
+//! Compressed Sparse Row — the paper's on-device graph format (§IV-A):
+//! `Vertices` (per-vertex values), `Edge_offset` (row pointers), `Edges`
+//! (column ids + weights). "CSR saves memory and is easy for memory
+//! accessing" — the accelerator streams `Edges` sequentially and the
+//! simulator models exactly that access pattern.
+
+use super::edgelist::{Edge, EdgeList};
+use super::{EdgeId, VertexId, DEFAULT_WEIGHT};
+
+/// CSR adjacency. Depending on how it was built this stores out-edges
+/// (CSR proper) or in-edges (CSC — the transpose); the DSL's
+/// `Get_out_edges_list` / `Get_in_edges_list` pick the right one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// `Edge_offset` array: `offsets[v]..offsets[v+1]` indexes `targets`.
+    pub offsets: Vec<u32>,
+    /// `Edges` array: neighbor vertex ids, grouped by source.
+    pub targets: Vec<VertexId>,
+    /// Edge weights, parallel to `targets`.
+    pub weights: Vec<f32>,
+}
+
+impl Csr {
+    /// Build out-edge CSR from an edge list. Counting sort: O(V + E),
+    /// stable in input order within a row.
+    pub fn from_edgelist(el: &EdgeList) -> Self {
+        Self::build(el.num_vertices, el.edges.iter().map(|e| (e.src, e.dst, e.weight)))
+    }
+
+    /// Build in-edge CSR (i.e. CSC) from an edge list: rows are
+    /// destinations, targets are sources.
+    pub fn csc_from_edgelist(el: &EdgeList) -> Self {
+        Self::build(el.num_vertices, el.edges.iter().map(|e| (e.dst, e.src, e.weight)))
+    }
+
+    fn build(n: usize, edges: impl Iterator<Item = (VertexId, VertexId, f32)> + Clone) -> Self {
+        let mut counts = vec![0u32; n + 1];
+        for (row, _, _) in edges.clone() {
+            counts[row as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let m = offsets[n] as usize;
+        let mut targets = vec![0 as VertexId; m];
+        let mut weights = vec![DEFAULT_WEIGHT; m];
+        let mut cursor = offsets.clone();
+        for (row, col, w) in edges {
+            let slot = cursor[row as usize] as usize;
+            targets[slot] = col;
+            weights[slot] = w;
+            cursor[row as usize] += 1;
+        }
+        Csr { offsets, targets, weights }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Degree of `v` in this orientation.
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Neighbor ids of `v` (the DSL's `Get_dest_V_list` on CSR,
+    /// `Get_src_V_list` on CSC).
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (a, b) = self.row_range(v);
+        &self.targets[a..b]
+    }
+
+    /// Edge weights of `v`'s row.
+    pub fn row_weights(&self, v: VertexId) -> &[f32] {
+        let (a, b) = self.row_range(v);
+        &self.weights[a..b]
+    }
+
+    /// `(edge_id, neighbor, weight)` triples of `v`'s row — the DSL's
+    /// `Get_out_edges_list` return shape.
+    pub fn row_edges(&self, v: VertexId) -> impl Iterator<Item = (EdgeId, VertexId, f32)> + '_ {
+        let (a, b) = self.row_range(v);
+        (a..b).map(move |i| (i as EdgeId, self.targets[i], self.weights[i]))
+    }
+
+    fn row_range(&self, v: VertexId) -> (usize, usize) {
+        (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize)
+    }
+
+    /// Which row an edge id belongs to (the DSL's `Get_src_V_id` on CSR):
+    /// binary search over `offsets`.
+    pub fn edge_row(&self, e: EdgeId) -> VertexId {
+        debug_assert!((e as usize) < self.num_edges());
+        // partition_point: first row whose offset exceeds e.
+        let row = self.offsets.partition_point(|&off| off <= e) - 1;
+        row as VertexId
+    }
+
+    /// Flatten back to an edge list (row = src). Inverse of
+    /// `from_edgelist` up to edge order within a row.
+    pub fn to_edgelist(&self) -> EdgeList {
+        let mut el = EdgeList::with_vertices(self.num_vertices());
+        for v in 0..self.num_vertices() as VertexId {
+            for (_, t, w) in self.row_edges(v) {
+                el.edges.push(Edge { src: v, dst: t, weight: w });
+            }
+        }
+        el
+    }
+
+    /// Transpose (CSR ↔ CSC).
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_vertices();
+        let el = self.to_edgelist();
+        Self::build(n, el.edges.iter().map(|e| (e.dst, e.src, e.weight)))
+    }
+
+    /// Padded COO arrays in the artifact ABI (src, dst, w, real edge count)
+    /// — what [`crate::runtime`] feeds the AOT superstep. `m_pad >= E`.
+    pub fn to_padded_coo(&self, m_pad: usize) -> PaddedCoo {
+        assert!(m_pad >= self.num_edges(), "padding smaller than edge count");
+        let mut src = vec![0i32; m_pad];
+        let mut dst = vec![0i32; m_pad];
+        let mut w = vec![0f32; m_pad];
+        let mut k = 0;
+        for v in 0..self.num_vertices() as VertexId {
+            for (_, t, ww) in self.row_edges(v) {
+                src[k] = v as i32;
+                dst[k] = t as i32;
+                w[k] = ww;
+                k += 1;
+            }
+        }
+        PaddedCoo { src, dst, w, num_edges: k }
+    }
+
+    /// Total bytes of the three arrays — what the communication manager
+    /// transports over (simulated) PCIe.
+    pub fn byte_size(&self) -> usize {
+        self.offsets.len() * 4 + self.targets.len() * 4 + self.weights.len() * 4
+    }
+}
+
+/// COO arrays padded to an artifact bucket; padding slots carry
+/// `src = dst = 0, w = 0` and are masked out by `num_edges` on device
+/// (see python/compile/kernels/ref.py).
+#[derive(Debug, Clone)]
+pub struct PaddedCoo {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub w: Vec<f32>,
+    pub num_edges: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> EdgeList {
+        EdgeList::from_pairs([(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn build_and_rows() {
+        let c = Csr::from_edgelist(&diamond());
+        assert_eq!(c.num_vertices(), 4);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.neighbors(0), &[1, 2]);
+        assert_eq!(c.neighbors(1), &[3]);
+        assert_eq!(c.neighbors(3), &[] as &[u32]);
+        assert_eq!(c.degree(0), 2);
+    }
+
+    #[test]
+    fn csc_is_in_edges() {
+        let c = Csr::csc_from_edgelist(&diamond());
+        assert_eq!(c.neighbors(3), &[1, 2]);
+        assert_eq!(c.neighbors(0), &[] as &[u32]);
+    }
+
+    #[test]
+    fn edge_row_binary_search() {
+        let c = Csr::from_edgelist(&diamond());
+        assert_eq!(c.edge_row(0), 0);
+        assert_eq!(c.edge_row(1), 0);
+        assert_eq!(c.edge_row(2), 1);
+        assert_eq!(c.edge_row(3), 2);
+    }
+
+    #[test]
+    fn roundtrip_edgelist() {
+        let el = diamond();
+        let rt = Csr::from_edgelist(&el).to_edgelist().sorted();
+        assert_eq!(rt.num_vertices, el.num_vertices);
+        let a: Vec<_> = rt.edges.iter().map(|e| (e.src, e.dst)).collect();
+        let b: Vec<_> = el.sorted().edges.iter().map(|e| (e.src, e.dst)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let c = Csr::from_edgelist(&diamond());
+        assert_eq!(c.transpose().transpose(), c);
+    }
+
+    #[test]
+    fn padded_coo_masks_tail() {
+        let c = Csr::from_edgelist(&diamond());
+        let coo = c.to_padded_coo(8);
+        assert_eq!(coo.num_edges, 4);
+        assert_eq!(&coo.src[4..], &[0; 4]);
+        assert_eq!(&coo.dst[4..], &[0; 4]);
+        assert_eq!(coo.src[..4], [0, 0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "padding smaller")]
+    fn padded_coo_rejects_short_pad() {
+        Csr::from_edgelist(&diamond()).to_padded_coo(2);
+    }
+
+    #[test]
+    fn byte_size_counts_all_arrays() {
+        let c = Csr::from_edgelist(&diamond());
+        assert_eq!(c.byte_size(), (5 + 4 + 4) * 4);
+    }
+}

@@ -1,0 +1,193 @@
+//! Raw edge-list form: what the *FIFO* stage reads from disk and what the
+//! *Layout* stage converts to CSR/CSC (paper §IV-C).
+
+use super::{VertexId, DEFAULT_WEIGHT};
+
+/// A directed edge `(src, dst, weight)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+    pub weight: f32,
+}
+
+/// A directed graph as a flat edge list, the interchange form between
+/// preprocessing stages. Invariant: every endpoint is `< num_vertices`.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    pub num_vertices: usize,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    /// Empty graph with `n` isolated vertices.
+    pub fn with_vertices(n: usize) -> Self {
+        Self { num_vertices: n, edges: Vec::new() }
+    }
+
+    /// Build from `(src, dst)` pairs with unit weights. Grows
+    /// `num_vertices` to cover every endpoint.
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (VertexId, VertexId)>) -> Self {
+        let mut el = Self::default();
+        for (s, d) in pairs {
+            el.push(s, d, DEFAULT_WEIGHT);
+        }
+        el
+    }
+
+    /// Append an edge, growing the vertex count as needed.
+    pub fn push(&mut self, src: VertexId, dst: VertexId, weight: f32) {
+        self.num_vertices = self.num_vertices.max(src.max(dst) as usize + 1);
+        self.edges.push(Edge { src, dst, weight });
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Check the endpoint invariant (used by io/loaders and proptests).
+    pub fn is_valid(&self) -> bool {
+        self.edges
+            .iter()
+            .all(|e| (e.src as usize) < self.num_vertices && (e.dst as usize) < self.num_vertices)
+    }
+
+    /// Out-degree per vertex.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices];
+        for e in &self.edges {
+            deg[e.src as usize] += 1;
+        }
+        deg
+    }
+
+    /// In-degree per vertex.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices];
+        for e in &self.edges {
+            deg[e.dst as usize] += 1;
+        }
+        deg
+    }
+
+    /// Remove exact-duplicate `(src, dst)` pairs, keeping the first
+    /// occurrence's weight. Stable order of survivors.
+    pub fn dedup(&mut self) {
+        let mut seen = std::collections::HashSet::with_capacity(self.edges.len());
+        self.edges.retain(|e| seen.insert((e.src, e.dst)));
+    }
+
+    /// Drop self-loops (`src == dst`). BFS/PR treat them as no-ops but they
+    /// waste pipeline slots in the simulator.
+    pub fn drop_self_loops(&mut self) {
+        self.edges.retain(|e| e.src != e.dst);
+    }
+
+    /// Add the reverse of every edge (directed → symmetric). Weights copied.
+    pub fn symmetrize(&mut self) {
+        let rev: Vec<Edge> = self
+            .edges
+            .iter()
+            .map(|e| Edge { src: e.dst, dst: e.src, weight: e.weight })
+            .collect();
+        self.edges.extend(rev);
+        self.dedup();
+    }
+
+    /// Apply a vertex permutation: `perm[old] = new`. Used by the *Reorder*
+    /// preprocessing stage. Panics if `perm.len() != num_vertices`.
+    pub fn permute(&self, perm: &[VertexId]) -> EdgeList {
+        assert_eq!(perm.len(), self.num_vertices, "permutation length mismatch");
+        EdgeList {
+            num_vertices: self.num_vertices,
+            edges: self
+                .edges
+                .iter()
+                .map(|e| Edge {
+                    src: perm[e.src as usize],
+                    dst: perm[e.dst as usize],
+                    weight: e.weight,
+                })
+                .collect(),
+        }
+    }
+
+    /// Sort edges by `(src, dst)` — canonical order used by tests to compare
+    /// graphs structurally.
+    pub fn sorted(&self) -> EdgeList {
+        let mut el = self.clone();
+        el.edges
+            .sort_by(|a, b| (a.src, a.dst).cmp(&(b.src, b.dst)).then(a.weight.total_cmp(&b.weight)));
+        el
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> EdgeList {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        EdgeList::from_pairs([(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn from_pairs_grows_vertices() {
+        let g = diamond();
+        assert_eq!(g.num_vertices, 4);
+        assert_eq!(g.num_edges(), 4);
+        assert!(g.is_valid());
+    }
+
+    #[test]
+    fn degrees() {
+        let g = diamond();
+        assert_eq!(g.out_degrees(), vec![2, 1, 1, 0]);
+        assert_eq!(g.in_degrees(), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn dedup_keeps_first() {
+        let mut g = EdgeList::default();
+        g.push(0, 1, 5.0);
+        g.push(0, 1, 9.0);
+        g.push(1, 0, 1.0);
+        g.dedup();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges[0].weight, 5.0);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut g = EdgeList::from_pairs([(0, 0), (0, 1), (1, 1)]);
+        g.drop_self_loops();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn symmetrize_doubles_and_dedups() {
+        let mut g = EdgeList::from_pairs([(0, 1), (1, 0), (1, 2)]);
+        g.symmetrize();
+        let s = g.sorted();
+        let pairs: Vec<_> = s.edges.iter().map(|e| (e.src, e.dst)).collect();
+        assert_eq!(pairs, vec![(0, 1), (1, 0), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn permute_relabels_endpoints() {
+        let g = diamond();
+        // swap 0 <-> 3
+        let perm = vec![3, 1, 2, 0];
+        let p = g.permute(&perm);
+        assert!(p.is_valid());
+        let s = p.sorted();
+        let pairs: Vec<_> = s.edges.iter().map(|e| (e.src, e.dst)).collect();
+        assert_eq!(pairs, vec![(1, 0), (2, 0), (3, 1), (3, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation length mismatch")]
+    fn permute_rejects_bad_length() {
+        diamond().permute(&[0, 1]);
+    }
+}

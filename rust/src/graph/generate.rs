@@ -1,0 +1,205 @@
+//! Synthetic graph generators — the substitute for the paper's SNAP
+//! datasets (DESIGN.md §2): R-MAT reproduces the power-law degree skew the
+//! paper's locality discussion relies on; presets match the vertex/edge
+//! counts of the two evaluation graphs.
+
+use super::edgelist::EdgeList;
+use super::{SplitMix64, VertexId};
+
+/// R-MAT (recursive matrix) generator, the Graph500 standard power-law
+/// model. `scale` fixes `n = 2^scale` vertices; `num_edges` directed edges
+/// are drawn with quadrant probabilities `(a, b, c, d)`, `a+b+c+d = 1`.
+pub fn rmat(scale: u32, num_edges: usize, a: f64, b: f64, c: f64, seed: u64) -> EdgeList {
+    assert!(scale <= 31, "scale too large for u32 vertex ids");
+    let d = 1.0 - a - b - c;
+    assert!(d >= 0.0, "quadrant probabilities must sum to <= 1");
+    let n = 1usize << scale;
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::with_vertices(n);
+    el.edges.reserve(num_edges);
+    for _ in 0..num_edges {
+        let (mut lo_s, mut hi_s) = (0usize, n);
+        let (mut lo_d, mut hi_d) = (0usize, n);
+        while hi_s - lo_s > 1 {
+            let r = rng.next_f64();
+            let mid_s = (lo_s + hi_s) / 2;
+            let mid_d = (lo_d + hi_d) / 2;
+            if r < a {
+                hi_s = mid_s;
+                hi_d = mid_d;
+            } else if r < a + b {
+                hi_s = mid_s;
+                lo_d = mid_d;
+            } else if r < a + b + c {
+                lo_s = mid_s;
+                hi_d = mid_d;
+            } else {
+                lo_s = mid_s;
+                lo_d = mid_d;
+            }
+        }
+        let w = rng.next_f32_range(0.5, 10.0);
+        el.push(lo_s as VertexId, lo_d as VertexId, w);
+    }
+    el.num_vertices = n;
+    el
+}
+
+/// Erdős–Rényi G(n, m): `m` uniformly random directed edges.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> EdgeList {
+    assert!(n > 0);
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::with_vertices(n);
+    el.edges.reserve(m);
+    for _ in 0..m {
+        let s = rng.next_below(n as u64) as VertexId;
+        let d = rng.next_below(n as u64) as VertexId;
+        let w = rng.next_f32_range(0.5, 10.0);
+        el.push(s, d, w);
+    }
+    el.num_vertices = n;
+    el
+}
+
+/// 2-D grid (road-network-like): vertex `(x, y)` connects right and down,
+/// symmetrized — low degree, high diameter, the opposite locality regime
+/// from R-MAT. Good for SSSP examples.
+pub fn grid2d(width: usize, height: usize, seed: u64) -> EdgeList {
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::with_vertices(width * height);
+    let id = |x: usize, y: usize| (y * width + x) as VertexId;
+    for y in 0..height {
+        for x in 0..width {
+            if x + 1 < width {
+                let w = rng.next_f32_range(1.0, 5.0);
+                el.push(id(x, y), id(x + 1, y), w);
+                el.push(id(x + 1, y), id(x, y), w);
+            }
+            if y + 1 < height {
+                let w = rng.next_f32_range(1.0, 5.0);
+                el.push(id(x, y), id(x, y + 1), w);
+                el.push(id(x, y + 1), id(x, y), w);
+            }
+        }
+    }
+    el
+}
+
+/// Star: hub 0 connected to all others (both directions). Degenerate
+/// skew case for scheduler/simulator tests.
+pub fn star(n: usize) -> EdgeList {
+    let mut el = EdgeList::with_vertices(n);
+    for v in 1..n as VertexId {
+        el.push(0, v, 1.0);
+        el.push(v, 0, 1.0);
+    }
+    el
+}
+
+/// Directed chain 0→1→…→n-1. Maximum-diameter case: BFS needs n-1
+/// supersteps; exercises iteration-bound paths.
+pub fn chain(n: usize) -> EdgeList {
+    let mut el = EdgeList::with_vertices(n);
+    for v in 0..(n as VertexId).saturating_sub(1) {
+        el.push(v, v + 1, 1.0);
+    }
+    el
+}
+
+/// Preset matching **email-Eu-core** (SNAP): 1,005 vertices / 25,571
+/// directed edges, dense power-law core. Used by Table V "small".
+pub fn email_eu_core_like(seed: u64) -> EdgeList {
+    // scale 10 = 1,024 >= 1,005; R-MAT with Graph500 skew, then clamp the
+    // vertex universe to exactly 1,005 ids by folding overflowing ids.
+    let mut el = rmat(10, 25_571, 0.57, 0.19, 0.19, seed);
+    clamp_vertices(&mut el, 1_005);
+    el
+}
+
+/// Preset matching **soc-Slashdot0922** (SNAP): 82,168 vertices / 948,464
+/// directed edges. Used by Table V "large".
+pub fn soc_slashdot_like(seed: u64) -> EdgeList {
+    let mut el = rmat(17, 948_464, 0.57, 0.19, 0.19, seed);
+    clamp_vertices(&mut el, 82_168);
+    el
+}
+
+/// Fold vertex ids into `[0, n)` and fix up the vertex count. Preserves the
+/// degree skew while matching the target universe exactly.
+fn clamp_vertices(el: &mut EdgeList, n: usize) {
+    for e in &mut el.edges {
+        e.src %= n as VertexId;
+        e.dst %= n as VertexId;
+    }
+    el.num_vertices = n;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::properties;
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let a = rmat(8, 1000, 0.57, 0.19, 0.19, 3);
+        let b = rmat(8, 1000, 0.57, 0.19, 0.19, 3);
+        assert_eq!(a.num_vertices, 256);
+        assert_eq!(a.num_edges(), 1000);
+        assert!(a.is_valid());
+        assert_eq!(a.sorted().edges.len(), b.sorted().edges.len());
+        assert_eq!(
+            a.edges.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>(),
+            b.edges.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn rmat_is_skewed_er_is_not() {
+        let rm = rmat(10, 20_000, 0.57, 0.19, 0.19, 1);
+        let er = erdos_renyi(1024, 20_000, 1);
+        let max_rm = *rm.out_degrees().iter().max().unwrap();
+        let max_er = *er.out_degrees().iter().max().unwrap();
+        // power-law hub should dominate the ER max degree comfortably
+        assert!(
+            max_rm > 2 * max_er,
+            "expected R-MAT hubs ({max_rm}) >> ER max degree ({max_er})"
+        );
+    }
+
+    #[test]
+    fn grid_degrees_bounded() {
+        let g = grid2d(10, 7, 0);
+        assert_eq!(g.num_vertices, 70);
+        assert!(g.out_degrees().iter().all(|&d| d <= 4));
+        assert!(g.is_valid());
+    }
+
+    #[test]
+    fn star_and_chain_shapes() {
+        let s = star(5);
+        assert_eq!(s.num_edges(), 8);
+        assert_eq!(s.out_degrees()[0], 4);
+        let c = chain(5);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.out_degrees(), vec![1, 1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn presets_match_paper_sizes() {
+        let e = email_eu_core_like(1);
+        assert_eq!(e.num_vertices, 1_005);
+        assert_eq!(e.num_edges(), 25_571);
+        assert!(e.is_valid());
+        // slashdot preset is big; just validate the arithmetic on a sample
+        let s = soc_slashdot_like(1);
+        assert_eq!(s.num_vertices, 82_168);
+        assert_eq!(s.num_edges(), 948_464);
+    }
+
+    #[test]
+    fn presets_are_power_law() {
+        let e = email_eu_core_like(1);
+        let stats = properties::GraphStats::compute(&e);
+        assert!(stats.max_out_degree as f64 > 10.0 * stats.avg_degree);
+    }
+}

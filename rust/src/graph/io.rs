@@ -1,0 +1,198 @@
+//! File I/O — the DSL's **FIFO** preprocessing stage (paper §IV-C1):
+//! "reading input files, writing data to output files". Supports the SNAP
+//! text format the paper's datasets ship in, plus a compact binary format
+//! for repeated runs.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::edgelist::EdgeList;
+use super::DEFAULT_WEIGHT;
+
+/// Read a SNAP-style edge-list text file: `#`-comment lines, then
+/// whitespace-separated `src dst [weight]` per line. Vertex ids may be
+/// sparse; they are kept as-is (the universe is `max_id + 1`).
+pub fn read_snap_text(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening graph file {:?}", path.as_ref()))?;
+    parse_snap_text(BufReader::new(f))
+}
+
+/// Parse SNAP text from any reader (unit-testable without touching disk).
+pub fn parse_snap_text(r: impl BufRead) -> Result<EdgeList> {
+    let mut el = EdgeList::default();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line.context("reading graph line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let src: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let dst: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let w: f32 = match it.next() {
+            Some(s) => s.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?,
+            None => DEFAULT_WEIGHT,
+        };
+        el.push(src, dst, w);
+    }
+    Ok(el)
+}
+
+/// Write SNAP-style text (with weights).
+pub fn write_snap_text(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# jgraph edge list: {} vertices, {} edges", el.num_vertices, el.num_edges())?;
+    for e in &el.edges {
+        writeln!(w, "{}\t{}\t{}", e.src, e.dst, e.weight)?;
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"JGRAPH01";
+
+/// Write the compact binary format: magic, counts, then (src, dst, weight)
+/// triples little-endian.
+pub fn write_binary(el: &EdgeList, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(el.num_vertices as u64).to_le_bytes())?;
+    w.write_all(&(el.num_edges() as u64).to_le_bytes())?;
+    for e in &el.edges {
+        w.write_all(&e.src.to_le_bytes())?;
+        w.write_all(&e.dst.to_le_bytes())?;
+        w.write_all(&e.weight.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`write_binary`]. Validates magic,
+/// counts, and endpoint bounds (corrupt files fail loudly — exercised by
+/// the failure-injection tests).
+pub fn read_binary(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("truncated header")?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic: not a jgraph binary graph file");
+    }
+    let mut buf8 = [0u8; 8];
+    f.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    f.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut el = EdgeList::with_vertices(n);
+    let mut rec = [0u8; 12];
+    for i in 0..m {
+        f.read_exact(&mut rec).with_context(|| format!("truncated at edge {i}"))?;
+        let src = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let dst = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+        let w = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+        if src as usize >= n || dst as usize >= n {
+            bail!("edge {i} endpoint out of range ({src}, {dst}) for n={n}");
+        }
+        el.edges.push(super::edgelist::Edge { src, dst, weight: w });
+    }
+    Ok(el)
+}
+
+/// Load a graph by extension: `.txt`/`.el` → SNAP text, `.bin` → binary.
+pub fn load(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("bin") => read_binary(p),
+        _ => read_snap_text(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn parse_snap_with_comments_and_weights() {
+        let text = "# comment\n% other comment\n0 1\n1 2 3.5\n\n2 0 1.0\n";
+        let el = parse_snap_text(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(el.num_vertices, 3);
+        assert_eq!(el.num_edges(), 3);
+        assert_eq!(el.edges[0].weight, DEFAULT_WEIGHT);
+        assert_eq!(el.edges[1].weight, 3.5);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_snap_text(std::io::Cursor::new("0 x\n")).is_err());
+        assert!(parse_snap_text(std::io::Cursor::new("7\n")).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let g = generate::erdos_renyi(50, 200, 9);
+        let dir = std::env::temp_dir().join("jgraph_io_text");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        write_snap_text(&g, &p).unwrap();
+        let rt = read_snap_text(&p).unwrap();
+        assert_eq!(rt.num_edges(), g.num_edges());
+        assert_eq!(rt.sorted().edges[0].src, g.sorted().edges[0].src);
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let g = generate::rmat(7, 500, 0.57, 0.19, 0.19, 2);
+        let dir = std::env::temp_dir().join("jgraph_io_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let rt = read_binary(&p).unwrap();
+        assert_eq!(rt.num_vertices, g.num_vertices);
+        assert_eq!(rt.num_edges(), g.num_edges());
+        for (a, b) in rt.edges.iter().zip(&g.edges) {
+            assert_eq!((a.src, a.dst), (b.src, b.dst));
+            assert_eq!(a.weight, b.weight);
+        }
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join("jgraph_io_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(read_binary(&p).is_err());
+
+        // valid header claiming 10 edges but providing none
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.extend_from_slice(&10u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_binary(&p).unwrap_err().to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn load_dispatches_on_extension() {
+        let g = generate::chain(4);
+        let dir = std::env::temp_dir().join("jgraph_io_disp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pt = dir.join("g.txt");
+        let pb = dir.join("g.bin");
+        write_snap_text(&g, &pt).unwrap();
+        write_binary(&g, &pb).unwrap();
+        assert_eq!(load(&pt).unwrap().num_edges(), 3);
+        assert_eq!(load(&pb).unwrap().num_edges(), 3);
+    }
+}

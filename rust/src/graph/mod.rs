@@ -1,0 +1,99 @@
+//! Graph data substrate: the arrays the paper's DSL exposes.
+//!
+//! The paper (§IV-A) represents a graph with three arrays — `Vertices`,
+//! `Edge_offset`, `Edges` — i.e. CSR. This module provides that
+//! representation ([`csr::Csr`]), the raw edge-list form it is built from
+//! ([`edgelist::EdgeList`]), synthetic generators standing in for the SNAP
+//! datasets ([`generate`]), file I/O (the DSL's *FIFO* preprocessing stage,
+//! [`io`]), and structural statistics ([`properties`]).
+
+pub mod csr;
+pub mod edgelist;
+pub mod generate;
+pub mod io;
+pub mod properties;
+pub mod store;
+
+/// Vertex identifier. u32 everywhere: the paper's graphs are well under
+/// 2^32 vertices and the FPGA datapath is 32-bit.
+pub type VertexId = u32;
+
+/// Edge identifier (index into the CSR `Edges` array).
+pub type EdgeId = u32;
+
+/// Default edge weight for unweighted inputs (BFS treats weights as 1).
+pub const DEFAULT_WEIGHT: f32 = 1.0;
+
+/// Deterministic 64-bit PRNG (splitmix64). Used by generators, partitioners
+/// and tests; no external crate so results are reproducible byte-for-byte
+/// across platforms.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here;
+        // bias is < 2^-32 for our bounds.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn next_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.next_f64() as f32) * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_bounds_respected() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            assert!(r.next_below(17) < 17);
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let x = r.next_f32_range(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn splitmix_different_seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

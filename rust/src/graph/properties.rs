@@ -1,0 +1,153 @@
+//! Structural statistics: degree distribution, skew, connectivity. Used by
+//! the report layer (dataset tables), the simulator's locality model, and
+//! tests (e.g. "R-MAT presets are power-law").
+
+use super::edgelist::EdgeList;
+
+/// Summary statistics of a directed graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub max_out_degree: u32,
+    pub max_in_degree: u32,
+    pub avg_degree: f64,
+    /// Fraction of edges owned by the top 1% highest-out-degree vertices —
+    /// the skew measure the simulator's conflict model consumes.
+    pub hub_edge_fraction: f64,
+    /// MLE power-law exponent fitted on out-degrees >= 2 (None when the
+    /// graph is too small/uniform to fit).
+    pub power_law_alpha: Option<f64>,
+    /// Number of weakly-connected components.
+    pub num_weak_components: usize,
+}
+
+impl GraphStats {
+    pub fn compute(el: &EdgeList) -> GraphStats {
+        let out = el.out_degrees();
+        let inn = el.in_degrees();
+        let n = el.num_vertices.max(1);
+        let m = el.num_edges();
+        let max_out = out.iter().copied().max().unwrap_or(0);
+        let max_in = inn.iter().copied().max().unwrap_or(0);
+
+        // hub fraction: sort degrees descending, take top 1% of vertices
+        let mut sorted = out.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top = (n / 100).max(1);
+        let hub_edges: u64 = sorted[..top.min(sorted.len())].iter().map(|&d| d as u64).sum();
+        let hub_edge_fraction = if m > 0 { hub_edges as f64 / m as f64 } else { 0.0 };
+
+        GraphStats {
+            num_vertices: el.num_vertices,
+            num_edges: m,
+            max_out_degree: max_out,
+            max_in_degree: max_in,
+            avg_degree: m as f64 / n as f64,
+            hub_edge_fraction,
+            power_law_alpha: power_law_alpha(&out),
+            num_weak_components: weak_components(el),
+        }
+    }
+}
+
+/// MLE estimator for the power-law exponent: alpha = 1 + n / Σ ln(d/dmin),
+/// over degrees >= dmin = 2. Returns None with < 10 qualifying samples.
+pub fn power_law_alpha(degrees: &[u32]) -> Option<f64> {
+    const DMIN: f64 = 2.0;
+    let samples: Vec<f64> = degrees.iter().filter(|&&d| d >= 2).map(|&d| d as f64).collect();
+    if samples.len() < 10 {
+        return None;
+    }
+    let s: f64 = samples.iter().map(|d| (d / DMIN).ln()).sum();
+    if s <= 0.0 {
+        return None;
+    }
+    Some(1.0 + samples.len() as f64 / s)
+}
+
+/// Degree histogram as (degree, count) pairs, ascending, zero counts
+/// omitted. Feeds the report layer's dataset descriptions.
+pub fn degree_histogram(degrees: &[u32]) -> Vec<(u32, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for &d in degrees {
+        *map.entry(d).or_insert(0usize) += 1;
+    }
+    map.into_iter().collect()
+}
+
+/// Weakly-connected component count via union-find with path halving.
+pub fn weak_components(el: &EdgeList) -> usize {
+    if el.num_vertices == 0 {
+        return 0;
+    }
+    let mut parent: Vec<u32> = (0..el.num_vertices as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for e in &el.edges {
+        let (a, b) = (find(&mut parent, e.src), find(&mut parent, e.dst));
+        if a != b {
+            parent[a as usize] = b;
+        }
+    }
+    let mut roots = std::collections::HashSet::new();
+    for v in 0..el.num_vertices as u32 {
+        roots.insert(find(&mut parent, v));
+    }
+    roots.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn stats_on_star() {
+        let s = generate::star(101);
+        let st = GraphStats::compute(&s);
+        assert_eq!(st.max_out_degree, 100);
+        assert_eq!(st.num_weak_components, 1);
+        // hub (top 1% = 1 vertex) owns half the edges (hub->spoke direction)
+        assert!(st.hub_edge_fraction >= 0.5);
+    }
+
+    #[test]
+    fn components_counted() {
+        // two disjoint chains + one isolated vertex
+        let mut el = generate::chain(3);
+        let off = el.num_vertices as u32;
+        el.push(off, off + 1, 1.0);
+        el.num_vertices += 1; // isolated vertex
+        assert_eq!(weak_components(&el), 3);
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let g = generate::erdos_renyi(64, 300, 5);
+        let h = degree_histogram(&g.out_degrees());
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn alpha_fits_skewed_but_not_tiny() {
+        assert!(power_law_alpha(&[1, 1, 1]).is_none());
+        let g = generate::rmat(10, 20_000, 0.57, 0.19, 0.19, 3);
+        let alpha = power_law_alpha(&g.out_degrees()).unwrap();
+        assert!(alpha > 1.0 && alpha < 5.0, "alpha={alpha}");
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let el = crate::graph::edgelist::EdgeList::default();
+        let st = GraphStats::compute(&el);
+        assert_eq!(st.num_edges, 0);
+        assert_eq!(st.num_weak_components, 0);
+    }
+}

@@ -1,0 +1,424 @@
+//! Embedded property-graph store — the Neo4j stand-in for the DSL's FIFO
+//! stage (paper §IV-C1: "For graph data in graph database management
+//! system such as Neo4j, we can read data from database directly").
+//!
+//! A deliberately small but real store: fixed-size node and relationship
+//! records in the Neo4j style (each node heads linked lists of its out/in
+//! relationships), string labels and relationship types interned in a
+//! dictionary, numeric properties, binary persistence, and the two query
+//! shapes graph preprocessing needs — label scans and neighborhood
+//! expansion. `to_edgelist` is the FIFO bridge into the JGraph pipeline.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::edgelist::EdgeList;
+use super::VertexId;
+
+/// Sentinel "nil" pointer in record linked lists.
+const NIL: u32 = u32::MAX;
+
+/// A node record: label + head of its relationship chains (Neo4j's
+/// `firstRel` pointers) + optional numeric property.
+#[derive(Debug, Clone, PartialEq)]
+struct NodeRecord {
+    label: u32,
+    first_out: u32,
+    first_in: u32,
+    prop: f32,
+}
+
+/// A relationship record: endpoints, type, weight property, and the
+/// next-pointers of both endpoints' chains.
+#[derive(Debug, Clone, PartialEq)]
+struct RelRecord {
+    src: u32,
+    dst: u32,
+    rel_type: u32,
+    weight: f32,
+    next_out: u32,
+    next_in: u32,
+}
+
+/// The store.
+#[derive(Debug, Default)]
+pub struct GraphStore {
+    nodes: Vec<NodeRecord>,
+    rels: Vec<RelRecord>,
+    /// Interned strings (labels and relationship types share the pool).
+    dict: Vec<String>,
+    dict_index: HashMap<String, u32>,
+}
+
+impl GraphStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&id) = self.dict_index.get(s) {
+            return id;
+        }
+        let id = self.dict.len() as u32;
+        self.dict.push(s.to_string());
+        self.dict_index.insert(s.to_string(), id);
+        id
+    }
+
+    /// Create a node with a label and a numeric property; returns its id.
+    pub fn create_node(&mut self, label: &str, prop: f32) -> VertexId {
+        let label = self.intern(label);
+        let id = self.nodes.len() as u32;
+        self.nodes.push(NodeRecord { label, first_out: NIL, first_in: NIL, prop });
+        id
+    }
+
+    /// Create a relationship `src -[rel_type {weight}]-> dst`.
+    pub fn create_rel(
+        &mut self,
+        src: VertexId,
+        dst: VertexId,
+        rel_type: &str,
+        weight: f32,
+    ) -> Result<u32> {
+        let n = self.nodes.len() as u32;
+        if src >= n || dst >= n {
+            bail!("relationship endpoint out of range ({src}, {dst}) for {n} nodes");
+        }
+        let rel_type = self.intern(rel_type);
+        let id = self.rels.len() as u32;
+        // push-front into both endpoint chains (Neo4j-style)
+        let rec = RelRecord {
+            src,
+            dst,
+            rel_type,
+            weight,
+            next_out: self.nodes[src as usize].first_out,
+            next_in: self.nodes[dst as usize].first_in,
+        };
+        self.nodes[src as usize].first_out = id;
+        self.nodes[dst as usize].first_in = id;
+        self.rels.push(rec);
+        Ok(id)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn rel_count(&self) -> usize {
+        self.rels.len()
+    }
+
+    pub fn node_label(&self, v: VertexId) -> &str {
+        &self.dict[self.nodes[v as usize].label as usize]
+    }
+
+    pub fn node_prop(&self, v: VertexId) -> f32 {
+        self.nodes[v as usize].prop
+    }
+
+    /// Label scan: all node ids with the given label.
+    pub fn nodes_with_label(&self, label: &str) -> Vec<VertexId> {
+        let Some(&id) = self.dict_index.get(label) else {
+            return Vec::new();
+        };
+        (0..self.nodes.len() as u32).filter(|&v| self.nodes[v as usize].label == id).collect()
+    }
+
+    /// Out-neighborhood expansion (follows the out-chain): `(dst, type,
+    /// weight)` triples, optionally filtered by relationship type.
+    pub fn expand_out(&self, v: VertexId, rel_type: Option<&str>) -> Vec<(VertexId, &str, f32)> {
+        let filter = rel_type.and_then(|t| self.dict_index.get(t).copied());
+        let mut out = Vec::new();
+        let mut cur = self.nodes[v as usize].first_out;
+        while cur != NIL {
+            let r = &self.rels[cur as usize];
+            if filter.map(|f| f == r.rel_type).unwrap_or(true) {
+                out.push((r.dst, self.dict[r.rel_type as usize].as_str(), r.weight));
+            }
+            cur = r.next_out;
+        }
+        out
+    }
+
+    /// In-neighborhood expansion (follows the in-chain).
+    pub fn expand_in(&self, v: VertexId, rel_type: Option<&str>) -> Vec<(VertexId, &str, f32)> {
+        let filter = rel_type.and_then(|t| self.dict_index.get(t).copied());
+        let mut out = Vec::new();
+        let mut cur = self.nodes[v as usize].first_in;
+        while cur != NIL {
+            let r = &self.rels[cur as usize];
+            if filter.map(|f| f == r.rel_type).unwrap_or(true) {
+                out.push((r.src, self.dict[r.rel_type as usize].as_str(), r.weight));
+            }
+            cur = r.next_in;
+        }
+        out
+    }
+
+    /// The FIFO bridge: project the store onto a weighted edge list,
+    /// optionally restricted to one relationship type.
+    pub fn to_edgelist(&self, rel_type: Option<&str>) -> EdgeList {
+        let filter = rel_type.and_then(|t| self.dict_index.get(t).copied());
+        let mut el = EdgeList::with_vertices(self.nodes.len());
+        for r in &self.rels {
+            if filter.map(|f| f == r.rel_type).unwrap_or(true) {
+                el.push(r.src, r.dst, r.weight);
+            }
+        }
+        el.num_vertices = self.nodes.len();
+        el
+    }
+
+    /// Import an edge list as a store (every node labelled `label`, every
+    /// relationship typed `rel_type`). Inverse-ish of [`Self::to_edgelist`].
+    pub fn from_edgelist(el: &EdgeList, label: &str, rel_type: &str) -> Self {
+        let mut s = Self::new();
+        for _ in 0..el.num_vertices {
+            s.create_node(label, 0.0);
+        }
+        for e in &el.edges {
+            s.create_rel(e.src, e.dst, rel_type, e.weight).expect("valid edge list");
+        }
+        s
+    }
+
+    // --- persistence -----------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"JGSTORE1";
+
+    /// Serialize to the compact binary format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.dict.len() as u64).to_le_bytes())?;
+        for s in &self.dict {
+            let b = s.as_bytes();
+            w.write_all(&(b.len() as u32).to_le_bytes())?;
+            w.write_all(b)?;
+        }
+        w.write_all(&(self.nodes.len() as u64).to_le_bytes())?;
+        for nrec in &self.nodes {
+            for v in [nrec.label, nrec.first_out, nrec.first_in] {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            w.write_all(&nrec.prop.to_le_bytes())?;
+        }
+        w.write_all(&(self.rels.len() as u64).to_le_bytes())?;
+        for r in &self.rels {
+            for v in [r.src, r.dst, r.rel_type, r.next_out, r.next_in] {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            w.write_all(&r.weight.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Load the binary format; validates magic and record pointers.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).context("truncated store header")?;
+        if &magic != Self::MAGIC {
+            bail!("not a jgraph store file");
+        }
+        let mut u64buf = [0u8; 8];
+        let mut u32buf = [0u8; 4];
+        let mut read_u64 =
+            |f: &mut dyn Read| -> Result<u64> { f.read_exact(&mut u64buf)?; Ok(u64::from_le_bytes(u64buf)) };
+        let dict_len = read_u64(&mut f)? as usize;
+        let mut store = Self::new();
+        for _ in 0..dict_len {
+            f.read_exact(&mut u32buf)?;
+            let len = u32::from_le_bytes(u32buf) as usize;
+            let mut s = vec![0u8; len];
+            f.read_exact(&mut s)?;
+            store.intern(&String::from_utf8(s).context("non-utf8 dictionary entry")?);
+        }
+        let node_len = read_u64(&mut f)? as usize;
+        for _ in 0..node_len {
+            let mut vals = [0u32; 3];
+            for v in &mut vals {
+                f.read_exact(&mut u32buf)?;
+                *v = u32::from_le_bytes(u32buf);
+            }
+            f.read_exact(&mut u32buf)?;
+            let prop = f32::from_le_bytes(u32buf);
+            store.nodes.push(NodeRecord {
+                label: vals[0],
+                first_out: vals[1],
+                first_in: vals[2],
+                prop,
+            });
+        }
+        let rel_len = read_u64(&mut f)? as usize;
+        for i in 0..rel_len {
+            let mut vals = [0u32; 5];
+            for v in &mut vals {
+                f.read_exact(&mut u32buf).with_context(|| format!("truncated at rel {i}"))?;
+                *v = u32::from_le_bytes(u32buf);
+            }
+            f.read_exact(&mut u32buf)?;
+            let weight = f32::from_le_bytes(u32buf);
+            store.rels.push(RelRecord {
+                src: vals[0],
+                dst: vals[1],
+                rel_type: vals[2],
+                next_out: vals[3],
+                next_in: vals[4],
+                weight,
+            });
+        }
+        store.validate()?;
+        Ok(store)
+    }
+
+    /// Structural integrity: every pointer in range, chains acyclic.
+    pub fn validate(&self) -> Result<()> {
+        let nn = self.nodes.len() as u32;
+        let nr = self.rels.len() as u32;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.label as usize >= self.dict.len() {
+                bail!("node {i}: label id out of range");
+            }
+            for p in [n.first_out, n.first_in] {
+                if p != NIL && p >= nr {
+                    bail!("node {i}: relationship pointer out of range");
+                }
+            }
+        }
+        for (i, r) in self.rels.iter().enumerate() {
+            if r.src >= nn || r.dst >= nn {
+                bail!("rel {i}: endpoint out of range");
+            }
+            if r.rel_type as usize >= self.dict.len() {
+                bail!("rel {i}: type id out of range");
+            }
+        }
+        // chain acyclicity: total chain steps cannot exceed rel count
+        for v in 0..nn {
+            let mut steps = 0u32;
+            let mut cur = self.nodes[v as usize].first_out;
+            while cur != NIL {
+                steps += 1;
+                if steps > nr {
+                    bail!("node {v}: cyclic out-chain");
+                }
+                cur = self.rels[cur as usize].next_out;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn social() -> GraphStore {
+        let mut s = GraphStore::new();
+        let alice = s.create_node("Person", 30.0);
+        let bob = s.create_node("Person", 25.0);
+        let post = s.create_node("Post", 0.0);
+        s.create_rel(alice, bob, "FOLLOWS", 1.0).unwrap();
+        s.create_rel(bob, alice, "FOLLOWS", 1.0).unwrap();
+        s.create_rel(alice, post, "LIKES", 0.5).unwrap();
+        s
+    }
+
+    #[test]
+    fn create_and_expand() {
+        let s = social();
+        assert_eq!(s.node_count(), 3);
+        assert_eq!(s.rel_count(), 3);
+        assert_eq!(s.node_label(2), "Post");
+        let out = s.expand_out(0, None);
+        assert_eq!(out.len(), 2);
+        let follows = s.expand_out(0, Some("FOLLOWS"));
+        assert_eq!(follows.len(), 1);
+        assert_eq!(follows[0].0, 1);
+        let inn = s.expand_in(0, None);
+        assert_eq!(inn.len(), 1);
+        assert_eq!(inn[0].0, 1);
+    }
+
+    #[test]
+    fn label_scan() {
+        let s = social();
+        assert_eq!(s.nodes_with_label("Person"), vec![0, 1]);
+        assert_eq!(s.nodes_with_label("Post"), vec![2]);
+        assert!(s.nodes_with_label("Absent").is_empty());
+    }
+
+    #[test]
+    fn fifo_bridge_to_edgelist() {
+        let s = social();
+        let all = s.to_edgelist(None);
+        assert_eq!(all.num_edges(), 3);
+        assert_eq!(all.num_vertices, 3);
+        let follows = s.to_edgelist(Some("FOLLOWS"));
+        assert_eq!(follows.num_edges(), 2);
+        assert!(follows.is_valid());
+    }
+
+    #[test]
+    fn edgelist_roundtrip_through_store() {
+        let g = generate::erdos_renyi(50, 300, 4);
+        let s = GraphStore::from_edgelist(&g, "V", "E");
+        let back = s.to_edgelist(None).sorted();
+        let want = g.sorted();
+        assert_eq!(back.num_edges(), want.num_edges());
+        for (a, b) in back.edges.iter().zip(&want.edges) {
+            assert_eq!((a.src, a.dst), (b.src, b.dst));
+        }
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let s = social();
+        let dir = std::env::temp_dir().join("jgraph_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("social.db");
+        s.save(&p).unwrap();
+        let loaded = GraphStore::load(&p).unwrap();
+        assert_eq!(loaded.node_count(), 3);
+        assert_eq!(loaded.rel_count(), 3);
+        assert_eq!(loaded.expand_out(0, Some("FOLLOWS")).len(), 1);
+        assert_eq!(loaded.node_prop(0), 30.0);
+    }
+
+    #[test]
+    fn corrupt_store_rejected() {
+        let dir = std::env::temp_dir().join("jgraph_store_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.db");
+        std::fs::write(&p, b"NOTSTORE").unwrap();
+        assert!(GraphStore::load(&p).is_err());
+        std::fs::write(&p, b"JGSTORE1").unwrap(); // truncated after magic
+        assert!(GraphStore::load(&p).is_err());
+    }
+
+    #[test]
+    fn bad_endpoints_rejected() {
+        let mut s = GraphStore::new();
+        s.create_node("V", 0.0);
+        assert!(s.create_rel(0, 5, "E", 1.0).is_err());
+    }
+
+    #[test]
+    fn big_store_stays_consistent() {
+        let g = generate::rmat(9, 5_000, 0.57, 0.19, 0.19, 8);
+        let s = GraphStore::from_edgelist(&g, "V", "E");
+        s.validate().unwrap();
+        // out-degrees via chains match the edge list
+        let deg = g.out_degrees();
+        for v in (0..g.num_vertices as u32).step_by(37) {
+            assert_eq!(s.expand_out(v, None).len(), deg[v as usize] as usize);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! # JGraph — a light-weight FPGA programming framework for graph applications
+//!
+//! Reproduction of *"On The Design of a Light-weight FPGA Programming
+//! Framework for Graph Applications"* (Wang, Guo, Li — SJTU, cs.AR 2022) as a
+//! three-layer rust + JAX + Pallas system. See `DESIGN.md` for the full
+//! inventory and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! The paper's two contributions map onto this crate as:
+//!
+//! * **the graph DSL** ([`dsl`]) — 25+ atomic operators in three abstraction
+//!   levels (atomic op / function / algorithm), GAS programming model,
+//!   preprocessing primitives ([`prep`]);
+//! * **the light-weight translator** ([`translator`]) — lowers DSL programs
+//!   onto a fixed hardware-module library, emits compact HDL + host-C code,
+//!   estimates FPGA resources, and schedules pipelines × PEs ([`sched`]),
+//!   assisted by a host↔FPGA communication manager ([`comm`]).
+//!
+//! Because no FPGA is attached, the Alveo U200 target is **simulated**:
+//! [`accel`] is a cycle-level model of the generated design (pipelines, BRAM
+//! vertex cache, DDR4 channels), while the design's *numeric behaviour* runs
+//! as AOT-compiled XLA — JAX supersteps with a Pallas edge-program kernel,
+//! lowered to HLO text at build time (`make artifacts`) and executed from
+//! [`runtime`] via PJRT. Python is never on the request path.
+//!
+//! ```text
+//!   DSL program ──translate──▶ ModuleGraph ──▶ HDL + host C   (translator)
+//!        │                          │
+//!        │                          ├──▶ cycle model ─▶ MTEPS  (accel)
+//!        └──────── engine ──────────┴──▶ XLA superstep loop    (runtime)
+//! ```
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use jgraph::prelude::*;
+//!
+//! let graph = jgraph::graph::generate::email_eu_core_like(1);
+//! let program = jgraph::dsl::algorithms::bfs();
+//! let design = Translator::jgraph().translate(&program).unwrap();
+//! let report = jgraph::engine::Executor::new(ExecutorConfig::default())
+//!     .run(&program, &design, &graph)
+//!     .unwrap();
+//! println!("BFS: {:.1} simulated MTEPS", report.simulated_mteps);
+//! ```
+
+pub mod accel;
+pub mod comm;
+pub mod dsl;
+pub mod engine;
+pub mod graph;
+pub mod prep;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod translator;
+
+/// Convenience re-exports for the common flow: build graph → author DSL →
+/// translate → execute → report.
+pub mod prelude {
+    pub use crate::accel::device::DeviceModel;
+    pub use crate::dsl::algorithms;
+    pub use crate::dsl::program::GasProgram;
+    pub use crate::engine::{Executor, ExecutorConfig, RunReport};
+    pub use crate::graph::csr::Csr;
+    pub use crate::graph::edgelist::EdgeList;
+    pub use crate::sched::ParallelismPlan;
+    pub use crate::translator::{Translator, TranslatorKind};
+}

@@ -1,0 +1,386 @@
+//! `jgraph` — CLI for the JGraph framework: translate DSL programs, run
+//! them on the simulated U200 through the AOT/XLA functional path, and
+//! regenerate the paper's tables and figures.
+//!
+//! Argument parsing is hand-rolled (the offline build has no clap):
+//!
+//! ```text
+//! jgraph run --algo bfs --graph email --translator jgraph [--pipelines 8]
+//!            [--pes 1] [--root 0] [--reorder degree] [--no-xla] [--verbose]
+//! jgraph translate --algo sssp [--translator vivado] [--emit hdl|chisel|host|library|isa|both|stats]
+//! jgraph report --table 5 | --fig 5 | --interfaces [--full]
+//! jgraph gen --preset slashdot --out /tmp/slashdot.bin [--seed 7]
+//! jgraph info
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::program::GasProgram;
+use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::graph::{edgelist::EdgeList, generate, io};
+use jgraph::prep::reorder::ReorderStrategy;
+use jgraph::sched::ParallelismPlan;
+use jgraph::translator::{Translator, TranslatorKind};
+
+/// Minimal flag parser: `--key value` pairs + boolean `--flag`s.
+struct Args {
+    values: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut values = std::collections::HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            if bool_flags.contains(&key) {
+                flags.insert(key.to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                values.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { values, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+}
+
+fn program_of(name: &str) -> Result<GasProgram> {
+    Ok(match name {
+        "bfs" => algorithms::bfs(),
+        "pagerank" | "pr" => algorithms::pagerank(0.85, 1e-6),
+        "sssp" => algorithms::sssp(),
+        "wcc" => algorithms::wcc(),
+        "spmv" => algorithms::spmv(),
+        "degree-count" => algorithms::degree_count(),
+        "widest-path" => algorithms::widest_path(),
+        "reachability" => algorithms::reachability(),
+        "max-label" => algorithms::max_label(),
+        other => bail!(
+            "unknown algorithm {other:?} (bfs|pagerank|sssp|wcc|spmv|\
+             degree-count|widest-path|reachability|max-label)"
+        ),
+    })
+}
+
+fn translator_of(name: &str) -> Result<TranslatorKind> {
+    Ok(match name {
+        "jgraph" | "fagraph" => TranslatorKind::JGraph,
+        "vivado" | "vivado-hls" => TranslatorKind::VivadoHls,
+        "spatial" => TranslatorKind::Spatial,
+        other => bail!("unknown translator {other:?} (jgraph|vivado|spatial)"),
+    })
+}
+
+fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
+    Ok(match spec {
+        "email" => ("email-Eu-core (synthetic)".into(), generate::email_eu_core_like(seed)),
+        "slashdot" => ("soc-Slashdot0922 (synthetic)".into(), generate::soc_slashdot_like(seed)),
+        "grid" => ("grid 64x64".into(), generate::grid2d(64, 64, seed)),
+        "rmat" => ("rmat-13".into(), generate::rmat(13, 120_000, 0.57, 0.19, 0.19, seed)),
+        "er" => ("erdos-renyi".into(), generate::erdos_renyi(4_096, 65_536, seed)),
+        "chain" => ("chain-1k".into(), generate::chain(1_000)),
+        "star" => ("star-1k".into(), generate::star(1_000)),
+        // .db files are graph-store databases (the paper's "read data
+        // from database directly" FIFO path)
+        path if path.ends_with(".db") => (
+            path.to_string(),
+            jgraph::graph::store::GraphStore::load(path)?.to_edgelist(None),
+        ),
+        path => (path.to_string(), io::load(path)?),
+    })
+}
+
+const USAGE: &str = "usage: jgraph <run|translate|report|gen|sweep|info> [--help]
+  run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
+            [--root V] [--reorder S] [--trace out.csv] [--no-xla] [--verbose]
+  translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
+  report    [--table N] [--fig N] [--interfaces] [--full]
+  gen       --out PATH [--preset P] [--seed S]
+  sweep     --algo A [--graph G] [--reorders]
+  info";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    if rest.iter().any(|a| a == "--help") || cmd == "--help" || cmd == "help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "translate" => cmd_translate(rest),
+        "report" => cmd_report(rest),
+        "gen" => cmd_gen(rest),
+        "sweep" => cmd_sweep(rest),
+        "info" => cmd_info(),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Design-space what-if: sweep pipelines x PEs (and optionally reorder
+/// strategies) for one algorithm/graph, printing simulated MTEPS,
+/// resources, and fit — the interactive exploration the light-weight
+/// translator makes possible (seconds, not synthesis runs).
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["reorders"])?;
+    let program = program_of(&args.get_or("algo", "bfs"))?;
+    let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
+    let device = jgraph::accel::device::DeviceModel::u200();
+    println!(
+        "design-space sweep: {} on {name} ({}v/{}e)",
+        program.name,
+        el.num_vertices,
+        el.num_edges()
+    );
+    println!(
+        "{:>9} {:>4} | {:>10} | {:>9} | {:>6} | {:>5}",
+        "pipelines", "pes", "MTEPS", "kLUT", "LUT%", "fits"
+    );
+    for pipes in [1u32, 2, 4, 8, 16, 32] {
+        for pes in [1u32, 2, 4] {
+            let design = Translator::jgraph()
+                .with_plan(ParallelismPlan::new(pipes, pes))
+                .translate(&program)?;
+            let fits = design.fits(&device);
+            let mteps = if fits {
+                let mut ex = Executor::new(ExecutorConfig {
+                    use_xla: false,
+                    graph_name: name.clone(),
+                    ..Default::default()
+                });
+                ex.run(&program, &design, &el)?.simulated_mteps
+            } else {
+                0.0
+            };
+            println!(
+                "{:>9} {:>4} | {:>10.1} | {:>9} | {:>5.1}% | {:>5}",
+                pipes,
+                pes,
+                mteps,
+                design.resources.lut / 1000,
+                100.0 * design.resources.utilization(&device)[0],
+                fits
+            );
+        }
+    }
+    if args.flag("reorders") {
+        println!("\nreorder sweep (8x1):");
+        let design = Translator::jgraph().translate(&program)?;
+        for &s in jgraph::prep::reorder::all_strategies() {
+            let mut ex = Executor::new(ExecutorConfig {
+                use_xla: false,
+                reorder: Some(s),
+                graph_name: name.clone(),
+                ..Default::default()
+            });
+            let r = ex.run(&program, &design, &el)?;
+            println!("  {:>14?} | {:>10.1} MTEPS", s, r.simulated_mteps);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["no-xla", "verbose"])?;
+    let program = program_of(&args.get_or("algo", "bfs"))?;
+    let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
+    let plan = ParallelismPlan::new(args.get_num("pipelines", 8)?, args.get_num("pes", 1)?);
+    let design = Translator::of_kind(translator_of(&args.get_or("translator", "jgraph"))?)
+        .with_plan(plan)
+        .translate(&program)?;
+    let reorder = match args.get("reorder") {
+        None => None,
+        Some(s) => Some(s.parse::<ReorderStrategy>()?),
+    };
+    let mut ex = Executor::new(ExecutorConfig {
+        root: args.get_num("root", 0)?,
+        reorder,
+        use_xla: !args.flag("no-xla"),
+        graph_name: name,
+        trace_path: args.get("trace").map(std::path::PathBuf::from),
+        ..Default::default()
+    });
+    let report = ex.run(&program, &design, &el)?;
+    println!("{}", report.summary());
+    if args.flag("verbose") {
+        println!(
+            "cycles: compute={} conflict={} row_start={} vertex_random={} \
+             stream={} fill_drain={} | launches {:.1}us | path {:?}",
+            report.sim.cycles.compute,
+            report.sim.cycles.conflict,
+            report.sim.cycles.row_start,
+            report.sim.cycles.vertex_random,
+            report.sim.cycles.stream,
+            report.sim.cycles.fill_drain,
+            report.sim.launch_seconds * 1e6,
+            report.functional_path,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_translate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let program = program_of(&args.get_or("algo", "bfs"))?;
+    let plan = ParallelismPlan::new(args.get_num("pipelines", 8)?, args.get_num("pes", 1)?);
+    let design = Translator::of_kind(translator_of(&args.get_or("translator", "jgraph"))?)
+        .with_plan(plan)
+        .translate(&program)?;
+    match args.get_or("emit", "both").as_str() {
+        "hdl" => print!("{}", design.hdl),
+        "chisel" => match &design.chisel {
+            Some(c) => print!("{c}"),
+            None => bail!("only the jgraph flow has a Chisel intermediate"),
+        },
+        "host" => print!("{}", design.host_c),
+        "isa" => print!("{}", jgraph::dsl::isa::compile(&program).listing()),
+        "library" => print!(
+            "{}",
+            jgraph::translator::modlib::emit_library(&design.module_graph)
+        ),
+        "both" => print!("{}\n{}", design.hdl, design.host_c),
+        "stats" => println!(
+            "{} via {:?}: {} HDL lines, {} host lines, {} modules, \
+             LUT {} FF {} BRAM {}kb URAM {} DSP {}, translate {:.3}ms, \
+             modeled synthesis {:.1}s",
+            design.program_name,
+            design.kind,
+            design.hdl_lines,
+            design.host_lines,
+            design.module_graph.instances.len(),
+            design.resources.lut,
+            design.resources.ff,
+            design.resources.bram_kb,
+            design.resources.uram,
+            design.resources.dsp,
+            design.translate_seconds * 1e3,
+            design.synthesis_seconds,
+        ),
+        other => bail!("unknown emit mode {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["interfaces", "full"])?;
+    let mut did_something = false;
+    if args.flag("interfaces") {
+        did_something = true;
+        println!("JGraph DSL interfaces (Figure 3):");
+        for i in jgraph::dsl::ops::INTERFACES {
+            println!(
+                "  [{:?}/{:?}] {}{} -> {:?}: {}",
+                i.level, i.category, i.name, i.params, i.module, i.doc
+            );
+        }
+        println!("total: {}", jgraph::dsl::registry::interface_count());
+    }
+    if let Some(t) = args.get("table") {
+        did_something = true;
+        match t {
+            "1" => println!("{}", jgraph::report::table1()),
+            "2" => println!("{}", jgraph::report::table2()),
+            "3" => println!("{}", jgraph::report::table3()),
+            "4" => println!("{}", jgraph::report::table4()),
+            "5" => {
+                let (t, _) = jgraph::report::table5(false, !args.flag("full"))?;
+                println!("{t}");
+            }
+            n => bail!("no table {n}"),
+        }
+    }
+    if let Some(f) = args.get("fig") {
+        did_something = true;
+        match f {
+            "1" => println!("{}", jgraph::report::fig1_environments()),
+            "5" => {
+                let (f, _) = jgraph::report::fig5_devcost()?;
+                println!("{f}");
+            }
+            n => bail!("no figure {n}"),
+        }
+    }
+    if !did_something {
+        bail!("pass --table N, --fig N, or --interfaces");
+    }
+    Ok(())
+}
+
+fn cmd_gen(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let out = args.get("out").context("--out is required")?.to_string();
+    let (name, el) = load_graph(&args.get_or("preset", "email"), args.get_num("seed", 42u64)?)?;
+    if out.ends_with(".bin") {
+        io::write_binary(&el, &out)?;
+    } else if out.ends_with(".db") {
+        jgraph::graph::store::GraphStore::from_edgelist(&el, "Vertex", "EDGE").save(&out)?;
+    } else {
+        io::write_snap_text(&el, &out)?;
+    }
+    println!("wrote {name}: {} vertices, {} edges -> {out}", el.num_vertices, el.num_edges());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dev = jgraph::accel::device::DeviceModel::u200();
+    println!(
+        "device model: {} ({}k LUT, {}k FF, {} DSP, {} URAM, {} GB DDR4, {:.0} MHz)",
+        dev.name,
+        dev.luts / 1000,
+        dev.registers / 1000,
+        dev.dsps,
+        dev.urams,
+        dev.dram_bytes >> 30,
+        dev.clock_hz / 1e6
+    );
+    match jgraph::runtime::KernelRegistry::open_default() {
+        Ok(reg) => {
+            println!("PJRT platform: {}", reg.platform());
+            println!("artifacts ({}):", reg.manifest.artifacts.len());
+            for a in &reg.manifest.artifacts {
+                println!(
+                    "  {:5} {:7} N={:>7} M={:>9} pallas={} {}",
+                    a.algo, a.bucket, a.n, a.m, a.use_pallas, a.file
+                );
+            }
+        }
+        Err(e) => println!("artifact registry unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! **Layout** — graph data-structure conversion (paper §IV-C2): "There are
+//! various graph data layouts, such as CSR, CSC, Adjacency matrix, linked
+//! list... we provide several functions for data structure transmission."
+
+use anyhow::{bail, Result};
+
+use crate::graph::csr::Csr;
+use crate::graph::edgelist::EdgeList;
+
+/// The layouts the DSL's `Layout(graph, fmt)` call accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Flat (src, dst, w) triples — the FIFO stage's native output.
+    EdgeList,
+    /// Compressed sparse row: out-edges grouped by source.
+    Csr,
+    /// Compressed sparse column: in-edges grouped by destination (the
+    /// paper's BFS pseudocode uses CSC: pull from in-neighbors).
+    Csc,
+    /// Dense adjacency matrix (tiny graphs only; O(V^2)).
+    AdjacencyMatrix,
+}
+
+impl std::str::FromStr for Layout {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "edgelist" | "el" => Layout::EdgeList,
+            "csr" => Layout::Csr,
+            "csc" => Layout::Csc,
+            "adj" | "adjacency" | "matrix" => Layout::AdjacencyMatrix,
+            other => bail!("unknown layout {other:?}"),
+        })
+    }
+}
+
+/// A graph in one of the supported layouts.
+#[derive(Debug, Clone)]
+pub enum LaidOut {
+    EdgeList(EdgeList),
+    Csr(Csr),
+    Csc(Csr),
+    /// Row-major n×n weights; 0.0 = absent. Parallel edges collapse to the
+    /// last weight.
+    AdjacencyMatrix { n: usize, dense: Vec<f32> },
+}
+
+impl LaidOut {
+    pub fn layout(&self) -> Layout {
+        match self {
+            LaidOut::EdgeList(_) => Layout::EdgeList,
+            LaidOut::Csr(_) => Layout::Csr,
+            LaidOut::Csc(_) => Layout::Csc,
+            LaidOut::AdjacencyMatrix { .. } => Layout::AdjacencyMatrix,
+        }
+    }
+
+    /// Normalize back to an edge list (the hub format for conversions).
+    pub fn to_edgelist(&self) -> EdgeList {
+        match self {
+            LaidOut::EdgeList(el) => el.clone(),
+            LaidOut::Csr(c) => c.to_edgelist(),
+            LaidOut::Csc(c) => {
+                // rows are destinations: flip back
+                let flipped = c.to_edgelist();
+                let mut el = EdgeList::with_vertices(flipped.num_vertices);
+                for e in flipped.edges {
+                    el.edges.push(crate::graph::edgelist::Edge {
+                        src: e.dst,
+                        dst: e.src,
+                        weight: e.weight,
+                    });
+                }
+                el
+            }
+            LaidOut::AdjacencyMatrix { n, dense } => {
+                let mut el = EdgeList::with_vertices(*n);
+                for i in 0..*n {
+                    for j in 0..*n {
+                        let w = dense[i * n + j];
+                        if w != 0.0 {
+                            el.push(i as u32, j as u32, w);
+                        }
+                    }
+                }
+                el.num_vertices = *n;
+                el
+            }
+        }
+    }
+}
+
+/// Maximum vertex count for the dense adjacency layout.
+pub const ADJ_MATRIX_LIMIT: usize = 4_096;
+
+/// Convert an edge list into the requested layout.
+pub fn convert(el: &EdgeList, to: Layout) -> Result<LaidOut> {
+    Ok(match to {
+        Layout::EdgeList => LaidOut::EdgeList(el.clone()),
+        Layout::Csr => LaidOut::Csr(Csr::from_edgelist(el)),
+        Layout::Csc => LaidOut::Csc(Csr::csc_from_edgelist(el)),
+        Layout::AdjacencyMatrix => {
+            let n = el.num_vertices;
+            if n > ADJ_MATRIX_LIMIT {
+                bail!("adjacency matrix layout limited to {ADJ_MATRIX_LIMIT} vertices, got {n}");
+            }
+            let mut dense = vec![0f32; n * n];
+            for e in &el.edges {
+                dense[e.src as usize * n + e.dst as usize] = e.weight;
+            }
+            LaidOut::AdjacencyMatrix { n, dense }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn canon(el: &EdgeList) -> Vec<(u32, u32)> {
+        el.sorted().edges.iter().map(|e| (e.src, e.dst)).collect()
+    }
+
+    #[test]
+    fn all_layouts_roundtrip() {
+        let mut g = generate::erdos_renyi(40, 150, 11);
+        g.dedup(); // adjacency matrix collapses parallel edges
+        let want = canon(&g);
+        for layout in [Layout::EdgeList, Layout::Csr, Layout::Csc, Layout::AdjacencyMatrix] {
+            let lo = convert(&g, layout).unwrap();
+            assert_eq!(lo.layout(), layout);
+            assert_eq!(canon(&lo.to_edgelist()), want, "layout {layout:?}");
+        }
+    }
+
+    #[test]
+    fn csc_groups_by_destination() {
+        let g = EdgeList::from_pairs([(0, 2), (1, 2), (0, 1)]);
+        let LaidOut::Csc(c) = convert(&g, Layout::Csc).unwrap() else { panic!() };
+        assert_eq!(c.neighbors(2), &[0, 1]); // in-neighbors of 2
+    }
+
+    #[test]
+    fn adjacency_limit_enforced() {
+        let g = generate::chain(ADJ_MATRIX_LIMIT + 1);
+        assert!(convert(&g, Layout::AdjacencyMatrix).is_err());
+    }
+
+    #[test]
+    fn layout_parses_from_str() {
+        assert_eq!("csr".parse::<Layout>().unwrap(), Layout::Csr);
+        assert_eq!("CSC".parse::<Layout>().unwrap(), Layout::Csc);
+        assert!("blah".parse::<Layout>().is_err());
+    }
+}

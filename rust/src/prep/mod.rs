@@ -1,0 +1,11 @@
+//! Preprocessing — the DSL's third interface family (paper §IV-C):
+//! **FIFO** (file I/O, provided by [`crate::graph::io`]), **Layout**
+//! (format conversion), **Partition**, and **Reorder**.
+
+pub mod layout;
+pub mod partition;
+pub mod reorder;
+
+pub use layout::{convert, Layout};
+pub use partition::{partition, PartitionStrategy, Partitioning};
+pub use reorder::{reorder, ReorderStrategy};

@@ -1,0 +1,266 @@
+//! **Partition** — split large graphs across pipeline lanes / PEs (paper
+//! §IV-C3): "the basic partition is to divide graph into several parts
+//! without optimization. We can also separate graph with graph algorithms,
+//! such as graph coloring and community detection." The strategies here are
+//! the paper's basic split plus the skew-aware splits of PowerLyra/PathGraph
+//! it cites [32, 33].
+
+use anyhow::{bail, Result};
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::VertexId;
+
+/// Available partition strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionStrategy {
+    /// Contiguous vertex ranges of equal size (the paper's "basic" split).
+    Range,
+    /// Vertex id modulo k — destroys locality, balances counts.
+    Hash,
+    /// Greedy bin-packing by out-degree so each part owns a similar edge
+    /// count (PowerLyra-style skew handling).
+    DegreeBalanced,
+    /// BFS-grown parts: community-detection-flavored — each part is a
+    /// connected-ish region, improving intra-part locality (PathGraph-style).
+    BfsGrow,
+}
+
+impl std::str::FromStr for PartitionStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "range" => Self::Range,
+            "hash" => Self::Hash,
+            "degree" | "degree-balanced" => Self::DegreeBalanced,
+            "bfs" | "bfs-grow" | "community" => Self::BfsGrow,
+            other => bail!("unknown partition strategy {other:?}"),
+        })
+    }
+}
+
+/// The result: `assignment[v] = part id`, plus per-part summaries.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    pub strategy: PartitionStrategy,
+    pub num_parts: usize,
+    pub assignment: Vec<u32>,
+    /// Vertices per part.
+    pub part_sizes: Vec<usize>,
+    /// Edges whose source lives in the part.
+    pub part_edges: Vec<usize>,
+    /// Edges crossing parts (communication volume between PEs).
+    pub cut_edges: usize,
+}
+
+impl Partitioning {
+    /// Edge balance: max part edges / mean part edges (1.0 = perfect).
+    pub fn edge_imbalance(&self) -> f64 {
+        let max = self.part_edges.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.part_edges.iter().sum::<usize>() as f64 / self.num_parts.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Fraction of edges crossing part boundaries.
+    pub fn cut_fraction(&self, total_edges: usize) -> f64 {
+        if total_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges as f64 / total_edges as f64
+        }
+    }
+}
+
+/// Partition `el` into `k` parts with the chosen strategy.
+pub fn partition(el: &EdgeList, k: usize, strategy: PartitionStrategy) -> Result<Partitioning> {
+    if k == 0 {
+        bail!("cannot partition into 0 parts");
+    }
+    let n = el.num_vertices;
+    let assignment = match strategy {
+        PartitionStrategy::Range => {
+            let per = n.div_ceil(k.min(n.max(1)));
+            (0..n).map(|v| ((v / per.max(1)).min(k - 1)) as u32).collect()
+        }
+        PartitionStrategy::Hash => (0..n).map(|v| (v % k) as u32).collect(),
+        PartitionStrategy::DegreeBalanced => degree_balanced(el, k),
+        PartitionStrategy::BfsGrow => bfs_grow(el, k),
+    };
+    Ok(summarize(el, k, strategy, assignment))
+}
+
+fn summarize(
+    el: &EdgeList,
+    k: usize,
+    strategy: PartitionStrategy,
+    assignment: Vec<u32>,
+) -> Partitioning {
+    let mut part_sizes = vec![0usize; k];
+    for &p in &assignment {
+        part_sizes[p as usize] += 1;
+    }
+    let mut part_edges = vec![0usize; k];
+    let mut cut_edges = 0usize;
+    for e in &el.edges {
+        let ps = assignment[e.src as usize];
+        part_edges[ps as usize] += 1;
+        if ps != assignment[e.dst as usize] {
+            cut_edges += 1;
+        }
+    }
+    Partitioning { strategy, num_parts: k, assignment, part_sizes, part_edges, cut_edges }
+}
+
+/// Greedy: sort vertices by out-degree descending, place each in the part
+/// with the fewest edges so far.
+fn degree_balanced(el: &EdgeList, k: usize) -> Vec<u32> {
+    let deg = el.out_degrees();
+    let mut order: Vec<VertexId> = (0..el.num_vertices as u32).collect();
+    order.sort_unstable_by_key(|&v| std::cmp::Reverse(deg[v as usize]));
+    let mut load = vec![0u64; k];
+    let mut assignment = vec![0u32; el.num_vertices];
+    for v in order {
+        let best = (0..k).min_by_key(|&p| load[p]).unwrap();
+        assignment[v as usize] = best as u32;
+        load[best] += deg[v as usize] as u64 + 1; // +1 so zero-degree spreads
+    }
+    assignment
+}
+
+/// Grow parts by BFS from evenly-spaced seeds over the symmetrized
+/// adjacency; unreached vertices round-robin.
+fn bfs_grow(el: &EdgeList, k: usize) -> Vec<u32> {
+    let n = el.num_vertices;
+    let mut adj = vec![Vec::new(); n];
+    for e in &el.edges {
+        adj[e.src as usize].push(e.dst);
+        adj[e.dst as usize].push(e.src);
+    }
+    let target = n.div_ceil(k);
+    let mut assignment = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    let mut next_seed = 0usize;
+    for p in 0..k {
+        // find an unassigned seed
+        while next_seed < n && assignment[next_seed] != u32::MAX {
+            next_seed += 1;
+        }
+        if next_seed >= n {
+            break;
+        }
+        queue.clear();
+        queue.push_back(next_seed as u32);
+        assignment[next_seed] = p as u32;
+        let mut grown = 1usize;
+        while let Some(u) = queue.pop_front() {
+            if grown >= target {
+                break;
+            }
+            for &v in &adj[u as usize] {
+                if assignment[v as usize] == u32::MAX {
+                    assignment[v as usize] = p as u32;
+                    grown += 1;
+                    queue.push_back(v);
+                    if grown >= target {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // leftovers (disconnected tails): round-robin
+    let mut rr = 0u32;
+    for a in assignment.iter_mut() {
+        if *a == u32::MAX {
+            *a = rr % k as u32;
+            rr += 1;
+        }
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    const STRATS: [PartitionStrategy; 4] = [
+        PartitionStrategy::Range,
+        PartitionStrategy::Hash,
+        PartitionStrategy::DegreeBalanced,
+        PartitionStrategy::BfsGrow,
+    ];
+
+    #[test]
+    fn every_strategy_covers_every_vertex() {
+        let g = generate::rmat(8, 2000, 0.57, 0.19, 0.19, 4);
+        for s in STRATS {
+            let p = partition(&g, 4, s).unwrap();
+            assert_eq!(p.assignment.len(), g.num_vertices);
+            assert!(p.assignment.iter().all(|&a| a < 4), "{s:?}");
+            assert_eq!(p.part_sizes.iter().sum::<usize>(), g.num_vertices);
+            assert_eq!(p.part_edges.iter().sum::<usize>(), g.num_edges());
+        }
+    }
+
+    #[test]
+    fn degree_balanced_beats_range_on_skew() {
+        let g = generate::rmat(10, 30_000, 0.57, 0.19, 0.19, 7);
+        let r = partition(&g, 8, PartitionStrategy::Range).unwrap();
+        let d = partition(&g, 8, PartitionStrategy::DegreeBalanced).unwrap();
+        assert!(
+            d.edge_imbalance() < r.edge_imbalance(),
+            "degree {:.3} vs range {:.3}",
+            d.edge_imbalance(),
+            r.edge_imbalance()
+        );
+    }
+
+    #[test]
+    fn bfs_grow_cuts_fewer_edges_than_hash_on_grid() {
+        let g = generate::grid2d(32, 32, 1);
+        let h = partition(&g, 4, PartitionStrategy::Hash).unwrap();
+        let b = partition(&g, 4, PartitionStrategy::BfsGrow).unwrap();
+        assert!(
+            b.cut_edges < h.cut_edges,
+            "bfs-grow {} vs hash {}",
+            b.cut_edges,
+            h.cut_edges
+        );
+    }
+
+    #[test]
+    fn single_part_has_no_cut() {
+        let g = generate::erdos_renyi(100, 500, 2);
+        for s in STRATS {
+            let p = partition(&g, 1, s).unwrap();
+            assert_eq!(p.cut_edges, 0);
+            assert_eq!(p.cut_fraction(g.num_edges()), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_parts_rejected() {
+        let g = generate::chain(4);
+        assert!(partition(&g, 0, PartitionStrategy::Range).is_err());
+    }
+
+    #[test]
+    fn more_parts_than_vertices() {
+        let g = generate::chain(3);
+        for s in STRATS {
+            let p = partition(&g, 8, s).unwrap();
+            assert_eq!(p.assignment.len(), 3);
+            assert!(p.assignment.iter().all(|&a| a < 8));
+        }
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!("hash".parse::<PartitionStrategy>().unwrap(), PartitionStrategy::Hash);
+        assert!("x".parse::<PartitionStrategy>().is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! **Reorder** — vertex relabeling to improve locality (paper §IV-C4): "We
+//! can sort nodes in descending order by degree because higher degree nodes
+//! will be accessed more often. We can also use DFS to find several closed
+//! neighbors for the certain node." Strategies follow the lightweight
+//! reorderings of Balaji & Lucia [34] the paper cites.
+
+use anyhow::{bail, Result};
+
+use crate::graph::edgelist::EdgeList;
+use crate::graph::VertexId;
+
+/// Available reorder strategies. Each produces a permutation
+/// `perm[old_id] = new_id`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReorderStrategy {
+    /// Identity (baseline for ablations).
+    None,
+    /// Descending out-degree: hubs get small ids → they share cache/BRAM
+    /// lines ("hub sorting").
+    DegreeSort,
+    /// DFS pre-order from the highest-degree vertex: neighbors get nearby
+    /// ids (the paper's "use DFS to find several closed neighbors").
+    DfsLocality,
+    /// BFS order from the highest-degree vertex: frontier neighbors adjacent.
+    BfsLocality,
+    /// Hub clustering: hubs first (sorted by degree), then the rest in
+    /// original order — preserves tail locality while packing hubs.
+    HubCluster,
+}
+
+impl std::str::FromStr for ReorderStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "identity" => Self::None,
+            "degree" | "degree-sort" => Self::DegreeSort,
+            "dfs" | "dfs-locality" => Self::DfsLocality,
+            "bfs" | "bfs-locality" => Self::BfsLocality,
+            "hub" | "hub-cluster" => Self::HubCluster,
+            other => bail!("unknown reorder strategy {other:?}"),
+        })
+    }
+}
+
+/// Compute the permutation for `strategy` and return the relabeled graph
+/// together with the permutation (`perm[old] = new`).
+pub fn reorder(el: &EdgeList, strategy: ReorderStrategy) -> (EdgeList, Vec<VertexId>) {
+    let perm = permutation(el, strategy);
+    (el.permute(&perm), perm)
+}
+
+/// The permutation only (`perm[old] = new`).
+pub fn permutation(el: &EdgeList, strategy: ReorderStrategy) -> Vec<VertexId> {
+    let n = el.num_vertices;
+    match strategy {
+        ReorderStrategy::None => (0..n as u32).collect(),
+        ReorderStrategy::DegreeSort => {
+            let deg = el.out_degrees();
+            let mut order: Vec<VertexId> = (0..n as u32).collect();
+            // stable sort: ties keep original id order (deterministic)
+            order.sort_by_key(|&v| std::cmp::Reverse(deg[v as usize]));
+            invert_order(&order)
+        }
+        ReorderStrategy::DfsLocality => invert_order(&dfs_order(el)),
+        ReorderStrategy::BfsLocality => invert_order(&bfs_order(el)),
+        ReorderStrategy::HubCluster => {
+            let deg = el.out_degrees();
+            let avg = if n == 0 { 0.0 } else { el.num_edges() as f64 / n as f64 };
+            let mut hubs: Vec<VertexId> =
+                (0..n as u32).filter(|&v| deg[v as usize] as f64 > 2.0 * avg).collect();
+            hubs.sort_by_key(|&v| std::cmp::Reverse(deg[v as usize]));
+            let hubset: std::collections::HashSet<_> = hubs.iter().copied().collect();
+            let mut order = hubs;
+            order.extend((0..n as u32).filter(|v| !hubset.contains(v)));
+            invert_order(&order)
+        }
+    }
+}
+
+/// `order[new] = old` → `perm[old] = new`.
+fn invert_order(order: &[VertexId]) -> Vec<VertexId> {
+    let mut perm = vec![0 as VertexId; order.len()];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as VertexId;
+    }
+    perm
+}
+
+fn highest_degree_root(el: &EdgeList) -> VertexId {
+    let deg = el.out_degrees();
+    (0..el.num_vertices as u32).max_by_key(|&v| deg[v as usize]).unwrap_or(0)
+}
+
+fn adjacency(el: &EdgeList) -> Vec<Vec<VertexId>> {
+    let mut adj = vec![Vec::new(); el.num_vertices];
+    for e in &el.edges {
+        adj[e.src as usize].push(e.dst);
+    }
+    // deterministic neighbor order
+    for a in &mut adj {
+        a.sort_unstable();
+    }
+    adj
+}
+
+/// DFS pre-order from the hub; remaining vertices appended in id order.
+fn dfs_order(el: &EdgeList) -> Vec<VertexId> {
+    let n = el.num_vertices;
+    if n == 0 {
+        return Vec::new();
+    }
+    let adj = adjacency(el);
+    let mut seen = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut stack = vec![highest_degree_root(el)];
+    while let Some(v) = stack.pop() {
+        if seen[v as usize] {
+            continue;
+        }
+        seen[v as usize] = true;
+        order.push(v);
+        // push reversed so the smallest neighbor is visited first
+        for &u in adj[v as usize].iter().rev() {
+            if !seen[u as usize] {
+                stack.push(u);
+            }
+        }
+    }
+    for v in 0..n as u32 {
+        if !seen[v as usize] {
+            order.push(v);
+        }
+    }
+    order
+}
+
+/// BFS order from the hub; remaining vertices appended in id order.
+fn bfs_order(el: &EdgeList) -> Vec<VertexId> {
+    let n = el.num_vertices;
+    if n == 0 {
+        return Vec::new();
+    }
+    let adj = adjacency(el);
+    let mut seen = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut q = std::collections::VecDeque::new();
+    let root = highest_degree_root(el);
+    q.push_back(root);
+    seen[root as usize] = true;
+    while let Some(v) = q.pop_front() {
+        order.push(v);
+        for &u in &adj[v as usize] {
+            if !seen[u as usize] {
+                seen[u as usize] = true;
+                q.push_back(u);
+            }
+        }
+    }
+    for v in 0..n as u32 {
+        if !seen[v as usize] {
+            order.push(v);
+        }
+    }
+    order
+}
+
+/// Average |new_src - new_dst| gap across edges — the locality proxy the
+/// simulator's row-buffer model consumes (smaller = more sequential DRAM).
+pub fn avg_edge_gap(el: &EdgeList) -> f64 {
+    if el.num_edges() == 0 {
+        return 0.0;
+    }
+    let total: u64 = el.edges.iter().map(|e| (e.src as i64 - e.dst as i64).unsigned_abs()).sum();
+    total as f64 / el.num_edges() as f64
+}
+
+const ALL: [ReorderStrategy; 5] = [
+    ReorderStrategy::None,
+    ReorderStrategy::DegreeSort,
+    ReorderStrategy::DfsLocality,
+    ReorderStrategy::BfsLocality,
+    ReorderStrategy::HubCluster,
+];
+
+/// All strategies, for ablation sweeps.
+pub fn all_strategies() -> &'static [ReorderStrategy] {
+    &ALL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn is_permutation(perm: &[VertexId]) -> bool {
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p as usize >= perm.len() || seen[p as usize] {
+                return false;
+            }
+            seen[p as usize] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn every_strategy_yields_a_permutation() {
+        let g = generate::rmat(8, 1500, 0.57, 0.19, 0.19, 5);
+        for &s in all_strategies() {
+            let perm = permutation(&g, s);
+            assert!(is_permutation(&perm), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn reorder_preserves_degree_multiset() {
+        let g = generate::rmat(8, 1500, 0.57, 0.19, 0.19, 5);
+        let mut want = g.out_degrees();
+        want.sort_unstable();
+        for &s in all_strategies() {
+            let (rg, _) = reorder(&g, s);
+            let mut got = rg.out_degrees();
+            got.sort_unstable();
+            assert_eq!(got, want, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn degree_sort_puts_hub_first() {
+        let g = generate::star(64);
+        let perm = permutation(&g, ReorderStrategy::DegreeSort);
+        assert_eq!(perm[0], 0, "hub keeps id 0 after degree sort");
+    }
+
+    #[test]
+    fn bfs_locality_shrinks_edge_gap_on_shuffled_grid() {
+        // shuffle a grid, then check BFS reorder restores locality
+        let g = generate::grid2d(24, 24, 3);
+        let mut rng = crate::graph::SplitMix64::new(17);
+        let mut shuffle: Vec<VertexId> = (0..g.num_vertices as u32).collect();
+        for i in (1..shuffle.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            shuffle.swap(i, j);
+        }
+        let shuffled = g.permute(&shuffle);
+        let before = avg_edge_gap(&shuffled);
+        let (r, _) = reorder(&shuffled, ReorderStrategy::BfsLocality);
+        let after = avg_edge_gap(&r);
+        assert!(after < before, "bfs reorder: gap {before:.1} -> {after:.1}");
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let g = generate::chain(10);
+        let (r, perm) = reorder(&g, ReorderStrategy::None);
+        assert_eq!(perm, (0..10).collect::<Vec<_>>());
+        assert_eq!(r.sorted().edges.len(), g.edges.len());
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = crate::graph::edgelist::EdgeList::default();
+        for &s in all_strategies() {
+            let perm = permutation(&g, s);
+            assert!(perm.is_empty());
+        }
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!("dfs".parse::<ReorderStrategy>().unwrap(), ReorderStrategy::DfsLocality);
+        assert!("zzz".parse::<ReorderStrategy>().is_err());
+    }
+}

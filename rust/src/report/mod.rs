@@ -1,0 +1,56 @@
+//! Report layer: regenerates every table and figure of the paper's
+//! evaluation from the live system (DESIGN.md §5 per-experiment index).
+//! Survey tables (I–III) are static comparative data the paper compiled
+//! from the literature; measured tables (IV, V) and figures (1, 5) are
+//! computed by running the translators/simulator/engine.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig1_environments, fig5_devcost, Fig5Row};
+pub use tables::{table1, table2, table3, table4, table5, Table5Row};
+
+/// Render a list of rows as a fixed-width text table (CLI + bench output).
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String =
+        widths.iter().map(|w| format!("+{}", "-".repeat(w + 2))).collect::<String>() + "+";
+    let mut out = format!("{title}\n{sep}\n");
+    let render_row = |cells: &[String]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            line += &format!("| {:width$} ", c, width = widths[i]);
+        }
+        line + "|"
+    };
+    out += &render_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out += &format!("\n{sep}\n");
+    for row in rows {
+        out += &render_row(row);
+        out += "\n";
+    }
+    out + &sep + "\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let t = render_table(
+            "T",
+            &["a", "bbbb"],
+            &[vec!["xx".into(), "y".into()], vec!["1".into(), "22222".into()]],
+        );
+        assert!(t.contains("| xx | y     |"));
+        assert!(t.lines().all(|l| l.len() <= 80));
+    }
+}

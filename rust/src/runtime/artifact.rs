@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.tsv` + `*.hlo.txt` at build time) and the
+//! rust runtime (which compiles and executes them at startup). Python is
+//! never on the request path — this module only reads files.
+//!
+//! The manifest is tab-separated (one artifact per line) because the
+//! offline build has no JSON dependency; aot.py also writes a
+//! `manifest.json` twin for humans/tools.
+//!
+//! Line format (tab-separated):
+//! `algo bucket n m block use_pallas file sha256 inputs outputs`
+//! where inputs/outputs are `name:dtype:elements` triples joined by `;`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor in the artifact ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I32,
+    F32,
+}
+
+impl std::str::FromStr for DType {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "i32" => DType::I32,
+            "f32" => DType::F32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One input/output tensor spec (all artifact tensors are rank-1 or
+/// scalar; only the element count matters for literal transport).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub elements: usize,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.elements.max(1)
+    }
+
+    fn parse(field: &str) -> Result<Self> {
+        let parts: Vec<&str> = field.split(':').collect();
+        if parts.len() != 3 {
+            bail!("bad tensor spec {field:?} (want name:dtype:elems)");
+        }
+        Ok(TensorSpec {
+            name: parts[0].to_string(),
+            dtype: parts[1].parse()?,
+            elements: parts[2].parse().with_context(|| format!("bad elems in {field:?}"))?,
+        })
+    }
+}
+
+/// One AOT-compiled superstep artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub algo: String,
+    pub bucket: String,
+    /// Padded vertex count.
+    pub n: usize,
+    /// Padded edge count.
+    pub m: usize,
+    pub block: usize,
+    pub use_pallas: bool,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text (unit-testable without disk).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            // NB: do not trim the line itself — trailing empty fields
+            // (no inputs/outputs) are legitimate and tab-separated.
+            if line.trim().is_empty() || line.trim_start().starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.trim_end_matches('\r').split('\t').collect();
+            if f.len() != 10 {
+                bail!("manifest line {}: want 10 tab-separated fields, got {}", lineno + 1, f.len());
+            }
+            let parse_specs = |s: &str| -> Result<Vec<TensorSpec>> {
+                if s.is_empty() {
+                    return Ok(Vec::new());
+                }
+                s.split(';').map(TensorSpec::parse).collect()
+            };
+            artifacts.push(ArtifactMeta {
+                algo: f[0].to_string(),
+                bucket: f[1].to_string(),
+                n: f[2].parse().context("n")?,
+                m: f[3].parse().context("m")?,
+                block: f[4].parse().context("block")?,
+                use_pallas: f[5] == "1" || f[5] == "true",
+                file: f[6].to_string(),
+                sha256: f[7].to_string(),
+                inputs: parse_specs(f[8])?,
+                outputs: parse_specs(f[9])?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// The smallest bucket of `algo` fitting a graph with `n` vertices and
+    /// `m` edges.
+    pub fn select(&self, algo: &str, n: usize, m: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.algo == algo && a.n >= n && a.m >= m)
+            .min_by_key(|a| (a.m, a.n))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact bucket for algo {algo:?} with n={n}, m={m}; \
+                     available: {:?}",
+                    self.artifacts
+                        .iter()
+                        .filter(|a| a.algo == algo)
+                        .map(|a| (a.bucket.as_str(), a.n, a.m))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, dir: impl AsRef<Path>, meta: &ArtifactMeta) -> PathBuf {
+        dir.as_ref().join(&meta.file)
+    }
+}
+
+/// Locate the artifact directory: `$JGRAPH_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walking up from cwd until found).
+pub fn default_artifact_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("JGRAPH_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.tsv").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/manifest.tsv not found in any parent directory; \
+                 run `make artifacts` or set JGRAPH_ARTIFACTS"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let tsv = "\
+# comment line\n\
+bfs\ttiny\t256\t4096\t4096\t1\tbfs_tiny.hlo.txt\txx\tlevels:i32:256;num_edges:i32:1\tnew_levels:i32:256;frontier_size:i32:0\n\
+bfs\tsmall\t1024\t32768\t4096\t1\tbfs_small.hlo.txt\tyy\t\t\n";
+        Manifest::parse(tsv).unwrap()
+    }
+
+    #[test]
+    fn parse_fields() {
+        let m = fake_manifest();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts[0];
+        assert_eq!(a.algo, "bfs");
+        assert_eq!(a.n, 256);
+        assert!(a.use_pallas);
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].name, "levels");
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(a.outputs[1].elements(), 1, "scalar reads back 1 element");
+    }
+
+    #[test]
+    fn select_smallest_fitting_bucket() {
+        let m = fake_manifest();
+        assert_eq!(m.select("bfs", 100, 1000).unwrap().bucket, "tiny");
+        assert_eq!(m.select("bfs", 256, 4096).unwrap().bucket, "tiny");
+        assert_eq!(m.select("bfs", 300, 1000).unwrap().bucket, "small");
+        assert_eq!(m.select("bfs", 100, 10_000).unwrap().bucket, "small");
+    }
+
+    #[test]
+    fn select_fails_when_too_big_or_unknown() {
+        let m = fake_manifest();
+        assert!(m.select("bfs", 10_000, 10).is_err());
+        assert!(m.select("dfs", 10, 10).is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("too\tfew\tfields\n").is_err());
+        assert!(Manifest::parse("").is_err());
+        let bad_dtype = "bfs\ttiny\t1\t1\t1\t1\tf\tx\tv:i64:4\t\n";
+        assert!(Manifest::parse(bad_dtype).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // soft test: if the workspace artifacts exist, parse them
+        if let Ok(dir) = default_artifact_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            assert!(m.select("bfs", 1005, 25571).is_ok(), "email-Eu-core bucket");
+            assert!(m.select("bfs", 82168, 948464).is_ok(), "slashdot bucket");
+        }
+    }
+}

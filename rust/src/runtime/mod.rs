@@ -1,0 +1,16 @@
+//! The PJRT runtime: loads the HLO-text artifacts that `make artifacts`
+//! produced from the JAX/Pallas layers and executes them from rust. This
+//! is the only place the three layers meet at run time; Python is never
+//! on the request path.
+//!
+//! Flow (per /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` (once, at load)
+//! → `execute` (the hot path).
+
+pub mod artifact;
+pub mod client;
+pub mod registry;
+
+pub use artifact::{default_artifact_dir, ArtifactMeta, DType, Manifest, TensorSpec};
+pub use client::{Buffer, Executable, PjrtRuntime};
+pub use registry::KernelRegistry;

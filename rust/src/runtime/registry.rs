@@ -1,0 +1,69 @@
+//! Executable registry: (algorithm, bucket) → compiled [`Executable`],
+//! compiled lazily on first use and cached for the rest of the process.
+//! The paper's per-model-variant "one compiled executable" rule.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::artifact::{default_artifact_dir, ArtifactMeta, Manifest};
+use super::client::{Executable, PjrtRuntime};
+
+/// Thread-safe registry over one PJRT client.
+pub struct KernelRegistry {
+    runtime: PjrtRuntime,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
+}
+
+impl KernelRegistry {
+    /// Open the default artifact directory (see
+    /// [`default_artifact_dir`]) on the CPU PJRT client.
+    pub fn open_default() -> Result<Self> {
+        let dir = default_artifact_dir()?;
+        Self::open(dir)
+    }
+
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        Ok(Self { runtime: PjrtRuntime::cpu()?, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Get (compile-on-first-use) the smallest executable of `algo`
+    /// fitting a graph with `n` vertices / `m` edges.
+    pub fn for_graph(&self, algo: &str, n: usize, m: usize) -> Result<Arc<Executable>> {
+        let meta = self.manifest.select(algo, n, m)?.clone();
+        self.load_cached(&meta)
+    }
+
+    /// Get a specific bucket (used by benches to pin sizes).
+    pub fn for_bucket(&self, algo: &str, bucket: &str) -> Result<Arc<Executable>> {
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.algo == algo && a.bucket == bucket)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {algo}/{bucket}"))?
+            .clone();
+        self.load_cached(&meta)
+    }
+
+    fn load_cached(&self, meta: &ArtifactMeta) -> Result<Arc<Executable>> {
+        let key = (meta.algo.clone(), meta.bucket.clone());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(&self.dir, meta);
+        let exe = Arc::new(self.runtime.load(&path, meta)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}

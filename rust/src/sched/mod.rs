@@ -1,0 +1,37 @@
+//! Runtime scheduler (paper §V-C2): "the parallel pipelines scheduling and
+//! processing elements (PEs) scheduling, aiming at parallelism management
+//! for the whole project... We can specify a specific number of pipelines
+//! and PE for the program to achieve flexible parallelism."
+
+pub mod scheduler;
+
+pub use scheduler::{auto_plan, RuntimeScheduler, SchedulerEvent};
+
+
+/// The two parallelism knobs the DSL exposes (`Set_Pipeline`, `Set_PE`).
+/// The paper's Algorithm 1 uses `Pipeline = 8, PE = 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismPlan {
+    /// Parallel pipeline lanes inside one PE (edges/cycle at II=1).
+    pub pipelines: u32,
+    /// Processing elements (replicated datapaths over graph partitions).
+    pub pes: u32,
+}
+
+impl Default for ParallelismPlan {
+    fn default() -> Self {
+        // the paper's evaluation setting
+        ParallelismPlan { pipelines: 8, pes: 1 }
+    }
+}
+
+impl ParallelismPlan {
+    pub fn new(pipelines: u32, pes: u32) -> Self {
+        Self { pipelines, pes }
+    }
+
+    /// Total lane count across PEs.
+    pub fn total_lanes(&self) -> u32 {
+        self.pipelines * self.pes
+    }
+}

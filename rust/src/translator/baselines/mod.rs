@@ -1,0 +1,8 @@
+//! Baseline translators — the Table V comparators, reproduced *in spirit*:
+//! we implement the structural inefficiencies of the general-purpose flows
+//! (register-per-variable lowering, per-iteration ALU replication,
+//! conservative pipelining) and actually run them, rather than shipping the
+//! vendors' binaries (DESIGN.md §2 substitution table).
+
+pub mod spatial;
+pub mod vivado;

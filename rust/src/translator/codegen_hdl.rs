@@ -1,0 +1,140 @@
+//! HDL code generation. The JGraph emitter produces the *compact*
+//! module-instantiation style the paper credits for its small code size
+//! (Table V: 35 lines for BFS vs 54 for Vivado HLS and 128 for Spatial):
+//! pre-optimized modules are instantiated and wired, lanes come from a
+//! `generate` loop, and no per-variable registers are spelled out.
+//!
+//! The baselines ([`super::baselines`]) emit the same design the way their
+//! flows would: flattened loop-pipelined RTL (Vivado-HLS-like) and
+//! fully-unrolled register-per-variable RTL (Spatial-like).
+
+use crate::dsl::program::{FrontierPolicy, GasProgram, ReduceOp, StateType};
+use crate::sched::ParallelismPlan;
+
+use super::lower::alu_chain;
+
+/// Emit compact Verilog for a lowered design (the light-weight flow).
+pub fn emit_jgraph(program: &GasProgram, plan: &ParallelismPlan) -> String {
+    let mut s = String::new();
+    let name = sanitize(&program.name);
+    let dtype = match program.state {
+        StateType::I32 => "32'sd",
+        StateType::F32 => "32'f",
+    };
+    let acc = match program.reduce {
+        ReduceOp::Min => "MIN",
+        ReduceOp::Max => "MAX",
+        ReduceOp::Sum => "SUM",
+    };
+    let chain = alu_chain(&program.apply);
+
+    s += &format!("// jgraph-generated design: {} (apply = {})\n", program.name, program.apply.render());
+    s += &format!("module {name}_top #(\n");
+    s += &format!("  parameter LANES = {},\n", plan.pipelines);
+    s += &format!("  parameter PES = {},\n", plan.pes);
+    s += &format!("  parameter ACC_OP = \"{acc}\"\n");
+    s += ") (\n  input clk, input rst,\n";
+    s += "  input  [511:0] ddr_rd_data, output [63:0] ddr_rd_addr,\n";
+    s += "  output [511:0] ddr_wr_data, output [63:0] ddr_wr_addr,\n";
+    s += "  input  [31:0] csr_cmd, output [31:0] csr_status\n);\n";
+    s += "  wire [511:0] edge_stream [0:PES*LANES-1];\n";
+    s += &format!("  wire [31:0] msg [0:PES*LANES-1]; // {dtype} messages\n");
+    s += "  pcie_dma      u_dma   (.clk(clk), .rst(rst), .csr(csr_cmd));\n";
+    s += "  mem_ctrl #(4) u_mem   (.clk(clk), .rd_addr(ddr_rd_addr), .rd_data(ddr_rd_data));\n";
+    s += "  vertex_bram   u_vbram (.clk(clk), .wr(wb_bus), .rd(vload_bus)); // state in URAM\n";
+    s += "  vertex_loader u_vload (.clk(clk), .bram(vload_bus));\n";
+    s += "  offset_fetch  u_off   (.clk(clk), .mem(u_mem.port0));\n";
+    if program.frontier == FrontierPolicy::Active {
+        s += "  frontier_q    u_fq    (.clk(clk), .push(wb_bus), .pop(u_off.row_req));\n";
+    }
+    s += "  genvar i;\n  generate for (i = 0; i < PES*LANES; i = i + 1) begin : lane\n";
+    s += &format!(
+        "    edge_fetch #(.W({})) f (.clk(clk), .off(u_off.rows), .mem(u_mem.port1), .out(edge_stream[i]));\n",
+        program.uses_weights as u32
+    );
+    s += "    gather       g (.clk(clk), .edges(edge_stream[i]), .vals(u_vload.vals));\n";
+    for (k, op) in chain.iter().enumerate() {
+        s += &format!("    apply_alu #(.OP(\"{op}\")) a{k} (.clk(clk), .in(g.out), .out(msg[i]));\n");
+    }
+    if chain.is_empty() {
+        s += "    assign msg[i] = g.out; // pass-through apply\n";
+    }
+    s += "    reduce_unit #(.OP(ACC_OP), .BANKS(16)) r (.clk(clk), .in(msg[i]), .wb(wb_bus));\n";
+    s += "    vertex_wr    w (.clk(clk), .in(r.out), .bram(wb_bus));\n";
+    s += "  end endgenerate\n";
+    s += "  assign csr_status = {u_mem.busy, 31'd0};\nendmodule\n";
+    s
+}
+
+/// Identifier-safe module name.
+pub fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Count non-empty, non-comment-only code lines — the Table V metric.
+pub fn code_lines(src: &str) -> usize {
+    src.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with("//"))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+
+    #[test]
+    fn bfs_hdl_is_compact() {
+        let hdl = emit_jgraph(&algorithms::bfs(), &ParallelismPlan::default());
+        let lines = code_lines(&hdl);
+        // Table V: FAgraph generates 35 lines for BFS. Allow the
+        // reproduction a small band around it.
+        assert!(
+            (25..=45).contains(&lines),
+            "expected ~35 HDL lines, got {lines}:\n{hdl}"
+        );
+        assert!(hdl.contains("frontier_q"), "BFS needs the frontier queue");
+        assert!(hdl.contains("vertex_bram"));
+    }
+
+    #[test]
+    fn lane_count_is_parameter_not_unrolled() {
+        // compactness comes from the generate loop: 8 lanes and 16 lanes
+        // must produce identical line counts
+        let a = emit_jgraph(&algorithms::bfs(), &ParallelismPlan::new(8, 1));
+        let b = emit_jgraph(&algorithms::bfs(), &ParallelismPlan::new(16, 2));
+        assert_eq!(code_lines(&a), code_lines(&b));
+        assert!(b.contains("parameter LANES = 16"));
+        assert!(b.contains("parameter PES = 2"));
+    }
+
+    #[test]
+    fn apply_chain_emits_one_alu_per_op() {
+        let hdl = emit_jgraph(&algorithms::sssp(), &ParallelismPlan::default());
+        assert_eq!(hdl.matches("apply_alu").count(), 1); // src + w
+        assert!(hdl.contains("OP(\"add\")"));
+        let pr = emit_jgraph(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::default());
+        assert!(pr.contains("pass-through apply")); // bare src gather
+    }
+
+    #[test]
+    fn reduce_op_parameterized() {
+        let hdl = emit_jgraph(&algorithms::wcc(), &ParallelismPlan::default());
+        assert!(hdl.contains("ACC_OP = \"MIN\""));
+        let hdl = emit_jgraph(&algorithms::spmv(), &ParallelismPlan::default());
+        assert!(hdl.contains("ACC_OP = \"SUM\""));
+    }
+
+    #[test]
+    fn sanitize_makes_identifiers() {
+        assert_eq!(sanitize("pagerank(d=0.85)"), "pagerank_d_0_85_");
+    }
+
+    #[test]
+    fn code_lines_skips_blank_and_comments() {
+        assert_eq!(code_lines("// c\n\n  a;\nb; // t\n"), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Lowering: [`GasProgram`] → [`ModuleGraph`]. The core of the
+//! light-weight translator (paper §V-B): each DSL function maps onto a
+//! pre-characterized hardware module; the Apply expression becomes a chain
+//! of ALU stages; scheduling policies select the frontier/cache modules.
+//! No syntax analysis, no design-space exploration — selection and wiring
+//! only.
+
+use crate::dsl::apply::ApplyExpr;
+use crate::dsl::ops::HwModule;
+use crate::dsl::program::{FrontierPolicy, GasProgram, ReduceOp, StateType};
+use crate::sched::ParallelismPlan;
+
+use super::modules::ModuleGraph;
+
+/// Data bus width through the edge pipeline (vertex id + value + weight).
+const EDGE_BUS: u32 = 96;
+const VALUE_BUS: u32 = 32;
+
+/// Lower one GAS program into the accelerator module graph for `plan`.
+/// Layout (paper Fig. 4): shared infrastructure (PCIe DMA, memory
+/// controller, control regs, vertex BRAM) + `pipelines × pes` edge lanes,
+/// each `EdgeFetcher → GatherUnit → ApplyAlu* → ReduceUnit →
+/// VertexWriter`, with an optional FrontierQueue feeding the fetchers.
+pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
+    let mut g = ModuleGraph::default();
+
+    // --- shared infrastructure
+    let dma = g.add(HwModule::PcieDma, "pcie_dma", vec![]);
+    let memc = g.add(
+        HwModule::MemController,
+        "mem_ctrl",
+        vec![("channels".into(), "4".into())],
+    );
+    let ctrl = g.add(
+        HwModule::ControlRegs,
+        "ctrl_regs",
+        vec![
+            ("pipelines".into(), plan.pipelines.to_string()),
+            ("pes".into(), plan.pes.to_string()),
+        ],
+    );
+    g.connect(dma, memc, 512);
+    g.connect(ctrl, memc, 32);
+
+    // vertex state resident on chip (the paper's BRAM preload)
+    let vcache = g.add(
+        HwModule::BramCache,
+        "vertex_bram",
+        vec![(
+            "elem".into(),
+            match program.state {
+                StateType::I32 => "i32".into(),
+                StateType::F32 => "f32".into(),
+            },
+        )],
+    );
+    g.connect(memc, vcache, 512);
+
+    let vloader = g.add(HwModule::VertexLoader, "vertex_loader", vec![]);
+    g.connect(vcache, vloader, VALUE_BUS);
+
+    // frontier queue only for active-frontier programs (BFS)
+    let frontier = if program.frontier == FrontierPolicy::Active {
+        let q = g.add(HwModule::FrontierQueue, "frontier_q", vec![]);
+        g.connect(ctrl, q, 32);
+        Some(q)
+    } else {
+        None
+    };
+
+    // offset fetcher resolves Edge_offset rows for the lanes
+    let off = g.add(HwModule::OffsetFetcher, "offset_fetch", vec![]);
+    g.connect(memc, off, 64);
+    if let Some(q) = frontier {
+        g.connect(q, off, 32);
+    }
+
+    // --- replicated edge lanes
+    for pe in 0..plan.pes {
+        for lane in 0..plan.pipelines {
+            let tag = format!("pe{pe}_l{lane}");
+            let fetch = g.add(
+                HwModule::EdgeFetcher,
+                format!("edge_fetch_{tag}"),
+                vec![("weights".into(), program.uses_weights.to_string())],
+            );
+            g.connect(off, fetch, 64);
+            g.connect(memc, fetch, 512);
+
+            let gather = g.add(HwModule::GatherUnit, format!("gather_{tag}"), vec![]);
+            g.connect(fetch, gather, EDGE_BUS);
+            g.connect(vloader, gather, VALUE_BUS);
+
+            // Apply expression → ALU chain (one module per operation;
+            // terms are wiring, not logic)
+            let mut prev = gather;
+            for (i, opname) in alu_chain(&program.apply).into_iter().enumerate() {
+                let alu = g.add(
+                    HwModule::ApplyAlu,
+                    format!("apply_{tag}_{i}"),
+                    vec![("op".into(), opname)],
+                );
+                g.connect(prev, alu, VALUE_BUS);
+                prev = alu;
+            }
+
+            let reduce = g.add(
+                HwModule::ReduceUnit,
+                format!("reduce_{tag}"),
+                vec![(
+                    "acc".into(),
+                    match program.reduce {
+                        ReduceOp::Min => "min".into(),
+                        ReduceOp::Max => "max".into(),
+                        ReduceOp::Sum => "sum".into(),
+                    },
+                )],
+            );
+            g.connect(prev, reduce, VALUE_BUS);
+
+            // Writeback closes the superstep loop *through the BRAM state*,
+            // which is sequential (next superstep), not a combinational
+            // wire — so the module graph stays a feed-forward pipeline.
+            let writer = g.add(
+                HwModule::VertexWriter,
+                format!("vertex_wr_{tag}"),
+                vec![("feedback".into(), "vertex_bram,frontier_q".into())],
+            );
+            g.connect(reduce, writer, VALUE_BUS);
+        }
+    }
+    g
+}
+
+/// Flatten an apply expression into the ALU op chain (post-order), the
+/// order the pipelined ALUs execute in.
+pub fn alu_chain(expr: &ApplyExpr) -> Vec<String> {
+    let mut ops = Vec::new();
+    walk(expr, &mut ops);
+    ops
+}
+
+fn walk(e: &ApplyExpr, out: &mut Vec<String>) {
+    match e {
+        ApplyExpr::Term(_) => {}
+        ApplyExpr::Unary(op, a) => {
+            walk(a, out);
+            out.push(format!("{op:?}").to_lowercase());
+        }
+        ApplyExpr::Binary(op, a, b) => {
+            walk(a, out);
+            walk(b, out);
+            out.push(format!("{op:?}").to_lowercase());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+
+    #[test]
+    fn bfs_lowering_structure() {
+        let p = algorithms::bfs();
+        let plan = ParallelismPlan::new(2, 1);
+        let g = lower(&p, &plan);
+        g.validate().unwrap();
+        assert_eq!(g.count(HwModule::EdgeFetcher), 2);
+        assert_eq!(g.count(HwModule::FrontierQueue), 1); // active frontier
+        assert_eq!(g.count(HwModule::BramCache), 1); // shared vertex state
+        assert_eq!(g.count(HwModule::PcieDma), 1);
+        // BFS apply = iter+1 -> one ALU per lane
+        assert_eq!(g.count(HwModule::ApplyAlu), 2);
+    }
+
+    #[test]
+    fn pagerank_has_no_frontier_queue() {
+        let g = lower(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::new(4, 1));
+        assert_eq!(g.count(HwModule::FrontierQueue), 0);
+        assert_eq!(g.count(HwModule::ReduceUnit), 4);
+    }
+
+    #[test]
+    fn lanes_replicate_with_pes() {
+        let g = lower(&algorithms::sssp(), &ParallelismPlan::new(4, 2));
+        assert_eq!(g.count(HwModule::EdgeFetcher), 8);
+        assert_eq!(g.count(HwModule::VertexWriter), 8);
+        // shared infra not replicated
+        assert_eq!(g.count(HwModule::MemController), 1);
+    }
+
+    #[test]
+    fn alu_chain_matches_expression() {
+        let p = algorithms::sssp(); // src + w -> ["add"]
+        assert_eq!(alu_chain(&p.apply), vec!["add"]);
+        let spmv = algorithms::spmv(); // src * w -> ["mul"]
+        assert_eq!(alu_chain(&spmv.apply), vec!["mul"]);
+    }
+
+    #[test]
+    fn module_graphs_are_acyclic_for_all_algorithms() {
+        for p in algorithms::all() {
+            let g = lower(&p, &ParallelismPlan::default());
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            assert!(g.pipeline_depth() > 0);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! The hardware-module library the light-weight translator maps DSL
+//! functions onto (paper §V-A, Fig. 4). Each module has fixed per-instance
+//! resource costs and pipeline latency; the translator's job is *selection
+//! and wiring*, not synthesis — that is exactly the "light-weight" trade
+//! the paper makes (trade general compiling for a fixed, optimized module
+//! set).
+
+
+pub use crate::dsl::ops::HwModule;
+
+/// One instantiated module in a design.
+#[derive(Debug, Clone)]
+pub struct ModuleInstance {
+    pub id: usize,
+    pub kind: HwModule,
+    /// Instance name in the generated HDL.
+    pub name: String,
+    /// Free-form parameter annotations (lane count, operator, width...).
+    pub params: Vec<(String, String)>,
+}
+
+/// A directed wire between module ports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Wire {
+    pub from: usize,
+    pub to: usize,
+    /// Bus width in bits.
+    pub width: u32,
+}
+
+/// The dataflow graph of a translated design: the paper's "execution
+/// module on accelerator".
+#[derive(Debug, Clone, Default)]
+pub struct ModuleGraph {
+    pub instances: Vec<ModuleInstance>,
+    pub wires: Vec<Wire>,
+}
+
+impl ModuleGraph {
+    /// Add an instance; returns its id.
+    pub fn add(
+        &mut self,
+        kind: HwModule,
+        name: impl Into<String>,
+        params: Vec<(String, String)>,
+    ) -> usize {
+        let id = self.instances.len();
+        self.instances.push(ModuleInstance { id, kind, name: name.into(), params });
+        id
+    }
+
+    /// Wire `from` → `to`.
+    pub fn connect(&mut self, from: usize, to: usize, width: u32) {
+        debug_assert!(from < self.instances.len() && to < self.instances.len());
+        self.wires.push(Wire { from, to, width });
+    }
+
+    pub fn count(&self, kind: HwModule) -> usize {
+        self.instances.iter().filter(|m| m.kind == kind).count()
+    }
+
+    /// Pipeline depth = longest path through the wire DAG (stage latencies
+    /// summed). The generated design is a feed-forward pipeline, so the
+    /// graph is acyclic by construction; cycles would mean a translator
+    /// bug and are reported as an error by `validate()`.
+    pub fn pipeline_depth(&self) -> u32 {
+        let n = self.instances.len();
+        let mut depth = vec![0u32; n];
+        // topological relaxation over wires (ids are created in dataflow
+        // order by the lowerer, so a single forward pass suffices; we
+        // iterate to fixpoint to stay correct for arbitrary orders).
+        let mut changed = true;
+        let mut rounds = 0;
+        while changed && rounds <= n {
+            changed = false;
+            rounds += 1;
+            for w in &self.wires {
+                let cand = depth[w.from] + latency(self.instances[w.from].kind);
+                if cand > depth[w.to] {
+                    depth[w.to] = cand;
+                    changed = true;
+                }
+            }
+        }
+        depth
+            .iter()
+            .zip(&self.instances)
+            .map(|(d, m)| d + latency(m.kind))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural checks: wires reference real instances; no cycles
+    /// (pipeline must drain); at most one frontier queue per lane group.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for w in &self.wires {
+            if w.from >= self.instances.len() || w.to >= self.instances.len() {
+                anyhow::bail!("wire references missing module instance");
+            }
+        }
+        if self.has_cycle() {
+            anyhow::bail!("module graph has a combinational cycle");
+        }
+        Ok(())
+    }
+
+    fn has_cycle(&self) -> bool {
+        let n = self.instances.len();
+        let mut indeg = vec![0usize; n];
+        for w in &self.wires {
+            indeg[w.to] += 1;
+        }
+        let mut q: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = q.pop() {
+            seen += 1;
+            for w in self.wires.iter().filter(|w| w.from == u) {
+                indeg[w.to] -= 1;
+                if indeg[w.to] == 0 {
+                    q.push(w.to);
+                }
+            }
+        }
+        seen != n
+    }
+}
+
+/// Per-instance resource cost of a module (Alveo-class estimates: LUTs,
+/// flip-flops, BRAM kilobits, URAM blocks, DSP slices). These numbers are
+/// the translator's "datasheet" — they size Table V's resource column and
+/// the synthesis-time model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModuleCost {
+    pub lut: u32,
+    pub ff: u32,
+    pub bram_kb: u32,
+    pub uram: u32,
+    pub dsp: u32,
+}
+
+/// Cost table. Single source of truth for resource estimation
+/// ([`super::resource`]).
+pub fn cost(kind: HwModule) -> ModuleCost {
+    match kind {
+        HwModule::VertexLoader => ModuleCost { lut: 1_800, ff: 2_400, bram_kb: 36, uram: 0, dsp: 0 },
+        HwModule::VertexWriter => ModuleCost { lut: 1_500, ff: 2_000, bram_kb: 18, uram: 0, dsp: 0 },
+        HwModule::EdgeFetcher => ModuleCost { lut: 2_200, ff: 3_000, bram_kb: 72, uram: 0, dsp: 0 },
+        HwModule::OffsetFetcher => ModuleCost { lut: 1_200, ff: 1_500, bram_kb: 36, uram: 0, dsp: 0 },
+        HwModule::GatherUnit => ModuleCost { lut: 2_500, ff: 3_200, bram_kb: 36, uram: 0, dsp: 0 },
+        HwModule::ApplyAlu => ModuleCost { lut: 900, ff: 1_100, bram_kb: 0, uram: 0, dsp: 3 },
+        HwModule::ReduceUnit => ModuleCost { lut: 3_000, ff: 3_600, bram_kb: 144, uram: 0, dsp: 2 },
+        HwModule::ScatterUnit => ModuleCost { lut: 2_000, ff: 2_600, bram_kb: 36, uram: 0, dsp: 0 },
+        HwModule::FrontierQueue => ModuleCost { lut: 1_600, ff: 2_200, bram_kb: 72, uram: 0, dsp: 0 },
+        HwModule::BramCache => ModuleCost { lut: 2_800, ff: 3_000, bram_kb: 0, uram: 16, dsp: 0 },
+        HwModule::MemController => ModuleCost { lut: 9_000, ff: 12_000, bram_kb: 144, uram: 0, dsp: 0 },
+        HwModule::PcieDma => ModuleCost { lut: 12_000, ff: 16_000, bram_kb: 288, uram: 0, dsp: 0 },
+        HwModule::ControlRegs => ModuleCost { lut: 800, ff: 1_200, bram_kb: 0, uram: 0, dsp: 0 },
+        HwModule::HostOnly => ModuleCost::default(),
+    }
+}
+
+/// Pipeline latency (clock cycles a datum spends in the module).
+pub fn latency(kind: HwModule) -> u32 {
+    match kind {
+        HwModule::VertexLoader => 2,
+        HwModule::VertexWriter => 1,
+        HwModule::EdgeFetcher => 4, // DDR burst buffer in front
+        HwModule::OffsetFetcher => 2,
+        HwModule::GatherUnit => 2,
+        HwModule::ApplyAlu => 1,
+        HwModule::ReduceUnit => 3, // read-modify-write on banked BRAM
+        HwModule::ScatterUnit => 2,
+        HwModule::FrontierQueue => 1,
+        HwModule::BramCache => 1,
+        HwModule::MemController => 8,
+        HwModule::PcieDma => 16,
+        HwModule::ControlRegs => 1,
+        HwModule::HostOnly => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_connect() {
+        let mut g = ModuleGraph::default();
+        let a = g.add(HwModule::EdgeFetcher, "fetch", vec![]);
+        let b = g.add(HwModule::ApplyAlu, "alu", vec![]);
+        g.connect(a, b, 64);
+        assert_eq!(g.instances.len(), 2);
+        assert_eq!(g.count(HwModule::ApplyAlu), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn pipeline_depth_is_longest_path() {
+        let mut g = ModuleGraph::default();
+        let a = g.add(HwModule::EdgeFetcher, "f", vec![]); // lat 4
+        let b = g.add(HwModule::GatherUnit, "g", vec![]); // lat 2
+        let c = g.add(HwModule::ApplyAlu, "alu", vec![]); // lat 1
+        let d = g.add(HwModule::ReduceUnit, "r", vec![]); // lat 3
+        g.connect(a, b, 64);
+        g.connect(b, c, 32);
+        g.connect(c, d, 32);
+        // short parallel branch
+        g.connect(a, d, 32);
+        assert_eq!(g.pipeline_depth(), 4 + 2 + 1 + 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = ModuleGraph::default();
+        let a = g.add(HwModule::ApplyAlu, "a", vec![]);
+        let b = g.add(HwModule::ApplyAlu, "b", vec![]);
+        g.connect(a, b, 32);
+        g.connect(b, a, 32);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn costs_nonzero_for_datapath_modules() {
+        for kind in [
+            HwModule::VertexLoader,
+            HwModule::EdgeFetcher,
+            HwModule::ReduceUnit,
+            HwModule::MemController,
+        ] {
+            assert!(cost(kind).lut > 0, "{kind:?}");
+            assert!(latency(kind) > 0, "{kind:?}");
+        }
+        assert_eq!(cost(HwModule::HostOnly), ModuleCost::default());
+    }
+}

@@ -1,0 +1,202 @@
+//! Integration: full executor flow (software functional path) across
+//! algorithms, graphs, preprocessing options, and translator flows.
+
+use jgraph::dsl::algorithms;
+use jgraph::engine::{Executor, ExecutorConfig, FunctionalPath};
+use jgraph::graph::generate;
+use jgraph::prep::reorder::ReorderStrategy;
+use jgraph::translator::{Translator, TranslatorKind};
+
+fn config(name: &str) -> ExecutorConfig {
+    ExecutorConfig { use_xla: false, graph_name: name.into(), ..Default::default() }
+}
+
+#[test]
+fn all_algorithms_run_on_power_law_graph() {
+    let g = generate::rmat(10, 20_000, 0.57, 0.19, 0.19, 11);
+    for program in algorithms::all() {
+        let design = Translator::jgraph().translate(&program).unwrap();
+        let mut ex = Executor::new(config("rmat10"));
+        let r = ex.run(&program, &design, &g).unwrap();
+        assert!(r.supersteps > 0, "{}", program.name);
+        assert!(r.simulated_mteps > 0.0);
+        assert_eq!(r.functional_path, FunctionalPath::Software);
+    }
+}
+
+#[test]
+fn bfs_correct_against_handrolled_reference() {
+    let g = generate::grid2d(20, 20, 3);
+    let program = algorithms::bfs();
+    let csr = jgraph::graph::csr::Csr::from_edgelist(&g);
+    let result = jgraph::engine::gas::run(&program, &csr, 0, |_| {}).unwrap();
+    // grid BFS level of (x, y) from (0,0) = x + y (all weights traversed
+    // as hops)
+    for y in 0..20 {
+        for x in 0..20 {
+            let v = y * 20 + x;
+            assert_eq!(result.values[v] as usize, x + y, "vertex ({x},{y})");
+        }
+    }
+}
+
+#[test]
+fn translator_flow_changes_timing_not_values() {
+    let g = generate::rmat(9, 6_000, 0.57, 0.19, 0.19, 5);
+    let program = algorithms::wcc();
+    let mut mteps = Vec::new();
+    for kind in TranslatorKind::all() {
+        let design = Translator::of_kind(kind).translate(&program).unwrap();
+        let mut ex = Executor::new(config("rmat9"));
+        let r = ex.run(&program, &design, &g).unwrap();
+        mteps.push((kind, r.simulated_mteps, r.supersteps));
+    }
+    // all flows agree on the algorithm (supersteps identical)...
+    assert!(mteps.windows(2).all(|w| w[0].2 == w[1].2));
+    // ...but not on performance
+    let j = mteps.iter().find(|m| m.0 == TranslatorKind::JGraph).unwrap().1;
+    let s = mteps.iter().find(|m| m.0 == TranslatorKind::Spatial).unwrap().1;
+    assert!(j > 3.0 * s);
+}
+
+#[test]
+fn reorder_improves_row_start_cycles_on_shuffled_grid() {
+    // shuffle a grid; BFS-locality reorder must reduce row-start stalls
+    let grid = generate::grid2d(48, 48, 1);
+    let mut rng = jgraph::graph::SplitMix64::new(123);
+    let mut perm: Vec<u32> = (0..grid.num_vertices as u32).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        perm.swap(i, j);
+    }
+    let shuffled = grid.permute(&perm);
+    let program = algorithms::sssp();
+    let design = Translator::jgraph().translate(&program).unwrap();
+
+    let run = |reorder| {
+        let mut ex = Executor::new(ExecutorConfig {
+            use_xla: false,
+            reorder,
+            graph_name: "grid".into(),
+            ..Default::default()
+        });
+        ex.run(&program, &design, &shuffled).unwrap()
+    };
+    let base = run(None);
+    let reordered = run(Some(ReorderStrategy::BfsLocality));
+    assert!(
+        reordered.sim.cycles.row_start < base.sim.cycles.row_start,
+        "reorder {} !< base {}",
+        reordered.sim.cycles.row_start,
+        base.sim.cycles.row_start
+    );
+}
+
+#[test]
+fn parallelism_scales_simulated_throughput() {
+    let g = generate::rmat(11, 60_000, 0.57, 0.19, 0.19, 9);
+    let program = algorithms::pagerank(0.85, 1e-4);
+    let mut last = 0.0;
+    for pipes in [1u32, 4, 16] {
+        let design = Translator::jgraph()
+            .with_plan(jgraph::sched::ParallelismPlan::new(pipes, 1))
+            .translate(&program)
+            .unwrap();
+        let mut ex = Executor::new(config("rmat11"));
+        let r = ex.run(&program, &design, &g).unwrap();
+        assert!(
+            r.simulated_mteps > last,
+            "{} pipes: {} !> {}",
+            pipes,
+            r.simulated_mteps,
+            last
+        );
+        last = r.simulated_mteps;
+    }
+}
+
+#[test]
+fn headline_shape_bfs_email_vs_slashdot() {
+    // the larger graph must amortize launches better (paper: 314 -> 409)
+    let program = algorithms::bfs();
+    let design = Translator::jgraph().translate(&program).unwrap();
+    let small = generate::email_eu_core_like(42);
+    let mut ex = Executor::new(config("email"));
+    let r_small = ex.run(&program, &design, &small).unwrap();
+    assert!(
+        r_small.simulated_mteps > 150.0 && r_small.simulated_mteps < 900.0,
+        "email BFS: {} MTEPS out of plausible band",
+        r_small.simulated_mteps
+    );
+}
+
+#[test]
+fn graph_store_feeds_the_full_pipeline() {
+    // paper §IV-C1: "we can read data from database directly" — store ->
+    // FIFO bridge -> translate -> run
+    use jgraph::graph::store::GraphStore;
+    let g = generate::rmat(8, 2_000, 0.57, 0.19, 0.19, 21);
+    let store = GraphStore::from_edgelist(&g, "Account", "TXN");
+    let dir = std::env::temp_dir().join("jgraph_store_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let db = dir.join("accounts.db");
+    store.save(&db).unwrap();
+
+    let loaded = GraphStore::load(&db).unwrap();
+    let el = loaded.to_edgelist(Some("TXN"));
+    assert_eq!(el.num_edges(), g.num_edges());
+    let program = algorithms::wcc();
+    let design = Translator::jgraph().translate(&program).unwrap();
+    let mut ex = Executor::new(config("store"));
+    let r = ex.run(&program, &design, &el).unwrap();
+    assert!(r.supersteps > 0 && r.simulated_mteps > 0.0);
+}
+
+#[test]
+fn trace_csv_written_and_consistent() {
+    let g = generate::rmat(9, 4_000, 0.57, 0.19, 0.19, 33);
+    let program = algorithms::bfs();
+    let design = Translator::jgraph().translate(&program).unwrap();
+    let path = std::env::temp_dir().join("jgraph_e2e_trace.csv");
+    let mut ex = Executor::new(ExecutorConfig {
+        use_xla: false,
+        graph_name: "rmat9".into(),
+        trace_path: Some(path.clone()),
+        ..Default::default()
+    });
+    let r = ex.run(&program, &design, &g).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    // header + one row per superstep
+    assert_eq!(csv.lines().count() as u32, r.supersteps + 1);
+    // edge column sums to the traversed count
+    let total: u64 = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').nth(1).unwrap().parse::<u64>().unwrap())
+        .sum();
+    assert_eq!(total, r.edges_traversed);
+}
+
+#[test]
+fn extension_algorithms_run_end_to_end() {
+    let g = generate::rmat(9, 5_000, 0.57, 0.19, 0.19, 44);
+    for program in [algorithms::reachability(), algorithms::max_label()] {
+        let design = Translator::jgraph().translate(&program).unwrap();
+        let mut ex = Executor::new(config("rmat9"));
+        let r = ex.run(&program, &design, &g).unwrap();
+        assert!(r.supersteps > 0, "{}", program.name);
+        assert_eq!(r.functional_path, FunctionalPath::Software);
+    }
+}
+
+#[test]
+fn run_report_periods_sum_to_rt() {
+    let g = generate::erdos_renyi(300, 3_000, 8);
+    let program = algorithms::wcc();
+    let design = Translator::vivado_hls().translate(&program).unwrap();
+    let mut ex = Executor::new(config("er"));
+    let r = ex.run(&program, &design, &g).unwrap();
+    let sum = r.prep_seconds + r.compile_seconds + r.deploy_seconds + r.sim_exec_seconds;
+    assert!((r.rt_seconds - sum).abs() < 1e-9);
+    assert!(r.deploy_seconds >= jgraph::engine::executor::FLASH_SECONDS);
+}

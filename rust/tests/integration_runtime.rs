@@ -1,0 +1,142 @@
+//! Integration over the real AOT artifacts: loads the HLO text produced by
+//! `make artifacts`, compiles it on the PJRT CPU client, executes
+//! supersteps from rust, and cross-checks every canonical algorithm
+//! against the software GAS oracle on real graph workloads.
+//!
+//! These tests require `artifacts/manifest.tsv` (run `make artifacts`);
+//! they are the proof that the three layers compose.
+
+use std::sync::Arc;
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::program::EdgeOpKind;
+use jgraph::engine::{gas, xla_engine, Executor, ExecutorConfig, FunctionalPath};
+use jgraph::graph::csr::Csr;
+use jgraph::graph::generate;
+use jgraph::runtime::{Buffer, KernelRegistry};
+use jgraph::translator::Translator;
+
+fn registry() -> Arc<KernelRegistry> {
+    // PJRT handles are not Send/Sync (Rc internals), so the cache is
+    // per-test-thread rather than a process-wide OnceLock.
+    thread_local! {
+        static REG: std::cell::OnceCell<Arc<KernelRegistry>> = const { std::cell::OnceCell::new() };
+    }
+    REG.with(|c| {
+        c.get_or_init(|| Arc::new(KernelRegistry::open_default().expect("run `make artifacts`")))
+            .clone()
+    })
+}
+
+#[test]
+fn registry_loads_and_reports_platform() {
+    let reg = registry();
+    assert!(reg.platform().to_lowercase().contains("cpu") || !reg.platform().is_empty());
+    assert!(reg.manifest.artifacts.len() >= 20, "5 algos x 4 buckets");
+}
+
+#[test]
+fn every_canonical_kind_matches_oracle_on_random_graph() {
+    let g = generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 77);
+    let csr = Csr::from_edgelist(&g);
+    let reg = registry();
+    for kind in EdgeOpKind::all() {
+        let xla = xla_engine::run(&reg, kind, &csr, 0, 1e-7).unwrap();
+        let program = match kind {
+            EdgeOpKind::Bfs => algorithms::bfs(),
+            EdgeOpKind::Pr => algorithms::pagerank(0.85, 1e-7),
+            EdgeOpKind::Sssp => algorithms::sssp(),
+            EdgeOpKind::Wcc => algorithms::wcc(),
+            EdgeOpKind::Spmv => algorithms::spmv(),
+        };
+        let oracle = gas::run(&program, &csr, 0, |_| {}).unwrap();
+        let dev = xla_engine::max_deviation(&xla.values, &oracle.values);
+        assert!(dev < 1e-3, "{kind:?}: deviation {dev}");
+    }
+}
+
+#[test]
+fn bucket_selection_pads_correctly() {
+    // a graph that fits tiny exactly at the boundary
+    let g = generate::erdos_renyi(256, 4_096, 3);
+    let csr = Csr::from_edgelist(&g);
+    let reg = registry();
+    let exe = reg.for_graph("bfs", csr.num_vertices(), csr.num_edges()).unwrap();
+    assert_eq!(exe.meta.bucket, "tiny");
+    // one vertex more must spill to the next bucket
+    let exe2 = reg.for_graph("bfs", 257, 4_096).unwrap();
+    assert_eq!(exe2.meta.bucket, "small");
+}
+
+#[test]
+fn executable_rejects_wrong_abi() {
+    let reg = registry();
+    let exe = reg.for_bucket("wcc", "tiny").unwrap();
+    // wrong arity
+    assert!(exe.run(&[Buffer::I32(vec![0; 256])]).is_err());
+    // wrong length
+    let bad = vec![
+        Buffer::I32(vec![0; 13]), // label should be 256
+        Buffer::I32(vec![0; 4096]),
+        Buffer::I32(vec![0; 4096]),
+        Buffer::I32(vec![0; 1]),
+    ];
+    assert!(exe.run(&bad).is_err());
+    // wrong dtype
+    let bad2 = vec![
+        Buffer::F32(vec![0.0; 256]),
+        Buffer::I32(vec![0; 4096]),
+        Buffer::I32(vec![0; 4096]),
+        Buffer::I32(vec![0; 1]),
+    ];
+    assert!(exe.run(&bad2).is_err());
+}
+
+#[test]
+fn executor_uses_xla_path_and_verifies() {
+    let g = generate::email_eu_core_like(7);
+    let program = algorithms::bfs();
+    let design = Translator::jgraph().translate(&program).unwrap();
+    let mut ex = Executor::new(ExecutorConfig {
+        graph_name: "email".into(),
+        ..Default::default()
+    })
+    .with_registry(registry());
+    let r = ex.run(&program, &design, &g).unwrap();
+    assert_eq!(r.functional_path, FunctionalPath::Xla);
+    assert_eq!(r.oracle_deviation, Some(0.0), "BFS is integer-exact");
+    assert!(r.functional_exec_seconds > 0.0);
+}
+
+#[test]
+fn bfs_xla_on_chain_has_exact_levels() {
+    // deterministic shape: chain BFS levels are 0..n-1
+    let g = generate::chain(200);
+    let csr = Csr::from_edgelist(&g);
+    let xla = xla_engine::run(&registry(), EdgeOpKind::Bfs, &csr, 0, 0.0).unwrap();
+    for (v, &lvl) in xla.values.iter().enumerate() {
+        assert_eq!(lvl as usize, v);
+    }
+    assert_eq!(xla.edges_traversed, 199);
+}
+
+#[test]
+fn spmv_xla_matches_dense_matvec() {
+    let mut el = jgraph::graph::edgelist::EdgeList::default();
+    el.push(0, 1, 2.0);
+    el.push(0, 2, 3.0);
+    el.push(1, 2, 4.0);
+    el.num_vertices = 3;
+    let csr = Csr::from_edgelist(&el);
+    let xla = xla_engine::run(&registry(), EdgeOpKind::Spmv, &csr, 0, 0.0).unwrap();
+    assert_eq!(xla.values, vec![0.0, 2.0, 7.0]);
+}
+
+#[test]
+fn pagerank_xla_mass_conserved() {
+    let g = generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 13);
+    let csr = Csr::from_edgelist(&g);
+    let xla = xla_engine::run(&registry(), EdgeOpKind::Pr, &csr, 0, 1e-8).unwrap();
+    let mass: f64 = xla.values.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+}

@@ -1,0 +1,367 @@
+//! Property-based tests on coordinator invariants. The offline build has
+//! no proptest crate, so this file carries a small deterministic
+//! random-case driver (`cases`) over the crate's own SplitMix64 — same
+//! discipline (random structure, invariant assertion, seed reported on
+//! failure), fixed seeds for reproducibility.
+
+use jgraph::accel::device::DeviceModel;
+use jgraph::accel::simulator::{AccelSimulator, EdgeBatch};
+use jgraph::dsl::algorithms;
+use jgraph::engine::gas;
+use jgraph::graph::csr::Csr;
+use jgraph::graph::edgelist::EdgeList;
+use jgraph::graph::{generate, SplitMix64};
+use jgraph::prep::layout::{convert, Layout};
+use jgraph::prep::partition::{partition, PartitionStrategy};
+use jgraph::prep::reorder;
+use jgraph::sched::ParallelismPlan;
+use jgraph::translator::pipeline::schedule;
+use jgraph::translator::TranslatorKind;
+
+/// Run `f` over `n` random cases; panic message names the failing seed.
+fn cases(n: u64, f: impl Fn(u64, &mut SplitMix64)) {
+    for seed in 0..n {
+        let mut rng = SplitMix64::new(0xC0FFEE ^ (seed * 7919));
+        f(seed, &mut rng);
+    }
+}
+
+/// Random graph: up to `max_n` vertices, `max_m` edges.
+fn random_graph(rng: &mut SplitMix64, max_n: usize, max_m: usize) -> EdgeList {
+    let n = 1 + rng.next_below(max_n as u64) as usize;
+    let m = rng.next_below(max_m as u64) as usize;
+    let mut el = EdgeList::with_vertices(n);
+    for _ in 0..m {
+        let s = rng.next_below(n as u64) as u32;
+        let d = rng.next_below(n as u64) as u32;
+        el.push(s, d, rng.next_f32_range(0.1, 9.0));
+    }
+    el.num_vertices = n;
+    el
+}
+
+#[test]
+fn prop_partition_covers_every_vertex_exactly_once() {
+    let strategies = [
+        PartitionStrategy::Range,
+        PartitionStrategy::Hash,
+        PartitionStrategy::DegreeBalanced,
+        PartitionStrategy::BfsGrow,
+    ];
+    cases(30, |seed, rng| {
+        let g = random_graph(rng, 300, 2_000);
+        let k = 1 + rng.next_below(9) as usize;
+        for s in strategies {
+            let p = partition(&g, k, s).unwrap();
+            assert_eq!(p.assignment.len(), g.num_vertices, "seed {seed} {s:?}");
+            assert!(p.assignment.iter().all(|&a| (a as usize) < k), "seed {seed} {s:?}");
+            assert_eq!(
+                p.part_sizes.iter().sum::<usize>(),
+                g.num_vertices,
+                "seed {seed} {s:?}"
+            );
+            assert_eq!(p.part_edges.iter().sum::<usize>(), g.num_edges(), "seed {seed} {s:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_layout_conversions_roundtrip() {
+    cases(25, |seed, rng| {
+        let mut g = random_graph(rng, 120, 800);
+        g.dedup(); // adjacency matrix collapses duplicates
+        let canon: Vec<(u32, u32)> =
+            g.sorted().edges.iter().map(|e| (e.src, e.dst)).collect();
+        for layout in [Layout::EdgeList, Layout::Csr, Layout::Csc, Layout::AdjacencyMatrix] {
+            let lo = convert(&g, layout).unwrap();
+            let rt: Vec<(u32, u32)> =
+                lo.to_edgelist().sorted().edges.iter().map(|e| (e.src, e.dst)).collect();
+            assert_eq!(rt, canon, "seed {seed} layout {layout:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_reorder_is_degree_preserving_permutation() {
+    cases(25, |seed, rng| {
+        let g = random_graph(rng, 200, 1_500);
+        for &s in reorder::all_strategies() {
+            let perm = reorder::permutation(&g, s);
+            // bijective
+            let mut seen = vec![false; perm.len()];
+            for &p in &perm {
+                assert!(!seen[p as usize], "seed {seed} {s:?}: not injective");
+                seen[p as usize] = true;
+            }
+            // degree multiset preserved
+            let (rg, _) = reorder::reorder(&g, s);
+            let mut a = g.out_degrees();
+            let mut b = rg.out_degrees();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "seed {seed} {s:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_bfs_oracle_matches_naive_reference() {
+    cases(20, |seed, rng| {
+        let g = random_graph(rng, 150, 900);
+        let csr = Csr::from_edgelist(&g);
+        let got = gas::run(&algorithms::bfs(), &csr, 0, |_| {}).unwrap();
+        // naive BFS
+        let mut levels = vec![-1i64; g.num_vertices];
+        levels[0] = 0;
+        let mut q = std::collections::VecDeque::from([0u32]);
+        while let Some(u) = q.pop_front() {
+            for (_, v, _) in csr.row_edges(u) {
+                if levels[v as usize] < 0 {
+                    levels[v as usize] = levels[u as usize] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        for v in 0..g.num_vertices {
+            assert_eq!(got.values[v] as i64, levels[v], "seed {seed} vertex {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_wcc_labels_are_component_minima() {
+    cases(15, |seed, rng| {
+        let mut g = random_graph(rng, 100, 300);
+        g.symmetrize(); // undirected semantics for component comparison
+        let csr = Csr::from_edgelist(&g);
+        let got = gas::run(&algorithms::wcc(), &csr, 0, |_| {}).unwrap();
+        // union-find reference
+        let mut parent: Vec<u32> = (0..g.num_vertices as u32).collect();
+        fn find(p: &mut Vec<u32>, mut x: u32) -> u32 {
+            while p[x as usize] != x {
+                p[x as usize] = p[p[x as usize] as usize];
+                x = p[x as usize];
+            }
+            x
+        }
+        for e in &g.edges {
+            let (a, b) = (find(&mut parent, e.src), find(&mut parent, e.dst));
+            if a != b {
+                parent[a as usize] = b;
+            }
+        }
+        let mut min_of_root = std::collections::HashMap::new();
+        for v in 0..g.num_vertices as u32 {
+            let r = find(&mut parent, v);
+            let e = min_of_root.entry(r).or_insert(v);
+            if v < *e {
+                *e = v;
+            }
+        }
+        for v in 0..g.num_vertices as u32 {
+            let r = find(&mut parent, v);
+            assert_eq!(
+                got.values[v as usize] as u32, min_of_root[&r],
+                "seed {seed} vertex {v}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_never_exceeds_device() {
+    use jgraph::sched::scheduler::{auto_plan, RuntimeScheduler};
+    use jgraph::translator::resource::ResourceEstimate;
+    cases(40, |seed, rng| {
+        let lane = ResourceEstimate {
+            lut: 1_000 + rng.next_below(80_000),
+            ff: 1_000 + rng.next_below(120_000),
+            bram_kb: rng.next_below(2_000),
+            uram: rng.next_below(50),
+            dsp: rng.next_below(200),
+        };
+        let dev = DeviceModel::u200();
+        let req = ParallelismPlan::new(
+            1 + rng.next_below(128) as u32,
+            1 + rng.next_below(8) as u32,
+        );
+        if let Ok(s) = RuntimeScheduler::admit(req, &lane, &dev, 10) {
+            assert!(
+                lane.scaled(s.plan.total_lanes()).fits(&dev),
+                "seed {seed}: granted plan exceeds device"
+            );
+            assert!(s.plan.pipelines <= req.pipelines && s.plan.pes <= req.pes);
+        }
+        let auto = auto_plan(&lane, &dev, 64, 4);
+        assert!(lane.scaled(auto.total_lanes()).fits(&dev), "seed {seed}: auto plan");
+    });
+}
+
+#[test]
+fn prop_simulator_cycles_monotone_in_work_and_antitone_in_lanes() {
+    cases(20, |seed, rng| {
+        let n_dst = 1 + rng.next_below(5_000) as u32;
+        let m1 = 1_000 + rng.next_below(20_000) as usize;
+        let m2 = m1 + 5_000;
+        let dsts1: Vec<u32> = (0..m1).map(|_| rng.next_below(n_dst as u64) as u32).collect();
+        let dsts2: Vec<u32> = (0..m2).map(|_| rng.next_below(n_dst as u64) as u32).collect();
+        let dev = DeviceModel::u200();
+        let mk = |lanes: u32| {
+            schedule(TranslatorKind::JGraph, ParallelismPlan::new(lanes, 1), 20, dev.clock_hz)
+        };
+        let run = |dsts: &[u32], lanes: u32| {
+            let mut sim = AccelSimulator::new(DeviceModel::u200(), mk(lanes));
+            sim.superstep(&EdgeBatch {
+                dsts,
+                active_rows: n_dst as u64,
+                bytes_per_edge: 8,
+                avg_edge_gap: 50.0,
+            });
+            sim.finish().cycles.total()
+        };
+        // more edges -> more cycles (same lanes)
+        assert!(run(&dsts2, 8) > run(&dsts1, 8), "seed {seed}: monotone in work");
+        // more lanes -> no more cycles (same edges)
+        assert!(run(&dsts1, 16) <= run(&dsts1, 2), "seed {seed}: antitone in lanes");
+    });
+}
+
+#[test]
+fn prop_custom_apply_expressions_evaluate_consistently() {
+    use jgraph::dsl::apply::{ApplyEnv, ApplyExpr, BinOp};
+    // random expression trees: eval must be deterministic and finite for
+    // finite positive inputs with safe operators
+    cases(50, |seed, rng| {
+        fn gen(rng: &mut SplitMix64, depth: u32) -> ApplyExpr {
+            if depth == 0 || rng.next_below(3) == 0 {
+                return match rng.next_below(4) {
+                    0 => ApplyExpr::src(),
+                    1 => ApplyExpr::weight(),
+                    2 => ApplyExpr::iter(),
+                    _ => ApplyExpr::constant(1.0 + rng.next_f64() * 4.0),
+                };
+            }
+            let op = match rng.next_below(4) {
+                0 => BinOp::Add,
+                1 => BinOp::Mul,
+                2 => BinOp::Min,
+                _ => BinOp::Max,
+            };
+            ApplyExpr::bin(op, gen(rng, depth - 1), gen(rng, depth - 1))
+        }
+        let e = gen(rng, 4);
+        let env = ApplyEnv {
+            src_value: rng.next_f64() * 10.0,
+            dst_value: rng.next_f64() * 10.0,
+            edge_weight: 0.1 + rng.next_f64() * 5.0,
+            iter_count: rng.next_below(50) as f64,
+        };
+        let a = e.eval(&env);
+        let b = e.eval(&env);
+        assert_eq!(a, b, "seed {seed}: eval not deterministic");
+        assert!(a.is_finite(), "seed {seed}: {} -> {a}", e.render());
+        assert!(e.op_count() >= e.depth(), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip_arbitrary_graphs() {
+    cases(30, |seed, rng| {
+        let g = random_graph(rng, 200, 2_000);
+        let csr = Csr::from_edgelist(&g);
+        assert_eq!(csr.num_edges(), g.num_edges(), "seed {seed}");
+        let rt = csr.to_edgelist();
+        let mut a: Vec<_> = g.edges.iter().map(|e| (e.src, e.dst)).collect();
+        let mut b: Vec<_> = rt.edges.iter().map(|e| (e.src, e.dst)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "seed {seed}");
+        // edge_row inverse of row ranges
+        for e in 0..csr.num_edges().min(50) {
+            let row = csr.edge_row(e as u32);
+            let (lo, hi) =
+                (csr.offsets[row as usize] as usize, csr.offsets[row as usize + 1] as usize);
+            assert!((lo..hi).contains(&e), "seed {seed} edge {e}");
+        }
+    });
+}
+
+#[test]
+fn prop_multipe_conserves_edges_and_bounds_critical_path() {
+    use jgraph::accel::multipe::{InterconnectModel, MultiPeSimulator};
+    cases(15, |seed, rng| {
+        let g = random_graph(rng, 400, 6_000);
+        if g.num_edges() == 0 {
+            return;
+        }
+        let k = 1 + rng.next_below(4) as usize;
+        let p = partition(&g, k, PartitionStrategy::Hash).unwrap();
+        let pes = k as u32;
+        let dev = DeviceModel::u200();
+        let spec = schedule(
+            TranslatorKind::JGraph,
+            ParallelismPlan::new(1 + rng.next_below(8) as u32, pes),
+            20,
+            dev.clock_hz,
+        );
+        let pe_of: Vec<u32> = (0..k as u32).collect();
+        let mut sim =
+            MultiPeSimulator::new(DeviceModel::u200(), spec, InterconnectModel::default());
+        let step = sim.superstep(g.edges.iter().map(|e| (e.src, e.dst)), &p, &pe_of);
+        // critical path at least the slowest PE and at least the router fill
+        let max_pe = *step.pe_cycles.iter().max().unwrap();
+        assert!(step.critical_cycles >= max_pe, "seed {seed}");
+        assert!(step.critical_cycles >= step.interconnect_cycles, "seed {seed}");
+        // crossing messages cannot exceed total edges
+        assert!(step.crossing_msgs <= g.num_edges() as u64, "seed {seed}");
+        // single PE -> nothing crosses
+        if k == 1 {
+            assert_eq!(step.crossing_msgs, 0, "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_isa_dynamic_count_consistent_with_oracle_trace() {
+    use jgraph::dsl::isa;
+    cases(10, |seed, rng| {
+        let g = random_graph(rng, 120, 1_000);
+        let csr = Csr::from_edgelist(&g);
+        let program = algorithms::wcc();
+        let isa_prog = isa::compile(&program);
+        let mut total_edges = 0u64;
+        let mut total_vertices = 0u64;
+        let mut steps = 0u64;
+        gas::run(&program, &csr, 0, |t| {
+            total_edges += t.dsts.len() as u64;
+            total_vertices += t.active_rows;
+            steps += 1;
+        })
+        .unwrap();
+        let dyn_count = (0..steps).fold(0u64, |acc, _| acc + isa_prog.per_superstep as u64)
+            + isa_prog.per_vertex as u64 * total_vertices
+            + isa_prog.per_edge as u64 * total_edges;
+        // the affine cost model must agree with per-superstep accumulation
+        let mut acc = 0u64;
+        let per_step_vertices = total_vertices / steps.max(1);
+        let _ = per_step_vertices;
+        acc += steps * isa_prog.per_superstep as u64;
+        acc += isa_prog.per_vertex as u64 * total_vertices;
+        acc += isa_prog.per_edge as u64 * total_edges;
+        assert_eq!(dyn_count, acc, "seed {seed}");
+        assert!(dyn_count > 0, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_generators_always_valid() {
+    cases(15, |seed, rng| {
+        let scale = 4 + rng.next_below(6) as u32;
+        let m = rng.next_below(5_000) as usize;
+        let g = generate::rmat(scale, m, 0.57, 0.19, 0.19, seed);
+        assert!(g.is_valid(), "rmat seed {seed}");
+        assert_eq!(g.num_edges(), m);
+        let g = generate::erdos_renyi(1 + rng.next_below(500) as usize, m, seed);
+        assert!(g.is_valid(), "er seed {seed}");
+    });
+}
