@@ -3,9 +3,9 @@
 //! interface."
 //!
 //! Builds two *custom* algorithms the library does not ship, straight from
-//! the function-level DSL (builder + Apply expression language), translates
-//! them with the light-weight flow, and runs them — no new RTL, no new
-//! kernels, no framework changes.
+//! the function-level DSL, and compiles them with the builder's terminal
+//! `compile(&session)` — no new RTL, no new kernels, no framework changes.
+//! Validation failures surface as typed `CompileError`s, not panics.
 //!
 //! ```sh
 //! cargo run --release --example custom_algorithm
@@ -14,12 +14,14 @@
 use jgraph::dsl::apply::{ApplyExpr, BinOp, UnOp};
 use jgraph::dsl::builder::GasProgramBuilder;
 use jgraph::dsl::program::{Convergence, FrontierPolicy, InitPolicy, ReduceOp, StateType, Writeback};
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
-use jgraph::translator::Translator;
+use jgraph::prep::prepared::PrepOptions;
 
 fn main() -> anyhow::Result<()> {
     let graph = generate::rmat(11, 40_000, 0.57, 0.19, 0.19, 5);
+    // custom programs have no AOT kernel; they run on the software engine
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
 
     // --- Custom #1: "hop-penalized distance" — SSSP where every hop also
     //     costs sqrt(weight): Apply = src + w + sqrt(w), Reduce = min.
@@ -35,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         .writeback(Writeback::MinCombine)
         .frontier(FrontierPolicy::All)
         .convergence(Convergence::NoChange)
-        .build()?;
+        .compile(&session)?;
 
     // --- Custom #2: "reach score" — every vertex accumulates the squared
     //     weights of incoming edges (one sweep): Apply = w*w, Reduce = sum.
@@ -44,25 +46,21 @@ fn main() -> anyhow::Result<()> {
         .apply(ApplyExpr::un(UnOp::Square, ApplyExpr::weight()))
         .reduce(ReduceOp::Sum)
         .convergence(Convergence::FixedIterations(1))
-        .build()?;
+        .compile(&session)?;
 
-    for program in [&hop_penalized, &reach_score] {
+    for pipeline in [&hop_penalized, &reach_score] {
         // the same translator that handled the library algorithms handles
         // these: the Apply expression becomes an ALU chain
-        let design = Translator::jgraph().translate(program)?;
+        let program = pipeline.program();
         println!(
             "custom algorithm {:?}: apply = {}, {} ALU op(s)/lane, {} HDL lines",
             program.name,
             program.apply.render(),
             program.apply.op_count(),
-            design.hdl_lines
+            pipeline.design().hdl_lines
         );
-        let mut ex = Executor::new(ExecutorConfig {
-            use_xla: false, // custom programs run on the software GAS engine
-            graph_name: "rmat-11".into(),
-            ..Default::default()
-        });
-        let report = ex.run(program, &design, &graph)?;
+        let mut bound = pipeline.load(&graph, PrepOptions::named("rmat-11"))?;
+        let report = bound.run(&RunOptions::default())?;
         println!(
             "  -> {} supersteps, {:.1} MTEPS simulated, {} edges traversed",
             report.supersteps, report.simulated_mteps, report.edges_traversed
@@ -72,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     // sanity: hop-penalized distances dominate plain SSSP distances
     let csr = jgraph::graph::csr::Csr::from_edgelist(&graph);
     let plain = jgraph::engine::gas::run(&jgraph::dsl::algorithms::sssp(), &csr, 0, |_| {})?;
-    let penal = jgraph::engine::gas::run(&hop_penalized, &csr, 0, |_| {})?;
+    let penal = jgraph::engine::gas::run(hop_penalized.program(), &csr, 0, |_| {})?;
     let dominated = plain
         .values
         .iter()

@@ -2,12 +2,14 @@
 //! compose on the paper's full workload.
 //!
 //! Pipeline exercised, per graph × algorithm:
-//!   graph generator (SNAP stand-ins) → DSL program → light-weight
-//!   translator (HDL + host C + resources) → communication manager
-//!   (simulated XRT/PCIe) → runtime scheduler → **AOT XLA supersteps**
+//!   graph generator (SNAP stand-ins) → DSL program → `Session::compile`
+//!   (light-weight translator: HDL + host C + resources, compiled once per
+//!   flow) → `CompiledPipeline::load` (communication manager: simulated
+//!   XRT/PCIe, once per graph) → runtime scheduler → **AOT XLA supersteps**
 //!   (JAX+Pallas lowered at build time, executed via PJRT from rust,
-//!   cross-checked against the software GAS oracle) → cycle-simulated
-//!   U200 timing → the paper's headline metric (MTEPS).
+//!   cross-checked against the software GAS oracle; software fallback when
+//!   artifacts are absent) → cycle-simulated U200 timing → the paper's
+//!   headline metric (MTEPS).
 //!
 //! This regenerates Table V (both graphs, all three translators) and the
 //! headline claim ("up to 300 MTEPS BFS within tens of seconds"); the
@@ -20,8 +22,9 @@
 use std::time::Instant;
 
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig, FunctionalPath};
+use jgraph::engine::{FunctionalPath, RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::translator::{Translator, TranslatorKind};
 
 fn main() -> anyhow::Result<()> {
@@ -46,38 +49,46 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
 
-    // --- Table V: BFS through all three flows on both graphs, with the
-    //     XLA functional path live (not simulation-only)
-    println!("--- Table V reproduction (BFS, XLA functional path ON) ---");
+    // --- Table V: BFS through all three flows on both graphs; the XLA
+    //     functional path drives the values when artifacts are built
+    let session = Session::new(SessionConfig::default());
+    let program = algorithms::bfs();
+    println!("--- Table V reproduction (BFS) ---");
     println!(
         "{:<12} {:>10} {:<28} {:>8} {:>12}  {}",
         "Work", "Code lines", "Graph", "RT(s)", "TP(MTEPS)", "functional path"
     );
-    let program = algorithms::bfs();
     let mut max_mteps: f64 = 0.0;
+    let mut xla_live = false;
     for kind in TranslatorKind::all() {
-        let design = Translator::of_kind(kind).translate(&program)?;
+        // compile once per flow, bind once per graph
+        let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
         for (name, el) in &graphs {
-            let mut ex = Executor::new(ExecutorConfig {
-                graph_name: name.to_string(),
-                ..Default::default()
-            });
-            let r = ex.run(&program, &design, el)?;
-            assert_eq!(r.functional_path, FunctionalPath::Xla, "AOT path must be live");
-            assert!(r.oracle_deviation.unwrap_or(1.0) < 1e-3, "oracle cross-check");
+            let mut bound = compiled.load(el, PrepOptions::named(*name))?;
+            let r = bound.run(&RunOptions::default())?;
+            let path = match r.functional_path {
+                FunctionalPath::Xla => {
+                    xla_live = true;
+                    assert!(r.oracle_deviation.unwrap_or(1.0) < 1e-3, "oracle cross-check");
+                    format!("XLA (dev {:.1e})", r.oracle_deviation.unwrap())
+                }
+                FunctionalPath::Software => "software oracle".to_string(),
+            };
             println!(
-                "{:<12} {:>10} {:<28} {:>8.1} {:>12.2}  XLA (dev {:.1e})",
-                r.translator,
-                r.hdl_lines,
-                name,
-                r.rt_seconds,
-                r.simulated_mteps,
-                r.oracle_deviation.unwrap()
+                "{:<12} {:>10} {:<28} {:>8.1} {:>12.2}  {path}",
+                r.translator, r.hdl_lines, name, r.rt_seconds, r.simulated_mteps,
             );
             if kind == TranslatorKind::JGraph {
                 max_mteps = max_mteps.max(r.simulated_mteps);
             }
         }
+    }
+    if !xla_live {
+        println!(
+            "note: AOT artifacts not available in this checkout — values came \
+             from the software GAS oracle (run `make artifacts` + build with \
+             --features pjrt for the XLA path)"
+        );
     }
     println!(
         "\nheadline: FAgraph BFS peaks at {:.0} MTEPS (paper: \"up to 300 MTEPS \
@@ -87,17 +98,14 @@ fn main() -> anyhow::Result<()> {
     assert!(max_mteps >= 300.0, "headline claim not reproduced");
 
     // --- every canonical algorithm through the full stack on the small
-    //     graph: translation, XLA execution, oracle verification
+    //     graph: compile once per algorithm, many graphs/queries possible
     println!("--- all canonical algorithms, full stack, email-Eu-core ---");
     for program in algorithms::all_canonical() {
-        let design = Translator::jgraph().translate(&program)?;
-        let mut ex = Executor::new(ExecutorConfig {
-            graph_name: "email-Eu-core".into(),
-            ..Default::default()
-        });
-        let r = ex.run(&program, &design, &graphs[0].1)?;
+        let compiled = session.compile(&program)?;
+        let mut bound = compiled.load(&graphs[0].1, PrepOptions::named("email-Eu-core"))?;
+        let r = bound.run(&RunOptions::default())?;
         println!(
-            "  {:<18} {:>3} supersteps  {:>8.1} MTEPS  exec(XLA) {:>7.1} ms  \
+            "  {:<18} {:>3} supersteps  {:>8.1} MTEPS  exec(functional) {:>7.1} ms  \
              oracle dev {:.1e}",
             r.program,
             r.supersteps,

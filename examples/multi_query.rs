@@ -1,0 +1,126 @@
+//! Compile-once / run-many: the paper's core economics ("tens of seconds
+//! to generate, then many fast traversals") demonstrated as wall-clock.
+//!
+//! Query 1 is **cold**: it pays the whole lifecycle — the FIFO/Read stage
+//! (here: generating the synthetic graph), `Session::compile` (translate,
+//! schedule, modeled synthesis + flash, XLA artifact lookup), and
+//! `CompiledPipeline::load` (Reorder + Partition + Layout + transport) —
+//! before running. Queries 2..N are **warm**: they reuse the bound
+//! pipeline and skip translate/prep/flash entirely, paying only the
+//! superstep loop.
+//!
+//! ```sh
+//! cargo run --release --example multi_query
+//! ```
+
+use std::time::Instant;
+
+use jgraph::prelude::*;
+use jgraph::prep::partition::PartitionStrategy;
+use jgraph::prep::reorder::ReorderStrategy;
+
+const NUM_QUERIES: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // query 1 (cold): read + compile + load + run
+    // ------------------------------------------------------------------
+    let t_cold = Instant::now();
+
+    // the FIFO/Read stage (paper §IV-C1): the dataset is produced and
+    // ingested from disk in SNAP text format (how the paper's evaluation
+    // graphs actually ship) — a power-law graph, ~500k follows
+    let spool = std::env::temp_dir().join("jgraph_multi_query.txt");
+    let produced = jgraph::graph::generate::rmat(14, 500_000, 0.57, 0.19, 0.19, 2026);
+    jgraph::graph::io::write_snap_text(&produced, &spool)?;
+    let graph = jgraph::graph::io::load(&spool)?;
+
+    let session = Session::new(SessionConfig::default());
+    let pipeline = session.compile(&algorithms::bfs())?;
+
+    let mut bound = pipeline.load(
+        &graph,
+        PrepOptions::named("rmat-14")
+            .with_reorder(ReorderStrategy::BfsLocality)
+            .with_partition(4, PartitionStrategy::BfsGrow),
+    )?;
+
+    let first = bound.run(&RunOptions::from_root(0))?;
+    let cold_seconds = t_cold.elapsed().as_secs_f64();
+    println!(
+        "query  1 (cold): read+compile+load+run in {:.1} ms wall \
+         ({} supersteps, {:.1} MTEPS simulated)",
+        cold_seconds * 1e3,
+        first.supersteps,
+        first.simulated_mteps
+    );
+
+    // ------------------------------------------------------------------
+    // queries 2..=N (warm): bound.run only — translate/prep/flash skipped
+    // ------------------------------------------------------------------
+    // roots with out-edges in the prepared (reordered) id space, so every
+    // query does real traversal work
+    let csr = &bound.graph().csr;
+    let n = csr.num_vertices() as u32;
+    let queries: Vec<RunOptions> = (1..NUM_QUERIES)
+        .map(|i| {
+            let mut v = (i as u32 * 104_729) % n;
+            while csr.degree(v) == 0 {
+                v = (v + 1) % n;
+            }
+            RunOptions::from_root(v)
+        })
+        .collect();
+
+    let t_warm = Instant::now();
+    let reports = bound.run_batch(&queries)?;
+    let warm_seconds = t_warm.elapsed().as_secs_f64();
+    let warm_avg = warm_seconds / reports.len() as f64;
+
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "query {:>2} (warm): root {:>6} -> {} supersteps, {:>7} edges, {:.1} MTEPS",
+            i + 2,
+            queries[i].root,
+            r.supersteps,
+            r.edges_traversed,
+            r.simulated_mteps
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // the amortization claim, in both wall-clock and modeled seconds
+    // ------------------------------------------------------------------
+    let speedup = cold_seconds / warm_avg;
+    println!(
+        "\nwall-clock:  cold query {:.1} ms, warm query avg {:.2} ms -> {:.1}x \
+         lower per-query cost once bound",
+        cold_seconds * 1e3,
+        warm_avg * 1e3,
+        speedup
+    );
+    println!(
+        "modeled:     one-time setup {:.1}s (prep {:.2} + compile {:.1} + flash/deploy {:.2}) \
+         vs {:.1} us simulated exec per query",
+        first.setup_seconds,
+        first.prep_seconds,
+        first.compile_seconds,
+        first.deploy_seconds,
+        first.sim_exec_seconds * 1e6
+    );
+    let amortized: f64 =
+        reports.iter().map(|r| r.simulated_mteps).sum::<f64>() / reports.len() as f64;
+    println!(
+        "amortized throughput across {} warm queries: {:.1} MTEPS",
+        reports.len(),
+        amortized
+    );
+
+    assert!(
+        speedup >= 5.0,
+        "expected >= 5x amortization for warm queries, measured {speedup:.1}x \
+         (cold {cold_seconds:.4}s vs warm avg {warm_avg:.4}s)"
+    );
+    println!("OK: warm queries are >= 5x cheaper than the cold query");
+    Ok(())
+}

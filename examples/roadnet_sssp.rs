@@ -1,19 +1,20 @@
 //! Road-network shortest paths — the paper's Table I telecom/supply-chain
 //! workload family (SSSP). Uses a 2-D grid graph (the opposite locality
-//! regime from power-law) and demonstrates the *preprocessing* interfaces:
-//! Layout, Reorder, and Partition, with their measured effect on the
-//! simulated design.
+//! regime from power-law) and demonstrates the *preprocessing* interfaces
+//! under the compile-once lifecycle: one `Session::compile`, then one
+//! `load` per preprocessing configuration — Layout, Reorder, and
+//! Partition — with their measured effect on the simulated design.
 //!
 //! ```sh
 //! cargo run --release --example roadnet_sssp
 //! ```
 
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
 use jgraph::prep::partition::{partition, PartitionStrategy};
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::prep::reorder::ReorderStrategy;
-use jgraph::translator::Translator;
 
 fn main() -> anyhow::Result<()> {
     // 96x96 grid road network, randomly shuffled vertex ids (as road data
@@ -27,8 +28,9 @@ fn main() -> anyhow::Result<()> {
     }
     let road = grid.permute(&shuffle);
 
-    let program = algorithms::sssp();
-    let design = Translator::jgraph().translate(&program)?;
+    // compile SSSP once; every preprocessing variant below reuses it
+    let session = Session::new(SessionConfig::default());
+    let pipeline = session.compile(&algorithms::sssp())?;
     println!(
         "road network: {} intersections, {} road segments",
         road.num_vertices,
@@ -37,12 +39,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- Reorder ablation: locality matters for the row-start model
     for strategy in [None, Some(ReorderStrategy::BfsLocality)] {
-        let mut ex = Executor::new(ExecutorConfig {
-            reorder: strategy,
-            graph_name: "roadnet-96x96".into(),
-            ..Default::default()
-        });
-        let report = ex.run(&program, &design, &road)?;
+        let mut prep = PrepOptions::named("roadnet-96x96");
+        prep.reorder = strategy;
+        let mut bound = pipeline.load(&road, prep)?;
+        let report = bound.run(&RunOptions::default())?;
         println!(
             "  reorder {:?}: {:>7.2} MTEPS, row-start cycles {}",
             strategy.map(|_| "bfs-locality").unwrap_or("none"),
@@ -62,9 +62,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- the actual shortest paths (functional XLA path)
+    // --- the actual shortest paths (functional path)
     let csr = jgraph::graph::csr::Csr::from_edgelist(&road);
-    let result = jgraph::engine::gas::run(&program, &csr, 0, |_| {})?;
+    let result = jgraph::engine::gas::run(&algorithms::sssp(), &csr, 0, |_| {})?;
     let reachable = result.values.iter().filter(|v| v.is_finite()).count();
     let max_dist = result.values.iter().filter(|v| v.is_finite()).fold(0.0f64, |a, &b| a.max(b));
     println!(

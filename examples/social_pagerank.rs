@@ -2,33 +2,35 @@
 //! ("Social network: individual/friendship: PR/BFS/DFS").
 //!
 //! Runs PageRank over a power-law graph through all three translation
-//! flows and prints an influencer ranking plus the Table-V-style
-//! comparison, showing how the flow (not the algorithm) determines the
-//! achieved throughput.
+//! flows (one `compile` per flow, the graph loaded against each) and
+//! prints an influencer ranking plus the Table-V-style comparison, showing
+//! how the flow (not the algorithm) determines the achieved throughput.
 //!
 //! ```sh
 //! cargo run --release --example social_pagerank
 //! ```
 
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::translator::{Translator, TranslatorKind};
 
 fn main() -> anyhow::Result<()> {
     // a synthetic social graph: 8,192 users, power-law follower counts
     let graph = generate::rmat(13, 180_000, 0.57, 0.19, 0.19, 2024);
     let program = algorithms::pagerank(0.85, 1e-8);
+    let session = Session::new(SessionConfig::default());
 
-    let mut ranked: Option<Vec<f64>> = None;
-    println!("PageRank across translation flows ({} users, {} follows):", graph.num_vertices, graph.num_edges());
+    println!(
+        "PageRank across translation flows ({} users, {} follows):",
+        graph.num_vertices,
+        graph.num_edges()
+    );
     for kind in TranslatorKind::all() {
-        let design = Translator::of_kind(kind).translate(&program)?;
-        let mut ex = Executor::new(ExecutorConfig {
-            graph_name: "social-rmat13".into(),
-            ..Default::default()
-        });
-        let report = ex.run(&program, &design, &graph)?;
+        let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
+        let mut bound = compiled.load(&graph, PrepOptions::named("social-rmat13"))?;
+        let report = bound.run(&RunOptions::default())?;
         println!(
             "  {:10} | {:>3} HDL lines | {:>8.2} MTEPS | RT {:>5.1}s | {} iterations",
             report.translator,
@@ -37,11 +39,11 @@ fn main() -> anyhow::Result<()> {
             report.rt_seconds,
             report.supersteps
         );
-        ranked = Some(run_values(&program, &design, &graph)?);
     }
 
-    // top influencers from the last run's functional values
-    let values = ranked.expect("at least one run");
+    // top influencers from the functional values (software oracle)
+    let csr = jgraph::graph::csr::Csr::from_edgelist(&graph);
+    let values = jgraph::engine::gas::run(&program, &csr, 0, |_| {})?.values;
     let mut idx: Vec<usize> = (0..values.len()).collect();
     idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]));
     println!("top-5 influencers (vertex: rank):");
@@ -51,15 +53,4 @@ fn main() -> anyhow::Result<()> {
     let total: f64 = values.iter().sum();
     println!("rank mass: {total:.6} (should be ~1.0)");
     Ok(())
-}
-
-/// Re-run the functional path only to extract vertex values.
-fn run_values(
-    program: &jgraph::dsl::program::GasProgram,
-    _design: &jgraph::translator::Design,
-    graph: &jgraph::graph::edgelist::EdgeList,
-) -> anyhow::Result<Vec<f64>> {
-    let csr = jgraph::graph::csr::Csr::from_edgelist(graph);
-    let result = jgraph::engine::gas::run(program, &csr, 0, |_| {})?;
-    Ok(result.values)
 }

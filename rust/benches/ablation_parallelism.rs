@@ -8,31 +8,30 @@ use harness::*;
 
 use jgraph::accel::device::DeviceModel;
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::sched::{scheduler::auto_plan, ParallelismPlan};
 use jgraph::translator::{resource::ResourceEstimate, Translator, TranslatorKind};
 
 fn main() {
     let graph = generate::rmat(13, 200_000, 0.57, 0.19, 0.19, 6);
     let program = algorithms::bfs();
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
 
     section("pipelines x PEs scaling (BFS, rmat-13, simulated MTEPS)");
     println!("  {:>9} | {:>4} | {:>10} | {:>12}", "pipelines", "pes", "MTEPS", "LUT used");
     for (pipes, pes) in [(1u32, 1u32), (2, 1), (4, 1), (8, 1), (16, 1), (8, 2), (16, 2), (32, 2)] {
-        let design = Translator::jgraph()
-            .with_plan(ParallelismPlan::new(pipes, pes))
-            .translate(&program)
-            .unwrap();
-        let mut ex = Executor::new(ExecutorConfig {
-            use_xla: false,
-            graph_name: "rmat13".into(),
-            ..Default::default()
-        });
-        let r = ex.run(&program, &design, &graph).unwrap();
+        let translator = Translator::jgraph().with_plan(ParallelismPlan::new(pipes, pes));
+        let compiled = session.compile_with(translator, &program).unwrap();
+        let mut bound = compiled.load(&graph, PrepOptions::named("rmat13")).unwrap();
+        let r = bound.run(&RunOptions::default()).unwrap();
         println!(
             "  {:>9} | {:>4} | {:>10.2} | {:>12}",
-            pipes, pes, r.simulated_mteps, design.resources.lut
+            pipes,
+            pes,
+            r.simulated_mteps,
+            compiled.design().resources.lut
         );
     }
 
@@ -40,17 +39,13 @@ fn main() {
     // the vivado flow is the no-cache datapath at II=2; compare against a
     // jgraph flow at the same II by scaling lanes to normalize issue rate
     for kind in [TranslatorKind::JGraph, TranslatorKind::VivadoHls] {
-        let design = Translator::of_kind(kind).translate(&program).unwrap();
-        let mut ex = Executor::new(ExecutorConfig {
-            use_xla: false,
-            graph_name: "rmat13".into(),
-            ..Default::default()
-        });
-        let r = ex.run(&program, &design, &graph).unwrap();
+        let compiled = session.compile_with(Translator::of_kind(kind), &program).unwrap();
+        let mut bound = compiled.load(&graph, PrepOptions::named("rmat13")).unwrap();
+        let r = bound.run(&RunOptions::default()).unwrap();
         println!(
             "  {:>10} | cache {:>5} | {:>8.2} MTEPS | vertex_random cycles {:>10}",
             kind.label(),
-            design.pipeline.bram_vertex_cache,
+            compiled.design().pipeline.bram_vertex_cache,
             r.simulated_mteps,
             r.sim.cycles.vertex_random
         );

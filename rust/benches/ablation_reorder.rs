@@ -7,10 +7,10 @@ mod harness;
 use harness::*;
 
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::prep::reorder::{all_strategies, ReorderStrategy};
-use jgraph::translator::Translator;
 
 fn shuffled_grid() -> jgraph::graph::edgelist::EdgeList {
     let grid = generate::grid2d(64, 64, 7);
@@ -28,18 +28,18 @@ fn main() {
         ("shuffled-grid-64", shuffled_grid()),
         ("rmat-12", generate::rmat(12, 80_000, 0.57, 0.19, 0.19, 4)),
     ];
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
     for (gname, graph) in &graphs {
         for program in [algorithms::bfs(), algorithms::sssp()] {
             section(&format!("{} on {gname}", program.name));
-            let design = Translator::jgraph().translate(&program).unwrap();
+            // compile once per program; one load per reorder strategy
+            let compiled = session.compile(&program).unwrap();
             for &strategy in all_strategies() {
-                let mut ex = Executor::new(ExecutorConfig {
-                    use_xla: false,
-                    reorder: if strategy == ReorderStrategy::None { None } else { Some(strategy) },
-                    graph_name: gname.to_string(),
-                    ..Default::default()
-                });
-                let r = ex.run(&program, &design, graph).unwrap();
+                let mut prep = PrepOptions::named(gname.to_string());
+                prep.reorder =
+                    if strategy == ReorderStrategy::None { None } else { Some(strategy) };
+                let mut bound = compiled.load(graph, prep).unwrap();
+                let r = bound.run(&RunOptions::default()).unwrap();
                 println!(
                     "  {:>14} | {:>8.2} MTEPS | row-start {:>9} | conflict {:>9} | prep {:>6.1} ms",
                     format!("{strategy:?}"),

@@ -11,9 +11,10 @@ use jgraph::accel::bram::BankModel;
 use jgraph::accel::device::DeviceModel;
 use jgraph::accel::simulator::{AccelSimulator, EdgeBatch};
 use jgraph::dsl::algorithms;
-use jgraph::engine::gas;
+use jgraph::engine::{gas, RunOptions, Session, SessionConfig};
 use jgraph::graph::csr::Csr;
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::sched::ParallelismPlan;
 use jgraph::translator::pipeline::schedule;
 use jgraph::translator::TranslatorKind;
@@ -74,6 +75,43 @@ fn main() {
     let big = generate::rmat(14, 500_000, 0.57, 0.19, 0.19, 4);
     bench("Csr::from_edgelist rmat-14", 1, 10, || Csr::from_edgelist(&big));
     bench("to_padded_coo 1M slots", 1, 10, || Csr::from_edgelist(&big).to_padded_coo(1_048_576));
+
+    section("compile_once_run_many (BFS, rmat-13, software path)");
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let program = algorithms::bfs();
+    let qgraph = generate::rmat(13, 200_000, 0.57, 0.19, 0.19, 3);
+    // cold: the full lifecycle per query (what the one-shot API pays)
+    let d_cold = bench("cold query: compile + load + run", 1, 10, || {
+        let compiled = session.compile(&program).unwrap();
+        let mut bound = compiled.load(&qgraph, PrepOptions::named("rmat-13")).unwrap();
+        bound.run(&RunOptions::from_root(0)).unwrap().edges_traversed
+    });
+    // warm: compile + load once, then run-many
+    let compiled = session.compile(&program).unwrap();
+    let mut bound = compiled.load(&qgraph, PrepOptions::named("rmat-13")).unwrap();
+    let d_warm = bench("warm query: bound.run", 1, 10, || {
+        bound.run(&RunOptions::from_root(0)).unwrap().edges_traversed
+    });
+    report_metric(
+        "compile/load amortization (cold/warm)",
+        d_cold.as_secs_f64() / d_warm.as_secs_f64(),
+        "x",
+    );
+    // amortized per-query MTEPS across a 16-root sweep on one binding
+    let roots: Vec<RunOptions> = (0..16)
+        .map(|i| RunOptions::from_root(qgraph.edges[(i * 12_553) % qgraph.num_edges()].src))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let reports = bound.run_batch(&roots).unwrap();
+    let sweep_seconds = t0.elapsed().as_secs_f64();
+    let mean_mteps =
+        reports.iter().map(|r| r.simulated_mteps).sum::<f64>() / reports.len() as f64;
+    report_metric("amortized per-query MTEPS (16 roots)", mean_mteps, "MTEPS");
+    report_metric(
+        "per-query wall across 16-root sweep",
+        sweep_seconds / reports.len() as f64 * 1e3,
+        "ms",
+    );
 
     section("XLA superstep round-trip (requires artifacts)");
     match jgraph::runtime::KernelRegistry::open_default() {

@@ -7,8 +7,9 @@ mod harness;
 use harness::*;
 
 use jgraph::dsl::algorithms;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
 use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::translator::{Translator, TranslatorKind};
 
 fn main() {
@@ -28,18 +29,18 @@ fn main() {
     section("per-stage timing (email-Eu-core, BFS)");
     let graph = generate::email_eu_core_like(42);
     let program = algorithms::bfs();
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
     for kind in TranslatorKind::all() {
         bench(&format!("translate [{}]", kind.label()), 3, 20, || {
             Translator::of_kind(kind).translate(&program).unwrap()
         });
-        let design = Translator::of_kind(kind).translate(&program).unwrap();
-        bench(&format!("simulate+oracle run [{}]", kind.label()), 1, 5, || {
-            let mut ex = Executor::new(ExecutorConfig {
-                use_xla: false,
-                graph_name: "email".into(),
-                ..Default::default()
-            });
-            ex.run(&program, &design, &graph).unwrap()
+        let compiled = session.compile_with(Translator::of_kind(kind), &program).unwrap();
+        bench(&format!("load (prep+deploy) [{}]", kind.label()), 1, 5, || {
+            compiled.load(&graph, PrepOptions::named("email")).unwrap()
+        });
+        let mut bound = compiled.load(&graph, PrepOptions::named("email")).unwrap();
+        bench(&format!("simulate+oracle query [{}]", kind.label()), 1, 5, || {
+            bound.run(&RunOptions::default()).unwrap()
         });
     }
 }

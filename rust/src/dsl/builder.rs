@@ -92,6 +92,24 @@ impl GasProgramBuilder {
         self
     }
 
+    /// Finalize and compile against a session in one step — the terminal
+    /// of the fluent chain under the compile-once lifecycle. Validation
+    /// failures surface as typed [`CompileError::InvalidProgram`] values
+    /// instead of panics or stringly errors.
+    ///
+    /// [`CompileError::InvalidProgram`]: crate::engine::CompileError
+    pub fn compile(
+        self,
+        session: &crate::engine::Session,
+    ) -> Result<crate::engine::CompiledPipeline, crate::engine::CompileError> {
+        let name = self.name.clone();
+        let program = self.build().map_err(|e| crate::engine::CompileError::InvalidProgram {
+            program: name,
+            reason: e.to_string(),
+        })?;
+        session.compile(&program)
+    }
+
     /// Finalize. Fails with a descriptive error when the combination is
     /// not implementable (see [`validate::check`]).
     pub fn build(self) -> Result<GasProgram> {

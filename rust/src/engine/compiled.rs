@@ -1,0 +1,206 @@
+//! **CompiledPipeline** — a program translated, scheduled, admitted, and
+//! (modeled) flashed, exactly once. The reusable artifact of
+//! [`super::Session::compile`]: bind it to any number of graphs with
+//! [`CompiledPipeline::load`], then issue cheap per-query
+//! [`RunOptions`]-driven runs on the resulting
+//! [`super::BoundPipeline`].
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::accel::device::DeviceModel;
+use crate::comm::CommManager;
+use crate::dsl::program::GasProgram;
+use crate::graph::edgelist::EdgeList;
+use crate::graph::VertexId;
+use crate::prep::prepared::{PrepOptions, PreparedGraph};
+use crate::runtime::KernelRegistry;
+use crate::sched::ParallelismPlan;
+use crate::translator::Design;
+
+use super::bound::BoundPipeline;
+use super::metrics::RunReport;
+
+/// Per-query knobs — everything that may change between two queries on
+/// the same bound pipeline. This is the cheap half of the old
+/// `ExecutorConfig`.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Source vertex for rooted algorithms (in the prepared graph's id
+    /// space when reordering was applied).
+    pub root: VertexId,
+    /// PageRank tolerance.
+    pub tolerance: f64,
+    /// Drive the AOT/XLA kernel for this query when the pipeline has one.
+    pub use_xla: bool,
+    /// Cross-check XLA against the software oracle.
+    pub verify: bool,
+    /// Write a per-superstep CSV trace here (None = no trace).
+    pub trace_path: Option<PathBuf>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self { root: 0, tolerance: 1e-6, use_xla: true, verify: true, trace_path: None }
+    }
+}
+
+impl RunOptions {
+    /// Default options rooted at `root` — the common multi-root sweep case.
+    pub fn from_root(root: VertexId) -> Self {
+        Self { root, ..Self::default() }
+    }
+
+    pub fn with_tolerance(mut self, tolerance: f64) -> Self {
+        self.tolerance = tolerance;
+        self
+    }
+
+    pub fn with_trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace_path = Some(path.into());
+        self
+    }
+}
+
+/// A fully-compiled, device-admitted pipeline: program + design + the
+/// resolved XLA registry, plus the modeled one-time flash cost. Immutable
+/// and reusable across graphs.
+pub struct CompiledPipeline {
+    pub(crate) program: GasProgram,
+    pub(crate) design: Design,
+    pub(crate) device: DeviceModel,
+    pub(crate) registry: Option<Arc<KernelRegistry>>,
+    /// Modeled xclbin flash time, accounted once per deployment.
+    pub(crate) flash_seconds: f64,
+    /// Measured wall time of the compile stage (validation + translate +
+    /// artifact lookup) — the real cost `load`/`run` no longer pay.
+    pub(crate) compile_wall_seconds: f64,
+}
+
+// Manual Debug: the PJRT registry handle is opaque.
+impl std::fmt::Debug for CompiledPipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledPipeline")
+            .field("program", &self.program.name)
+            .field("translator", &self.design.kind)
+            .field("hdl_lines", &self.design.hdl_lines)
+            .field("has_xla", &self.has_xla())
+            .finish_non_exhaustive()
+    }
+}
+
+impl CompiledPipeline {
+    pub(crate) fn from_parts(
+        program: GasProgram,
+        design: Design,
+        device: DeviceModel,
+        registry: Option<Arc<KernelRegistry>>,
+        flash_seconds: f64,
+        compile_wall_seconds: f64,
+    ) -> Self {
+        Self { program, design, device, registry, flash_seconds, compile_wall_seconds }
+    }
+
+    pub fn program(&self) -> &GasProgram {
+        &self.program
+    }
+
+    pub fn design(&self) -> &Design {
+        &self.design
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        &self.device
+    }
+
+    /// Modeled compile-period seconds (translate + synthesis), Fig. 5's
+    /// compilation bar — a one-time cost under this API.
+    pub fn compile_seconds(&self) -> f64 {
+        self.design.compile_seconds()
+    }
+
+    /// Measured wall seconds the compile stage actually took.
+    pub fn compile_wall_seconds(&self) -> f64 {
+        self.compile_wall_seconds
+    }
+
+    /// Whether queries can use the AOT/XLA functional path (canonical
+    /// program + artifact registry available).
+    pub fn has_xla(&self) -> bool {
+        self.program.kind.is_some() && self.registry.is_some()
+    }
+
+    /// The parallelism the design was scheduled with.
+    pub fn plan(&self) -> ParallelismPlan {
+        ParallelismPlan::new(self.design.pipeline.lanes, self.design.pipeline.pes)
+    }
+
+    /// Prepare `graph` (Reorder/Partition/Layout once) and bind it:
+    /// configures the simulated shell and transports the CSR to device
+    /// DDR. Queries on the result skip translate, prep, and flash.
+    pub fn load(&self, graph: &EdgeList, opts: PrepOptions) -> Result<BoundPipeline<'_>> {
+        let prepared = PreparedGraph::prepare(graph, &opts)?;
+        self.bind(prepared)
+    }
+
+    /// Bind an already-prepared graph. Accepts an `Arc` so one prepared
+    /// graph can be shared across pipelines without copying its arrays.
+    pub fn bind(&self, graph: impl Into<Arc<PreparedGraph>>) -> Result<BoundPipeline<'_>> {
+        let graph = graph.into();
+        let plan = self.plan();
+        let mut comm = CommManager::new();
+        comm.shell.configure(
+            &format!("{}.xclbin", self.design.program_name),
+            plan.pipelines,
+            plan.pes,
+        )?;
+        let transfer = comm.transport_graph(&graph.csr)?;
+        let deploy_seconds = self.flash_seconds + transfer.seconds;
+        Ok(BoundPipeline::new(self, graph, comm, plan, deploy_seconds))
+    }
+
+    /// One-shot convenience: bind the shared graph (O(1), no array copies)
+    /// and run a single query. Prefer [`Self::load`] + repeated runs for
+    /// query traffic.
+    pub fn run_on(&self, graph: &Arc<PreparedGraph>, opts: &RunOptions) -> Result<RunReport> {
+        self.bind(graph.clone())?.run(opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+    use crate::engine::session::{Session, SessionConfig};
+    use crate::graph::generate;
+
+    fn session() -> Session {
+        Session::new(SessionConfig { use_xla: false, ..Default::default() })
+    }
+
+    #[test]
+    fn load_binds_and_reports_deploy_cost() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(100, 800, 1);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        assert!(bound.deploy_seconds() >= crate::engine::executor::FLASH_SECONDS);
+        assert_eq!(bound.graph().num_vertices(), 100);
+    }
+
+    #[test]
+    fn run_on_shares_a_prepared_graph_across_pipelines() {
+        let s = session();
+        let g = generate::erdos_renyi(80, 500, 2);
+        let prepared = Arc::new(PreparedGraph::prepare(&g, &PrepOptions::named("er")).unwrap());
+        let bfs = s.compile(&algorithms::bfs()).unwrap();
+        let wcc = s.compile(&algorithms::wcc()).unwrap();
+        let r1 = bfs.run_on(&prepared, &RunOptions::default()).unwrap();
+        let r2 = wcc.run_on(&prepared, &RunOptions::default()).unwrap();
+        assert_eq!(r1.graph_name, "er");
+        assert_eq!(r2.graph_name, "er");
+        assert!(r1.supersteps > 0 && r2.supersteps > 0);
+    }
+}

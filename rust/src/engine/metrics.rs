@@ -48,6 +48,13 @@ pub struct RunReport {
     /// "running time includes the compilation time, the data preprocessing
     /// time and the algorithm execution time").
     pub rt_seconds: f64,
+    /// One-time seconds (prep + compile + deploy): paid once per
+    /// compile/load under the `Session` lifecycle and amortized across
+    /// queries. `rt_seconds = setup_seconds + sim_exec_seconds`.
+    pub setup_seconds: f64,
+    /// Per-query seconds (simulated exec + XLA functional exec): what each
+    /// additional query on a bound pipeline costs.
+    pub query_seconds: f64,
     /// TP in MTEPS from the cycle model.
     pub simulated_mteps: f64,
 
@@ -62,8 +69,8 @@ impl RunReport {
     pub fn summary(&self) -> String {
         format!(
             "{} [{}] on {} ({}v/{}e): {} supersteps, {:.1} MTEPS simulated, \
-             RT {:.1}s (prep {:.2} + compile {:.1} + deploy {:.2} + exec {:.4}), \
-             {} HDL lines{}",
+             RT {:.1}s (setup {:.1} = prep {:.2} + compile {:.1} + deploy {:.2}; \
+             query exec {:.4}), {} HDL lines{}",
             self.program,
             self.translator,
             self.graph_name,
@@ -72,6 +79,7 @@ impl RunReport {
             self.supersteps,
             self.simulated_mteps,
             self.rt_seconds,
+            self.setup_seconds,
             self.prep_seconds,
             self.compile_seconds,
             self.deploy_seconds,
@@ -107,6 +115,8 @@ mod tests {
             edges_traversed: 20,
             hdl_lines: 35,
             rt_seconds: 4.101,
+            setup_seconds: 4.1,
+            query_seconds: 0.011,
             simulated_mteps: 314.0,
             sim: SimStats::default(),
             oracle_deviation: Some(0.0),

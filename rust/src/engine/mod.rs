@@ -1,16 +1,34 @@
 //! Execution engine: ties the DSL, translator, scheduler, communication
 //! manager, cycle simulator, and the AOT/XLA runtime into the paper's
-//! Algorithm 1 flow. See [`executor::Executor`] for the entry point,
-//! [`gas`] for the software oracle, and [`xla_engine`] for the AOT path.
+//! Algorithm 1 flow — as a **compile-once / run-many lifecycle**:
+//!
+//! * [`session::Session`] owns process-wide state (device model, default
+//!   translator, the lazily-opened PJRT [`crate::runtime::KernelRegistry`]);
+//! * [`compiled::CompiledPipeline`] is one program translated, scheduled,
+//!   and (modeled) flashed, exactly once;
+//! * [`bound::BoundPipeline`] binds a compiled pipeline to a
+//!   [`crate::prep::PreparedGraph`] and serves cheap per-query
+//!   [`compiled::RunOptions`]-driven runs.
+//!
+//! The legacy one-shot [`executor::Executor`] remains as a deprecated shim
+//! delegating to the lifecycle. See [`gas`] for the software oracle and
+//! [`xla_engine`] for the AOT path.
 
+pub mod bound;
+pub mod compiled;
 pub mod executor;
 pub mod gas;
 pub mod metrics;
+pub mod session;
 pub mod trace;
 pub mod xla_engine;
 
+pub use bound::BoundPipeline;
+pub use compiled::{CompiledPipeline, RunOptions};
+#[allow(deprecated)]
 pub use executor::{Executor, ExecutorConfig};
 pub use gas::{GasResult, SuperstepTrace};
 pub use metrics::{FunctionalPath, RunReport};
+pub use session::{CompileError, Session, SessionConfig};
 pub use trace::Trace;
 pub use xla_engine::XlaRunResult;

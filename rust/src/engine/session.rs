@@ -1,0 +1,246 @@
+//! **Session** — the process-wide entry point of the compile-once /
+//! run-many lifecycle:
+//!
+//! ```text
+//! Session::new(cfg) ──compile(&program)──▶ CompiledPipeline
+//!                                              │ load(&graph, PrepOptions)
+//!                                              ▼
+//!                                         BoundPipeline ──run(RunOptions)──▶ RunReport
+//! ```
+//!
+//! The session owns what is paid once per process: the PJRT artifact
+//! registry (opened lazily, shared by every pipeline), the device model,
+//! and the default translator. `compile` pays the per-program costs once —
+//! validation, lowering, scheduling, code generation, the modeled
+//! synthesis + bitstream flash, and the XLA artifact-registry lookup — so
+//! that queries only pay the per-query superstep work.
+
+use std::cell::OnceCell;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::accel::device::DeviceModel;
+use crate::dsl::program::GasProgram;
+use crate::runtime::KernelRegistry;
+use crate::translator::Translator;
+
+use super::compiled::CompiledPipeline;
+use super::executor::FLASH_SECONDS;
+
+/// Process-wide configuration: the knobs that outlive any single program
+/// or graph.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Target device for admission checks and the cycle simulator.
+    pub device: DeviceModel,
+    /// Default translation flow (override per program with
+    /// [`Session::compile_with`]).
+    pub translator: Translator,
+    /// Drive the AOT/XLA kernels when a program has one. When the artifact
+    /// registry cannot be opened (artifacts not built, PJRT stubbed out),
+    /// runs fall back to the software oracle instead of failing.
+    pub use_xla: bool,
+    /// Artifact directory override (`None` = `$JGRAPH_ARTIFACTS` or the
+    /// workspace `artifacts/` lookup).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            device: DeviceModel::u200(),
+            translator: Translator::jgraph(),
+            use_xla: true,
+            artifact_dir: None,
+        }
+    }
+}
+
+/// Typed compile-stage errors: what can go wrong between a DSL program and
+/// a deployable [`CompiledPipeline`]. Each variant names the offending
+/// program so multi-program services can attribute failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// The program failed DSL validation (see [`crate::dsl::validate`]).
+    InvalidProgram { program: String, reason: String },
+    /// Lowering/code generation failed.
+    Translation { program: String, reason: String },
+    /// The translated design does not fit the session's device.
+    DoesNotFit { program: String, translator: &'static str, device: &'static str },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::InvalidProgram { program, reason } => {
+                write!(f, "program {program:?} failed validation: {reason}")
+            }
+            CompileError::Translation { program, reason } => {
+                write!(f, "translating program {program:?} failed: {reason}")
+            }
+            CompileError::DoesNotFit { program, translator, device } => {
+                write!(f, "design {program:?} via {translator} does not fit {device}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// The process-wide state of the lifecycle. Create one per process (or
+/// per tenant) and reuse it: registries and manifests are opened once.
+pub struct Session {
+    config: SessionConfig,
+    /// Lazily-opened artifact registry; `None` inside means "tried and
+    /// unavailable" (recorded once, not retried per compile).
+    registry: OnceCell<Option<Arc<KernelRegistry>>>,
+    /// Injected registry (tests/benches share one across sessions).
+    injected: Option<Arc<KernelRegistry>>,
+}
+
+impl Session {
+    pub fn new(config: SessionConfig) -> Self {
+        Self { config, registry: OnceCell::new(), injected: None }
+    }
+
+    /// Inject a shared registry (benches/tests); otherwise opened lazily
+    /// on the first compile of a canonical program.
+    pub fn with_registry(mut self, registry: Arc<KernelRegistry>) -> Self {
+        self.injected = Some(registry);
+        self
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        &self.config.device
+    }
+
+    /// The artifact registry, opened at most once per session. `None` when
+    /// XLA is disabled or the artifacts are unavailable.
+    pub(crate) fn registry(&self) -> Option<Arc<KernelRegistry>> {
+        if let Some(r) = &self.injected {
+            return Some(r.clone());
+        }
+        if !self.config.use_xla {
+            return None;
+        }
+        self.registry
+            .get_or_init(|| {
+                let opened = match &self.config.artifact_dir {
+                    Some(dir) => KernelRegistry::open(dir),
+                    None => KernelRegistry::open_default(),
+                };
+                opened.ok().map(Arc::new)
+            })
+            .clone()
+    }
+
+    /// Compile a program with the session's default translator. All
+    /// one-time program costs happen here; the result is reusable across
+    /// graphs and queries.
+    pub fn compile(&self, program: &GasProgram) -> Result<CompiledPipeline, CompileError> {
+        self.compile_with(self.config.translator, program)
+    }
+
+    /// Compile with an explicit translator (flow and parallelism plan).
+    pub fn compile_with(
+        &self,
+        translator: Translator,
+        program: &GasProgram,
+    ) -> Result<CompiledPipeline, CompileError> {
+        let t0 = Instant::now();
+        crate::dsl::validate::check(program).map_err(|e| CompileError::InvalidProgram {
+            program: program.name.clone(),
+            reason: e.to_string(),
+        })?;
+        let design = translator.translate(program).map_err(|e| CompileError::Translation {
+            program: program.name.clone(),
+            reason: e.to_string(),
+        })?;
+        if !design.fits(&self.config.device) {
+            return Err(CompileError::DoesNotFit {
+                program: program.name.clone(),
+                translator: design.kind.label(),
+                device: self.config.device.name,
+            });
+        }
+        // XLA artifact lookup happens once, at compile time: the registry
+        // (and its manifest) is resolved here and pinned into the pipeline.
+        let registry =
+            if self.config.use_xla && program.kind.is_some() { self.registry() } else { None };
+        Ok(CompiledPipeline::from_parts(
+            program.clone(),
+            design,
+            self.config.device.clone(),
+            registry,
+            FLASH_SECONDS,
+            t0.elapsed().as_secs_f64(),
+        ))
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new(SessionConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+    use crate::dsl::program::Writeback;
+    use crate::sched::ParallelismPlan;
+
+    #[test]
+    fn compile_succeeds_for_canonical_algorithms() {
+        let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+        for p in algorithms::all() {
+            let c = session.compile(&p).unwrap();
+            assert_eq!(c.program().name, p.name);
+            assert!(c.compile_seconds() > 0.0);
+        }
+    }
+
+    #[test]
+    fn invalid_program_is_a_typed_error() {
+        let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+        let mut evil = algorithms::bfs();
+        evil.reduce = crate::dsl::program::ReduceOp::Sum;
+        evil.writeback = Writeback::IfUnvisited;
+        match session.compile(&evil) {
+            Err(CompileError::InvalidProgram { program, reason }) => {
+                assert_eq!(program, "bfs");
+                assert!(reason.contains("not idempotent"), "{reason}");
+            }
+            other => panic!("expected InvalidProgram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_plan_is_does_not_fit() {
+        let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+        let translator = Translator::jgraph().with_plan(ParallelismPlan::new(512, 8));
+        let err = session.compile_with(translator, &algorithms::bfs()).unwrap_err();
+        assert!(matches!(err, CompileError::DoesNotFit { .. }));
+        assert!(err.to_string().contains("does not fit"), "{err}");
+    }
+
+    #[test]
+    fn registry_is_resolved_at_most_once() {
+        let session = Session::new(SessionConfig {
+            use_xla: true,
+            artifact_dir: Some(std::path::PathBuf::from("/nonexistent/jgraph-artifacts")),
+            ..Default::default()
+        });
+        // both compiles observe the same (cached) lookup failure
+        assert!(session.registry().is_none());
+        assert!(session.registry().is_none());
+        let c = session.compile(&algorithms::bfs()).unwrap();
+        assert!(!c.has_xla(), "no artifacts -> software fallback");
+    }
+}

@@ -29,18 +29,32 @@
 //!        └──────── engine ──────────┴──▶ XLA superstep loop    (runtime)
 //! ```
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! The API follows the paper's economics — tens of seconds to generate a
+//! design, then many fast traversals — as a **compile-once / run-many
+//! lifecycle**: a [`engine::Session`] owns process-wide state, `compile`
+//! pays the per-program costs (translate, schedule, modeled synthesis +
+//! flash, XLA artifact lookup) exactly once, `load` pays the per-graph
+//! costs (Reorder/Partition/Layout, transport) exactly once, and `run` is
+//! the cheap per-query call.
+//!
+//! Quickstart (see `examples/quickstart.rs`; `examples/multi_query.rs`
+//! shows the amortization):
 //!
 //! ```no_run
 //! use jgraph::prelude::*;
 //!
+//! let session = Session::new(SessionConfig::default());
+//! let pipeline = session.compile(&algorithms::bfs()).unwrap(); // once
+//!
 //! let graph = jgraph::graph::generate::email_eu_core_like(1);
-//! let program = jgraph::dsl::algorithms::bfs();
-//! let design = Translator::jgraph().translate(&program).unwrap();
-//! let report = jgraph::engine::Executor::new(ExecutorConfig::default())
-//!     .run(&program, &design, &graph)
+//! let mut bound = pipeline
+//!     .load(&graph, PrepOptions::named("email-Eu-core")) // once per graph
 //!     .unwrap();
-//! println!("BFS: {:.1} simulated MTEPS", report.simulated_mteps);
+//!
+//! for root in [0, 7, 42] {
+//!     let report = bound.run(&RunOptions::from_root(root)).unwrap(); // cheap
+//!     println!("BFS from {root}: {:.1} simulated MTEPS", report.simulated_mteps);
+//! }
 //! ```
 
 pub mod accel;
@@ -55,14 +69,22 @@ pub mod sched;
 pub mod translator;
 
 /// Convenience re-exports for the common flow: build graph → author DSL →
-/// translate → execute → report.
+/// `Session::compile` → `CompiledPipeline::load` → `BoundPipeline::run` →
+/// report.
 pub mod prelude {
     pub use crate::accel::device::DeviceModel;
     pub use crate::dsl::algorithms;
+    pub use crate::dsl::builder::GasProgramBuilder;
     pub use crate::dsl::program::GasProgram;
-    pub use crate::engine::{Executor, ExecutorConfig, RunReport};
+    #[allow(deprecated)]
+    pub use crate::engine::{Executor, ExecutorConfig};
+    pub use crate::engine::{
+        BoundPipeline, CompileError, CompiledPipeline, FunctionalPath, RunOptions, RunReport,
+        Session, SessionConfig,
+    };
     pub use crate::graph::csr::Csr;
     pub use crate::graph::edgelist::EdgeList;
+    pub use crate::prep::prepared::{PrepOptions, PreparedGraph};
     pub use crate::sched::ParallelismPlan;
     pub use crate::translator::{Translator, TranslatorKind};
 }

@@ -17,8 +17,9 @@ use anyhow::{bail, Context, Result};
 
 use jgraph::dsl::algorithms;
 use jgraph::dsl::program::GasProgram;
-use jgraph::engine::{Executor, ExecutorConfig};
+use jgraph::engine::{CompileError, RunOptions, Session, SessionConfig};
 use jgraph::graph::{edgelist::EdgeList, generate, io};
+use jgraph::prep::prepared::PrepOptions;
 use jgraph::prep::reorder::ReorderStrategy;
 use jgraph::sched::ParallelismPlan;
 use jgraph::translator::{Translator, TranslatorKind};
@@ -162,6 +163,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     let program = program_of(&args.get_or("algo", "bfs"))?;
     let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
     let device = jgraph::accel::device::DeviceModel::u200();
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
     println!(
         "design-space sweep: {} on {name} ({}v/{}e)",
         program.name,
@@ -174,19 +176,19 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     );
     for pipes in [1u32, 2, 4, 8, 16, 32] {
         for pes in [1u32, 2, 4] {
-            let design = Translator::jgraph()
-                .with_plan(ParallelismPlan::new(pipes, pes))
-                .translate(&program)?;
-            let fits = design.fits(&device);
-            let mteps = if fits {
-                let mut ex = Executor::new(ExecutorConfig {
-                    use_xla: false,
-                    graph_name: name.clone(),
-                    ..Default::default()
-                });
-                ex.run(&program, &design, &el)?.simulated_mteps
-            } else {
-                0.0
+            let translator = Translator::jgraph().with_plan(ParallelismPlan::new(pipes, pes));
+            // compile-once per design point; the graph loads once per point
+            // (one sweep = many compiles, one graph)
+            let (design, mteps, fits) = match session.compile_with(translator, &program) {
+                Ok(compiled) => {
+                    let mut bound = compiled.load(&el, PrepOptions::named(name.clone()))?;
+                    let r = bound.run(&RunOptions::default())?;
+                    (compiled.design().clone(), r.simulated_mteps, true)
+                }
+                Err(CompileError::DoesNotFit { .. }) => {
+                    (translator.translate(&program)?, 0.0, false)
+                }
+                Err(e) => return Err(e.into()),
             };
             println!(
                 "{:>9} {:>4} | {:>10.1} | {:>9} | {:>5.1}% | {:>5}",
@@ -201,15 +203,11 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     }
     if args.flag("reorders") {
         println!("\nreorder sweep (8x1):");
-        let design = Translator::jgraph().translate(&program)?;
+        let compiled = session.compile(&program)?;
         for &s in jgraph::prep::reorder::all_strategies() {
-            let mut ex = Executor::new(ExecutorConfig {
-                use_xla: false,
-                reorder: Some(s),
-                graph_name: name.clone(),
-                ..Default::default()
-            });
-            let r = ex.run(&program, &design, &el)?;
+            let mut bound =
+                compiled.load(&el, PrepOptions::named(name.clone()).with_reorder(s))?;
+            let r = bound.run(&RunOptions::default())?;
             println!("  {:>14?} | {:>10.1} MTEPS", s, r.simulated_mteps);
         }
     }
@@ -221,22 +219,26 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let program = program_of(&args.get_or("algo", "bfs"))?;
     let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
     let plan = ParallelismPlan::new(args.get_num("pipelines", 8)?, args.get_num("pes", 1)?);
-    let design = Translator::of_kind(translator_of(&args.get_or("translator", "jgraph"))?)
-        .with_plan(plan)
-        .translate(&program)?;
+    let translator = Translator::of_kind(translator_of(&args.get_or("translator", "jgraph"))?)
+        .with_plan(plan);
     let reorder = match args.get("reorder") {
         None => None,
         Some(s) => Some(s.parse::<ReorderStrategy>()?),
     };
-    let mut ex = Executor::new(ExecutorConfig {
-        root: args.get_num("root", 0)?,
-        reorder,
+    let session = Session::new(SessionConfig {
+        translator,
         use_xla: !args.flag("no-xla"),
-        graph_name: name,
-        trace_path: args.get("trace").map(std::path::PathBuf::from),
         ..Default::default()
     });
-    let report = ex.run(&program, &design, &el)?;
+    let compiled = session.compile(&program)?;
+    let mut prep = PrepOptions::named(name);
+    prep.reorder = reorder;
+    let mut bound = compiled.load(&el, prep)?;
+    let report = bound.run(&RunOptions {
+        root: args.get_num("root", 0)?,
+        trace_path: args.get("trace").map(std::path::PathBuf::from),
+        ..Default::default()
+    })?;
     println!("{}", report.summary());
     if args.flag("verbose") {
         println!(

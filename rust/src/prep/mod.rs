@@ -4,8 +4,10 @@
 
 pub mod layout;
 pub mod partition;
+pub mod prepared;
 pub mod reorder;
 
 pub use layout::{convert, Layout};
 pub use partition::{partition, PartitionStrategy, Partitioning};
+pub use prepared::{PrepOptions, PreparedGraph};
 pub use reorder::{reorder, ReorderStrategy};

@@ -1,0 +1,164 @@
+//! **PreparedGraph** — the cached product of the per-graph preprocessing
+//! stages (Read → Layout → Reorder/Partition of the paper's Algorithm 1),
+//! plus derived quantities the simulator consumes (edge-gap locality).
+//!
+//! Preparing a graph is a one-time cost in the paper's economics: queries
+//! against the same graph reuse the CSR, the reorder permutation, the
+//! partitioning, and the locality statistics. The engine's
+//! [`crate::engine::CompiledPipeline::load`] builds one of these and binds
+//! it to a compiled design; [`PreparedGraph::prepare`] can also be called
+//! directly to share one prepared graph across several pipelines.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::graph::csr::Csr;
+use crate::graph::edgelist::EdgeList;
+use crate::graph::VertexId;
+
+use super::partition::{partition, PartitionStrategy, Partitioning};
+use super::reorder::{reorder, ReorderStrategy};
+
+/// Per-graph deployment knobs: everything that shapes how a graph is laid
+/// out on the device, decided once per graph (not per query). This is the
+/// new home of the old `ExecutorConfig::{graph_name, reorder, partition}`
+/// fields.
+#[derive(Debug, Clone)]
+pub struct PrepOptions {
+    /// Label for reports.
+    pub graph_name: String,
+    /// Optional Reorder preprocessing.
+    pub reorder: Option<ReorderStrategy>,
+    /// Optional Partition preprocessing (parts, strategy) for multi-PE
+    /// placement.
+    pub partition: Option<(usize, PartitionStrategy)>,
+}
+
+impl Default for PrepOptions {
+    fn default() -> Self {
+        Self { graph_name: "graph".into(), reorder: None, partition: None }
+    }
+}
+
+impl PrepOptions {
+    /// Default options with a report label.
+    pub fn named(graph_name: impl Into<String>) -> Self {
+        Self { graph_name: graph_name.into(), ..Self::default() }
+    }
+
+    pub fn with_reorder(mut self, strategy: ReorderStrategy) -> Self {
+        self.reorder = Some(strategy);
+        self
+    }
+
+    pub fn with_partition(mut self, parts: usize, strategy: PartitionStrategy) -> Self {
+        self.partition = Some((parts, strategy));
+        self
+    }
+}
+
+/// A graph after preprocessing: the layout decisions (CSR + optional
+/// reorder/partition) and the derived statistics, computed exactly once
+/// and reused by every query.
+#[derive(Debug, Clone)]
+pub struct PreparedGraph {
+    /// Report label (from [`PrepOptions::graph_name`]).
+    pub name: String,
+    /// The on-device layout (out-edge CSR of the working graph).
+    pub csr: Csr,
+    /// `(strategy, perm)` with `perm[old] = new` when reordering was
+    /// applied. Roots passed to queries address the *reordered* id space,
+    /// matching the old executor's semantics.
+    pub reorder: Option<(ReorderStrategy, Vec<VertexId>)>,
+    /// Partitioning for multi-PE placement (cut stats land in reports).
+    pub partitioning: Option<Partitioning>,
+    /// Mean |src-dst| id gap (simulator locality input), cached so queries
+    /// do not rescan the edge array.
+    pub avg_edge_gap: f64,
+    /// Wall time of preparation (the Fig. 5 preparation period, paid once).
+    pub prep_seconds: f64,
+}
+
+impl PreparedGraph {
+    /// Run the preprocessing stages once: Reorder (optional) → Partition
+    /// (optional) → Layout (CSR) → locality scan.
+    pub fn prepare(graph: &EdgeList, opts: &PrepOptions) -> Result<Self> {
+        let t0 = Instant::now();
+        let reordered = opts.reorder.map(|strategy| {
+            let (el, perm) = reorder(graph, strategy);
+            (strategy, el, perm)
+        });
+        let working: &EdgeList = match &reordered {
+            Some((_, el, _)) => el,
+            None => graph,
+        };
+        let partitioning = match opts.partition {
+            Some((parts, strategy)) => Some(partition(working, parts, strategy)?),
+            None => None,
+        };
+        let csr = Csr::from_edgelist(working);
+        let avg_edge_gap = crate::engine::gas::avg_edge_gap(&csr);
+        Ok(Self {
+            name: opts.graph_name.clone(),
+            csr,
+            reorder: reordered.map(|(strategy, _, perm)| (strategy, perm)),
+            partitioning,
+            avg_edge_gap,
+            prep_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.csr.num_vertices()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.csr.num_edges()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn prepare_plain_builds_csr_and_gap() {
+        let g = generate::chain(50);
+        let p = PreparedGraph::prepare(&g, &PrepOptions::named("chain")).unwrap();
+        assert_eq!(p.name, "chain");
+        assert_eq!(p.num_vertices(), 50);
+        assert_eq!(p.num_edges(), 49);
+        assert!((p.avg_edge_gap - 1.0).abs() < 1e-9, "chain gap is 1");
+        assert!(p.reorder.is_none() && p.partitioning.is_none());
+        assert!(p.prep_seconds >= 0.0);
+    }
+
+    #[test]
+    fn prepare_applies_reorder_and_partition() {
+        let g = generate::rmat(8, 2_000, 0.57, 0.19, 0.19, 5);
+        let opts = PrepOptions::named("rmat")
+            .with_reorder(ReorderStrategy::DegreeSort)
+            .with_partition(4, PartitionStrategy::Hash);
+        let p = PreparedGraph::prepare(&g, &opts).unwrap();
+        let (strategy, perm) = p.reorder.as_ref().unwrap();
+        assert_eq!(*strategy, ReorderStrategy::DegreeSort);
+        assert_eq!(perm.len(), g.num_vertices);
+        let part = p.partitioning.as_ref().unwrap();
+        assert_eq!(part.num_parts, 4);
+        assert_eq!(part.assignment.len(), g.num_vertices);
+        // reordering preserves the edge multiset size
+        assert_eq!(p.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn prepare_matches_manual_pipeline() {
+        // PreparedGraph must equal reorder -> Csr done by hand
+        let g = generate::erdos_renyi(100, 600, 9);
+        let opts = PrepOptions::named("er").with_reorder(ReorderStrategy::BfsLocality);
+        let p = PreparedGraph::prepare(&g, &opts).unwrap();
+        let (manual, _) = reorder(&g, ReorderStrategy::BfsLocality);
+        assert_eq!(p.csr, Csr::from_edgelist(&manual));
+    }
+}

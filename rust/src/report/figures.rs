@@ -5,8 +5,9 @@
 use anyhow::Result;
 
 use crate::dsl::algorithms;
-use crate::engine::{Executor, ExecutorConfig};
+use crate::engine::{RunOptions, Session, SessionConfig};
 use crate::graph::generate;
+use crate::prep::prepared::PrepOptions;
 use crate::translator::{Translator, TranslatorKind};
 
 /// Figure 1 — development approaches: programming cost vs performance.
@@ -73,15 +74,12 @@ fn authoring_seconds(kind: TranslatorKind) -> f64 {
 pub fn fig5_devcost() -> Result<(String, Vec<Fig5Row>)> {
     let program = algorithms::bfs();
     let graph = generate::email_eu_core_like(42);
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
     let mut rows = Vec::new();
     for kind in TranslatorKind::all() {
-        let design = Translator::of_kind(kind).translate(&program)?;
-        let mut ex = Executor::new(ExecutorConfig {
-            use_xla: false,
-            graph_name: "email-Eu-core".into(),
-            ..Default::default()
-        });
-        let r = ex.run(&program, &design, &graph)?;
+        let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
+        let mut bound = compiled.load(&graph, PrepOptions::named("email-Eu-core"))?;
+        let r = bound.run(&RunOptions::default())?;
         rows.push(Fig5Row {
             tool: kind.label(),
             preparation: authoring_seconds(kind) + r.prep_seconds,

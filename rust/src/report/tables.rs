@@ -5,9 +5,10 @@
 use anyhow::Result;
 
 use crate::dsl::{algorithms, registry};
-use crate::engine::{Executor, ExecutorConfig};
+use crate::engine::{RunOptions, Session, SessionConfig};
 use crate::graph::edgelist::EdgeList;
 use crate::graph::generate;
+use crate::prep::prepared::PrepOptions;
 use crate::translator::{Translator, TranslatorKind};
 
 use super::render_table;
@@ -133,16 +134,14 @@ pub fn table5_graphs(small_only: bool) -> Vec<(String, EdgeList)> {
 pub fn table5(use_xla: bool, small_only: bool) -> Result<(String, Vec<Table5Row>)> {
     let program = algorithms::bfs();
     let graphs = table5_graphs(small_only);
+    let session = Session::new(SessionConfig { use_xla, ..Default::default() });
     let mut rows = Vec::new();
     for kind in TranslatorKind::all() {
-        let design = Translator::of_kind(kind).translate(&program)?;
+        // compile once per flow; every graph binds against the same design
+        let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
         for (name, el) in &graphs {
-            let mut ex = Executor::new(ExecutorConfig {
-                use_xla,
-                graph_name: name.clone(),
-                ..Default::default()
-            });
-            let r = ex.run(&program, &design, el)?;
+            let mut bound = compiled.load(el, PrepOptions::named(name.clone()))?;
+            let r = bound.run(&RunOptions::default())?;
             rows.push(Table5Row {
                 translator: kind.label(),
                 code_lines: r.hdl_lines,

@@ -1,5 +1,11 @@
 //! Integration: full executor flow (software functional path) across
 //! algorithms, graphs, preprocessing options, and translator flows.
+//!
+//! This suite intentionally keeps exercising the deprecated one-shot
+//! `Executor` shim — it is the regression net guaranteeing the shim stays
+//! equivalent to the `Session` lifecycle (covered by
+//! `integration_session.rs`).
+#![allow(deprecated)]
 
 use jgraph::dsl::algorithms;
 use jgraph::engine::{Executor, ExecutorConfig, FunctionalPath};

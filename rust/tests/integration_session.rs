@@ -1,0 +1,209 @@
+//! Integration for the compile-once / run-many lifecycle:
+//! `Session::compile` → `CompiledPipeline::load` → `BoundPipeline::run`.
+//!
+//! Covers the three contract points of the redesign: (1) repeated runs on
+//! one bound pipeline are exactly equivalent to repeated one-shot
+//! `Executor::run`s, (2) `run_batch` is exactly equivalent to sequential
+//! runs, and (3) builder → `compile` failures surface as typed
+//! [`CompileError`] values, not panics.
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::apply::ApplyExpr;
+use jgraph::dsl::builder::GasProgramBuilder;
+use jgraph::dsl::program::{ReduceOp, StateType, Writeback};
+use jgraph::engine::{CompileError, RunOptions, RunReport, Session, SessionConfig};
+use jgraph::graph::generate;
+use jgraph::prep::prepared::{PrepOptions, PreparedGraph};
+use jgraph::prep::reorder::ReorderStrategy;
+use jgraph::sched::ParallelismPlan;
+use jgraph::translator::Translator;
+
+fn software_session() -> Session {
+    Session::new(SessionConfig { use_xla: false, ..Default::default() })
+}
+
+/// The deterministic result surface of a run (timing fields excluded).
+fn result_key(r: &RunReport) -> (u32, u64, String, usize, usize, u64) {
+    (
+        r.supersteps,
+        r.edges_traversed,
+        format!("{:.12e}", r.simulated_mteps),
+        r.num_vertices,
+        r.num_edges,
+        r.sim.cycles.total(),
+    )
+}
+
+#[test]
+#[allow(deprecated)]
+fn bound_pipeline_runs_match_fresh_executor_runs() {
+    let g = generate::rmat(10, 20_000, 0.57, 0.19, 0.19, 11);
+    let program = algorithms::wcc();
+
+    // new lifecycle: compile once, load once, run twice
+    let session = software_session();
+    let compiled = session.compile(&program).unwrap();
+    let mut bound = compiled
+        .load(&g, PrepOptions::named("rmat10").with_reorder(ReorderStrategy::DegreeSort))
+        .unwrap();
+    let n1 = bound.run(&RunOptions::default()).unwrap();
+    let n2 = bound.run(&RunOptions::default()).unwrap();
+
+    // legacy shim: everything re-paid per call
+    use jgraph::engine::{Executor, ExecutorConfig};
+    let design = Translator::jgraph().translate(&program).unwrap();
+    let mut run_old = || {
+        let mut ex = Executor::new(ExecutorConfig {
+            use_xla: false,
+            reorder: Some(ReorderStrategy::DegreeSort),
+            graph_name: "rmat10".into(),
+            ..Default::default()
+        });
+        ex.run(&program, &design, &g).unwrap()
+    };
+    let o1 = run_old();
+    let o2 = run_old();
+
+    // identical result surface across all four runs
+    assert_eq!(result_key(&n1), result_key(&n2), "bound runs must be deterministic");
+    assert_eq!(result_key(&o1), result_key(&o2), "executor runs must be deterministic");
+    assert_eq!(result_key(&n1), result_key(&o1), "lifecycle must equal the one-shot shim");
+    assert_eq!(n1.graph_name, o1.graph_name);
+    assert_eq!(n1.translator, o1.translator);
+    assert_eq!(n1.hdl_lines, o1.hdl_lines);
+}
+
+#[test]
+fn run_batch_equals_sequential_runs() {
+    let g = generate::rmat(10, 30_000, 0.57, 0.19, 0.19, 21);
+    let session = software_session();
+    let compiled = session.compile(&algorithms::bfs()).unwrap();
+
+    let n = g.num_vertices as u32;
+    let queries: Vec<RunOptions> =
+        (0..8u32).map(|i| RunOptions::from_root((i * 977) % n)).collect();
+
+    let mut batch_bound = compiled.load(&g, PrepOptions::named("rmat10")).unwrap();
+    let batch = batch_bound.run_batch(&queries).unwrap();
+
+    let mut seq_bound = compiled.load(&g, PrepOptions::named("rmat10")).unwrap();
+    let sequential: Vec<_> =
+        queries.iter().map(|q| seq_bound.run(q).unwrap()).collect();
+
+    assert_eq!(batch.len(), sequential.len());
+    for (b, s) in batch.iter().zip(&sequential) {
+        assert_eq!(result_key(b), result_key(s));
+    }
+    assert_eq!(batch_bound.queries_run(), queries.len() as u64);
+}
+
+#[test]
+fn builder_compile_surfaces_typed_validation_errors() {
+    let session = software_session();
+    // Reduce(Sum) feeding the visited gate is rejected by DSL validation
+    let err = GasProgramBuilder::new("accumulating-bfs")
+        .state(StateType::I32)
+        .apply(ApplyExpr::src())
+        .reduce(ReduceOp::Sum)
+        .writeback(Writeback::IfUnvisited)
+        .compile(&session)
+        .unwrap_err();
+    match &err {
+        CompileError::InvalidProgram { program, reason } => {
+            assert_eq!(program, "accumulating-bfs");
+            assert!(reason.contains("Reduce(Sum)"), "{reason}");
+        }
+        other => panic!("expected InvalidProgram, got {other:?}"),
+    }
+    // a missing Apply is also an InvalidProgram, not a panic
+    let err = GasProgramBuilder::new("no-apply").compile(&session).unwrap_err();
+    assert!(matches!(err, CompileError::InvalidProgram { .. }), "{err:?}");
+}
+
+#[test]
+fn oversized_design_is_a_typed_does_not_fit() {
+    let session = software_session();
+    let translator = Translator::jgraph().with_plan(ParallelismPlan::new(512, 8));
+    let err = session.compile_with(translator, &algorithms::bfs()).unwrap_err();
+    match err {
+        CompileError::DoesNotFit { program, translator, device } => {
+            assert_eq!(program, "bfs");
+            assert_eq!(translator, "FAgraph");
+            assert!(device.contains("u200"));
+        }
+        other => panic!("expected DoesNotFit, got {other:?}"),
+    }
+}
+
+#[test]
+fn prep_options_carry_the_graph_name() {
+    let g = generate::erdos_renyi(120, 900, 6);
+    let session = software_session();
+    let compiled = session.compile(&algorithms::bfs()).unwrap();
+    let mut bound = compiled.load(&g, PrepOptions::named("my-graph")).unwrap();
+    let r = bound.run(&RunOptions::default()).unwrap();
+    assert_eq!(r.graph_name, "my-graph");
+    assert_eq!(bound.graph().name, "my-graph");
+}
+
+#[test]
+fn setup_is_paid_once_and_reported_consistently() {
+    let g = generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 31);
+    let session = software_session();
+    let compiled = session.compile(&algorithms::sssp()).unwrap();
+    let mut bound = compiled
+        .load(&g, PrepOptions::named("rmat9").with_reorder(ReorderStrategy::BfsLocality))
+        .unwrap();
+    let r1 = bound.run(&RunOptions::default()).unwrap();
+    let r2 = bound.run(&RunOptions::default()).unwrap();
+    // one-time periods are byte-identical across queries on one binding
+    assert_eq!(r1.prep_seconds, r2.prep_seconds);
+    assert_eq!(r1.compile_seconds, r2.compile_seconds);
+    assert_eq!(r1.deploy_seconds, r2.deploy_seconds);
+    assert_eq!(r1.setup_seconds, r2.setup_seconds);
+    // the report decomposition holds: rt = setup + simulated exec,
+    // setup = prep + compile + deploy
+    for r in [&r1, &r2] {
+        assert!((r.setup_seconds - (r.prep_seconds + r.compile_seconds + r.deploy_seconds))
+            .abs()
+            < 1e-12);
+        assert!((r.rt_seconds - (r.setup_seconds + r.sim_exec_seconds)).abs() < 1e-12);
+        assert!(r.query_seconds >= r.sim_exec_seconds);
+    }
+    assert!(bound.setup_seconds() >= jgraph::engine::executor::FLASH_SECONDS);
+}
+
+#[test]
+fn prepared_graph_is_shareable_across_pipelines() {
+    let g = generate::rmat(9, 6_000, 0.57, 0.19, 0.19, 41);
+    let prepared =
+        std::sync::Arc::new(PreparedGraph::prepare(&g, &PrepOptions::named("shared")).unwrap());
+    let session = software_session();
+    let bfs = session.compile(&algorithms::bfs()).unwrap();
+    let wcc = session.compile(&algorithms::wcc()).unwrap();
+    let r_bfs = bfs.run_on(&prepared, &RunOptions::default()).unwrap();
+    let r_wcc = wcc.run_on(&prepared, &RunOptions::default()).unwrap();
+    assert_eq!(r_bfs.graph_name, "shared");
+    assert_eq!(r_wcc.graph_name, "shared");
+    // the prepared layout is identical for both pipelines
+    assert_eq!(r_bfs.num_edges, r_wcc.num_edges);
+    assert!(r_bfs.supersteps > 0 && r_wcc.supersteps > 0);
+}
+
+#[test]
+fn trace_written_per_query_on_bound_pipeline() {
+    let g = generate::rmat(9, 4_000, 0.57, 0.19, 0.19, 33);
+    let session = software_session();
+    let compiled = session.compile(&algorithms::bfs()).unwrap();
+    let mut bound = compiled.load(&g, PrepOptions::named("rmat9")).unwrap();
+    let path = std::env::temp_dir().join("jgraph_session_trace.csv");
+    let r = bound
+        .run(&RunOptions::default().with_trace(&path))
+        .unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(csv.lines().count() as u32, r.supersteps + 1);
+    // a traceless query on the same binding leaves the file untouched
+    let before = std::fs::metadata(&path).unwrap().modified().unwrap();
+    bound.run(&RunOptions::default()).unwrap();
+    assert_eq!(std::fs::metadata(&path).unwrap().modified().unwrap(), before);
+}

@@ -1,0 +1,279 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, vendored so
+//! the workspace builds fully offline (the build environment has no crates
+//! registry). Implements the subset jgraph uses with anyhow-compatible
+//! semantics:
+//!
+//! * [`Error`] / [`Result`] — an erased error with a context chain;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros;
+//! * formatting: `{}` shows the outermost message, `{:#}` the full chain
+//!   joined by `": "`, `{:?}` the message plus a `Caused by:` list.
+//!
+//! Like the real crate, [`Error`] intentionally does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (`?` on any std error) coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>`, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, m) in self.chain().skip(1).enumerate() {
+                write!(f, "\n    {i}: {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        fn build(e: &(dyn std::error::Error + 'static)) -> Error {
+            Error { msg: e.to_string(), source: e.source().map(|s| Box::new(build(s))) }
+        }
+        build(&e)
+    }
+}
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: covers both std errors
+    /// and [`super::Error`] itself (which deliberately is not a std error).
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+    }
+
+    #[test]
+    fn debug_shows_caused_by() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("reading {}", "config"))
+            .unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("reading config"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("file missing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 42);
+            }
+            let n: u32 = "17".parse()?; // ParseIntError -> Error
+            Ok(n)
+        }
+        assert_eq!(inner(false).unwrap(), 17);
+        assert_eq!(inner(true).unwrap_err().to_string(), "boom 42");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert!(check(30).unwrap_err().to_string().contains("too big"));
+    }
+}
