@@ -1,0 +1,130 @@
+//! A miniature multi-query server: one compiled design + one prepared
+//! graph serving a 64-root BFS sweep **concurrently** — the paper's
+//! "synthesize once, then serve many fast traversals" economics scaled to
+//! query traffic.
+//!
+//! The binding is immutable while serving: every query carries its own
+//! `QueryContext` (scheduler, simulator, trace, DMA records), so
+//! `run_batch_parallel` fans the sweep out over OS threads sharing the
+//! design and graph read-only, then merges the per-query DMA accounting
+//! deterministically. Every modeled report field is identical to the
+//! sequential path — asserted below — and wall-clock drops with cores.
+//!
+//! ```sh
+//! cargo run --release --example query_server
+//! ```
+
+use std::time::Instant;
+
+use jgraph::prelude::*;
+
+const NUM_QUERIES: usize = 64;
+const NUM_WORKERS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // one-time: compile the design, prepare + bind the graph
+    // ------------------------------------------------------------------
+    let graph = jgraph::graph::generate::erdos_renyi(40_000, 160_000, 2026);
+    let session = Session::new(SessionConfig::default());
+    let pipeline = session.compile(&algorithms::bfs())?;
+    let bound = pipeline.load(&graph, PrepOptions::named("er-40k-160k"))?;
+    println!(
+        "serving {} on {} ({}v/{}e), granted plan {}x{}; one-time setup {:.1}s",
+        pipeline.program().name,
+        bound.graph().name,
+        bound.graph().num_vertices(),
+        bound.graph().num_edges(),
+        bound.granted_plan().pipelines,
+        bound.granted_plan().pes,
+        bound.setup_seconds(),
+    );
+
+    // a 64-root sweep over vertices that actually have out-edges
+    let csr = &bound.graph().csr;
+    let n = csr.num_vertices() as u32;
+    let queries: Vec<RunOptions> = (0..NUM_QUERIES)
+        .map(|i| {
+            let mut v = (i as u32 * 104_729) % n;
+            while csr.degree(v) == 0 {
+                v = (v + 1) % n;
+            }
+            RunOptions::from_root(v)
+        })
+        .collect();
+
+    // ------------------------------------------------------------------
+    // sequential sweep (the baseline run_batch loop)
+    // ------------------------------------------------------------------
+    let t_seq = Instant::now();
+    let sequential: Vec<RunReport> =
+        queries.iter().map(|q| bound.query(q)).collect::<anyhow::Result<_>>()?;
+    let seq_seconds = t_seq.elapsed().as_secs_f64();
+
+    // ------------------------------------------------------------------
+    // concurrent sweep over the same (immutable) binding
+    // ------------------------------------------------------------------
+    let t_par = Instant::now();
+    let parallel = bound.run_batch_parallel(&queries, NUM_WORKERS)?;
+    let par_seconds = t_par.elapsed().as_secs_f64();
+
+    // ------------------------------------------------------------------
+    // the server contract: concurrency changes wall-clock, not answers
+    // ------------------------------------------------------------------
+    for (i, (p, s)) in parallel.iter().zip(&sequential).enumerate() {
+        assert_eq!(p.supersteps, s.supersteps, "query {i}");
+        assert_eq!(p.edges_traversed, s.edges_traversed, "query {i}");
+        assert_eq!(
+            p.simulated_mteps.to_bits(),
+            s.simulated_mteps.to_bits(),
+            "query {i}: modeled throughput must not depend on threading"
+        );
+        assert_eq!(p.transfer_seconds.to_bits(), s.transfer_seconds.to_bits(), "query {i}");
+    }
+    // the shared ledger merged both sweeps over this one binding:
+    // the graph transport plus one 4-byte-per-vertex read-back per query
+    let graph_bytes = bound.graph().csr.byte_size() as u64;
+    let readback_bytes = 2 * NUM_QUERIES as u64 * 4 * n as u64;
+    assert_eq!(
+        bound.comm().bytes_moved(),
+        graph_bytes + readback_bytes,
+        "merged DMA accounting must cover every query exactly once"
+    );
+
+    let n_ok = parallel.len();
+    println!("{n_ok} queries: every parallel report identical to the sequential sweep");
+
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let speedup = seq_seconds / par_seconds;
+    let qps_seq = NUM_QUERIES as f64 / seq_seconds;
+    let qps_par = NUM_QUERIES as f64 / par_seconds;
+    println!(
+        "sequential: {:.1} ms total ({:.0} queries/s)\n\
+         parallel  : {:.1} ms total ({:.0} queries/s) with {} workers on {} cores\n\
+         speedup   : {:.2}x",
+        seq_seconds * 1e3,
+        qps_seq,
+        par_seconds * 1e3,
+        qps_par,
+        NUM_WORKERS,
+        cores,
+        speedup
+    );
+
+    // This example doubles as a CI smoke step on shared (noisy-neighbor)
+    // runners, where wall-clock gates flake. The correctness contract
+    // (identical reports, merged ledger) is asserted hard above; the only
+    // wall-clock assertion here is "parallelism must not badly regress".
+    // The strict >= 2x @ 4 workers acceptance gate lives in
+    // `benches/batch_parallel.rs`, meant for quiet dedicated hardware.
+    assert!(speedup >= 0.8, "parallel sweep regressed badly on {cores} cores: {speedup:.2}x");
+    if speedup >= 2.0 {
+        println!("OK: parallel sweep wins ({speedup:.2}x) with {NUM_WORKERS} workers");
+    } else {
+        println!(
+            "OK (informational): {speedup:.2}x on {cores} cores; \
+             see benches/batch_parallel.rs for the gated measurement"
+        );
+    }
+    Ok(())
+}

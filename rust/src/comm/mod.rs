@@ -5,9 +5,19 @@
 //! space shell (device status, configuration registers, xclbin flash),
 //! and [`CommManager`] is the paper's "several easy-to-use interfaces to
 //! help status transfer and configuration management".
+//!
+//! Transfer accounting is **thread-safe**: the seconds/bytes ledger sits
+//! behind a mutex so concurrent queries
+//! ([`crate::engine::BoundPipeline::run_batch_parallel`]) can share one
+//! manager through `&self`. Workers model their DMA with the pure
+//! [`CommManager::plan_read_back`] and the engine commits the records in
+//! query order after the join, so totals are bit-identical to the
+//! sequential path regardless of thread interleaving.
 
 pub mod pcie;
 pub mod xrt;
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -16,16 +26,21 @@ use crate::graph::csr::Csr;
 pub use pcie::PcieModel;
 pub use xrt::{DeviceStatus, XrtShell};
 
+/// Accumulated DMA totals (the Transport part of the paper's running
+/// time), guarded by the [`CommManager`]'s mutex.
+#[derive(Debug, Default, Clone, Copy)]
+struct Ledger {
+    transfer_seconds: f64,
+    bytes_moved: u64,
+}
+
 /// The high-level interface the DSL's control functions map to
 /// (`Get_FPGA_Message`, `Transport`).
 #[derive(Debug)]
 pub struct CommManager {
     pub pcie: PcieModel,
     pub shell: XrtShell,
-    /// Accumulated simulated transfer time (the Transport part of the
-    /// paper's running time).
-    pub transfer_seconds: f64,
-    pub bytes_moved: u64,
+    ledger: Mutex<Ledger>,
 }
 
 /// Record of one `Transport` call.
@@ -41,8 +56,7 @@ impl CommManager {
         Self {
             pcie: PcieModel::gen3_x16(),
             shell: XrtShell::new(),
-            transfer_seconds: 0.0,
-            bytes_moved: 0,
+            ledger: Mutex::new(Ledger::default()),
         }
     }
 
@@ -51,24 +65,47 @@ impl CommManager {
         self.shell.status()
     }
 
+    /// Accumulated simulated transfer time across all committed DMAs.
+    pub fn transfer_seconds(&self) -> f64 {
+        self.ledger.lock().unwrap().transfer_seconds
+    }
+
+    /// Accumulated bytes across all committed DMAs.
+    pub fn bytes_moved(&self) -> u64 {
+        self.ledger.lock().unwrap().bytes_moved
+    }
+
     /// `Transport(CPU_ip, FPGA_ip, Graph)` — DMA the CSR arrays to device
     /// DDR. Fails if the device has not been configured (matching XRT's
     /// behaviour when no xclbin is loaded).
-    pub fn transport_graph(&mut self, graph: &Csr) -> Result<TransferRecord> {
+    pub fn transport_graph(&self, graph: &Csr) -> Result<TransferRecord> {
         self.shell.require_configured()?;
         let bytes = graph.byte_size() as u64;
-        let seconds = self.pcie.transfer_seconds(bytes);
-        self.transfer_seconds += seconds;
-        self.bytes_moved += bytes;
-        Ok(TransferRecord { bytes, seconds })
+        let record = TransferRecord { bytes, seconds: self.pcie.transfer_seconds(bytes) };
+        self.commit(&record);
+        Ok(record)
     }
 
-    /// DMA raw result buffers back (vertex values).
-    pub fn read_back(&mut self, bytes: u64) -> TransferRecord {
-        let seconds = self.pcie.transfer_seconds(bytes);
-        self.transfer_seconds += seconds;
-        self.bytes_moved += bytes;
-        TransferRecord { bytes, seconds }
+    /// Model a result read-back DMA **without** touching the ledger: pure
+    /// on the link model, safe to call from any thread. Pair with
+    /// [`Self::commit`] — parallel queries plan their own DMA and the
+    /// engine commits the records deterministically after the join.
+    pub fn plan_read_back(&self, bytes: u64) -> TransferRecord {
+        TransferRecord { bytes, seconds: self.pcie.transfer_seconds(bytes) }
+    }
+
+    /// Fold one transfer record into the shared accounting.
+    pub fn commit(&self, record: &TransferRecord) {
+        let mut ledger = self.ledger.lock().unwrap();
+        ledger.transfer_seconds += record.seconds;
+        ledger.bytes_moved += record.bytes;
+    }
+
+    /// DMA raw result buffers back (vertex values): plan + commit.
+    pub fn read_back(&self, bytes: u64) -> TransferRecord {
+        let record = self.plan_read_back(bytes);
+        self.commit(&record);
+        record
     }
 }
 
@@ -100,9 +137,38 @@ mod tests {
         let mut cm = CommManager::new();
         cm.shell.configure("x.xclbin", 8, 1).unwrap();
         cm.transport_graph(&g).unwrap();
-        let t1 = cm.transfer_seconds;
+        let t1 = cm.transfer_seconds();
         cm.read_back(4 * 100);
-        assert!(cm.transfer_seconds > t1);
-        assert_eq!(cm.bytes_moved, g.byte_size() as u64 + 400);
+        assert!(cm.transfer_seconds() > t1);
+        assert_eq!(cm.bytes_moved(), g.byte_size() as u64 + 400);
+    }
+
+    #[test]
+    fn planned_transfers_commit_identically_to_direct_read_back() {
+        let mut direct = CommManager::new();
+        direct.shell.configure("a.xclbin", 8, 1).unwrap();
+        let mut deferred = CommManager::new();
+        deferred.shell.configure("a.xclbin", 8, 1).unwrap();
+
+        let sizes = [400u64, 4_096, 123_456, 400];
+        for &b in &sizes {
+            direct.read_back(b);
+        }
+        // plan on worker threads, commit in order afterwards — the ledger
+        // must be bit-identical to the sequential path
+        let deferred_ref = &deferred;
+        let records: Vec<TransferRecord> = std::thread::scope(|s| {
+            let handles: Vec<_> = sizes
+                .iter()
+                .map(|&b| s.spawn(move || deferred_ref.plan_read_back(b)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(deferred.bytes_moved(), 0, "planning must not touch the ledger");
+        for r in &records {
+            deferred.commit(r);
+        }
+        assert_eq!(direct.bytes_moved(), deferred.bytes_moved());
+        assert_eq!(direct.transfer_seconds().to_bits(), deferred.transfer_seconds().to_bits());
     }
 }

@@ -1,25 +1,87 @@
 //! **BoundPipeline** — a compiled pipeline bound to a prepared graph: the
 //! cheap per-query layer of the lifecycle. Everything one-time (translate,
 //! synthesis, flash, Reorder/Partition/Layout, graph transport, artifact
-//! lookup) already happened; [`BoundPipeline::run`] only pays the
-//! superstep loop — the paper's "tens of seconds to generate, then many
-//! fast traversals" economics as an API shape.
+//! lookup, **scheduler admission**) already happened; [`BoundPipeline::query`]
+//! only pays the superstep loop — the paper's "tens of seconds to
+//! generate, then many fast traversals" economics as an API shape.
+//!
+//! The binding itself is **immutable during queries**: all mutable
+//! per-query state (scheduler progress, simulator cycles, the trace log,
+//! DMA records) lives in a per-query [`QueryContext`], so [`BoundPipeline::query`]
+//! takes `&self` and any number of queries can run concurrently over the
+//! shared design + graph — see [`BoundPipeline::run_batch_parallel`].
+//! [`BoundPipeline::run`]/[`BoundPipeline::run_batch`] remain as thin
+//! `&mut self` compatibility wrappers producing identical reports.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::accel::simulator::{AccelSimulator, EdgeBatch};
-use crate::comm::CommManager;
+use crate::comm::{CommManager, TransferRecord};
 use crate::prep::prepared::PreparedGraph;
-use crate::sched::{ParallelismPlan, RuntimeScheduler};
+use crate::sched::{AdmittedPlan, ParallelismPlan, RuntimeScheduler};
 
 use super::compiled::{CompiledPipeline, RunOptions};
 use super::executor::ORACLE_TOLERANCE;
-use super::gas;
+use super::gas::{self, SuperstepTrace};
 use super::metrics::{FunctionalPath, RunReport};
 use super::trace::Trace;
 use super::xla_engine;
+
+/// All mutable state of **one** query in flight: its scheduler (superstep
+/// progress against the iteration cap), its cycle simulator, its trace
+/// log, and the DMA records it produced. Self-contained by construction —
+/// two contexts never share a cache line of mutable state — which is what
+/// lets many queries run concurrently over one immutable
+/// [`BoundPipeline`].
+#[derive(Debug)]
+pub struct QueryContext {
+    scheduler: RuntimeScheduler,
+    sim: AccelSimulator,
+    trace: Trace,
+    /// DMA records modeled (not yet committed) by this query; the engine
+    /// folds them into the shared [`CommManager`] ledger in query order.
+    transfers: Vec<TransferRecord>,
+    bytes_per_edge: u64,
+    avg_edge_gap: f64,
+    want_trace: bool,
+}
+
+impl QueryContext {
+    fn new(bound: &BoundPipeline<'_>, cap: u32, want_trace: bool) -> Self {
+        let pipeline = bound.pipeline;
+        Self {
+            // Reuse the plan granted at bind time: no per-query resource
+            // re-validation.
+            scheduler: bound.admitted.scheduler(cap),
+            sim: AccelSimulator::new(pipeline.device.clone(), pipeline.design.pipeline),
+            trace: Trace::default(),
+            transfers: Vec::with_capacity(1),
+            bytes_per_edge: if pipeline.program.uses_weights { 12 } else { 8 },
+            avg_edge_gap: bound.graph.avg_edge_gap,
+            want_trace,
+        }
+    }
+
+    /// Lockstep observer body: account one superstep in the scheduler and
+    /// the cycle simulator. Errors (the iteration cap) abort the run.
+    fn superstep(&mut self, trace: &SuperstepTrace<'_>) -> Result<()> {
+        self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        let step = self.sim.superstep(&EdgeBatch {
+            dsts: trace.dsts,
+            active_rows: trace.active_rows,
+            bytes_per_edge: self.bytes_per_edge,
+            avg_edge_gap: self.avg_edge_gap,
+        });
+        if self.want_trace {
+            self.trace.record(step);
+        }
+        self.scheduler.end_superstep(trace.dsts.len());
+        Ok(())
+    }
+}
 
 /// A compiled pipeline bound to one prepared graph, ready for repeated
 /// queries. Borrowing the [`CompiledPipeline`] keeps the design shared:
@@ -28,11 +90,13 @@ pub struct BoundPipeline<'p> {
     pipeline: &'p CompiledPipeline,
     graph: Arc<PreparedGraph>,
     comm: CommManager,
-    plan: ParallelismPlan,
+    /// Plan granted by scheduler admission — decided once at bind time and
+    /// reused by every query.
+    admitted: AdmittedPlan,
     /// Modeled deployment seconds (flash + graph transport), paid at bind
     /// time and reported — not re-paid — by every query.
     deploy_seconds: f64,
-    queries_run: u64,
+    queries_run: AtomicU64,
 }
 
 impl<'p> BoundPipeline<'p> {
@@ -40,10 +104,10 @@ impl<'p> BoundPipeline<'p> {
         pipeline: &'p CompiledPipeline,
         graph: Arc<PreparedGraph>,
         comm: CommManager,
-        plan: ParallelismPlan,
+        admitted: AdmittedPlan,
         deploy_seconds: f64,
     ) -> Self {
-        Self { pipeline, graph, comm, plan, deploy_seconds, queries_run: 0 }
+        Self { pipeline, graph, comm, admitted, deploy_seconds, queries_run: AtomicU64::new(0) }
     }
 
     pub fn pipeline(&self) -> &CompiledPipeline {
@@ -52,6 +116,17 @@ impl<'p> BoundPipeline<'p> {
 
     pub fn graph(&self) -> &PreparedGraph {
         &self.graph
+    }
+
+    /// The parallelism plan the scheduler granted at bind time.
+    pub fn granted_plan(&self) -> ParallelismPlan {
+        self.admitted.granted
+    }
+
+    /// Shared transfer accounting (graph transport + committed query
+    /// read-backs).
+    pub fn comm(&self) -> &CommManager {
+        &self.comm
     }
 
     /// Modeled deployment seconds paid when this binding was created.
@@ -67,47 +142,49 @@ impl<'p> BoundPipeline<'p> {
 
     /// Queries served by this binding so far.
     pub fn queries_run(&self) -> u64 {
-        self.queries_run
+        self.queries_run.load(Ordering::Relaxed)
     }
 
-    /// Execute one query. Only per-query work happens here: the software
-    /// oracle in lockstep with the cycle simulator, the optional AOT/XLA
-    /// functional path, and the result DMA.
-    pub fn run(&mut self, opts: &RunOptions) -> Result<RunReport> {
+    /// The iteration cap for one query: the program's own superstep bound
+    /// (floored at 200 so short programs still have headroom before the
+    /// safety net trips), optionally **tightened** by the per-query
+    /// override. The interpreter never runs past the program bound, so an
+    /// override above it is clamped rather than silently ignored.
+    fn cap_for(&self, opts: &RunOptions) -> u32 {
+        let n = self.graph.csr.num_vertices();
+        let bound = self.pipeline.program.max_supersteps(n).max(200);
+        opts.max_supersteps.map_or(bound, |cap| cap.min(bound))
+    }
+
+    /// The per-query core: runs one query against `&self`, returning the
+    /// report plus the query's uncommitted DMA records. Callers decide
+    /// when to fold the records into the shared ledger — immediately
+    /// ([`Self::query`]) or after a parallel join in query order
+    /// ([`Self::run_batch_parallel`]) so totals are bit-identical to the
+    /// sequential path.
+    fn run_query(&self, opts: &RunOptions) -> Result<(RunReport, Vec<TransferRecord>)> {
         let pipeline = self.pipeline;
         let program = &pipeline.program;
         let design = &pipeline.design;
         let csr = &self.graph.csr;
 
-        let mut scheduler = RuntimeScheduler::admit(
-            self.plan,
-            &design.resources,
-            &pipeline.device,
-            program.max_supersteps(csr.num_vertices()).max(200),
-        )?;
-
         // --- functional run (software oracle) in lockstep with the cycle
-        //     simulator
-        let mut sim = AccelSimulator::new(pipeline.device.clone(), design.pipeline);
-        let mut trace_log = Trace::default();
-        let want_trace = opts.trace_path.is_some();
-        let bytes_per_edge = if program.uses_weights { 12 } else { 8 };
-        let gap = self.graph.avg_edge_gap;
-        let oracle = gas::run(program, csr, opts.root, |trace| {
-            let _ = scheduler.begin_superstep(trace.active_rows as usize);
-            let step = sim.superstep(&EdgeBatch {
-                dsts: trace.dsts,
-                active_rows: trace.active_rows,
-                bytes_per_edge,
-                avg_edge_gap: gap,
-            });
-            if want_trace {
-                trace_log.record(step);
-            }
-            scheduler.end_superstep(trace.dsts.len());
-        })?;
-        scheduler.converged();
-        let sim_stats = sim.finish();
+        //     simulator; the scheduler's iteration cap aborts the loop.
+        let cap = self.cap_for(opts);
+        let mut ctx = QueryContext::new(self, cap, opts.trace_path.is_some());
+        let oracle = gas::run_observed(program, csr, opts.root, |trace| ctx.superstep(trace))?;
+        // The interpreter self-limits at the program's own superstep bound;
+        // exhausting that bound without meeting the convergence condition
+        // is the same failure the scheduler cap guards against, so it must
+        // abort the query, not return truncated values.
+        if !oracle.converged {
+            anyhow::bail!(
+                "iteration cap hit: {:?} did not converge within {} supersteps",
+                program.name,
+                oracle.supersteps
+            );
+        }
+        ctx.scheduler.converged();
 
         // --- AOT/XLA path for canonical programs (registry resolved at
         //     compile time; absent registry = software fallback)
@@ -136,19 +213,25 @@ impl<'p> BoundPipeline<'p> {
             }
         }
 
-        // results DMA back (vertex values)
-        self.comm.read_back(4 * csr.num_vertices() as u64);
+        // results DMA back (vertex values): modeled here, committed to the
+        // shared ledger by the caller
+        let QueryContext { sim, trace: trace_log, mut transfers, .. } = ctx;
+        transfers.push(self.comm.plan_read_back(4 * csr.num_vertices() as u64));
+        let transfer_seconds: f64 = transfers.iter().map(|r| r.seconds).sum();
+        let sim_stats = sim.finish();
 
         if let Some(path) = &opts.trace_path {
             trace_log.write_csv(path)?;
         }
 
-        self.queries_run += 1;
+        self.queries_run.fetch_add(1, Ordering::Relaxed);
         let prep_seconds = self.graph.prep_seconds;
         let compile_seconds = design.compile_seconds();
         let deploy_seconds = self.deploy_seconds;
         let sim_exec_seconds = sim_stats.exec_seconds();
-        Ok(RunReport {
+        let setup_seconds = prep_seconds + compile_seconds + deploy_seconds;
+        let query_seconds = sim_exec_seconds + functional_exec_seconds + transfer_seconds;
+        let report = RunReport {
             program: program.name.clone(),
             translator: design.kind.label(),
             graph_name: self.graph.name.clone(),
@@ -159,17 +242,38 @@ impl<'p> BoundPipeline<'p> {
             deploy_seconds,
             sim_exec_seconds,
             functional_exec_seconds,
+            transfer_seconds,
             functional_path,
             supersteps,
             edges_traversed,
             hdl_lines: design.hdl_lines,
-            rt_seconds: prep_seconds + compile_seconds + deploy_seconds + sim_exec_seconds,
-            setup_seconds: prep_seconds + compile_seconds + deploy_seconds,
-            query_seconds: sim_exec_seconds + functional_exec_seconds,
+            // the report identity: rt = setup + query on every path
+            rt_seconds: setup_seconds + query_seconds,
+            setup_seconds,
+            query_seconds,
             simulated_mteps: sim_stats.mteps(),
             sim: sim_stats,
             oracle_deviation,
-        })
+        };
+        Ok((report, transfers))
+    }
+
+    /// Execute one query through a shared reference. Only per-query work
+    /// happens here: the software oracle in lockstep with the cycle
+    /// simulator, the optional AOT/XLA functional path, and the result
+    /// DMA. Safe to call from many threads at once.
+    pub fn query(&self, opts: &RunOptions) -> Result<RunReport> {
+        let (report, transfers) = self.run_query(opts)?;
+        for record in &transfers {
+            self.comm.commit(record);
+        }
+        Ok(report)
+    }
+
+    /// Execute one query (compatibility wrapper over [`Self::query`] —
+    /// reports are identical).
+    pub fn run(&mut self, opts: &RunOptions) -> Result<RunReport> {
+        self.query(opts)
     }
 
     /// Run a batch of queries (e.g. a 64-source BFS sweep) against the
@@ -178,9 +282,76 @@ impl<'p> BoundPipeline<'p> {
     /// amortizing graph transport, shell configuration, and preprocessing
     /// across the whole sweep.
     pub fn run_batch(&mut self, queries: &[RunOptions]) -> Result<Vec<RunReport>> {
+        queries.iter().map(|opts| self.query(opts)).collect()
+    }
+
+    /// Run a batch of queries **concurrently** over `num_workers` OS
+    /// threads sharing this binding read-only. Every *modeled* report
+    /// field (supersteps, edges, cycles, `sim_exec_seconds`,
+    /// `transfer_seconds`, `simulated_mteps`, values) is identical to
+    /// [`Self::run_batch`] — concurrency cannot skew the model. The one
+    /// exception is `functional_exec_seconds` on the XLA path, which is
+    /// *measured* PJRT wall time and so varies run-to-run regardless of
+    /// threading. The shared transfer ledger ends up bit-identical: each
+    /// worker only *plans* its DMA; records are committed in query order
+    /// after the join.
+    ///
+    /// Errors: the first failing query (by batch order) is returned and
+    /// the ledger then matches a sequential run that stopped at that
+    /// query. Workers stop claiming new queries once a failure is
+    /// observed, but queries already in flight do finish (their effects
+    /// are limited to `queries_run` and any per-query trace files).
+    pub fn run_batch_parallel(
+        &self,
+        queries: &[RunOptions],
+        num_workers: usize,
+    ) -> Result<Vec<RunReport>> {
+        let workers = num_workers.clamp(1, queries.len().max(1));
+        if workers == 1 {
+            return queries.iter().map(|opts| self.query(opts)).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<Result<(RunReport, Vec<TransferRecord>)>>>> =
+            queries.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= queries.len() {
+                        break;
+                    }
+                    let outcome = self.run_query(&queries[i]);
+                    if outcome.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap() = Some(outcome);
+                });
+            }
+        });
+
+        // merge: commit each query's DMA records in batch order so the shared
+        // ledger is bit-identical to the sequential path
         let mut reports = Vec::with_capacity(queries.len());
-        for opts in queries {
-            reports.push(self.run(opts)?);
+        for slot in slots {
+            match slot.into_inner().unwrap() {
+                Some(outcome) => {
+                    let (report, transfers) = outcome?;
+                    for record in &transfers {
+                        self.comm.commit(record);
+                    }
+                    reports.push(report);
+                }
+                // Indexes are claimed in strictly increasing order and every
+                // claimed query is finished before the scope joins, so an
+                // unclaimed (None) slot can only sit *behind* a failed query
+                // — and that error returned from the arm above already.
+                None => anyhow::bail!("parallel batch aborted before this query ran"),
+            }
         }
         Ok(reports)
     }
@@ -216,7 +387,7 @@ mod tests {
         assert_eq!(r1.edges_traversed, r2.edges_traversed);
         assert_eq!(r1.simulated_mteps, r2.simulated_mteps);
         // the setup/query split decomposes rt
-        assert!((r1.setup_seconds + r1.sim_exec_seconds - r1.rt_seconds).abs() < 1e-12);
+        assert!((r1.setup_seconds + r1.query_seconds - r1.rt_seconds).abs() < 1e-12);
     }
 
     #[test]
@@ -231,5 +402,111 @@ mod tests {
         // grid BFS from the corner needs more supersteps than from the
         // center (eccentricity 30 vs ~16)
         assert!(r_corner.supersteps > r_center.supersteps);
+    }
+
+    #[test]
+    fn queries_share_the_binding_without_mut() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(150, 1_200, 3);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        // no `mut`: the per-query path borrows the binding immutably
+        let r1 = bound.query(&RunOptions::from_root(0)).unwrap();
+        let r2 = bound.query(&RunOptions::from_root(1)).unwrap();
+        assert_eq!(bound.queries_run(), 2);
+        assert_eq!(r1.setup_seconds, r2.setup_seconds);
+    }
+
+    #[test]
+    fn iteration_cap_hit_aborts_the_query() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        // chain BFS from 0 needs ~n supersteps: a cap of 3 must trip
+        let g = generate::chain(64);
+        let bound = c.load(&g, PrepOptions::named("chain")).unwrap();
+        let err = bound.query(&RunOptions::from_root(0).with_max_supersteps(3)).unwrap_err();
+        assert!(err.to_string().contains("iteration cap 3 hit"), "expected cap error: {err}");
+        // the binding stays usable; an uncapped query still converges
+        let ok = bound.query(&RunOptions::from_root(0)).unwrap();
+        assert!(ok.supersteps > 3);
+    }
+
+    #[test]
+    fn non_converging_program_errors_without_an_explicit_cap() {
+        // delta < -1 is unsatisfiable: PageRank exhausts its internal
+        // bound without converging. The default query path must turn that
+        // into an error, not return truncated values.
+        let s = session();
+        let c = s.compile(&algorithms::pagerank(0.85, -1.0)).unwrap();
+        let g = generate::erdos_renyi(60, 400, 2);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        let err = bound.query(&RunOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("iteration cap"), "got: {err}");
+        assert!(err.to_string().contains("did not converge"), "got: {err}");
+    }
+
+    #[test]
+    fn read_back_dma_is_reported_and_in_query_seconds() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(500, 4_000, 5);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        let before = bound.comm().transfer_seconds();
+        let r = bound.query(&RunOptions::from_root(0)).unwrap();
+        // read-back of 4 * num_vertices bytes takes nonzero modeled time
+        assert!(r.transfer_seconds > 0.0, "read-back DMA must be accounted");
+        let expected = bound.comm().plan_read_back(4 * 500).seconds;
+        assert_eq!(r.transfer_seconds.to_bits(), expected.to_bits());
+        // it is part of the per-query cost and of the shared ledger
+        assert!(r.query_seconds >= r.sim_exec_seconds + r.transfer_seconds);
+        assert!((bound.comm().transfer_seconds() - before - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_and_merges_accounting() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(10, 40_000, 0.57, 0.19, 0.19, 17);
+        let n = g.num_vertices as u32;
+        let queries: Vec<RunOptions> =
+            (0..8u32).map(|i| RunOptions::from_root((i * 4_099) % n)).collect();
+
+        let mut seq_bound = c.load(&g, PrepOptions::named("rmat11")).unwrap();
+        let sequential = seq_bound.run_batch(&queries).unwrap();
+
+        let par_bound = c.load(&g, PrepOptions::named("rmat11")).unwrap();
+        let parallel = par_bound.run_batch_parallel(&queries, 4).unwrap();
+
+        assert_eq!(parallel.len(), sequential.len());
+        for (p, q) in parallel.iter().zip(&sequential) {
+            assert_eq!(p.supersteps, q.supersteps);
+            assert_eq!(p.edges_traversed, q.edges_traversed);
+            assert_eq!(p.simulated_mteps.to_bits(), q.simulated_mteps.to_bits());
+            assert_eq!(p.sim.cycles.total(), q.sim.cycles.total());
+            assert_eq!(p.transfer_seconds.to_bits(), q.transfer_seconds.to_bits());
+            // query cost is fully modeled, so it cannot depend on threading
+            // (rt/setup include measured prep wall time, which differs
+            // between the two independent `load`s above by construction)
+            assert_eq!(p.query_seconds.to_bits(), q.query_seconds.to_bits());
+        }
+        // merged ledger totals are bit-identical to the sequential path
+        assert_eq!(par_bound.comm().bytes_moved(), seq_bound.comm().bytes_moved());
+        assert_eq!(
+            par_bound.comm().transfer_seconds().to_bits(),
+            seq_bound.comm().transfer_seconds().to_bits()
+        );
+        assert_eq!(par_bound.queries_run(), queries.len() as u64);
+    }
+
+    #[test]
+    fn parallel_batch_propagates_cap_errors() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::chain(64);
+        let bound = c.load(&g, PrepOptions::named("chain")).unwrap();
+        let mut queries = vec![RunOptions::from_root(0); 6];
+        queries[3] = RunOptions::from_root(0).with_max_supersteps(2);
+        let err = bound.run_batch_parallel(&queries, 3).unwrap_err();
+        assert!(err.to_string().contains("iteration cap 2 hit"), "{err}");
     }
 }

@@ -17,7 +17,7 @@ use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
 use crate::prep::prepared::{PrepOptions, PreparedGraph};
 use crate::runtime::KernelRegistry;
-use crate::sched::ParallelismPlan;
+use crate::sched::{AdmittedPlan, ParallelismPlan};
 use crate::translator::Design;
 
 use super::bound::BoundPipeline;
@@ -39,11 +39,24 @@ pub struct RunOptions {
     pub verify: bool,
     /// Write a per-superstep CSV trace here (None = no trace).
     pub trace_path: Option<PathBuf>,
+    /// Tighten the scheduler's iteration cap for this query (None = the
+    /// program's own superstep bound; values above that bound are clamped
+    /// to it — the cap can only lower the limit, never raise it). Hitting
+    /// the cap aborts the run with an error — the safety net against
+    /// non-converging programs.
+    pub max_supersteps: Option<u32>,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
-        Self { root: 0, tolerance: 1e-6, use_xla: true, verify: true, trace_path: None }
+        Self {
+            root: 0,
+            tolerance: 1e-6,
+            use_xla: true,
+            verify: true,
+            trace_path: None,
+            max_supersteps: None,
+        }
     }
 }
 
@@ -60,6 +73,13 @@ impl RunOptions {
 
     pub fn with_trace(mut self, path: impl Into<PathBuf>) -> Self {
         self.trace_path = Some(path.into());
+        self
+    }
+
+    /// Cap this query at `cap` supersteps (clamped to the program's own
+    /// bound); the run errors if it has not converged by then.
+    pub fn with_max_supersteps(mut self, cap: u32) -> Self {
+        self.max_supersteps = Some(cap);
         self
     }
 }
@@ -147,18 +167,22 @@ impl CompiledPipeline {
 
     /// Bind an already-prepared graph. Accepts an `Arc` so one prepared
     /// graph can be shared across pipelines without copying its arrays.
+    ///
+    /// Scheduler admission happens **here, once per binding** — the design
+    /// and device cannot change between queries, so every query reuses the
+    /// granted plan instead of re-validating resources.
     pub fn bind(&self, graph: impl Into<Arc<PreparedGraph>>) -> Result<BoundPipeline<'_>> {
         let graph = graph.into();
-        let plan = self.plan();
+        let admitted = AdmittedPlan::admit(self.plan(), &self.design.resources, &self.device)?;
         let mut comm = CommManager::new();
         comm.shell.configure(
             &format!("{}.xclbin", self.design.program_name),
-            plan.pipelines,
-            plan.pes,
+            admitted.granted.pipelines,
+            admitted.granted.pes,
         )?;
         let transfer = comm.transport_graph(&graph.csr)?;
         let deploy_seconds = self.flash_seconds + transfer.seconds;
-        Ok(BoundPipeline::new(self, graph, comm, plan, deploy_seconds))
+        Ok(BoundPipeline::new(self, graph, comm, admitted, deploy_seconds))
     }
 
     /// One-shot convenience: bind the shared graph (O(1), no array copies)

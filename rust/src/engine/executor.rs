@@ -169,6 +169,7 @@ impl Executor {
             use_xla: self.config.use_xla,
             verify: self.config.verify,
             trace_path: self.config.trace_path.clone(),
+            max_supersteps: None,
         })
     }
 }
@@ -231,7 +232,12 @@ mod tests {
         assert!(r.prep_seconds >= 0.0);
         assert!(r.compile_seconds > 1.0, "modeled synthesis must show up");
         assert!(r.deploy_seconds >= FLASH_SECONDS);
-        let sum = r.prep_seconds + r.compile_seconds + r.deploy_seconds + r.sim_exec_seconds;
+        let sum = r.prep_seconds
+            + r.compile_seconds
+            + r.deploy_seconds
+            + r.sim_exec_seconds
+            + r.functional_exec_seconds
+            + r.transfer_seconds;
         assert!((r.rt_seconds - sum).abs() < 1e-9);
     }
 
@@ -241,7 +247,7 @@ mod tests {
         let r = run_sw(&algorithms::bfs(), &g);
         assert!((r.setup_seconds - (r.prep_seconds + r.compile_seconds + r.deploy_seconds)).abs()
             < 1e-12);
-        assert!((r.rt_seconds - (r.setup_seconds + r.sim_exec_seconds)).abs() < 1e-12);
+        assert!((r.rt_seconds - (r.setup_seconds + r.query_seconds)).abs() < 1e-12);
         assert!(r.query_seconds > 0.0);
     }
 }

@@ -30,6 +30,12 @@ pub struct GasResult {
     pub values: Vec<f64>,
     pub supersteps: u32,
     pub edges_traversed: u64,
+    /// Whether the program's own convergence condition was met. `false`
+    /// means the interpreter's internal superstep bound expired first —
+    /// the values are a truncated fixpoint iteration, not an answer. The
+    /// engine turns this into an iteration-cap error; standalone callers
+    /// can decide for themselves.
+    pub converged: bool,
 }
 
 /// PageRank constants matching python/compile/kernels/ref.py.
@@ -43,6 +49,22 @@ pub fn run(
     graph: &Csr,
     root: VertexId,
     mut observer: impl FnMut(&SuperstepTrace<'_>),
+) -> Result<GasResult> {
+    run_observed(program, graph, root, |trace| {
+        observer(trace);
+        Ok(())
+    })
+}
+
+/// Like [`run`], but the observer is fallible: an `Err` **aborts the run
+/// before the superstep's state is committed** and propagates out. This is
+/// how the engine enforces the scheduler's iteration cap — the safety net
+/// against non-converging programs must stop the loop, not merely log.
+pub fn run_observed(
+    program: &GasProgram,
+    graph: &Csr,
+    root: VertexId,
+    mut observer: impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
     if program.kind == Some(EdgeOpKind::Pr) {
         return run_pagerank(program, graph, &mut observer);
@@ -85,7 +107,7 @@ fn run_generic(
     program: &GasProgram,
     graph: &Csr,
     root: VertexId,
-    observer: &mut impl FnMut(&SuperstepTrace<'_>),
+    observer: &mut impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
     let n = graph.num_vertices();
     let mut values = init_values(program, n, root);
@@ -113,8 +135,10 @@ fn run_generic(
     let mut touched: Vec<VertexId> = Vec::with_capacity(n);
     let mut dsts: Vec<u32> = Vec::new();
 
+    let mut converged = false;
     for iter in 0..max_steps {
         if frontier.is_empty() {
+            converged = true;
             break;
         }
         dsts.clear();
@@ -154,7 +178,7 @@ fn run_generic(
         }
         edges_traversed += dsts.len() as u64;
 
-        observer(&SuperstepTrace { index: iter, dsts: &dsts, active_rows: frontier.len() as u64 });
+        observer(&SuperstepTrace { index: iter, dsts: &dsts, active_rows: frontier.len() as u64 })?;
 
         // writeback
         let mut next_frontier: Vec<VertexId> = Vec::new();
@@ -208,6 +232,7 @@ fn run_generic(
             Convergence::DeltaBelow(_) => unreachable!("PR handled separately"),
         };
         if done {
+            converged = true;
             break;
         }
         frontier = match program.frontier {
@@ -220,7 +245,7 @@ fn run_generic(
         };
     }
 
-    Ok(GasResult { values, supersteps, edges_traversed })
+    Ok(GasResult { values, supersteps, edges_traversed, converged })
 }
 
 /// PageRank with damping + uniform dangling redistribution, numerically
@@ -228,7 +253,7 @@ fn run_generic(
 fn run_pagerank(
     program: &GasProgram,
     graph: &Csr,
-    observer: &mut impl FnMut(&SuperstepTrace<'_>),
+    observer: &mut impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
     let damping = 0.85; // the library template's value; tolerance from program
     let tol = match program.convergence {
@@ -239,9 +264,17 @@ fn run_pagerank(
     let nf = n.max(1) as f64;
     let mut rank = vec![1.0 / nf; n];
     let out_deg: Vec<u32> = (0..n as VertexId).map(|v| graph.degree(v)).collect();
-    let all_dsts: Vec<u32> = graph.to_edgelist().edges.iter().map(|e| e.dst).collect();
+    // Edge stream in CSR row-major order — the exact order the accelerator
+    // streams `Edges` and the order every other algorithm's trace uses.
+    // (Deriving it through `to_edgelist()` routes the stream through an
+    // intermediate representation whose ordering is not contractual, which
+    // would skew the simulator's bank-conflict model if it ever diverged.)
+    let all_dsts: Vec<u32> = (0..n as VertexId)
+        .flat_map(|v| graph.row_edges(v).map(|(_, d, _)| d))
+        .collect();
     let mut edges_traversed = 0u64;
     let mut supersteps = 0u32;
+    let mut converged = false;
 
     for iter in 0..PR_MAX_ITERS {
         let mut sums = vec![0f64; n];
@@ -252,7 +285,7 @@ fn run_pagerank(
             }
         }
         edges_traversed += graph.num_edges() as u64;
-        observer(&SuperstepTrace { index: iter, dsts: &all_dsts, active_rows: n as u64 });
+        observer(&SuperstepTrace { index: iter, dsts: &all_dsts, active_rows: n as u64 })?;
 
         let dangling: f64 = (0..n)
             .filter(|&v| out_deg[v] == 0)
@@ -268,10 +301,11 @@ fn run_pagerank(
         rank = new_rank;
         supersteps = iter + 1;
         if delta < tol {
+            converged = true;
             break;
         }
     }
-    Ok(GasResult { values: rank, supersteps, edges_traversed })
+    Ok(GasResult { values: rank, supersteps, edges_traversed, converged })
 }
 
 /// Average |src-dst| gap of a CSR graph (locality input for the
@@ -401,6 +435,54 @@ mod tests {
         .unwrap();
         assert_eq!(steps, r.supersteps);
         assert_eq!(edges, r.edges_traversed);
+    }
+
+    #[test]
+    fn pagerank_trace_is_csr_stream_order() {
+        // CSR stream order = targets[] as laid out on device. The PR trace
+        // must present edges to the simulator in exactly this order every
+        // superstep, like every other algorithm's row-major sweep does —
+        // a different order would skew the bank-conflict model.
+        let g = csr(&generate::rmat(8, 2_000, 0.57, 0.19, 0.19, 9));
+        let stream: Vec<u32> = (0..g.num_vertices() as u32)
+            .flat_map(|v| g.neighbors(v).iter().copied().collect::<Vec<_>>())
+            .collect();
+        assert_eq!(stream, g.targets, "row-major sweep is the CSR stream");
+        let mut observed = 0;
+        run(&algorithms::pagerank(0.85, 1e-6), &g, 0, |t| {
+            assert_eq!(t.dsts, &stream[..], "superstep {} trace order", t.index);
+            observed += 1;
+        })
+        .unwrap();
+        assert!(observed > 0);
+    }
+
+    #[test]
+    fn convergence_flag_distinguishes_truncation_from_fixpoint() {
+        let g = csr(&generate::chain(30));
+        // BFS reaches its empty-frontier fixpoint well within the bound
+        assert!(run_silent(&algorithms::bfs(), &g, 0).converged);
+        // an impossible tolerance can never be met: the interpreter stops
+        // at its internal bound and must say so instead of lying
+        let r = run_silent(&algorithms::pagerank(0.85, -1.0), &g, 0);
+        assert!(!r.converged, "delta < -1 is unsatisfiable");
+        assert_eq!(r.supersteps, PR_MAX_ITERS);
+    }
+
+    #[test]
+    fn observer_error_aborts_the_run() {
+        let g = csr(&generate::chain(10));
+        let mut steps = 0;
+        let err = run_observed(&algorithms::bfs(), &g, 0, |t| {
+            steps += 1;
+            if t.index >= 2 {
+                anyhow::bail!("cap hit in superstep {}", t.index)
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("cap hit in superstep 2"));
+        assert_eq!(steps, 3, "run must stop at the failing superstep");
     }
 
     #[test]

@@ -38,22 +38,29 @@ pub struct RunReport {
     pub sim_exec_seconds: f64,
     /// Wall time of the XLA functional path (host-side PJRT execute).
     pub functional_exec_seconds: f64,
+    /// Modeled result read-back DMA (PCIe) for this query. Part of the
+    /// per-query cost — a query is not done until its values are back on
+    /// the host.
+    pub transfer_seconds: f64,
     pub functional_path: FunctionalPath,
     pub supersteps: u32,
     pub edges_traversed: u64,
 
     // --- Table V metrics
     pub hdl_lines: usize,
-    /// RT = prep + compile + deploy + simulated exec (the paper's
-    /// "running time includes the compilation time, the data preprocessing
-    /// time and the algorithm execution time").
+    /// RT = `setup_seconds + query_seconds` (the paper's "running time
+    /// includes the compilation time, the data preprocessing time and the
+    /// algorithm execution time"). This identity holds on **every**
+    /// functional path — software and XLA alike.
     pub rt_seconds: f64,
     /// One-time seconds (prep + compile + deploy): paid once per
     /// compile/load under the `Session` lifecycle and amortized across
-    /// queries. `rt_seconds = setup_seconds + sim_exec_seconds`.
+    /// queries.
     pub setup_seconds: f64,
-    /// Per-query seconds (simulated exec + XLA functional exec): what each
-    /// additional query on a bound pipeline costs.
+    /// Per-query seconds (simulated exec + XLA functional exec + result
+    /// read-back DMA): what each additional query on a bound pipeline
+    /// costs. `query_seconds = sim_exec_seconds + functional_exec_seconds
+    /// + transfer_seconds`.
     pub query_seconds: f64,
     /// TP in MTEPS from the cycle model.
     pub simulated_mteps: f64,
@@ -70,7 +77,7 @@ impl RunReport {
         format!(
             "{} [{}] on {} ({}v/{}e): {} supersteps, {:.1} MTEPS simulated, \
              RT {:.1}s (setup {:.1} = prep {:.2} + compile {:.1} + deploy {:.2}; \
-             query exec {:.4}), {} HDL lines{}",
+             query {:.4} incl. read-back {:.6}), {} HDL lines{}",
             self.program,
             self.translator,
             self.graph_name,
@@ -83,7 +90,8 @@ impl RunReport {
             self.prep_seconds,
             self.compile_seconds,
             self.deploy_seconds,
-            self.sim_exec_seconds,
+            self.query_seconds,
+            self.transfer_seconds,
             self.hdl_lines,
             match self.oracle_deviation {
                 Some(d) => format!(", oracle dev {d:.2e}"),
@@ -110,13 +118,14 @@ mod tests {
             deploy_seconds: 1.0,
             sim_exec_seconds: 0.001,
             functional_exec_seconds: 0.01,
+            transfer_seconds: 0.0001,
             functional_path: FunctionalPath::Software,
             supersteps: 3,
             edges_traversed: 20,
             hdl_lines: 35,
-            rt_seconds: 4.101,
+            rt_seconds: 4.1111,
             setup_seconds: 4.1,
-            query_seconds: 0.011,
+            query_seconds: 0.0111,
             simulated_mteps: 314.0,
             sim: SimStats::default(),
             oracle_deviation: Some(0.0),

@@ -10,6 +10,23 @@
 //!   [`crate::prep::PreparedGraph`] and serves cheap per-query
 //!   [`compiled::RunOptions`]-driven runs.
 //!
+//! ## The `&self` query model
+//!
+//! A binding is **immutable while serving queries**: scheduler admission
+//! happens once at bind time ([`crate::sched::AdmittedPlan`]), and every
+//! piece of per-query mutable state — the superstep scheduler, the cycle
+//! simulator, the trace log, the query's DMA records — lives in a
+//! per-query [`bound::QueryContext`]. [`bound::BoundPipeline::query`]
+//! therefore takes `&self`, and [`bound::BoundPipeline::run_batch_parallel`]
+//! fans a multi-root sweep out over OS threads sharing one binding, with
+//! every modeled report field identical to the sequential path and DMA
+//! accounting merged deterministically after the join. `run(&mut
+//! self)`/`run_batch` remain as compatibility wrappers over the same core.
+//!
+//! Every [`metrics::RunReport`] satisfies `rt_seconds = setup_seconds +
+//! query_seconds` with `query_seconds = sim_exec_seconds +
+//! functional_exec_seconds + transfer_seconds` — on both functional paths.
+//!
 //! The legacy one-shot [`executor::Executor`] remains as a deprecated shim
 //! delegating to the lifecycle. See [`gas`] for the software oracle and
 //! [`xla_engine`] for the AOT path.

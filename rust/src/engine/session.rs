@@ -14,6 +14,12 @@
 //! validation, lowering, scheduling, code generation, the modeled
 //! synthesis + bitstream flash, and the XLA artifact-registry lookup — so
 //! that queries only pay the per-query superstep work.
+//!
+//! Downstream of `compile`, the binding serves queries through `&self`
+//! (scheduler admission happens once at `load`/`bind`; per-query state
+//! lives in [`super::bound::QueryContext`]), so one compiled design + one
+//! prepared graph can serve a concurrent sweep via
+//! [`super::bound::BoundPipeline::run_batch_parallel`].
 
 use std::cell::OnceCell;
 use std::path::PathBuf;

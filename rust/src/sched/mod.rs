@@ -5,7 +5,7 @@
 
 pub mod scheduler;
 
-pub use scheduler::{auto_plan, RuntimeScheduler, SchedulerEvent};
+pub use scheduler::{auto_plan, AdmittedPlan, RuntimeScheduler, SchedulerEvent};
 
 
 /// The two parallelism knobs the DSL exposes (`Set_Pipeline`, `Set_PE`).

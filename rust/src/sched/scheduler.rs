@@ -20,16 +20,19 @@ pub enum SchedulerEvent {
     IterationCapHit { cap: u32 },
 }
 
-/// Scheduler state for one run.
-#[derive(Debug)]
-pub struct RuntimeScheduler {
-    pub plan: ParallelismPlan,
+/// The outcome of plan admission: the granted plan plus the admission
+/// events that produced it. Admission is a per-**binding** decision (the
+/// design and device do not change between queries), so this is computed
+/// once when a pipeline is bound to a graph and reused by every query —
+/// each query derives its own cheap [`RuntimeScheduler`] from it via
+/// [`AdmittedPlan::scheduler`] instead of re-validating resources.
+#[derive(Debug, Clone)]
+pub struct AdmittedPlan {
+    pub granted: ParallelismPlan,
     pub events: Vec<SchedulerEvent>,
-    superstep: u32,
-    cap: u32,
 }
 
-impl RuntimeScheduler {
+impl AdmittedPlan {
     /// Validate the requested plan against the device; shrink it (halving
     /// pipelines, then PEs) until the replicated design fits. Fails only
     /// if even 1×1 does not fit.
@@ -37,7 +40,6 @@ impl RuntimeScheduler {
         requested: ParallelismPlan,
         per_lane: &ResourceEstimate,
         device: &DeviceModel,
-        cap: u32,
     ) -> Result<Self> {
         if requested.pipelines == 0 || requested.pes == 0 {
             bail!("parallelism plan must have at least 1 pipeline and 1 PE");
@@ -59,7 +61,7 @@ impl RuntimeScheduler {
                         ),
                     });
                 }
-                return Ok(Self { plan, events, superstep: 0, cap });
+                return Ok(Self { granted: plan, events });
             }
             if plan.pipelines > 1 {
                 plan.pipelines /= 2;
@@ -74,6 +76,35 @@ impl RuntimeScheduler {
                 );
             }
         }
+    }
+
+    /// Derive a per-query scheduler from the granted plan. O(1): no
+    /// resource re-validation — admission already happened at bind time.
+    pub fn scheduler(&self, cap: u32) -> RuntimeScheduler {
+        RuntimeScheduler { plan: self.granted, events: self.events.clone(), superstep: 0, cap }
+    }
+}
+
+/// Scheduler state for one run.
+#[derive(Debug)]
+pub struct RuntimeScheduler {
+    pub plan: ParallelismPlan,
+    pub events: Vec<SchedulerEvent>,
+    superstep: u32,
+    cap: u32,
+}
+
+impl RuntimeScheduler {
+    /// Admit `requested` and build a scheduler for one run — the one-shot
+    /// path. Query traffic should admit once with [`AdmittedPlan::admit`]
+    /// and derive per-query schedulers from the granted plan instead.
+    pub fn admit(
+        requested: ParallelismPlan,
+        per_lane: &ResourceEstimate,
+        device: &DeviceModel,
+        cap: u32,
+    ) -> Result<Self> {
+        Ok(AdmittedPlan::admit(requested, per_lane, device)?.scheduler(cap))
     }
 
     /// Record a superstep start; errors when the iteration cap is hit
@@ -206,6 +237,43 @@ mod tests {
         s.end_superstep(0);
         assert!(s.begin_superstep(0).is_err());
         assert_eq!(s.supersteps(), 2);
+    }
+
+    #[test]
+    fn admitted_plan_spawns_independent_per_query_schedulers() {
+        let admitted =
+            AdmittedPlan::admit(ParallelismPlan::new(1024, 4), &lane(), &DeviceModel::u200())
+                .unwrap();
+        // the grant happened once; every derived scheduler sees it
+        assert!(matches!(admitted.events[0], SchedulerEvent::PlanReduced { .. }));
+        let mut a = admitted.scheduler(2);
+        let mut b = admitted.scheduler(2);
+        assert_eq!(a.plan, admitted.granted);
+        assert_eq!(b.plan, admitted.granted);
+        // progress in one query does not leak into another
+        a.begin_superstep(4).unwrap();
+        a.end_superstep(4);
+        assert_eq!(a.supersteps(), 1);
+        assert_eq!(b.supersteps(), 0);
+        b.begin_superstep(4).unwrap();
+        b.end_superstep(0);
+        b.begin_superstep(0).unwrap();
+        b.end_superstep(0);
+        assert!(b.begin_superstep(0).is_err(), "cap applies per query");
+        assert!(a.begin_superstep(1).is_ok(), "other query unaffected");
+    }
+
+    #[test]
+    fn admit_wrapper_equals_admitted_plan_path() {
+        let via_wrapper =
+            RuntimeScheduler::admit(ParallelismPlan::new(8, 1), &lane(), &DeviceModel::u200(), 7)
+                .unwrap();
+        let via_split =
+            AdmittedPlan::admit(ParallelismPlan::new(8, 1), &lane(), &DeviceModel::u200())
+                .unwrap()
+                .scheduler(7);
+        assert_eq!(via_wrapper.plan, via_split.plan);
+        assert_eq!(via_wrapper.events, via_split.events);
     }
 
     #[test]

@@ -49,7 +49,7 @@ fn over_capacity_design_refused_by_executor() {
 #[test]
 fn unconfigured_device_rejects_dma() {
     let g = Csr::from_edgelist(&generate::chain(5));
-    let mut cm = CommManager::new();
+    let cm = CommManager::new();
     let err = cm.transport_graph(&g).unwrap_err().to_string();
     assert!(err.contains("not configured"), "{err}");
 }

@@ -202,7 +202,12 @@ fn run_report_periods_sum_to_rt() {
     let design = Translator::vivado_hls().translate(&program).unwrap();
     let mut ex = Executor::new(config("er"));
     let r = ex.run(&program, &design, &g).unwrap();
-    let sum = r.prep_seconds + r.compile_seconds + r.deploy_seconds + r.sim_exec_seconds;
+    let sum = r.prep_seconds
+        + r.compile_seconds
+        + r.deploy_seconds
+        + r.sim_exec_seconds
+        + r.functional_exec_seconds
+        + r.transfer_seconds;
     assert!((r.rt_seconds - sum).abs() < 1e-9);
     assert!(r.deploy_seconds >= jgraph::engine::executor::FLASH_SECONDS);
 }
