@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     //     costs sqrt(weight): Apply = src + w + sqrt(w), Reduce = min.
     let hop_penalized = GasProgramBuilder::new("hop-penalized-sssp")
         .state(StateType::F32)
-        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+        .init(InitPolicy::root_and_default(0.0, f64::INFINITY))
         .apply(ApplyExpr::bin(
             BinOp::Add,
             ApplyExpr::src().add(ApplyExpr::weight()),

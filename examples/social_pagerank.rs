@@ -19,7 +19,9 @@ use jgraph::translator::{Translator, TranslatorKind};
 fn main() -> anyhow::Result<()> {
     // a synthetic social graph: 8,192 users, power-law follower counts
     let graph = generate::rmat(13, 180_000, 0.57, 0.19, 0.19, 2024);
-    let program = algorithms::pagerank(0.85, 1e-8);
+    // tolerance binds per query now — the program itself stays generic
+    let program = algorithms::pagerank();
+    let query = RunOptions::default().bind("tolerance", 1e-8);
     let session = Session::new(SessionConfig::default());
 
     println!(
@@ -30,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     for kind in TranslatorKind::all() {
         let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
         let mut bound = compiled.load(&graph, PrepOptions::named("social-rmat13"))?;
-        let report = bound.run(&RunOptions::default())?;
+        let report = bound.run(&query)?;
         println!(
             "  {:10} | {:>3} HDL lines | {:>8.2} MTEPS | RT {:>5.1}s | {} iterations",
             report.translator,
@@ -41,9 +43,11 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // top influencers from the functional values (software oracle)
+    // top influencers from the functional values (software oracle), at
+    // the same per-query tolerance binding
     let csr = jgraph::graph::csr::Csr::from_edgelist(&graph);
-    let values = jgraph::engine::gas::run(&program, &csr, 0, |_| {})?.values;
+    let oracle = program.instantiate(&jgraph::dsl::ParamSet::new().bind("tolerance", 1e-8))?;
+    let values = jgraph::engine::gas::run(&oracle, &csr, 0, |_| {})?.values;
     let mut idx: Vec<usize> = (0..values.len()).collect();
     idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]));
     println!("top-5 influencers (vertex: rank):");

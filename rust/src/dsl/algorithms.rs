@@ -1,12 +1,16 @@
 //! The **algorithm level** (paper §IV-D): "coarse-grained encapsulation...
 //! providing algorithm functions with parameters, such as BFS(graph,
 //! input, pipelineNum, etc.)". Each function returns a ready
-//! [`GasProgram`]; parallelism parameters (pipelines/PEs) live in
+//! [`GasProgram`] that **declares** its parameters (name + default +
+//! range) and references them symbolically; values bind per query via
+//! `RunOptions::bind`, so one compiled design serves the whole parameter
+//! family. Parallelism parameters (pipelines/PEs) live in
 //! [`crate::sched::ParallelismPlan`], passed at execution — the paper's
 //! `Set Pipeline = 8, PE = 1` line of Algorithm 1.
 
 use super::apply::{ApplyExpr, BinOp};
 use super::builder::GasProgramBuilder;
+use super::params::{ParamSpec, Scalar};
 use super::program::{
     Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
     StateType, Writeback,
@@ -15,52 +19,96 @@ use super::program::{
 /// Breadth-first search: level = iter + 1, min-reduced, written to
 /// unvisited vertices only; active frontier; stops when the frontier
 /// empties. The paper's running example (Algorithm 1).
+///
+/// Declares `max_depth` (default unbounded): bind it to stop the
+/// traversal after that many levels — same compiled design.
 pub fn bfs() -> GasProgram {
     GasProgramBuilder::new("bfs")
         .state(StateType::I32)
-        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: -1.0 })
+        .init(InitPolicy::root_and_default(0.0, -1.0))
         .apply(ApplyExpr::iter().add(ApplyExpr::constant(1.0)))
         .reduce(ReduceOp::Min)
         .writeback(Writeback::IfUnvisited)
         .frontier(FrontierPolicy::Active)
         .direction(Direction::Push)
         .convergence(Convergence::EmptyFrontier)
+        .param(
+            ParamSpec::new("max_depth", f64::INFINITY)
+                .with_min(1.0)
+                .with_doc("stop after this many BFS levels (default: unbounded)"),
+        )
+        .depth_limit(Scalar::param("max_depth"))
         .kind(EdgeOpKind::Bfs)
         .build()
         .expect("bfs template must validate")
 }
 
 /// PageRank power iteration: message = src contribution (pre-divided by
-/// out-degree on the vertex-loader module), sum-reduced, overwritten with
-/// damping applied by the writeback stage.
-pub fn pagerank(damping: f64, tolerance: f64) -> GasProgram {
-    assert!((0.0..1.0).contains(&damping), "damping must be in (0,1)");
-    GasProgramBuilder::new(format!("pagerank(d={damping})"))
+/// out-degree on the vertex-loader module), sum-reduced, damped in the
+/// writeback stage.
+///
+/// Declares `damping` (default 0.85, range [0, 1]) and `tolerance`
+/// (default 1e-6) — both bound at query time through the argument
+/// register file, so a damping sweep reuses one synthesized design.
+pub fn pagerank() -> GasProgram {
+    GasProgramBuilder::new("pagerank")
         .state(StateType::F32)
         .init(InitPolicy::UniformFraction)
-        .apply(ApplyExpr::src()) // contribution gather; scale in writeback
+        .apply(ApplyExpr::src()) // contribution gather; damping in writeback
         .reduce(ReduceOp::Sum)
-        .writeback(Writeback::Overwrite)
+        .writeback(Writeback::DampedSum(Scalar::param("damping")))
         .frontier(FrontierPolicy::All)
         .direction(Direction::Push)
-        .convergence(Convergence::DeltaBelow(tolerance))
+        .convergence(Convergence::DeltaBelow(Scalar::param("tolerance")))
+        .param(
+            ParamSpec::new("damping", 0.85)
+                .with_range(0.0, 1.0)
+                .with_doc("random-surfer damping factor"),
+        )
+        .param(ParamSpec::new("tolerance", 1e-6).with_doc("L1 convergence threshold"))
         .kind(EdgeOpKind::Pr)
         .build()
         .expect("pagerank template must validate")
 }
 
+/// Deprecated compile-time-parameter constructor: pre-binds `damping` and
+/// `tolerance` as the signature's defaults. The program (and its emitted
+/// design, kernel name, and AOT artifact key) is **identical** to
+/// [`pagerank`]'s for every argument value — only the defaults differ.
+#[deprecated(
+    since = "0.3.0",
+    note = "use pagerank() and bind damping/tolerance per query: \
+            RunOptions::from_root(r).bind(\"damping\", d).bind(\"tolerance\", t)"
+)]
+pub fn pagerank_with(damping: f64, tolerance: f64) -> GasProgram {
+    assert!((0.0..1.0).contains(&damping), "damping must be in (0,1)");
+    let mut p = pagerank();
+    p.params.set_default("damping", damping);
+    p.params.set_default("tolerance", tolerance);
+    p
+}
+
 /// Single-source shortest paths (Bellman-Ford): message = src + w,
 /// min-reduced and min-combined; sweeps all vertices until no change.
+///
+/// Declares `max_depth` (default unbounded): bind it for bounded-horizon
+/// distances (shortest paths using at most that many hops).
 pub fn sssp() -> GasProgram {
     GasProgramBuilder::new("sssp")
         .state(StateType::F32)
-        .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+        .init(InitPolicy::root_and_default(0.0, f64::INFINITY))
         .apply(ApplyExpr::src().add(ApplyExpr::weight()))
         .reduce(ReduceOp::Min)
         .writeback(Writeback::MinCombine)
         .frontier(FrontierPolicy::All)
         .direction(Direction::Push)
         .convergence(Convergence::NoChange)
+        .param(
+            ParamSpec::new("max_depth", f64::INFINITY)
+                .with_min(1.0)
+                .with_doc("bound the relaxation horizon in hops (default: unbounded)"),
+        )
+        .depth_limit(Scalar::param("max_depth"))
         .kind(EdgeOpKind::Sssp)
         .build()
         .expect("sssp template must validate")
@@ -87,7 +135,7 @@ pub fn wcc() -> GasProgram {
 pub fn spmv() -> GasProgram {
     GasProgramBuilder::new("spmv")
         .state(StateType::F32)
-        .init(InitPolicy::Constant(1.0))
+        .init(InitPolicy::Constant(1.0.into()))
         .apply(ApplyExpr::src().mul(ApplyExpr::weight()))
         .reduce(ReduceOp::Sum)
         .writeback(Writeback::Overwrite)
@@ -105,7 +153,7 @@ pub fn spmv() -> GasProgram {
 pub fn degree_count() -> GasProgram {
     GasProgramBuilder::new("degree-count")
         .state(StateType::F32)
-        .init(InitPolicy::Constant(0.0))
+        .init(InitPolicy::Constant(0.0.into()))
         .apply(ApplyExpr::constant(1.0))
         .reduce(ReduceOp::Sum)
         .writeback(Writeback::Overwrite)
@@ -118,15 +166,23 @@ pub fn degree_count() -> GasProgram {
 /// Widest-path (maximum-bottleneck): message = min(src, w), max-reduced.
 /// Another extensibility demo: a real algorithm the paper's comparators
 /// cannot express without new RTL.
+///
+/// Declares `max_depth` (default unbounded) like the other traversals.
 pub fn widest_path() -> GasProgram {
     GasProgramBuilder::new("widest-path")
         .state(StateType::F32)
-        .init(InitPolicy::RootAndDefault { root_value: f64::MAX, default: 0.0 })
+        .init(InitPolicy::root_and_default(f64::MAX, 0.0))
         .apply(ApplyExpr::bin(BinOp::Min, ApplyExpr::src(), ApplyExpr::weight()))
         .reduce(ReduceOp::Max)
         .writeback(Writeback::MaxCombine)
         .frontier(FrontierPolicy::All)
         .convergence(Convergence::NoChange)
+        .param(
+            ParamSpec::new("max_depth", f64::INFINITY)
+                .with_min(1.0)
+                .with_doc("bound the bottleneck-path horizon in hops"),
+        )
+        .depth_limit(Scalar::param("max_depth"))
         .build()
         .expect("widest-path template must validate")
 }
@@ -137,7 +193,7 @@ pub fn widest_path() -> GasProgram {
 pub fn reachability() -> GasProgram {
     GasProgramBuilder::new("reachability")
         .state(StateType::I32)
-        .init(InitPolicy::RootAndDefault { root_value: 1.0, default: 0.0 })
+        .init(InitPolicy::root_and_default(1.0, 0.0))
         .apply(ApplyExpr::src())
         .reduce(ReduceOp::Max)
         .writeback(Writeback::MaxCombine)
@@ -165,7 +221,7 @@ pub fn max_label() -> GasProgram {
 
 /// The canonical programs with AOT kernels (used by tests and reports).
 pub fn all_canonical() -> Vec<GasProgram> {
-    vec![bfs(), pagerank(0.85, 1e-6), sssp(), wcc(), spmv()]
+    vec![bfs(), pagerank(), sssp(), wcc(), spmv()]
 }
 
 /// Every library algorithm, canonical + extension templates.
@@ -235,8 +291,50 @@ mod tests {
     }
 
     #[test]
+    fn pagerank_declares_its_parameters() {
+        let p = pagerank();
+        assert_eq!(p.name, "pagerank", "name must be parameter-independent");
+        assert_eq!(p.params.names(), vec!["damping", "tolerance"]);
+        let r = p.resolve_params(&crate::dsl::params::ParamSet::new()).unwrap();
+        assert_eq!(r.get("damping"), Some(0.85));
+        assert_eq!(r.get("tolerance"), Some(1e-6));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_prebinds_defaults_but_keeps_the_design() {
+        let new = pagerank();
+        let old = pagerank_with(0.9, 1e-4);
+        assert_eq!(old.name, new.name);
+        assert_eq!(old.apply, new.apply);
+        assert_eq!(old.writeback, new.writeback, "still a symbolic $damping reference");
+        assert_eq!(old.convergence, new.convergence);
+        let r = old.resolve_params(&crate::dsl::params::ParamSet::new()).unwrap();
+        assert_eq!(r.get("damping"), Some(0.9));
+        assert_eq!(r.get("tolerance"), Some(1e-4));
+    }
+
+    #[test]
+    #[allow(deprecated)]
     #[should_panic(expected = "damping")]
-    fn pagerank_rejects_bad_damping() {
-        pagerank(1.5, 1e-6);
+    fn pagerank_shim_rejects_bad_damping() {
+        pagerank_with(1.5, 1e-6);
+    }
+
+    #[test]
+    fn out_of_range_damping_is_a_typed_error_at_binding_time() {
+        use crate::dsl::params::{ParamError, ParamSet};
+        let err = pagerank()
+            .resolve_params(&ParamSet::new().bind("damping", 1.5))
+            .unwrap_err();
+        assert!(matches!(err, ParamError::OutOfRange { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn traversals_declare_max_depth() {
+        for p in [bfs(), sssp(), widest_path()] {
+            assert!(p.params.get("max_depth").is_some(), "{} lacks max_depth", p.name);
+            assert_eq!(p.depth_limit, Some(Scalar::param("max_depth")), "{}", p.name);
+        }
     }
 }

@@ -11,7 +11,7 @@
 
 
 /// Leaf terms available to an apply expression.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Term {
     /// Gathered source-vertex state (the `Receive` result).
     SrcValue,
@@ -23,6 +23,13 @@ pub enum Term {
     IterCount,
     /// A literal constant.
     Const(f64),
+    /// A declared runtime parameter, bound per query and substituted to a
+    /// [`Term::Const`] by [`GasProgram::instantiate`] before evaluation.
+    /// In hardware this is an operand wired from the argument register
+    /// file instead of a synthesized literal.
+    ///
+    /// [`GasProgram::instantiate`]: super::program::GasProgram::instantiate
+    Param(String),
 }
 
 /// Binary operators (the paper's `+ - * / %` plus min/max which the
@@ -64,6 +71,12 @@ impl ApplyExpr {
         ApplyExpr::Term(Term::Const(c))
     }
 
+    /// Reference a declared runtime parameter: a per-query constant fed
+    /// from the argument register file rather than baked into the design.
+    pub fn param(name: impl Into<String>) -> Self {
+        ApplyExpr::Term(Term::Param(name.into()))
+    }
+
     pub fn src() -> Self {
         ApplyExpr::Term(Term::SrcValue)
     }
@@ -97,12 +110,16 @@ impl ApplyExpr {
     /// the caller.
     pub fn eval(&self, env: &ApplyEnv) -> f64 {
         match self {
-            ApplyExpr::Term(t) => match *t {
+            ApplyExpr::Term(t) => match t {
                 Term::SrcValue => env.src_value,
                 Term::DstValue => env.dst_value,
                 Term::EdgeWeight => env.edge_weight,
                 Term::IterCount => env.iter_count,
-                Term::Const(c) => c,
+                Term::Const(c) => *c,
+                Term::Param(name) => panic!(
+                    "parameter {name:?} is unresolved — instantiate the \
+                     program (bind its ParamSet) before evaluating Apply"
+                ),
             },
             ApplyExpr::Unary(op, a) => {
                 let x = a.eval(env);
@@ -163,6 +180,51 @@ impl ApplyExpr {
         self.any_term(|t| matches!(t, Term::SrcValue))
     }
 
+    /// Does the expression reference any runtime parameter?
+    pub fn uses_params(&self) -> bool {
+        self.any_term(|t| matches!(t, Term::Param(_)))
+    }
+
+    /// Collect every referenced parameter name (with duplicates) into
+    /// `out` — validation checks each against the declared signature.
+    pub fn param_names<'a>(&'a self, out: &mut Vec<&'a str>) {
+        match self {
+            ApplyExpr::Term(Term::Param(name)) => out.push(name),
+            ApplyExpr::Term(_) => {}
+            ApplyExpr::Unary(_, a) => a.param_names(out),
+            ApplyExpr::Binary(_, a, b) => {
+                a.param_names(out);
+                b.param_names(out);
+            }
+        }
+    }
+
+    /// Substitute every [`Term::Param`] with its bound value, yielding a
+    /// closed expression the interpreter can evaluate.
+    pub fn bind_params(
+        &self,
+        resolved: &crate::dsl::params::ResolvedParams,
+    ) -> Result<ApplyExpr, crate::dsl::params::ParamError> {
+        use crate::dsl::params::ParamError;
+        Ok(match self {
+            ApplyExpr::Term(Term::Param(name)) => {
+                let value = resolved
+                    .get(name)
+                    .ok_or_else(|| ParamError::Unbound { name: name.clone() })?;
+                ApplyExpr::Term(Term::Const(value))
+            }
+            ApplyExpr::Term(t) => ApplyExpr::Term(t.clone()),
+            ApplyExpr::Unary(op, a) => {
+                ApplyExpr::Unary(*op, Box::new(a.bind_params(resolved)?))
+            }
+            ApplyExpr::Binary(op, a, b) => ApplyExpr::Binary(
+                *op,
+                Box::new(a.bind_params(resolved)?),
+                Box::new(b.bind_params(resolved)?),
+            ),
+        })
+    }
+
     pub(crate) fn any_term(&self, f: impl Fn(&Term) -> bool + Copy) -> bool {
         match self {
             ApplyExpr::Term(t) => f(t),
@@ -180,6 +242,7 @@ impl ApplyExpr {
                 Term::EdgeWeight => "w".into(),
                 Term::IterCount => "iter".into(),
                 Term::Const(c) => format!("{c}"),
+                Term::Param(name) => format!("${name}"),
             },
             ApplyExpr::Unary(op, a) => {
                 let name = match op {
@@ -309,6 +372,29 @@ mod tests {
         );
         assert_eq!(e.op_count(), 3);
         assert_eq!(e.depth(), 2);
+    }
+
+    #[test]
+    fn param_terms_substitute_before_eval() {
+        use crate::dsl::params::{ParamSet, ParamSignature, ParamSpec};
+        let e = ApplyExpr::src().mul(ApplyExpr::param("beta"));
+        assert!(e.uses_params());
+        let mut names = Vec::new();
+        e.param_names(&mut names);
+        assert_eq!(names, vec!["beta"]);
+        let mut sig = ParamSignature::default();
+        sig.declare(ParamSpec::new("beta", 2.0));
+        let resolved = sig.resolve(&ParamSet::new().bind("beta", 4.0)).unwrap();
+        let closed = e.bind_params(&resolved).unwrap();
+        assert!(!closed.uses_params());
+        assert_eq!(closed.eval(&env()), 12.0);
+        assert_eq!(e.render(), "(src * $beta)");
+    }
+
+    #[test]
+    #[should_panic(expected = "unresolved")]
+    fn eval_of_unbound_param_panics() {
+        ApplyExpr::param("gamma").eval(&env());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use super::apply::ApplyExpr;
+use super::params::{ParamSignature, ParamSpec, Scalar};
 use super::program::{
     Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
     StateType, Writeback,
@@ -12,6 +13,33 @@ use super::validate;
 
 /// Builder with sane defaults: f32 state, push direction, all-active
 /// frontier, no-change convergence, sum reduce, overwrite writeback.
+///
+/// Runtime parameters are **declared** here ([`GasProgramBuilder::param`])
+/// and **referenced** symbolically ([`ApplyExpr::param`],
+/// [`Scalar::param`]); values bind per query, after compilation, so one
+/// synthesized design serves the whole parameter family:
+///
+/// ```
+/// use jgraph::dsl::builder::GasProgramBuilder;
+/// use jgraph::dsl::params::{ParamSet, ParamSpec};
+/// use jgraph::dsl::apply::ApplyExpr;
+///
+/// // "scaled SSSP": message = src + scale * w, with `scale` bound per query
+/// let program = GasProgramBuilder::new("scaled-sssp")
+///     .init(jgraph::dsl::program::InitPolicy::root_and_default(0.0, f64::INFINITY))
+///     .apply(ApplyExpr::src().add(ApplyExpr::param("scale").mul(ApplyExpr::weight())))
+///     .reduce(jgraph::dsl::program::ReduceOp::Min)
+///     .param(ParamSpec::new("scale", 1.0).with_min(0.0))
+///     .build()
+///     .unwrap();
+///
+/// assert!(program.has_runtime_params());
+/// // bind at query time: the default (1.0) or an explicit value
+/// let closed = program.instantiate(&ParamSet::new().bind("scale", 2.5)).unwrap();
+/// assert_eq!(closed.apply.render(), "(src + (2.5 * w))");
+/// // a typo'd name is a typed error listing the declared signature
+/// assert!(program.instantiate(&ParamSet::new().bind("scael", 2.5)).is_err());
+/// ```
 #[derive(Debug, Clone)]
 pub struct GasProgramBuilder {
     name: String,
@@ -24,6 +52,8 @@ pub struct GasProgramBuilder {
     direction: Direction,
     convergence: Convergence,
     kind: Option<EdgeOpKind>,
+    params: ParamSignature,
+    depth_limit: Option<Scalar>,
 }
 
 impl GasProgramBuilder {
@@ -31,7 +61,7 @@ impl GasProgramBuilder {
         Self {
             name: name.into(),
             state: StateType::F32,
-            init: InitPolicy::Constant(0.0),
+            init: InitPolicy::Constant(0.0.into()),
             apply: None,
             reduce: ReduceOp::Sum,
             writeback: None,
@@ -39,6 +69,8 @@ impl GasProgramBuilder {
             direction: Direction::Push,
             convergence: Convergence::NoChange,
             kind: None,
+            params: ParamSignature::default(),
+            depth_limit: None,
         }
     }
 
@@ -81,6 +113,23 @@ impl GasProgramBuilder {
 
     pub fn convergence(mut self, c: Convergence) -> Self {
         self.convergence = c;
+        self
+    }
+
+    /// Declare a runtime parameter (name + default + range). Parameters
+    /// bind **per query** via `RunOptions::bind`; the design and its
+    /// kernel name stay identical across values. Redeclaring a name
+    /// replaces the earlier spec.
+    pub fn param(mut self, spec: ParamSpec) -> Self {
+        self.params.declare(spec);
+        self
+    }
+
+    /// Bound the traversal depth: the run converges once this many
+    /// supersteps have executed, frontier or not. Usually a parameter
+    /// reference (`Scalar::param("max_depth")`).
+    pub fn depth_limit(mut self, limit: impl Into<Scalar>) -> Self {
+        self.depth_limit = Some(limit.into());
         self
     }
 
@@ -134,6 +183,8 @@ impl GasProgramBuilder {
             convergence: self.convergence,
             uses_weights,
             kind: self.kind,
+            params: self.params,
+            depth_limit: self.depth_limit,
         };
         validate::check(&p)?;
         Ok(p)
@@ -173,7 +224,7 @@ mod tests {
         );
         let p = GasProgramBuilder::new("sqrt-sssp")
             .state(StateType::F32)
-            .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+            .init(InitPolicy::root_and_default(0.0, f64::INFINITY))
             .apply(e)
             .reduce(ReduceOp::Min)
             .convergence(Convergence::NoChange)

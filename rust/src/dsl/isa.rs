@@ -22,6 +22,9 @@ use crate::dsl::program::{FrontierPolicy, GasProgram, ReduceOp, Writeback};
 /// extended with the memory ops of §IV-D's examples.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Instr {
+    /// Write the query's bound parameters into the argument register file
+    /// (`set_argument`): the host's per-query setup, no recompile.
+    LoadArgs { count: usize },
     /// Burst-load vertex values into BRAM (`load_Vertices`).
     LoadVertices { base: &'static str, len: &'static str },
     /// Compute a DRAM address (`get_address`).
@@ -49,6 +52,7 @@ pub enum Instr {
 impl Instr {
     pub fn mnemonic(&self) -> String {
         match self {
+            Instr::LoadArgs { count } => format!("LARG  x{count}"),
             Instr::LoadVertices { base, len } => format!("LDV   {base}, {len}"),
             Instr::GetAddress { array, index } => format!("ADDR  {array}[{index}]"),
             Instr::BurstRead { addr, beats } => format!("BRD   {addr}, x{beats}"),
@@ -104,7 +108,12 @@ pub fn compile(program: &GasProgram) -> IsaProgram {
     let mut per_vertex = 0;
     let mut per_edge = 0;
 
-    // prologue: vertex state into BRAM
+    // prologue: bound parameters into the argument registers (once per
+    // query, written by the host), then vertex state into BRAM
+    if program.has_runtime_params() {
+        instrs.push((None, Instr::LoadArgs { count: program.params.len() }));
+        per_superstep += 1;
+    }
     instrs.push((None, Instr::LoadVertices { base: "V", len: "N" }));
     per_superstep += 1;
 
@@ -142,6 +151,7 @@ pub fn compile(program: &GasProgram) -> IsaProgram {
         Writeback::MaxCombine => "MAX",
         Writeback::IfUnvisited => "UNV",
         Writeback::Overwrite => "OVR",
+        Writeback::DampedSum(_) => "DMP",
     };
     instrs.push((None, Instr::Upd { rule }));
     per_vertex += 1;
@@ -182,9 +192,12 @@ mod tests {
 
     #[test]
     fn all_active_programs_have_no_queue_push() {
-        let isa = compile(&algorithms::pagerank(0.85, 1e-6));
+        let isa = compile(&algorithms::pagerank());
         assert!(!isa.listing().contains("QPUSH"));
         assert!(isa.listing().contains("next_vertex:"));
+        // parameterized programs load their argument registers up front
+        assert!(isa.listing().contains("LARG  x2"));
+        assert!(isa.listing().contains("UPD.DMP"));
     }
 
     #[test]

@@ -22,12 +22,14 @@ pub mod apply;
 pub mod builder;
 pub mod isa;
 pub mod ops;
+pub mod params;
 pub mod program;
 pub mod registry;
 pub mod validate;
 
 pub use apply::{ApplyExpr, BinOp, Term, UnOp};
 pub use builder::GasProgramBuilder;
+pub use params::{ParamError, ParamSet, ParamSignature, ParamSpec, ResolvedParams, Scalar};
 pub use program::{
     Convergence, Direction, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp,
     StateType,

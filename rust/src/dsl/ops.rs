@@ -49,6 +49,10 @@ pub enum HwModule {
     MemController,
     PcieDma,
     ControlRegs,
+    /// Host-written runtime-argument register file: the landing zone for
+    /// per-query parameter bindings (damping, tolerance, max_depth, …) so
+    /// the synthesized design is identical across parameter values.
+    ArgRegFile,
     HostOnly,
 }
 
@@ -143,6 +147,10 @@ pub const INTERFACES: &[InterfaceSpec] = &[
            "configure parallel pipeline lanes"),
     iface!("Set_PE", Control, Function, ControlRegs, "(count)",
            "configure processing-element count"),
+    iface!("Set_Argument", Control, Function, ArgRegFile, "(name, value)",
+           "bind a declared runtime parameter into the argument register file"),
+    iface!("Get_Argument", Control, Function, ArgRegFile, "(name)",
+           "read back a bound runtime-parameter register"),
     // --- Atomic level (§IV-D level 3): instruction-like ops
     iface!("load_Vertices", GraphData, Atomic, BramCache, "(base, len)",
            "burst-load vertex values into BRAM ahead of traversal"),

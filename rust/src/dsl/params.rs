@@ -1,0 +1,435 @@
+//! **Runtime parameters** — the paper's "user-defined functions *with
+//! parameters*" (§IV-D: `BFS(graph, input, pipelineNum, etc.)`) made a
+//! first-class DSL surface.
+//!
+//! A [`GasProgram`] *declares* its parameters (a [`ParamSignature`] of
+//! named [`ParamSpec`]s with defaults and valid ranges) and *references*
+//! them symbolically — as [`Scalar::Param`] inside `InitPolicy` /
+//! `Convergence` / `Writeback`, or as `Term::Param` inside the Apply
+//! expression. Values are bound **per query** through a [`ParamSet`]
+//! (`RunOptions::bind("damping", 0.9)`), never at compile time: the
+//! translator lowers every parameter to a host-written argument register,
+//! so one synthesized design serves the whole parameter family — the
+//! compile-once/run-many lifecycle extended to its natural conclusion.
+//!
+//! Binding failures are **typed** ([`ParamError`]): unknown names list the
+//! declared signature, unbound required parameters are named, and
+//! out-of-range values report the violated bounds.
+//!
+//! [`GasProgram`]: super::program::GasProgram
+
+use std::fmt;
+
+/// A scalar the DSL can hold either as a literal or as a reference to a
+/// declared runtime parameter. `From<f64>` keeps literal call sites terse
+/// (`Convergence::DeltaBelow(1e-6.into())`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    /// A compile-time literal.
+    Lit(f64),
+    /// A reference to a declared runtime parameter, bound per query.
+    Param(String),
+}
+
+impl From<f64> for Scalar {
+    fn from(v: f64) -> Self {
+        Scalar::Lit(v)
+    }
+}
+
+impl Scalar {
+    /// Reference a declared runtime parameter by name.
+    pub fn param(name: impl Into<String>) -> Self {
+        Scalar::Param(name.into())
+    }
+
+    /// The literal value, if this scalar is one.
+    pub fn as_lit(&self) -> Option<f64> {
+        match self {
+            Scalar::Lit(v) => Some(*v),
+            Scalar::Param(_) => None,
+        }
+    }
+
+    /// The referenced parameter name, if this scalar is a reference.
+    pub fn param_name(&self) -> Option<&str> {
+        match self {
+            Scalar::Lit(_) => None,
+            Scalar::Param(name) => Some(name),
+        }
+    }
+
+    /// The literal value of an **instantiated** scalar. Panics on an
+    /// unresolved parameter reference — engine paths always run
+    /// [`instantiate`](super::program::GasProgram::instantiate)d programs,
+    /// so hitting this is a lifecycle bug, not a user error.
+    pub fn lit(&self) -> f64 {
+        match self {
+            Scalar::Lit(v) => *v,
+            Scalar::Param(name) => panic!(
+                "parameter {name:?} is unresolved — instantiate the program \
+                 (bind its ParamSet) before evaluating"
+            ),
+        }
+    }
+
+    /// Resolve against a set of bound values: literals pass through,
+    /// references look up their binding.
+    pub fn resolve(&self, resolved: &ResolvedParams) -> Result<f64, ParamError> {
+        match self {
+            Scalar::Lit(v) => Ok(*v),
+            Scalar::Param(name) => resolved
+                .get(name)
+                .ok_or_else(|| ParamError::Unbound { name: name.clone() }),
+        }
+    }
+
+    /// Substitute: a resolved copy where parameter references become
+    /// literals.
+    pub fn bind(&self, resolved: &ResolvedParams) -> Result<Scalar, ParamError> {
+        Ok(Scalar::Lit(self.resolve(resolved)?))
+    }
+
+    /// Human-readable rendering (codegen comments, reports).
+    pub fn render(&self) -> String {
+        match self {
+            Scalar::Lit(v) => format!("{v}"),
+            Scalar::Param(name) => format!("${name}"),
+        }
+    }
+}
+
+/// Declaration of one runtime parameter: its name, optional default (a
+/// parameter without a default is **required** at query time), and
+/// optional inclusive range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    /// Value used when the query binds nothing; `None` = required.
+    pub default: Option<f64>,
+    /// Inclusive lower bound.
+    pub min: Option<f64>,
+    /// Inclusive upper bound.
+    pub max: Option<f64>,
+    /// One-line description (CLI listings, generated host-code comments).
+    pub doc: String,
+}
+
+impl ParamSpec {
+    /// A required parameter (no default, unbounded).
+    pub fn required(name: impl Into<String>) -> Self {
+        Self { name: name.into(), default: None, min: None, max: None, doc: String::new() }
+    }
+
+    /// An optional parameter with a default value.
+    pub fn new(name: impl Into<String>, default: f64) -> Self {
+        Self { name: name.into(), default: Some(default), min: None, max: None, doc: String::new() }
+    }
+
+    /// Constrain to the inclusive range `[min, max]`.
+    pub fn with_range(mut self, min: f64, max: f64) -> Self {
+        self.min = Some(min);
+        self.max = Some(max);
+        self
+    }
+
+    /// Constrain to `value >= min`.
+    pub fn with_min(mut self, min: f64) -> Self {
+        self.min = Some(min);
+        self
+    }
+
+    pub fn with_doc(mut self, doc: impl Into<String>) -> Self {
+        self.doc = doc.into();
+        self
+    }
+
+    fn check_range(&self, value: f64) -> Result<(), ParamError> {
+        let lo = self.min.unwrap_or(f64::NEG_INFINITY);
+        let hi = self.max.unwrap_or(f64::INFINITY);
+        // NaN is outside every range (and `v < lo || v > hi` would let it
+        // through — the comparisons are false for NaN).
+        if value.is_nan() || value < lo || value > hi {
+            return Err(ParamError::OutOfRange {
+                name: self.name.clone(),
+                value,
+                min: lo,
+                max: hi,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The declared parameter signature of a program: what the builder
+/// collects and `validate` enforces. Order-preserving (it is also the
+/// argument-register layout the translator emits).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParamSignature {
+    specs: Vec<ParamSpec>,
+}
+
+impl ParamSignature {
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Declare a parameter. A redeclaration with the same name replaces
+    /// the earlier spec (last wins — how the deprecated constructors
+    /// pre-bind their argument values as defaults).
+    pub fn declare(&mut self, spec: ParamSpec) {
+        match self.specs.iter_mut().find(|s| s.name == spec.name) {
+            Some(slot) => *slot = spec,
+            None => self.specs.push(spec),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ParamSpec> {
+        self.specs.iter()
+    }
+
+    /// Declared names, in register order.
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Override the default of an already-declared parameter (the
+    /// deprecated pre-binding shims). No-op for unknown names.
+    pub fn set_default(&mut self, name: &str, value: f64) {
+        if let Some(s) = self.specs.iter_mut().find(|s| s.name == name) {
+            s.default = Some(value);
+        }
+    }
+
+    /// Resolve a query's bindings against this signature:
+    ///
+    /// 1. every binding must name a declared parameter
+    ///    ([`ParamError::Unknown`] lists the signature on a typo);
+    /// 2. bound values must sit inside the declared range
+    ///    ([`ParamError::OutOfRange`]);
+    /// 3. every declared parameter must end up with a value — its binding
+    ///    or its default ([`ParamError::Unbound`] names the missing one).
+    pub fn resolve(&self, set: &ParamSet) -> Result<ResolvedParams, ParamError> {
+        for (name, value) in set.iter() {
+            let spec = self.get(name).ok_or_else(|| ParamError::Unknown {
+                name: name.clone(),
+                declared: self.names().iter().map(|s| s.to_string()).collect(),
+            })?;
+            spec.check_range(*value)?;
+        }
+        let mut values = Vec::with_capacity(self.specs.len());
+        for spec in &self.specs {
+            let value = set
+                .get(&spec.name)
+                .or(spec.default)
+                .ok_or_else(|| ParamError::Unbound { name: spec.name.clone() })?;
+            values.push((spec.name.clone(), value));
+        }
+        Ok(ResolvedParams { values })
+    }
+}
+
+/// Per-query parameter bindings — the host side of the argument register
+/// file. Built fluently: `ParamSet::new().bind("damping", 0.9)`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParamSet {
+    bindings: Vec<(String, f64)>,
+}
+
+impl ParamSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind `name` to `value` (replacing an earlier binding of the same
+    /// name), builder-style.
+    pub fn bind(mut self, name: impl Into<String>, value: f64) -> Self {
+        self.set(name, value);
+        self
+    }
+
+    /// Bind in place.
+    pub fn set(&mut self, name: impl Into<String>, value: f64) {
+        let name = name.into();
+        match self.bindings.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v = value,
+            None => self.bindings.push((name, value)),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.bindings.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bindings.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, f64)> {
+        self.bindings.iter()
+    }
+}
+
+/// The effective values of every declared parameter for one query:
+/// defaults filled in, ranges checked. What the engines read and what the
+/// host driver writes into the argument registers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResolvedParams {
+    values: Vec<(String, f64)>,
+}
+
+impl ResolvedParams {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, f64)> {
+        self.values.iter()
+    }
+
+    /// `(name, value)` pairs in register order (report surfaces).
+    pub fn to_vec(&self) -> Vec<(String, f64)> {
+        self.values.clone()
+    }
+}
+
+/// Typed parameter-binding errors. `Display` messages are written for the
+/// CLI: an unknown name lists the declared signature so typos are
+/// self-diagnosing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamError {
+    /// The query bound a name the program does not declare.
+    Unknown { name: String, declared: Vec<String> },
+    /// A required parameter (no default) was left unbound.
+    Unbound { name: String },
+    /// A bound value violates the declared range.
+    OutOfRange { name: String, value: f64, min: f64, max: f64 },
+}
+
+impl fmt::Display for ParamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamError::Unknown { name, declared } => {
+                if declared.is_empty() {
+                    write!(f, "unknown parameter {name:?}: the program declares no parameters")
+                } else {
+                    write!(
+                        f,
+                        "unknown parameter {name:?}; declared parameters: {}",
+                        declared.join(", ")
+                    )
+                }
+            }
+            ParamError::Unbound { name } => {
+                write!(f, "required parameter {name:?} is unbound (no default declared)")
+            }
+            ParamError::OutOfRange { name, value, min, max } => {
+                write!(f, "parameter {name:?} = {value} outside the declared range [{min}, {max}]")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParamError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig() -> ParamSignature {
+        let mut s = ParamSignature::default();
+        s.declare(ParamSpec::new("damping", 0.85).with_range(0.0, 1.0));
+        s.declare(ParamSpec::new("tolerance", 1e-6));
+        s.declare(ParamSpec::required("alpha"));
+        s
+    }
+
+    #[test]
+    fn defaults_fill_in_and_bindings_override() {
+        let r = sig().resolve(&ParamSet::new().bind("alpha", 2.0)).unwrap();
+        assert_eq!(r.get("damping"), Some(0.85));
+        assert_eq!(r.get("alpha"), Some(2.0));
+        let r = sig()
+            .resolve(&ParamSet::new().bind("alpha", 2.0).bind("damping", 0.9))
+            .unwrap();
+        assert_eq!(r.get("damping"), Some(0.9));
+    }
+
+    #[test]
+    fn unknown_binding_lists_declared_names() {
+        let err = sig()
+            .resolve(&ParamSet::new().bind("alpha", 1.0).bind("dampng", 0.9))
+            .unwrap_err();
+        match &err {
+            ParamError::Unknown { name, declared } => {
+                assert_eq!(name, "dampng");
+                assert_eq!(declared, &["damping", "tolerance", "alpha"]);
+            }
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("damping, tolerance, alpha"), "{msg}");
+    }
+
+    #[test]
+    fn required_param_must_be_bound() {
+        let err = sig().resolve(&ParamSet::new()).unwrap_err();
+        assert_eq!(err, ParamError::Unbound { name: "alpha".into() });
+        assert!(err.to_string().contains("\"alpha\""));
+    }
+
+    #[test]
+    fn range_is_enforced_inclusively() {
+        let set = ParamSet::new().bind("alpha", 0.0).bind("damping", 1.5);
+        match sig().resolve(&set).unwrap_err() {
+            ParamError::OutOfRange { name, value, min, max } => {
+                assert_eq!((name.as_str(), value, min, max), ("damping", 1.5, 0.0, 1.0));
+            }
+            other => panic!("expected OutOfRange, got {other:?}"),
+        }
+        // the bounds themselves are legal
+        sig().resolve(&ParamSet::new().bind("alpha", 0.0).bind("damping", 1.0)).unwrap();
+        // NaN never satisfies a range, declared or not
+        let err = sig()
+            .resolve(&ParamSet::new().bind("alpha", 0.0).bind("damping", f64::NAN))
+            .unwrap_err();
+        assert!(matches!(err, ParamError::OutOfRange { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn scalar_resolution_and_substitution() {
+        let r = sig().resolve(&ParamSet::new().bind("alpha", 3.0)).unwrap();
+        assert_eq!(Scalar::param("damping").resolve(&r).unwrap(), 0.85);
+        assert_eq!(Scalar::Lit(7.0).resolve(&r).unwrap(), 7.0);
+        assert_eq!(Scalar::param("alpha").bind(&r).unwrap(), Scalar::Lit(3.0));
+        assert_eq!(
+            Scalar::param("nope").resolve(&r).unwrap_err(),
+            ParamError::Unbound { name: "nope".into() }
+        );
+        assert_eq!(Scalar::param("damping").render(), "$damping");
+        assert_eq!(Scalar::Lit(0.5).render(), "0.5");
+    }
+
+    #[test]
+    fn redeclare_replaces_and_set_default_prebinds() {
+        let mut s = sig();
+        s.declare(ParamSpec::new("alpha", 9.0));
+        assert_eq!(s.len(), 3, "redeclaration must not duplicate");
+        let r = s.resolve(&ParamSet::new()).unwrap();
+        assert_eq!(r.get("alpha"), Some(9.0));
+        s.set_default("damping", 0.5);
+        assert_eq!(s.resolve(&ParamSet::new()).unwrap().get("damping"), Some(0.5));
+    }
+}

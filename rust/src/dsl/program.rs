@@ -5,6 +5,7 @@
 
 
 use super::apply::ApplyExpr;
+use super::params::{ParamError, ParamSet, ParamSignature, ResolvedParams, Scalar};
 
 /// Vertex-state element type carried through the datapath.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -13,17 +14,26 @@ pub enum StateType {
     F32,
 }
 
-/// How vertex state is initialized before iteration 0.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// How vertex state is initialized before iteration 0. Scalars may be
+/// literals or references to declared runtime parameters
+/// ([`Scalar::Param`]), bound per query.
+#[derive(Debug, Clone, PartialEq)]
 pub enum InitPolicy {
     /// Root gets `root_value`, everyone else `default` (BFS/SSSP).
-    RootAndDefault { root_value: f64, default: f64 },
+    RootAndDefault { root_value: Scalar, default: Scalar },
     /// Every vertex gets its own id (WCC labels).
     VertexId,
     /// Every vertex gets `1 / num_vertices` (PageRank).
     UniformFraction,
     /// Every vertex gets a constant.
-    Constant(f64),
+    Constant(Scalar),
+}
+
+impl InitPolicy {
+    /// Literal-valued `RootAndDefault` (the common case).
+    pub fn root_and_default(root_value: f64, default: f64) -> Self {
+        InitPolicy::RootAndDefault { root_value: root_value.into(), default: default.into() }
+    }
 }
 
 /// The Reduce accumulator combining multiple messages for one vertex
@@ -54,7 +64,7 @@ pub enum Direction {
 }
 
 /// Convergence test evaluated by the runtime scheduler after each superstep.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Convergence {
     /// Stop when no vertex joined the frontier (BFS).
     EmptyFrontier,
@@ -62,8 +72,10 @@ pub enum Convergence {
     NoChange,
     /// Fixed superstep count (SpMV = 1).
     FixedIterations(u32),
-    /// Stop when the L1 delta drops below the threshold (PageRank).
-    DeltaBelow(f64),
+    /// Stop when the L1 delta drops below the threshold (PageRank). The
+    /// threshold may be a runtime parameter (`Scalar::param("tolerance")`)
+    /// compared against an argument register by the generated host loop.
+    DeltaBelow(Scalar),
 }
 
 /// The five canonical algorithm kinds with AOT-compiled Pallas kernels.
@@ -123,10 +135,18 @@ pub struct GasProgram {
     pub uses_weights: bool,
     /// Canonical kind if this program matches an AOT kernel.
     pub kind: Option<EdgeOpKind>,
+    /// Declared runtime-parameter signature (names + defaults + ranges).
+    /// Collected by the builder, enforced by `validate`, bound per query
+    /// through a [`ParamSet`]; empty after [`GasProgram::instantiate`].
+    pub params: ParamSignature,
+    /// Optional superstep horizon (bounded-depth traversal): the run
+    /// converges once `supersteps >= depth_limit`, even if the frontier is
+    /// non-empty. Typically `Scalar::param("max_depth")`.
+    pub depth_limit: Option<Scalar>,
 }
 
 /// How the reduced message updates the vertex value.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Writeback {
     /// Keep min(old, reduced) — SSSP/WCC relaxations.
     MinCombine,
@@ -134,16 +154,21 @@ pub enum Writeback {
     MaxCombine,
     /// Overwrite only if the vertex was unvisited (BFS level write).
     IfUnvisited,
-    /// Unconditional overwrite (PR power iteration, SpMV).
+    /// Unconditional overwrite (SpMV).
     Overwrite,
+    /// PageRank's damped overwrite: `new = (1-d)/N + d·(reduced +
+    /// dangling/N)` with damping `d` — a [`Scalar`], so the damping factor
+    /// is a host-written argument register, not a synthesized constant.
+    /// Requires `Reduce(Sum)` + F32 state (enforced by validation).
+    DampedSum(Scalar),
 }
 
 impl GasProgram {
     /// Supersteps upper bound the scheduler enforces as a safety net
     /// (diameter can be at most V-1; PR uses the convergence delta).
     pub fn max_supersteps(&self, num_vertices: usize) -> u32 {
-        match self.convergence {
-            Convergence::FixedIterations(k) => k,
+        match &self.convergence {
+            Convergence::FixedIterations(k) => *k,
             Convergence::DeltaBelow(_) => 200,
             _ => num_vertices.max(2) as u32,
         }
@@ -152,6 +177,101 @@ impl GasProgram {
     /// Whether the engine can offload this program to an AOT artifact.
     pub fn has_aot_kernel(&self) -> bool {
         self.kind.is_some()
+    }
+
+    /// Does this program declare runtime parameters that still need
+    /// binding before it can run?
+    pub fn has_runtime_params(&self) -> bool {
+        !self.params.is_empty()
+    }
+
+    /// Resolve a query's [`ParamSet`] against the declared signature —
+    /// defaults filled in, unknown/unbound/out-of-range bindings rejected
+    /// with typed [`ParamError`]s.
+    pub fn resolve_params(&self, set: &ParamSet) -> Result<ResolvedParams, ParamError> {
+        self.params.resolve(set)
+    }
+
+    /// Every parameter name the program's structure references (Apply
+    /// terms plus the scalars in init/convergence/writeback/depth-limit).
+    /// Validation checks each against the declared signature.
+    pub fn param_refs(&self) -> Vec<&str> {
+        let mut names = Vec::new();
+        self.apply.param_names(&mut names);
+        let mut scalars: Vec<&Scalar> = Vec::new();
+        match &self.init {
+            InitPolicy::RootAndDefault { root_value, default } => {
+                scalars.push(root_value);
+                scalars.push(default);
+            }
+            InitPolicy::Constant(c) => scalars.push(c),
+            _ => {}
+        }
+        if let Convergence::DeltaBelow(t) = &self.convergence {
+            scalars.push(t);
+        }
+        if let Writeback::DampedSum(d) = &self.writeback {
+            scalars.push(d);
+        }
+        if let Some(s) = &self.depth_limit {
+            scalars.push(s);
+        }
+        for s in scalars {
+            if let Some(name) = s.param_name() {
+                names.push(name);
+            }
+        }
+        names
+    }
+
+    /// Specialize this program for one query: resolve `set` against the
+    /// declared signature and substitute every parameter reference with
+    /// its bound value. The result is **closed** — empty signature, no
+    /// `Param` scalars or terms — and is what the engines actually run.
+    /// The program's `name` is untouched: the design, its sanitized
+    /// kernel name, and the AOT artifact key are parameter-independent.
+    pub fn instantiate(&self, set: &ParamSet) -> Result<GasProgram, ParamError> {
+        if self.params.is_empty() {
+            // A closed program accepts no bindings: naming one is a typo.
+            if let Some((name, _)) = set.iter().next() {
+                return Err(ParamError::Unknown { name: name.clone(), declared: vec![] });
+            }
+            return Ok(self.clone());
+        }
+        let resolved = self.resolve_params(set)?;
+        self.instantiate_resolved(&resolved)
+    }
+
+    /// [`GasProgram::instantiate`] for callers that already resolved the
+    /// signature (the engine's per-query path resolves exactly once).
+    pub fn instantiate_resolved(
+        &self,
+        resolved: &ResolvedParams,
+    ) -> Result<GasProgram, ParamError> {
+        let mut p = self.clone();
+        p.apply = p.apply.bind_params(resolved)?;
+        p.init = match &self.init {
+            InitPolicy::RootAndDefault { root_value, default } => InitPolicy::RootAndDefault {
+                root_value: root_value.bind(resolved)?,
+                default: default.bind(resolved)?,
+            },
+            InitPolicy::Constant(c) => InitPolicy::Constant(c.bind(resolved)?),
+            other => other.clone(),
+        };
+        p.convergence = match &self.convergence {
+            Convergence::DeltaBelow(t) => Convergence::DeltaBelow(t.bind(resolved)?),
+            other => other.clone(),
+        };
+        p.writeback = match &self.writeback {
+            Writeback::DampedSum(d) => Writeback::DampedSum(d.bind(resolved)?),
+            other => other.clone(),
+        };
+        p.depth_limit = match &self.depth_limit {
+            Some(s) => Some(s.bind(resolved)?),
+            None => None,
+        };
+        p.params = ParamSignature::default();
+        Ok(p)
     }
 }
 
@@ -170,10 +290,41 @@ mod tests {
     fn max_supersteps_bounds() {
         let bfs = algorithms::bfs();
         assert_eq!(bfs.max_supersteps(100), 100);
-        let pr = algorithms::pagerank(0.85, 1e-6);
+        let pr = algorithms::pagerank();
         assert_eq!(pr.max_supersteps(100), 200);
         let spmv = algorithms::spmv();
         assert_eq!(spmv.max_supersteps(100), 1);
+    }
+
+    #[test]
+    fn instantiate_closes_every_param_reference() {
+        use crate::dsl::params::ParamSet;
+        let pr = algorithms::pagerank();
+        assert!(pr.has_runtime_params());
+        assert!(pr.param_refs().contains(&"damping"));
+        assert!(pr.param_refs().contains(&"tolerance"));
+        let closed = pr.instantiate(&ParamSet::new().bind("damping", 0.9)).unwrap();
+        assert!(!closed.has_runtime_params());
+        assert!(closed.param_refs().is_empty());
+        assert_eq!(closed.name, pr.name, "instantiation must not rename the kernel");
+        match &closed.writeback {
+            Writeback::DampedSum(d) => assert_eq!(d.as_lit(), Some(0.9)),
+            other => panic!("expected DampedSum, got {other:?}"),
+        }
+        match &closed.convergence {
+            Convergence::DeltaBelow(t) => assert_eq!(t.as_lit(), Some(1e-6)),
+            other => panic!("expected DeltaBelow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn instantiate_of_closed_program_rejects_bindings() {
+        use crate::dsl::params::{ParamError, ParamSet};
+        let wcc = algorithms::wcc();
+        let err = wcc.instantiate(&ParamSet::new().bind("damping", 0.9)).unwrap_err();
+        assert!(matches!(err, ParamError::Unknown { .. }));
+        // and with no bindings it is the identity
+        assert_eq!(wcc.instantiate(&ParamSet::new()).unwrap(), wcc);
     }
 
 }

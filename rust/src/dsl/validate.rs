@@ -21,6 +21,73 @@ pub fn check(p: &GasProgram) -> Result<()> {
         );
     }
 
+    // The damped-sum writeback is PageRank-shaped: it redistributes the
+    // un-damped mass over a Sum of float contributions.
+    if let Writeback::DampedSum(_) = &p.writeback {
+        if p.reduce != ReduceOp::Sum {
+            bail!(
+                "program {:?}: Writeback::DampedSum requires Reduce(Sum) — \
+                 damping redistributes summed rank mass",
+                p.name
+            );
+        }
+        if p.state == StateType::I32 {
+            bail!("program {:?}: Writeback::DampedSum requires F32 state", p.name);
+        }
+        // The damped (PageRank) engine path iterates to its delta
+        // condition and has no frontier horizon to truncate at.
+        if p.depth_limit.is_some() {
+            bail!(
+                "program {:?}: Writeback::DampedSum cannot combine with a \
+                 depth_limit — damped iteration converges on delta, not depth",
+                p.name
+            );
+        }
+    }
+
+    // Every parameter the structure references must be declared in the
+    // signature — the builder's `.param()` is the single declaration site.
+    for name in p.param_refs() {
+        if p.params.get(name).is_none() {
+            bail!(
+                "program {:?}: references undeclared parameter {:?} — declare \
+                 it with GasProgramBuilder::param (declared: {})",
+                p.name,
+                name,
+                if p.params.is_empty() { "none".to_string() } else { p.params.names().join(", ") }
+            );
+        }
+    }
+
+    // Declared defaults must themselves satisfy the declared range, so a
+    // default-only query can never produce an out-of-range value.
+    for spec in p.params.iter() {
+        if let Some(default) = spec.default {
+            let lo = spec.min.unwrap_or(f64::NEG_INFINITY);
+            let hi = spec.max.unwrap_or(f64::INFINITY);
+            if default < lo || default > hi {
+                bail!(
+                    "program {:?}: parameter {:?} default {} outside its own \
+                     range [{}, {}]",
+                    p.name,
+                    spec.name,
+                    default,
+                    lo,
+                    hi
+                );
+            }
+        }
+    }
+
+    // A literal depth limit below one superstep would never run.
+    if let Some(limit) = &p.depth_limit {
+        if let Some(v) = limit.as_lit() {
+            if v < 1.0 {
+                bail!("program {:?}: depth_limit {} would never run a superstep", p.name, v);
+            }
+        }
+    }
+
     // Integer state with division: the fixed-point datapath has no divider.
     if p.state == StateType::I32 && expr_has_div(&p.apply) {
         bail!(
@@ -40,8 +107,8 @@ pub fn check(p: &GasProgram) -> Result<()> {
 
     // Infinity defaults only make sense for f32 state; the i32 datapath
     // uses the INF_I32 sentinel internally but the DSL surfaces -1/INF.
-    if let InitPolicy::RootAndDefault { default, .. } = p.init {
-        if default.is_infinite() && p.state == StateType::I32 {
+    if let InitPolicy::RootAndDefault { default, .. } = &p.init {
+        if default.as_lit().is_some_and(f64::is_infinite) && p.state == StateType::I32 {
             bail!(
                 "program {:?}: infinite init default with I32 state; use -1 \
                  (unvisited sentinel) instead",
@@ -102,7 +169,7 @@ mod tests {
         let err = GasProgramBuilder::new("bad-delta")
             .state(StateType::I32)
             .apply(ApplyExpr::src())
-            .convergence(Convergence::DeltaBelow(0.1))
+            .convergence(Convergence::DeltaBelow(0.1.into()))
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("requires F32"));
@@ -112,11 +179,65 @@ mod tests {
     fn infinite_i32_default_rejected() {
         let err = GasProgramBuilder::new("bad-init")
             .state(StateType::I32)
-            .init(InitPolicy::RootAndDefault { root_value: 0.0, default: f64::INFINITY })
+            .init(InitPolicy::root_and_default(0.0, f64::INFINITY))
             .apply(ApplyExpr::src())
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("unvisited sentinel"));
+    }
+
+    #[test]
+    fn undeclared_param_reference_rejected() {
+        let err = GasProgramBuilder::new("bad-param")
+            .apply(ApplyExpr::src().mul(ApplyExpr::param("beta")))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("undeclared parameter \"beta\""), "{err}");
+    }
+
+    #[test]
+    fn default_outside_declared_range_rejected() {
+        use crate::dsl::params::ParamSpec;
+        let err = GasProgramBuilder::new("bad-default")
+            .apply(ApplyExpr::src())
+            .param(ParamSpec::new("alpha", 2.0).with_range(0.0, 1.0))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("outside its own range"), "{err}");
+    }
+
+    #[test]
+    fn damped_sum_requires_sum_reduce_and_f32() {
+        use crate::dsl::program::Writeback;
+        let err = GasProgramBuilder::new("bad-damp")
+            .apply(ApplyExpr::src())
+            .reduce(ReduceOp::Min)
+            .writeback(Writeback::DampedSum(0.85.into()))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("requires Reduce(Sum)"), "{err}");
+    }
+
+    #[test]
+    fn damped_sum_with_depth_limit_rejected() {
+        use crate::dsl::program::Writeback;
+        let err = GasProgramBuilder::new("bad-damp-depth")
+            .apply(ApplyExpr::src())
+            .writeback(Writeback::DampedSum(0.85.into()))
+            .depth_limit(3.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("depth_limit"), "{err}");
+    }
+
+    #[test]
+    fn literal_zero_depth_limit_rejected() {
+        let err = GasProgramBuilder::new("bad-depth")
+            .apply(ApplyExpr::src())
+            .depth_limit(0.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("never run"), "{err}");
     }
 
     #[test]

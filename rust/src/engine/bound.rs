@@ -23,6 +23,8 @@ use crate::comm::{CommManager, TransferRecord};
 use crate::prep::prepared::PreparedGraph;
 use crate::sched::{AdmittedPlan, ParallelismPlan, RuntimeScheduler};
 
+use crate::dsl::program::GasProgram;
+
 use super::compiled::{CompiledPipeline, RunOptions};
 use super::executor::ORACLE_TOLERANCE;
 use super::gas::{self, SuperstepTrace};
@@ -164,9 +166,27 @@ impl<'p> BoundPipeline<'p> {
     /// sequential path.
     fn run_query(&self, opts: &RunOptions) -> Result<(RunReport, Vec<TransferRecord>)> {
         let pipeline = self.pipeline;
-        let program = &pipeline.program;
         let design = &pipeline.design;
         let csr = &self.graph.csr;
+
+        // --- bind runtime parameters: resolve the query's ParamSet
+        //     against the declared signature and specialize the program.
+        //     This is the *only* per-value work — the compiled design,
+        //     binding, and admission are shared across all values.
+        let resolved = pipeline
+            .program
+            .resolve_params(&opts.params)
+            .map_err(|e| anyhow::Error::msg(format!("query parameters: {e}")))?;
+        let instantiated: GasProgram;
+        let program: &GasProgram = if pipeline.program.has_runtime_params() {
+            instantiated = pipeline
+                .program
+                .instantiate_resolved(&resolved)
+                .map_err(|e| anyhow::Error::msg(format!("query parameters: {e}")))?;
+            &instantiated
+        } else {
+            &pipeline.program
+        };
 
         // --- functional run (software oracle) in lockstep with the cycle
         //     simulator; the scheduler's iteration cap aborts the loop.
@@ -193,9 +213,34 @@ impl<'p> BoundPipeline<'p> {
         let mut oracle_deviation = None;
         let mut edges_traversed = oracle.edges_traversed;
         let mut supersteps = oracle.supersteps;
-        if opts.use_xla {
+        // The XLA path reads its scalars from the query context too: the
+        // bound tolerance drives the kernel's convergence check. The AOT
+        // PR kernel bakes damping at 0.85 (python/compile/kernels), so a
+        // query bound to any other damping takes the software oracle —
+        // correct answers always win over the fast path.
+        let tolerance = match &program.convergence {
+            crate::dsl::program::Convergence::DeltaBelow(t) => {
+                t.as_lit().unwrap_or(opts.tolerance)
+            }
+            _ => opts.tolerance,
+        };
+        let damping_ok = match &program.writeback {
+            crate::dsl::program::Writeback::DampedSum(d) => {
+                d.as_lit().is_some_and(|v| (v - xla_engine::XLA_PR_DAMPING).abs() < 1e-12)
+            }
+            _ => true,
+        };
+        // ... and the AOT kernels traverse unbounded: a finite bound depth
+        // horizon must stay on the software oracle too.
+        let depth_ok = program
+            .depth_limit
+            .as_ref()
+            .and_then(|s| s.as_lit())
+            .is_none_or(f64::is_infinite);
+        let xla_compatible = damping_ok && depth_ok;
+        if opts.use_xla && xla_compatible {
             if let (Some(kind), Some(registry)) = (program.kind, pipeline.registry.as_ref()) {
-                let xla = xla_engine::run(registry, kind, csr, opts.root, opts.tolerance)?;
+                let xla = xla_engine::run(registry, kind, csr, opts.root, tolerance)?;
                 functional_path = FunctionalPath::Xla;
                 functional_exec_seconds = xla.exec_seconds;
                 edges_traversed = xla.edges_traversed.max(edges_traversed);
@@ -233,6 +278,7 @@ impl<'p> BoundPipeline<'p> {
         let query_seconds = sim_exec_seconds + functional_exec_seconds + transfer_seconds;
         let report = RunReport {
             program: program.name.clone(),
+            bound_params: resolved.to_vec(),
             translator: design.kind.label(),
             graph_name: self.graph.name.clone(),
             num_vertices: csr.num_vertices(),
@@ -437,12 +483,79 @@ mod tests {
         // bound without converging. The default query path must turn that
         // into an error, not return truncated values.
         let s = session();
-        let c = s.compile(&algorithms::pagerank(0.85, -1.0)).unwrap();
+        let c = s.compile(&algorithms::pagerank()).unwrap();
         let g = generate::erdos_renyi(60, 400, 2);
         let bound = c.load(&g, PrepOptions::named("er")).unwrap();
-        let err = bound.query(&RunOptions::default()).unwrap_err();
+        let err = bound.query(&RunOptions::default().bind("tolerance", -1.0)).unwrap_err();
         assert!(err.to_string().contains("iteration cap"), "got: {err}");
         assert!(err.to_string().contains("did not converge"), "got: {err}");
+        // the same binding sweeps per query: a sane tolerance succeeds on
+        // the very same binding with zero recompiles
+        let ok = bound.query(&RunOptions::default()).unwrap();
+        assert!(ok.supersteps > 0);
+        assert_eq!(ok.bound_params[0], ("damping".to_string(), 0.85));
+    }
+
+    #[test]
+    fn unknown_param_binding_is_rejected_naming_the_signature() {
+        let s = session();
+        let c = s.compile(&algorithms::pagerank()).unwrap();
+        let g = generate::erdos_renyi(40, 200, 1);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        let err = bound.query(&RunOptions::default().bind("dampng", 0.9)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown parameter \"dampng\""), "{msg}");
+        assert!(msg.contains("damping, tolerance"), "typo help must list the signature: {msg}");
+    }
+
+    #[test]
+    fn parallel_batch_edge_cases_match_sequential() {
+        // PR 2 inherited edge cases: empty batch, one worker, more
+        // workers than queries — all report-identical to `run_batch`.
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(120, 900, 9);
+        let mut seq = c.load(&g, PrepOptions::named("er")).unwrap();
+        let par = c.load(&g, PrepOptions::named("er")).unwrap();
+
+        // empty query list: Ok(vec![]) on both paths, ledgers untouched
+        assert!(seq.run_batch(&[]).unwrap().is_empty());
+        assert!(par.run_batch_parallel(&[], 4).unwrap().is_empty());
+        assert_eq!(par.queries_run(), 0);
+
+        let queries: Vec<RunOptions> = (0..3).map(RunOptions::from_root).collect();
+        let sequential = seq.run_batch(&queries).unwrap();
+        for workers in [1, 8] {
+            let parallel = par.run_batch_parallel(&queries, workers).unwrap();
+            assert_eq!(parallel.len(), sequential.len(), "workers={workers}");
+            for (p, q) in parallel.iter().zip(&sequential) {
+                assert_eq!(p.supersteps, q.supersteps, "workers={workers}");
+                assert_eq!(p.edges_traversed, q.edges_traversed);
+                assert_eq!(p.query_seconds.to_bits(), q.query_seconds.to_bits());
+                assert_eq!(p.sim.cycles.total(), q.sim.cycles.total());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_batch_sweeps_parameters_not_just_roots() {
+        let s = session();
+        let c = s.compile(&algorithms::pagerank()).unwrap();
+        let g = generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 5);
+        let mut seq = c.load(&g, PrepOptions::named("rmat")).unwrap();
+        let par = c.load(&g, PrepOptions::named("rmat")).unwrap();
+        let queries: Vec<RunOptions> = (1..=4)
+            .map(|i| RunOptions::default().bind("damping", 0.2 * i as f64))
+            .collect();
+        let sequential = seq.run_batch(&queries).unwrap();
+        let parallel = par.run_batch_parallel(&queries, 2).unwrap();
+        for (p, q) in parallel.iter().zip(&sequential) {
+            assert_eq!(p.bound_params, q.bound_params);
+            assert_eq!(p.supersteps, q.supersteps);
+            assert_eq!(p.query_seconds.to_bits(), q.query_seconds.to_bits());
+        }
+        // damping actually changes the computation
+        assert_ne!(parallel[0].supersteps, parallel[3].supersteps);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::accel::device::DeviceModel;
 use crate::comm::CommManager;
+use crate::dsl::params::{ParamError, ParamSet, ParamSignature, ResolvedParams};
 use crate::dsl::program::GasProgram;
 use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
@@ -31,8 +32,15 @@ pub struct RunOptions {
     /// Source vertex for rooted algorithms (in the prepared graph's id
     /// space when reordering was applied).
     pub root: VertexId,
-    /// PageRank tolerance.
+    /// Legacy PageRank tolerance for programs that do **not** declare a
+    /// `tolerance` parameter. Declared parameters win: prefer
+    /// [`RunOptions::bind`]`("tolerance", t)`.
     pub tolerance: f64,
+    /// Runtime-parameter bindings for this query, resolved against the
+    /// program's declared signature (typed errors on unknown / unbound /
+    /// out-of-range names). The whole point of the redesign: one
+    /// compiled pipeline serves every value of these.
+    pub params: ParamSet,
     /// Drive the AOT/XLA kernel for this query when the pipeline has one.
     pub use_xla: bool,
     /// Cross-check XLA against the software oracle.
@@ -52,6 +60,7 @@ impl Default for RunOptions {
         Self {
             root: 0,
             tolerance: 1e-6,
+            params: ParamSet::new(),
             use_xla: true,
             verify: true,
             trace_path: None,
@@ -66,6 +75,21 @@ impl RunOptions {
         Self { root, ..Self::default() }
     }
 
+    /// Bind a declared runtime parameter for this query
+    /// (`RunOptions::from_root(r).bind("damping", 0.9)`). Resolution
+    /// happens when the query runs: unknown names, unbound required
+    /// parameters, and out-of-range values are typed
+    /// [`ParamError`]s.
+    ///
+    /// [`ParamError`]: crate::dsl::params::ParamError
+    pub fn bind(mut self, name: impl Into<String>, value: f64) -> Self {
+        self.params.set(name, value);
+        self
+    }
+
+    /// Set the legacy tolerance knob. Programs that **declare** a
+    /// `tolerance` parameter resolve it from their signature instead —
+    /// bind those with [`RunOptions::bind`]`("tolerance", t)`.
     pub fn with_tolerance(mut self, tolerance: f64) -> Self {
         self.tolerance = tolerance;
         self
@@ -150,6 +174,18 @@ impl CompiledPipeline {
     /// program + artifact registry available).
     pub fn has_xla(&self) -> bool {
         self.program.kind.is_some() && self.registry.is_some()
+    }
+
+    /// The program's declared runtime-parameter signature.
+    pub fn params(&self) -> &ParamSignature {
+        &self.program.params
+    }
+
+    /// Typed pre-flight check of a query's bindings against the declared
+    /// signature — the same resolution every query performs, surfaced for
+    /// callers that want [`ParamError`]s rather than stringly run errors.
+    pub fn resolve_params(&self, set: &ParamSet) -> Result<ResolvedParams, ParamError> {
+        self.program.resolve_params(set)
     }
 
     /// The parallelism the design was scheduled with.

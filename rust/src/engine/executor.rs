@@ -163,14 +163,22 @@ impl Executor {
             partition: self.config.partition,
         };
         let mut bound = compiled.load(graph, prep)?;
-        bound.run(&RunOptions {
+        let mut opts = RunOptions {
             root: self.config.root,
             tolerance: self.config.tolerance,
             use_xla: self.config.use_xla,
             verify: self.config.verify,
             trace_path: self.config.trace_path.clone(),
             max_supersteps: None,
-        })
+            params: crate::dsl::params::ParamSet::new(),
+        };
+        // Legacy semantics: the config tolerance governs the run. On
+        // programs that declare `tolerance` as a runtime parameter it must
+        // arrive as a binding, or the declared default would win.
+        if program.params.get("tolerance").is_some() {
+            opts.params.set("tolerance", self.config.tolerance);
+        }
+        bound.run(&opts)
     }
 }
 

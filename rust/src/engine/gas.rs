@@ -7,6 +7,7 @@
 use anyhow::Result;
 
 use crate::dsl::apply::ApplyEnv;
+use crate::dsl::params::ParamSet;
 use crate::dsl::program::{
     Convergence, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp, Writeback,
 };
@@ -66,24 +67,36 @@ pub fn run_observed(
     root: VertexId,
     mut observer: impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
-    if program.kind == Some(EdgeOpKind::Pr) {
+    // A still-parameterized program closes over its declared defaults
+    // here; the engine lifecycle instantiates with the query's ParamSet
+    // *before* calling in, so this is the standalone-caller convenience.
+    let owned;
+    let program = if program.has_runtime_params() {
+        owned = program.instantiate(&ParamSet::new())?;
+        &owned
+    } else {
+        program
+    };
+    if program.kind == Some(EdgeOpKind::Pr)
+        || matches!(program.writeback, Writeback::DampedSum(_))
+    {
         return run_pagerank(program, graph, &mut observer);
     }
     run_generic(program, graph, root, &mut observer)
 }
 
 fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
-    match program.init {
+    match &program.init {
         InitPolicy::RootAndDefault { root_value, default } => {
-            let mut v = vec![default; n];
+            let mut v = vec![default.lit(); n];
             if (root as usize) < n {
-                v[root as usize] = root_value;
+                v[root as usize] = root_value.lit();
             }
             v
         }
         InitPolicy::VertexId => (0..n).map(|i| i as f64).collect(),
         InitPolicy::UniformFraction => vec![1.0 / n.max(1) as f64; n],
-        InitPolicy::Constant(c) => vec![c; n],
+        InitPolicy::Constant(c) => vec![c.lit(); n],
     }
 }
 
@@ -111,16 +124,21 @@ fn run_generic(
 ) -> Result<GasResult> {
     let n = graph.num_vertices();
     let mut values = init_values(program, n, root);
-    let unvisited = match program.init {
-        InitPolicy::RootAndDefault { default, .. } => default,
+    let unvisited = match &program.init {
+        InitPolicy::RootAndDefault { default, .. } => default.lit(),
         _ => f64::NAN,
     };
 
     // initial frontier
-    let mut frontier: Vec<VertexId> = match (program.frontier, program.init) {
+    let mut frontier: Vec<VertexId> = match (program.frontier, &program.init) {
         (FrontierPolicy::Active, InitPolicy::RootAndDefault { .. }) => vec![root],
         _ => (0..n as VertexId).collect(),
     };
+
+    // Bounded-depth traversal: converging at the depth horizon is a met
+    // condition (a legitimate answer), unlike exhausting `max_steps`.
+    let depth_cap: f64 =
+        program.depth_limit.as_ref().map(|s| s.lit()).unwrap_or(f64::INFINITY);
 
     let max_steps = program.max_supersteps(n);
     let mut edges_traversed = 0u64;
@@ -213,6 +231,7 @@ fn run_generic(
                     }
                 }
                 Writeback::Overwrite => reduced,
+                Writeback::DampedSum(_) => unreachable!("damped programs run in run_pagerank"),
             };
             if new != old {
                 values[v as usize] = new;
@@ -225,12 +244,12 @@ fn run_generic(
         supersteps = iter + 1;
 
         // convergence
-        let done = match program.convergence {
+        let done = match &program.convergence {
             Convergence::EmptyFrontier => next_frontier.is_empty(),
             Convergence::NoChange => changed == 0,
-            Convergence::FixedIterations(k) => supersteps >= k,
+            Convergence::FixedIterations(k) => supersteps >= *k,
             Convergence::DeltaBelow(_) => unreachable!("PR handled separately"),
-        };
+        } || supersteps as f64 >= depth_cap;
         if done {
             converged = true;
             break;
@@ -249,15 +268,23 @@ fn run_generic(
 }
 
 /// PageRank with damping + uniform dangling redistribution, numerically
-/// matching python/compile/kernels/ref.py::pr_step.
+/// matching python/compile/kernels/ref.py::pr_step. Both constants come
+/// from the (instantiated) program: damping from the `DampedSum`
+/// writeback, tolerance from the `DeltaBelow` convergence — the engine
+/// honors the query's bound values, never a baked-in default.
 fn run_pagerank(
     program: &GasProgram,
     graph: &Csr,
     observer: &mut impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
-    let damping = 0.85; // the library template's value; tolerance from program
-    let tol = match program.convergence {
-        Convergence::DeltaBelow(t) => t,
+    let damping = match &program.writeback {
+        Writeback::DampedSum(d) => d.lit(),
+        // Pr-kind programs hand-built with a plain Overwrite writeback
+        // keep the reference kernel's constant.
+        _ => 0.85,
+    };
+    let tol = match &program.convergence {
+        Convergence::DeltaBelow(t) => t.lit(),
         _ => 1e-6,
     };
     let n = graph.num_vertices();
@@ -306,6 +333,38 @@ fn run_pagerank(
         }
     }
     Ok(GasResult { values: rank, supersteps, edges_traversed, converged })
+}
+
+/// Naive reference PageRank (damping + uniform dangling redistribution)
+/// for a fixed iteration count, written independently of [`run_pagerank`]
+/// — no shared constants, no early exit. Test-support only: both the unit
+/// suite and the integration suite check the engine against this one
+/// implementation so the reference cannot drift between them.
+#[doc(hidden)]
+pub fn reference_pagerank(graph: &Csr, damping: f64, iters: u32) -> Vec<f64> {
+    let n = graph.num_vertices();
+    let nf = n as f64;
+    let mut rank = vec![1.0 / nf; n];
+    for _ in 0..iters {
+        let mut next = vec![0.0f64; n];
+        let mut dangling = 0.0;
+        for v in 0..n as VertexId {
+            let deg = graph.degree(v);
+            if deg == 0 {
+                dangling += rank[v as usize];
+                continue;
+            }
+            let share = rank[v as usize] / deg as f64;
+            for (_, d, _) in graph.row_edges(v) {
+                next[d as usize] += share;
+            }
+        }
+        for slot in next.iter_mut() {
+            *slot = (1.0 - damping) / nf + damping * (*slot + dangling / nf);
+        }
+        rank = next;
+    }
+    rank
 }
 
 /// Average |src-dst| gap of a CSR graph (locality input for the
@@ -385,8 +444,12 @@ mod tests {
 
     #[test]
     fn pagerank_sums_to_one_and_ranks_hub_highest() {
+        use crate::dsl::params::ParamSet;
         let g = csr(&generate::star(20)); // hub 0
-        let r = run_silent(&algorithms::pagerank(0.85, 1e-9), &g, 0);
+        let p = algorithms::pagerank()
+            .instantiate(&ParamSet::new().bind("tolerance", 1e-9))
+            .unwrap();
+        let r = run_silent(&p, &g, 0);
         let sum: f64 = r.values.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6, "sum={sum}");
         let hub = r.values[0];
@@ -449,7 +512,7 @@ mod tests {
             .collect();
         assert_eq!(stream, g.targets, "row-major sweep is the CSR stream");
         let mut observed = 0;
-        run(&algorithms::pagerank(0.85, 1e-6), &g, 0, |t| {
+        run(&algorithms::pagerank(), &g, 0, |t| {
             assert_eq!(t.dsts, &stream[..], "superstep {} trace order", t.index);
             observed += 1;
         })
@@ -464,9 +527,52 @@ mod tests {
         assert!(run_silent(&algorithms::bfs(), &g, 0).converged);
         // an impossible tolerance can never be met: the interpreter stops
         // at its internal bound and must say so instead of lying
-        let r = run_silent(&algorithms::pagerank(0.85, -1.0), &g, 0);
+        let p = algorithms::pagerank()
+            .instantiate(&crate::dsl::params::ParamSet::new().bind("tolerance", -1.0))
+            .unwrap();
+        let r = run_silent(&p, &g, 0);
         assert!(!r.converged, "delta < -1 is unsatisfiable");
         assert_eq!(r.supersteps, PR_MAX_ITERS);
+    }
+
+    #[test]
+    fn pagerank_honors_the_bound_damping_value() {
+        // Regression: the engine used to hard-code damping = 0.85, so any
+        // other bound value silently computed with the wrong constant.
+        use crate::dsl::params::ParamSet;
+        let g = csr(&generate::rmat(7, 900, 0.57, 0.19, 0.19, 11));
+        let mut ranks = Vec::new();
+        for damping in [0.5, 0.9] {
+            let p = algorithms::pagerank()
+                .instantiate(&ParamSet::new().bind("damping", damping).bind("tolerance", 1e-12))
+                .unwrap();
+            let r = run_silent(&p, &g, 0);
+            let expected = reference_pagerank(&g, damping, r.supersteps);
+            for (a, b) in r.values.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-9, "damping {damping}: {a} vs {b}");
+            }
+            ranks.push(r.values);
+        }
+        let diff: f64 =
+            ranks[0].iter().zip(&ranks[1]).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "damping 0.5 vs 0.9 must produce different ranks (diff {diff})");
+    }
+
+    #[test]
+    fn bfs_max_depth_truncates_and_converges() {
+        use crate::dsl::params::ParamSet;
+        let g = csr(&generate::chain(10));
+        let p = algorithms::bfs()
+            .instantiate(&ParamSet::new().bind("max_depth", 3.0))
+            .unwrap();
+        let r = run_silent(&p, &g, 0);
+        assert!(r.converged, "reaching the depth horizon is convergence, not truncation");
+        assert_eq!(r.supersteps, 3);
+        assert_eq!(&r.values[..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert!(r.values[4..].iter().all(|&v| v == -1.0), "beyond-horizon stays unvisited");
+        // unbound, the default horizon is infinite: full traversal
+        let full = run_silent(&algorithms::bfs(), &g, 0);
+        assert_eq!(full.values[9], 9.0);
     }
 
     #[test]

@@ -19,6 +19,10 @@ pub enum FunctionalPath {
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub program: String,
+    /// Effective runtime-parameter values this query ran with (declared
+    /// signature resolved against the query's `ParamSet`), in register
+    /// order. Empty for programs without parameters.
+    pub bound_params: Vec<(String, f64)>,
     pub translator: &'static str,
     pub graph_name: String,
     pub num_vertices: usize,
@@ -109,6 +113,7 @@ mod tests {
     fn summary_renders() {
         let r = RunReport {
             program: "bfs".into(),
+            bound_params: vec![("max_depth".into(), f64::INFINITY)],
             translator: "FAgraph",
             graph_name: "email".into(),
             num_vertices: 10,

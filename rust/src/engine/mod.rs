@@ -23,6 +23,16 @@
 //! accounting merged deterministically after the join. `run(&mut
 //! self)`/`run_batch` remain as compatibility wrappers over the same core.
 //!
+//! ## Runtime parameters
+//!
+//! Programs may declare named parameters ([`crate::dsl::params`]); values
+//! bind **per query** via [`compiled::RunOptions::bind`] and are resolved
+//! against the declared signature inside the query core — the program is
+//! [`crate::dsl::program::GasProgram::instantiate`]d once per query, the
+//! compiled design and binding are shared across every value, and binding
+//! mistakes surface as typed [`crate::dsl::params::ParamError`]s. A batch
+//! can therefore sweep parameters as well as roots.
+//!
 //! Every [`metrics::RunReport`] satisfies `rt_seconds = setup_seconds +
 //! query_seconds` with `query_seconds = sim_exec_seconds +
 //! functional_exec_seconds + transfer_seconds` — on both functional paths.

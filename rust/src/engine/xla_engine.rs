@@ -19,6 +19,10 @@ const INF_I32: i32 = 1 << 30;
 const INF_F32: f32 = 3.0e38;
 /// PR iteration cap (ref.py / gas.rs parity).
 const PR_MAX_ITERS: u32 = 200;
+/// Damping factor baked into the AOT PR kernel (ref.py). Tolerance is a
+/// runtime argument of the kernel, damping is not (yet): queries bound to
+/// any other damping value take the software oracle instead.
+pub const XLA_PR_DAMPING: f64 = 0.85;
 
 /// Result of an XLA-driven run.
 #[derive(Debug, Clone)]

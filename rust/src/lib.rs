@@ -75,6 +75,7 @@ pub mod prelude {
     pub use crate::accel::device::DeviceModel;
     pub use crate::dsl::algorithms;
     pub use crate::dsl::builder::GasProgramBuilder;
+    pub use crate::dsl::params::{ParamError, ParamSet, ParamSpec, Scalar};
     pub use crate::dsl::program::GasProgram;
     #[allow(deprecated)]
     pub use crate::engine::{Executor, ExecutorConfig};

@@ -25,14 +25,21 @@ use jgraph::sched::ParallelismPlan;
 use jgraph::translator::{Translator, TranslatorKind};
 
 /// Minimal flag parser: `--key value` pairs + boolean `--flag`s.
+/// Keys listed in `REPEATABLE` (e.g. `--param`) may appear many times and
+/// accumulate in order.
 struct Args {
     values: std::collections::HashMap<String, String>,
+    repeated: Vec<(String, String)>,
     flags: std::collections::HashSet<String>,
 }
+
+/// Flags that may be passed more than once.
+const REPEATABLE: &[&str] = &["param"];
 
 impl Args {
     fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
         let mut values = std::collections::HashMap::new();
+        let mut repeated = Vec::new();
         let mut flags = std::collections::HashSet::new();
         let mut i = 0;
         while i < argv.len() {
@@ -47,15 +54,28 @@ impl Args {
                 let v = argv
                     .get(i + 1)
                     .with_context(|| format!("--{key} needs a value"))?;
-                values.insert(key.to_string(), v.clone());
+                if REPEATABLE.contains(&key) {
+                    repeated.push((key.to_string(), v.clone()));
+                } else {
+                    values.insert(key.to_string(), v.clone());
+                }
                 i += 2;
             }
         }
-        Ok(Self { values, flags })
+        Ok(Self { values, repeated, flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a repeatable key, in command-line order.
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.repeated
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     fn get_or(&self, key: &str, default: &str) -> String {
@@ -77,10 +97,36 @@ impl Args {
     }
 }
 
+/// Parse one `--param name=value` occurrence.
+fn parse_param(spec: &str) -> Result<(String, f64)> {
+    let (name, value) = spec
+        .split_once('=')
+        .with_context(|| format!("--param {spec:?}: expected name=value"))?;
+    let value: f64 = value
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--param {spec:?}: {e}"))?;
+    Ok((name.to_string(), value))
+}
+
+/// Collect every `--param` flag into a `ParamSet` and pre-flight it
+/// against the program's declared signature, so a typo'd name fails here
+/// with the declared parameter list instead of mid-run.
+fn param_set_for(args: &Args, program: &GasProgram) -> Result<jgraph::dsl::ParamSet> {
+    let mut set = jgraph::dsl::ParamSet::new();
+    for spec in args.get_all("param") {
+        let (name, value) = parse_param(spec)?;
+        set.set(name, value);
+    }
+    program
+        .resolve_params(&set)
+        .map_err(|e| anyhow::anyhow!("program {:?}: {e}", program.name))?;
+    Ok(set)
+}
+
 fn program_of(name: &str) -> Result<GasProgram> {
     Ok(match name {
         "bfs" => algorithms::bfs(),
-        "pagerank" | "pr" => algorithms::pagerank(0.85, 1e-6),
+        "pagerank" | "pr" => algorithms::pagerank(),
         "sssp" => algorithms::sssp(),
         "wcc" => algorithms::wcc(),
         "spmv" => algorithms::spmv(),
@@ -125,7 +171,8 @@ fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
 
 const USAGE: &str = "usage: jgraph <run|translate|report|gen|sweep|info> [--help]
   run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
-            [--root V] [--reorder S] [--trace out.csv] [--no-xla] [--verbose]
+            [--root V] [--param name=value]... [--reorder S] [--trace out.csv]
+            [--no-xla] [--verbose]
   translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
   report    [--table N] [--fig N] [--interfaces] [--full]
   gen       --out PATH [--preset P] [--seed S]
@@ -230,16 +277,23 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         use_xla: !args.flag("no-xla"),
         ..Default::default()
     });
+    let params = param_set_for(&args, &program)?;
     let compiled = session.compile(&program)?;
     let mut prep = PrepOptions::named(name);
     prep.reorder = reorder;
     let mut bound = compiled.load(&el, prep)?;
     let report = bound.run(&RunOptions {
         root: args.get_num("root", 0)?,
+        params,
         trace_path: args.get("trace").map(std::path::PathBuf::from),
         ..Default::default()
     })?;
     println!("{}", report.summary());
+    if !report.bound_params.is_empty() {
+        let rendered: Vec<String> =
+            report.bound_params.iter().map(|(n, v)| format!("{n}={v}")).collect();
+        println!("params: {}", rendered.join(", "));
+    }
     if args.flag("verbose") {
         println!(
             "cycles: compute={} conflict={} row_start={} vertex_random={} \
@@ -295,6 +349,18 @@ fn cmd_translate(argv: &[String]) -> Result<()> {
             design.synthesis_seconds,
         ),
         other => bail!("unknown emit mode {other:?}"),
+    }
+    if args.get_or("emit", "both") == "stats" && program.has_runtime_params() {
+        for spec in program.params.iter() {
+            println!(
+                "  param {:<12} default {:?} range [{}, {}] {}",
+                spec.name,
+                spec.default,
+                spec.min.unwrap_or(f64::NEG_INFINITY),
+                spec.max.unwrap_or(f64::INFINITY),
+                spec.doc
+            );
+        }
     }
     Ok(())
 }

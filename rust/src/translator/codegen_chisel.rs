@@ -40,6 +40,12 @@ pub fn emit_chisel(program: &GasProgram, plan: &ParallelismPlan) -> String {
     s += "  val io = IO(new AcceleratorBundle)\n";
     s += "  val dma   = Module(new PcieDma)\n";
     s += "  val mem   = Module(new MemCtrl(channels = 4))\n";
+    if program.has_runtime_params() {
+        // host-written per query: parameter names elaborate, values never do
+        let names: Vec<String> =
+            program.params.names().iter().map(|n| format!("\"{n}\"")).collect();
+        s += &format!("  val args  = Module(new ArgRegFile(Seq({})))\n", names.join(", "));
+    }
     s += &format!("  val vbram = Module(new VertexBram({dtype}))\n");
     s += "  val vload = Module(new VertexLoader(vbram))\n";
     s += "  val off   = Module(new OffsetFetch(mem.port(0)))\n";
@@ -141,7 +147,9 @@ mod tests {
 
     #[test]
     fn pagerank_has_no_frontier_queue_in_chisel() {
-        let ch = emit_chisel(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::default());
+        let ch = emit_chisel(&algorithms::pagerank(), &ParallelismPlan::default());
         assert!(!ch.contains("FrontierQueue"));
+        assert!(ch.contains("ArgRegFile(Seq(\"damping\", \"tolerance\"))"));
+        assert!(!ch.contains("0.85"), "parameter values must not elaborate");
     }
 }

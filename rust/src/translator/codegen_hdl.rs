@@ -41,6 +41,15 @@ pub fn emit_jgraph(program: &GasProgram, plan: &ParallelismPlan) -> String {
     s += &format!("  wire [31:0] msg [0:PES*LANES-1]; // {dtype} messages\n");
     s += "  pcie_dma      u_dma   (.clk(clk), .rst(rst), .csr(csr_cmd));\n";
     s += "  mem_ctrl #(4) u_mem   (.clk(clk), .rd_addr(ddr_rd_addr), .rd_data(ddr_rd_data));\n";
+    if program.has_runtime_params() {
+        // one register per declared parameter, host-written per query —
+        // names only: the emitted HDL is identical for every bound value
+        s += &format!(
+            "  arg_regs #(.N({})) u_args (.clk(clk), .rst(rst), .wr_data(csr_cmd)); // runtime params: {}\n",
+            program.params.len(),
+            program.params.names().join(", ")
+        );
+    }
     s += "  vertex_bram   u_vbram (.clk(clk), .wr(wb_bus), .rd(vload_bus)); // state in URAM\n";
     s += "  vertex_loader u_vload (.clk(clk), .bram(vload_bus));\n";
     s += "  offset_fetch  u_off   (.clk(clk), .mem(u_mem.port0));\n";
@@ -116,8 +125,34 @@ mod tests {
         let hdl = emit_jgraph(&algorithms::sssp(), &ParallelismPlan::default());
         assert_eq!(hdl.matches("apply_alu").count(), 1); // src + w
         assert!(hdl.contains("OP(\"add\")"));
-        let pr = emit_jgraph(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::default());
+        let pr = emit_jgraph(&algorithms::pagerank(), &ParallelismPlan::default());
         assert!(pr.contains("pass-through apply")); // bare src gather
+    }
+
+    #[test]
+    fn runtime_params_become_registers_never_literals() {
+        let pr = emit_jgraph(&algorithms::pagerank(), &ParallelismPlan::default());
+        assert!(pr.contains("arg_regs"), "parameterized design needs the register file");
+        assert!(pr.contains("runtime params: damping, tolerance"));
+        assert!(!pr.contains("0.85"), "parameter values must not leak into HDL");
+        // closed programs carry no register file
+        let wcc = emit_jgraph(&algorithms::wcc(), &ParallelismPlan::default());
+        assert!(!wcc.contains("arg_regs"));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn hdl_is_identical_across_parameter_values() {
+        // the artifact-cache story: any pre-bound defaults produce the
+        // same emitted design and the same sanitized kernel name
+        let a = emit_jgraph(&algorithms::pagerank_with(0.85, 1e-6), &ParallelismPlan::default());
+        let b = emit_jgraph(&algorithms::pagerank_with(0.95, 1e-9), &ParallelismPlan::default());
+        assert_eq!(a, b);
+        assert_eq!(
+            sanitize(&algorithms::pagerank_with(0.85, 1e-6).name),
+            sanitize(&algorithms::pagerank_with(0.95, 1e-9).name),
+        );
+        assert_eq!(sanitize(&algorithms::pagerank().name), "pagerank");
     }
 
     #[test]

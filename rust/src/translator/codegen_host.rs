@@ -1,20 +1,43 @@
 //! Host-side C code generation (paper §V-A: "the C code will be executed
 //! on CPU, mainly including data transmission control commands"). The
 //! generated program drives the (simulated) XRT shell: configure, DMA the
-//! CSR arrays, launch supersteps, poll status, read results back.
+//! CSR arrays, **write the query's runtime parameters into the argument
+//! register file**, launch supersteps, poll status, read results back.
+//!
+//! Declared parameters surface as a `<name>_args_t` struct argument of the
+//! generated entry point and as `xrt_csr_write` lines into `JG_ARG_BASE`
+//! — the code references parameter *names*, never values, so the emitted
+//! driver (like the HDL) is byte-identical across parameter bindings.
 
+use crate::dsl::params::Scalar;
 use crate::dsl::program::{Convergence, GasProgram};
 use crate::sched::ParallelismPlan;
+
+/// C expression for a scalar: literals print, parameter references read
+/// the args struct.
+fn scalar_c(s: &Scalar) -> String {
+    match s {
+        Scalar::Lit(v) => format!("{v}"),
+        Scalar::Param(name) => format!("args->{}", super::codegen_hdl::sanitize(name)),
+    }
+}
 
 /// Emit the host C program for a translated design.
 pub fn emit_host_c(program: &GasProgram, plan: &ParallelismPlan) -> String {
     let name = super::codegen_hdl::sanitize(&program.name);
-    let conv = match program.convergence {
-        Convergence::EmptyFrontier => "status.frontier_size == 0",
-        Convergence::NoChange => "status.updated == 0",
-        Convergence::FixedIterations(_) => "iter == MAX_ITERS",
-        Convergence::DeltaBelow(_) => "status.delta < TOLERANCE",
+    let has_params = program.has_runtime_params();
+    let mut conv = match &program.convergence {
+        Convergence::EmptyFrontier => "status.frontier_size == 0".to_string(),
+        Convergence::NoChange => "status.updated == 0".to_string(),
+        Convergence::FixedIterations(_) => "iter == MAX_ITERS".to_string(),
+        Convergence::DeltaBelow(t) => match t {
+            Scalar::Lit(_) => "status.delta < TOLERANCE".to_string(),
+            Scalar::Param(_) => format!("status.delta < {}", scalar_c(t)),
+        },
     };
+    if let Some(limit) = &program.depth_limit {
+        conv = format!("{conv} || iter >= (uint32_t){}", scalar_c(limit));
+    }
     let max_iters = match program.convergence {
         Convergence::FixedIterations(k) => k,
         _ => 0,
@@ -26,12 +49,23 @@ pub fn emit_host_c(program: &GasProgram, plan: &ParallelismPlan) -> String {
     if max_iters > 0 {
         s += &format!("#define MAX_ITERS {max_iters}\n");
     }
-    if matches!(program.convergence, Convergence::DeltaBelow(_)) {
-        if let Convergence::DeltaBelow(t) = program.convergence {
-            s += &format!("#define TOLERANCE {t}\n");
-        }
+    if let Convergence::DeltaBelow(Scalar::Lit(t)) = &program.convergence {
+        s += &format!("#define TOLERANCE {t}\n");
     }
-    s += &format!("\nint run_{name}(const char *graph_path, uint32_t root) {{\n");
+    if has_params {
+        let fields: Vec<String> = program
+            .params
+            .names()
+            .iter()
+            .map(|n| format!("double {};", super::codegen_hdl::sanitize(n)))
+            .collect();
+        s += &format!("typedef struct {{ {} }} {name}_args_t;\n", fields.join(" "));
+        s += &format!(
+            "\nint run_{name}(const char *graph_path, uint32_t root, const {name}_args_t *args) {{\n"
+        );
+    } else {
+        s += &format!("\nint run_{name}(const char *graph_path, uint32_t root) {{\n");
+    }
     s += "  jg_csr_t g = jg_read_graph(graph_path);          /* FIFO + Layout */\n";
     s += "  xrt_device_t dev = xrt_open(0);                  /* Get_FPGA_Message */\n";
     s += &format!("  xrt_configure(dev, \"{name}.xclbin\", PIPELINES, PES);\n");
@@ -41,6 +75,12 @@ pub fn emit_host_c(program: &GasProgram, plan: &ParallelismPlan) -> String {
         s += "  xrt_dma_write(dev, JG_REGION_WEIGHTS, g.weights, g.m);\n";
     }
     s += "  xrt_csr_write(dev, JG_CSR_ROOT, root);\n";
+    for (i, p) in program.params.names().iter().enumerate() {
+        s += &format!(
+            "  xrt_csr_write(dev, JG_ARG_BASE + {i}, jg_f32_bits(args->{}));  /* Set_Argument */\n",
+            super::codegen_hdl::sanitize(p)
+        );
+    }
     s += "  jg_status_t status; uint32_t iter = 0;\n";
     s += "  do {                                             /* superstep loop */\n";
     s += "    xrt_csr_write(dev, JG_CSR_LAUNCH, iter);\n";
@@ -65,6 +105,8 @@ mod tests {
         assert!(c.contains("frontier_size == 0"));
         assert!(c.contains("#define PIPELINES 8"));
         assert!(!c.contains("JG_REGION_WEIGHTS"), "BFS is unweighted");
+        // the optional depth bound reads its argument register
+        assert!(c.contains("iter >= (uint32_t)args->max_depth"));
     }
 
     #[test]
@@ -75,8 +117,35 @@ mod tests {
     }
 
     #[test]
-    fn pagerank_host_has_tolerance() {
-        let c = emit_host_c(&algorithms::pagerank(0.85, 1e-4), &ParallelismPlan::default());
+    fn pagerank_host_reads_registers_not_literals() {
+        let c = emit_host_c(&algorithms::pagerank(), &ParallelismPlan::default());
+        assert!(c.contains("pagerank_args_t"), "params surface as an args struct:\n{c}");
+        assert!(c.contains("status.delta < args->tolerance"));
+        assert!(c.contains("JG_ARG_BASE + 0"), "damping register write");
+        assert!(c.contains("JG_ARG_BASE + 1"), "tolerance register write");
+        assert!(!c.contains("0.85"), "no parameter value may be baked in");
+        assert!(!c.contains("#define TOLERANCE"));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn host_driver_is_identical_across_parameter_values() {
+        let a = emit_host_c(&algorithms::pagerank_with(0.85, 1e-6), &ParallelismPlan::default());
+        let b = emit_host_c(&algorithms::pagerank_with(0.95, 1e-9), &ParallelismPlan::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn literal_tolerance_still_compiles_in() {
+        use crate::dsl::apply::ApplyExpr;
+        use crate::dsl::builder::GasProgramBuilder;
+        // a hand-built closed program keeps the compile-time #define path
+        let p = GasProgramBuilder::new("fixed-pr")
+            .apply(ApplyExpr::src())
+            .convergence(Convergence::DeltaBelow(1e-4.into()))
+            .build()
+            .unwrap();
+        let c = emit_host_c(&p, &ParallelismPlan::default());
         assert!(c.contains("#define TOLERANCE 0.0001"));
         assert!(c.contains("status.delta < TOLERANCE"));
     }
@@ -84,6 +153,6 @@ mod tests {
     #[test]
     fn host_code_is_short() {
         let c = emit_host_c(&algorithms::bfs(), &ParallelismPlan::default());
-        assert!(code_lines(&c) < 30, "host driver should stay small");
+        assert!(code_lines(&c) < 30, "host driver should stay small: {}", code_lines(&c));
     }
 }

@@ -42,6 +42,23 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
     g.connect(dma, memc, 512);
     g.connect(ctrl, memc, 32);
 
+    // Runtime-argument register file for programs with declared params:
+    // the host writes bound values here before each query launch, so the
+    // lowered structure — and the emitted HDL — is identical for every
+    // parameter value. The parameter *names* (not values) are recorded as
+    // instance annotations; they are the register layout.
+    let args = if program.has_runtime_params() {
+        let a = g.add(
+            HwModule::ArgRegFile,
+            "arg_regs",
+            vec![("params".into(), program.params.names().join(","))],
+        );
+        g.connect(ctrl, a, 32);
+        Some(a)
+    } else {
+        None
+    };
+
     // vertex state resident on chip (the paper's BRAM preload)
     let vcache = g.add(
         HwModule::BramCache,
@@ -92,7 +109,8 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
             g.connect(vloader, gather, VALUE_BUS);
 
             // Apply expression → ALU chain (one module per operation;
-            // terms are wiring, not logic)
+            // terms are wiring, not logic). Parameter terms draw their
+            // operand from the argument register file, not a literal.
             let mut prev = gather;
             for (i, opname) in alu_chain(&program.apply).into_iter().enumerate() {
                 let alu = g.add(
@@ -101,6 +119,11 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
                     vec![("op".into(), opname)],
                 );
                 g.connect(prev, alu, VALUE_BUS);
+                if i == 0 && program.apply.uses_params() {
+                    if let Some(a) = args {
+                        g.connect(a, alu, VALUE_BUS);
+                    }
+                }
                 prev = alu;
             }
 
@@ -127,6 +150,13 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
                 vec![("feedback".into(), "vertex_bram,frontier_q".into())],
             );
             g.connect(reduce, writer, VALUE_BUS);
+            // the damped writeback consumes its damping factor from the
+            // argument registers (PageRank's per-query damping)
+            if let (Some(a), crate::dsl::program::Writeback::DampedSum(_)) =
+                (args, &program.writeback)
+            {
+                g.connect(a, writer, VALUE_BUS);
+            }
         }
     }
     g
@@ -176,9 +206,26 @@ mod tests {
 
     #[test]
     fn pagerank_has_no_frontier_queue() {
-        let g = lower(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::new(4, 1));
+        let g = lower(&algorithms::pagerank(), &ParallelismPlan::new(4, 1));
         assert_eq!(g.count(HwModule::FrontierQueue), 0);
         assert_eq!(g.count(HwModule::ReduceUnit), 4);
+    }
+
+    #[test]
+    fn parameterized_programs_get_one_arg_reg_file() {
+        // shared infrastructure: one register file regardless of lanes
+        let g = lower(&algorithms::pagerank(), &ParallelismPlan::new(8, 2));
+        assert_eq!(g.count(HwModule::ArgRegFile), 1);
+        let names = &g
+            .instances
+            .iter()
+            .find(|m| m.kind == HwModule::ArgRegFile)
+            .unwrap()
+            .params;
+        assert_eq!(names[0].1, "damping,tolerance", "register layout = declared order");
+        // a closed program carries none
+        let g = lower(&algorithms::wcc(), &ParallelismPlan::new(8, 1));
+        assert_eq!(g.count(HwModule::ArgRegFile), 0);
     }
 
     #[test]

@@ -307,6 +307,23 @@ module ctrl_regs (
   end
 endmodule
 "#,
+        HwModule::ArgRegFile => r#"
+// arg_regs: host-written runtime-argument register file (Set_Argument).
+// One 32-bit register per declared program parameter, written over the
+// CSR mailbox before each query launch — the reason one synthesized
+// design serves every parameter value. latency 1.
+module arg_regs #(parameter N = 1) (
+  input clk, input rst,
+  input [31:0] wr_data, input [$clog2(N):0] wr_idx, input wr_en,
+  output reg [31:0] args [0:N-1]
+);
+  integer i;
+  always @(posedge clk) begin
+    if (rst) for (i = 0; i < N; i = i + 1) args[i] <= 32'd0;
+    else if (wr_en) args[wr_idx] <= wr_data;
+  end
+endmodule
+"#,
         HwModule::HostOnly => "",
     }
 }
@@ -350,6 +367,7 @@ mod tests {
             HwModule::MemController,
             HwModule::PcieDma,
             HwModule::ControlRegs,
+            HwModule::ArgRegFile,
         ] {
             let body = module_body(kind);
             assert!(body.contains("module "), "{kind:?} missing module decl");
@@ -367,9 +385,11 @@ mod tests {
         assert_eq!(lib.matches("module edge_fetch").count(), 1);
         assert_eq!(lib.matches("module frontier_q").count(), 1);
         // PR design has no frontier queue -> no definition
-        let g2 = lower(&algorithms::pagerank(0.85, 1e-6), &ParallelismPlan::new(8, 1));
+        let g2 = lower(&algorithms::pagerank(), &ParallelismPlan::new(8, 1));
         let lib2 = emit_library(&g2);
         assert_eq!(lib2.matches("module frontier_q").count(), 0);
+        // ... but it declares runtime params -> one arg_regs definition
+        assert_eq!(lib2.matches("module arg_regs").count(), 1);
     }
 
     #[test]

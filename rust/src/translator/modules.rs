@@ -155,6 +155,7 @@ pub fn cost(kind: HwModule) -> ModuleCost {
         HwModule::MemController => ModuleCost { lut: 9_000, ff: 12_000, bram_kb: 144, uram: 0, dsp: 0 },
         HwModule::PcieDma => ModuleCost { lut: 12_000, ff: 16_000, bram_kb: 288, uram: 0, dsp: 0 },
         HwModule::ControlRegs => ModuleCost { lut: 800, ff: 1_200, bram_kb: 0, uram: 0, dsp: 0 },
+        HwModule::ArgRegFile => ModuleCost { lut: 400, ff: 700, bram_kb: 0, uram: 0, dsp: 0 },
         HwModule::HostOnly => ModuleCost::default(),
     }
 }
@@ -175,6 +176,7 @@ pub fn latency(kind: HwModule) -> u32 {
         HwModule::MemController => 8,
         HwModule::PcieDma => 16,
         HwModule::ControlRegs => 1,
+        HwModule::ArgRegFile => 1,
         HwModule::HostOnly => 0,
     }
 }

@@ -101,7 +101,7 @@ fn reorder_improves_row_start_cycles_on_shuffled_grid() {
 #[test]
 fn parallelism_scales_simulated_throughput() {
     let g = generate::rmat(11, 60_000, 0.57, 0.19, 0.19, 9);
-    let program = algorithms::pagerank(0.85, 1e-4);
+    let program = algorithms::pagerank_with(0.85, 1e-4);
     let mut last = 0.0;
     for pipes in [1u32, 4, 16] {
         let design = Translator::jgraph()

@@ -1,0 +1,173 @@
+//! Integration for **first-class runtime parameters**: one
+//! `Session::compile` of the parameterized PageRank serves queries at
+//! many damping/tolerance settings with zero recompiles — the emitted
+//! HDL and the sanitized kernel name are identical across settings, the
+//! per-setting results match an independent software oracle, and binding
+//! failures are typed errors that name the offending parameter.
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::apply::ApplyExpr;
+use jgraph::dsl::builder::GasProgramBuilder;
+use jgraph::dsl::params::{ParamError, ParamSet, ParamSpec};
+use jgraph::engine::{RunOptions, Session, SessionConfig};
+use jgraph::graph::csr::Csr;
+use jgraph::graph::generate;
+use jgraph::prep::prepared::PrepOptions;
+use jgraph::translator::{codegen_hdl, Translator};
+
+fn software_session() -> Session {
+    Session::new(SessionConfig { use_xla: false, ..Default::default() })
+}
+
+use jgraph::engine::gas::reference_pagerank;
+
+/// The acceptance scenario: compile once, query at three distinct
+/// damping/tolerance settings, verify each against the oracle.
+#[test]
+fn one_compile_serves_three_parameter_settings_correctly() {
+    let g = generate::rmat(9, 6_000, 0.57, 0.19, 0.19, 42);
+    let csr = Csr::from_edgelist(&g);
+
+    let session = software_session();
+    // exactly ONE compile for the whole parameter family
+    let pipeline = session.compile(&algorithms::pagerank()).unwrap();
+    let bound = pipeline.load(&g, PrepOptions::named("rmat9")).unwrap();
+
+    // stiffness budget: delta decays ~damping^k and the engine bounds PR
+    // at 200 supersteps, so every setting must satisfy
+    // log(tolerance)/log(damping) << 200
+    let settings = [(0.5, 1e-8), (0.85, 1e-8), (0.9, 1e-5)];
+    let mut supersteps = Vec::new();
+    for (damping, tolerance) in settings {
+        let set = ParamSet::new().bind("damping", damping).bind("tolerance", tolerance);
+        let r = bound
+            .query(&RunOptions { params: set.clone(), ..RunOptions::default() })
+            .unwrap();
+        // the report records the effective binding
+        assert_eq!(
+            r.bound_params,
+            vec![("damping".to_string(), damping), ("tolerance".to_string(), tolerance)]
+        );
+        // correctness per setting: the query's functional path runs the
+        // instantiated program through the GAS oracle — replay it and
+        // check its values against the independent reference above
+        let instantiated = pipeline.program().instantiate(&set).unwrap();
+        let oracle = jgraph::engine::gas::run(&instantiated, &csr, 0, |_| {}).unwrap();
+        assert_eq!(oracle.supersteps, r.supersteps, "report mirrors the functional run");
+        let expected = reference_pagerank(&csr, damping, oracle.supersteps);
+        for (i, (a, b)) in oracle.values.iter().zip(&expected).enumerate() {
+            assert!((a - b).abs() < 1e-9, "damping {damping} vertex {i}: {a} vs {b}");
+        }
+        supersteps.push(r.supersteps);
+    }
+    assert_eq!(bound.queries_run(), settings.len() as u64, "zero recompiles, one binding");
+    // distinct settings genuinely change the computation
+    assert!(supersteps[0] < supersteps[2], "stiffer damping needs more iterations");
+}
+
+/// The translator-side guarantee: the design is parameter-independent —
+/// same HDL bytes, same host driver, same sanitized kernel name (the AOT
+/// artifact / xclbin cache key) across a damping sweep.
+#[test]
+#[allow(deprecated)]
+fn emitted_design_and_kernel_name_identical_across_damping_sweep() {
+    let reference = Translator::jgraph().translate(&algorithms::pagerank()).unwrap();
+    for damping in [0.05, 0.25, 0.5, 0.75, 0.95] {
+        let p = algorithms::pagerank_with(damping, 1e-7);
+        let d = Translator::jgraph().translate(&p).unwrap();
+        assert_eq!(d.hdl, reference.hdl, "damping {damping}: HDL must not change");
+        assert_eq!(d.host_c, reference.host_c, "damping {damping}: host C must not change");
+        assert_eq!(d.chisel, reference.chisel, "damping {damping}: Chisel must not change");
+        assert_eq!(
+            codegen_hdl::sanitize(&d.program_name),
+            "pagerank",
+            "kernel name is the artifact cache key: it must be value-independent"
+        );
+    }
+}
+
+/// An unbound **required** parameter (declared without a default) is a
+/// typed error naming the missing parameter — both at the typed pre-flight
+/// API and through the query path.
+#[test]
+fn unbound_required_param_is_a_typed_error_naming_it() {
+    let session = software_session();
+    // min(src, ceiling): a capacity-style sweep with a required ceiling
+    let program = GasProgramBuilder::new("capped-label")
+        .apply(ApplyExpr::bin(
+            jgraph::dsl::apply::BinOp::Min,
+            ApplyExpr::src(),
+            ApplyExpr::param("ceiling"),
+        ))
+        .reduce(jgraph::dsl::program::ReduceOp::Min)
+        .param(ParamSpec::required("ceiling"))
+        .build()
+        .unwrap();
+    let pipeline = session.compile(&program).unwrap();
+
+    // typed pre-flight: ParamError::Unbound carries the name
+    let err = pipeline.resolve_params(&ParamSet::new()).unwrap_err();
+    assert_eq!(err, ParamError::Unbound { name: "ceiling".into() });
+
+    // the run path refuses too, naming the parameter in its message
+    let g = generate::erdos_renyi(50, 300, 3);
+    let bound = pipeline.load(&g, PrepOptions::named("er")).unwrap();
+    let err = bound.query(&RunOptions::default()).unwrap_err();
+    assert!(err.to_string().contains("\"ceiling\""), "{err}");
+    assert!(err.to_string().contains("unbound"), "{err}");
+
+    // binding it makes the very same binding serve the query
+    let r = bound.query(&RunOptions::default().bind("ceiling", 3.0)).unwrap();
+    assert!(r.supersteps > 0);
+}
+
+/// Unknown and out-of-range bindings are typed at the pre-flight API.
+#[test]
+fn unknown_and_out_of_range_bindings_are_typed() {
+    let session = software_session();
+    let pipeline = session.compile(&algorithms::pagerank()).unwrap();
+    match pipeline.resolve_params(&ParamSet::new().bind("dampng", 0.9)).unwrap_err() {
+        ParamError::Unknown { name, declared } => {
+            assert_eq!(name, "dampng");
+            assert_eq!(declared, vec!["damping".to_string(), "tolerance".to_string()]);
+        }
+        other => panic!("expected Unknown, got {other:?}"),
+    }
+    match pipeline.resolve_params(&ParamSet::new().bind("damping", -0.2)).unwrap_err() {
+        ParamError::OutOfRange { name, value, min, max } => {
+            assert_eq!((name.as_str(), value, min, max), ("damping", -0.2, 0.0, 1.0));
+        }
+        other => panic!("expected OutOfRange, got {other:?}"),
+    }
+}
+
+/// The xclbin the simulated shell is configured with carries the
+/// parameter-independent name: two bindings from differently pre-bound
+/// constructors hit the same deployment artifact.
+#[test]
+#[allow(deprecated)]
+fn xclbin_and_artifact_key_hit_cache_across_parameter_values() {
+    let session = software_session();
+    let a = session.compile(&algorithms::pagerank_with(0.85, 1e-6)).unwrap();
+    let b = session.compile(&algorithms::pagerank_with(0.95, 1e-9)).unwrap();
+    assert_eq!(a.design().program_name, b.design().program_name);
+    assert_eq!(a.design().hdl, b.design().hdl);
+    assert_eq!(a.program().kind, b.program().kind, "same AOT artifact family");
+    // the sanitized name that keys artifact lookup and shell configure
+    assert_eq!(codegen_hdl::sanitize(&a.design().program_name), "pagerank");
+}
+
+/// Depth-bounded BFS through the full lifecycle: the same compiled design
+/// truncates at the bound horizon and the report reflects it.
+#[test]
+fn bfs_max_depth_binds_through_the_lifecycle() {
+    let session = software_session();
+    let pipeline = session.compile(&algorithms::bfs()).unwrap();
+    let g = generate::chain(40);
+    let bound = pipeline.load(&g, PrepOptions::named("chain")).unwrap();
+    let full = bound.query(&RunOptions::from_root(0)).unwrap();
+    let capped = bound.query(&RunOptions::from_root(0).bind("max_depth", 5.0)).unwrap();
+    assert!(capped.supersteps < full.supersteps);
+    assert_eq!(capped.supersteps, 5);
+    assert_eq!(capped.bound_params, vec![("max_depth".to_string(), 5.0)]);
+}

@@ -72,7 +72,7 @@ fn every_canonical_kind_matches_oracle_on_random_graph() {
         };
         let program = match kind {
             EdgeOpKind::Bfs => algorithms::bfs(),
-            EdgeOpKind::Pr => algorithms::pagerank(0.85, 1e-7),
+            EdgeOpKind::Pr => algorithms::pagerank_with(0.85, 1e-7),
             EdgeOpKind::Sssp => algorithms::sssp(),
             EdgeOpKind::Wcc => algorithms::wcc(),
             EdgeOpKind::Spmv => algorithms::spmv(),
