@@ -1,0 +1,140 @@
+//! Engine MTEPS: push-only vs direction-optimizing execution of the
+//! software GAS engine, both paths in the same binary over the same
+//! graph. This is the bench behind the PR 5 tentpole claim (≥ 2× BFS
+//! MTEPS on a 2^17-vertex rmat) and the `BENCH_engine.json` perf-trajectory
+//! artifact CI tracks across PRs.
+//!
+//! Modes:
+//! * default — 2^17-vertex rmat (~2M edges); **asserts** the ≥ 2× BFS
+//!   speedup and refreshes `BENCH_engine.json`;
+//! * `--quick` — small graph, few iterations, no threshold: the CI smoke
+//!   that keeps the bench compiling and the JSON schema stable.
+//!
+//! MTEPS here uses the push path's traversed-edge count as the numerator
+//! for **both** paths: the adaptive engine does *different* (less) work
+//! per query, so a fair throughput comparison fixes the algorithmic work
+//! and lets only wall time vary — speedup equals the wall-time ratio.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::params::ParamSet;
+use jgraph::engine::gas::{self, DirectionPolicy, EngineGraph};
+use jgraph::graph::csr::Csr;
+use jgraph::graph::generate;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (scale, edges, warmup, iters) =
+        if quick { (12u32, 100_000usize, 1, 3) } else { (17u32, 2_097_152usize, 1, 10) };
+    let mode = if quick { "quick" } else { "full" };
+
+    section(&format!("engine MTEPS, rmat scale {scale} ({edges} edges, mode {mode})"));
+    let el = generate::rmat(scale, edges, 0.57, 0.19, 0.19, 7);
+    let csr = Csr::from_edgelist(&el);
+    let csc = csr.transpose();
+    let out_deg = csr.out_degrees();
+    let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+    // root at the highest-degree vertex: guaranteed inside the rmat core,
+    // so the traversal covers the giant component
+    let root = (0..csr.num_vertices() as u32).max_by_key(|&v| csr.degree(v)).unwrap_or(0);
+
+    // --- BFS: the headline number
+    let program = algorithms::bfs();
+    let push_ref = gas::run(&program, &csr, root, |_| {}).unwrap();
+    let adaptive_ref =
+        gas::run_with_policy(&program, &view, root, DirectionPolicy::Adaptive, |_| Ok(()))
+            .unwrap();
+    // exactness pin (the property test does this over 100 random graphs;
+    // here it guards the exact graph being measured)
+    assert_eq!(push_ref.supersteps, adaptive_ref.supersteps, "superstep drift");
+    assert!(
+        push_ref
+            .values
+            .iter()
+            .zip(&adaptive_ref.values)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "adaptive values drifted from the push reference"
+    );
+    println!(
+        "BFS from root {root}: {} supersteps ({} pull), {} edges traversed (push) / {} (adaptive)",
+        adaptive_ref.supersteps,
+        adaptive_ref.pull_supersteps,
+        push_ref.edges_traversed,
+        adaptive_ref.edges_traversed,
+    );
+
+    let d_push = bench("BFS push-only", warmup, iters, || {
+        gas::run(&program, &csr, root, |_| {}).unwrap().supersteps
+    });
+    let d_adaptive = bench("BFS adaptive (push/pull)", warmup, iters, || {
+        gas::run_with_policy(&program, &view, root, DirectionPolicy::Adaptive, |_| Ok(()))
+            .unwrap()
+            .supersteps
+    });
+    let work = push_ref.edges_traversed as f64;
+    let bfs_push_mteps = work / d_push.as_secs_f64() / 1e6;
+    let bfs_adaptive_mteps = work / d_adaptive.as_secs_f64() / 1e6;
+    let bfs_speedup = d_push.as_secs_f64() / d_adaptive.as_secs_f64();
+    report_metric("BFS engine MTEPS (push-only)", bfs_push_mteps, "MTEPS");
+    report_metric("BFS engine MTEPS (adaptive)", bfs_adaptive_mteps, "MTEPS");
+    report_metric("BFS adaptive speedup", bfs_speedup, "x");
+
+    // --- PageRank: every superstep dense, so the whole run pulls; the
+    //     win here is the CSC gather + double-buffered scratch
+    section("PageRank engine edge rate (push scatter vs pull gather)");
+    let pr = algorithms::pagerank()
+        .instantiate(&ParamSet::new().bind("tolerance", 1e-4))
+        .unwrap();
+    let pr_iters = iters.clamp(2, 5);
+    let pr_ref = gas::run(&pr, &csr, root, |_| {}).unwrap();
+    // hand the pull run the cached CSC-order trace stream, exactly as the
+    // query layer does (PreparedGraph::pull_stream) — the push side
+    // streams the pre-cached csr.targets, so timing a per-run rebuild
+    // here would bias the comparison
+    let pull_stream = csc.row_run_stream();
+    let pr_view = view.with_pull_stream(&pull_stream);
+    let d_pr_push = bench("PageRank push-only", 1, pr_iters, || {
+        gas::run(&pr, &csr, root, |_| {}).unwrap().supersteps
+    });
+    let d_pr_pull = bench("PageRank pull (adaptive)", 1, pr_iters, || {
+        gas::run_with_policy(&pr, &pr_view, root, DirectionPolicy::Adaptive, |_| Ok(()))
+            .unwrap()
+            .supersteps
+    });
+    let pr_work = pr_ref.edges_traversed as f64;
+    let pr_push_meps = pr_work / d_pr_push.as_secs_f64() / 1e6;
+    let pr_pull_meps = pr_work / d_pr_pull.as_secs_f64() / 1e6;
+    let pr_speedup = d_pr_push.as_secs_f64() / d_pr_pull.as_secs_f64();
+    report_metric("PR engine Medges/s (push-only)", pr_push_meps, "Medges/s");
+    report_metric("PR engine Medges/s (pull)", pr_pull_meps, "Medges/s");
+    report_metric("PR pull speedup", pr_speedup, "x");
+
+    // --- perf-trajectory artifact (tracked across PRs by CI)
+    let json = format!(
+        "{{\n  \"bench\": \"engine_mteps\",\n  \"mode\": \"{mode}\",\n  \
+         \"graph\": {{ \"kind\": \"rmat\", \"scale\": {scale}, \"vertices\": {}, \"edges\": {} }},\n  \
+         \"bfs\": {{\n    \"supersteps\": {},\n    \"pull_supersteps\": {},\n    \
+         \"push_mteps\": {bfs_push_mteps:.1},\n    \"adaptive_mteps\": {bfs_adaptive_mteps:.1},\n    \
+         \"speedup\": {bfs_speedup:.2}\n  }},\n  \
+         \"pagerank\": {{\n    \"supersteps\": {},\n    \"push_medges_per_s\": {pr_push_meps:.1},\n    \
+         \"pull_medges_per_s\": {pr_pull_meps:.1},\n    \"speedup\": {pr_speedup:.2}\n  }}\n}}\n",
+        csr.num_vertices(),
+        csr.num_edges(),
+        adaptive_ref.supersteps,
+        adaptive_ref.pull_supersteps,
+        pr_ref.supersteps,
+    );
+    std::fs::write("BENCH_engine.json", &json).expect("writing BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json:\n{json}");
+
+    // quick mode is the CI smoke: no threshold, shared runners are noisy
+    if !quick {
+        assert!(
+            bfs_speedup >= 2.0,
+            "adaptive BFS must be >= 2x push-only on the 2^17 rmat (got {bfs_speedup:.2}x)"
+        );
+    }
+}

@@ -11,6 +11,8 @@ use jgraph::accel::bram::BankModel;
 use jgraph::accel::device::DeviceModel;
 use jgraph::accel::simulator::{AccelSimulator, EdgeBatch};
 use jgraph::dsl::algorithms;
+use jgraph::dsl::program::Direction;
+use jgraph::engine::gas::{DirectionPolicy, EngineGraph};
 use jgraph::engine::{gas, RunOptions, Session, SessionConfig};
 use jgraph::graph::csr::Csr;
 use jgraph::graph::generate;
@@ -48,6 +50,7 @@ fn main() {
             active_rows: 100_000,
             bytes_per_edge: 8,
             avg_edge_gap: 3_000.0,
+            direction: Direction::Push,
         });
         sim.finish().cycles.total()
     });
@@ -61,14 +64,34 @@ fn main() {
     let g = generate::rmat(13, 200_000, 0.57, 0.19, 0.19, 3);
     let csr = Csr::from_edgelist(&g);
     let program = algorithms::bfs();
-    let d = bench("gas::run BFS rmat-13", 1, 10, || {
+    let d = bench("gas::run BFS rmat-13 (push-only)", 1, 10, || {
         gas::run(&program, &csr, 0, |_| {}).unwrap().edges_traversed
     });
     let traversed = gas::run(&program, &csr, 0, |_| {}).unwrap().edges_traversed;
     report_metric(
-        "software-oracle throughput",
+        "software-oracle throughput (push)",
         traversed as f64 / d.as_secs_f64() / 1e6,
         "Medges/s",
+    );
+    // direction-optimizing path over the cached CSC (same values, same
+    // supersteps; see benches/engine_mteps.rs for the full comparison)
+    let csc = csr.transpose();
+    let out_deg = csr.out_degrees();
+    let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+    let d_adaptive = bench("gas::run_adaptive BFS rmat-13", 1, 10, || {
+        gas::run_with_policy(&program, &view, 0, DirectionPolicy::Adaptive, |_| Ok(()))
+            .unwrap()
+            .edges_traversed
+    });
+    report_metric(
+        "software-oracle throughput (adaptive)",
+        traversed as f64 / d_adaptive.as_secs_f64() / 1e6,
+        "Medges/s",
+    );
+    report_metric(
+        "adaptive speedup (push/adaptive wall)",
+        d.as_secs_f64() / d_adaptive.as_secs_f64(),
+        "x",
     );
 
     section("CSR construction (rmat-14 ~500k edges)");

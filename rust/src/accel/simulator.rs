@@ -12,6 +12,7 @@ use super::bram::BankModel;
 use super::device::DeviceModel;
 use super::memctrl;
 use super::stats::{CycleBreakdown, SimStats, SuperstepSim};
+use crate::dsl::program::Direction;
 use crate::translator::pipeline::PipelineSpec;
 
 /// Host→device superstep launch overhead (seconds): control-register write
@@ -35,6 +36,12 @@ pub struct EdgeBatch<'a> {
     /// Mean |src-dst| id gap of the batch (locality proxy; see
     /// [`memctrl::locality_factor`]).
     pub avg_edge_gap: f64,
+    /// Traversal direction of this superstep. Pull batches stream `dsts`
+    /// as ascending CSC-order runs — the banked reduce sees its real
+    /// (conflict-light) write pattern straight from the stream content;
+    /// the flag makes the contract explicit and feeds the push/pull
+    /// accounting in [`SimStats`].
+    pub direction: Direction,
 }
 
 /// Simulator for one run of one design on one device.
@@ -44,16 +51,18 @@ pub struct AccelSimulator {
     pipeline: PipelineSpec,
     banks: BankModel,
     stats: SimStats,
-    /// Scratch dsts window buffer reused across supersteps (hot path:
-    /// avoid per-window allocation).
     superstep_index: u32,
+    /// Scratch window buffer for the pull direction's run-compressed
+    /// reduce writes, reused across supersteps (hot path: no per-window
+    /// allocation).
+    run_scratch: Vec<u32>,
 }
 
 impl AccelSimulator {
     pub fn new(device: DeviceModel, pipeline: PipelineSpec) -> Self {
         let banks = BankModel::new(device.reduce_banks);
         let stats = SimStats { clock_hz: pipeline.clock_hz, ..Default::default() };
-        Self { device, pipeline, banks, stats, superstep_index: 0 }
+        Self { device, pipeline, banks, stats, superstep_index: 0, run_scratch: Vec::new() }
     }
 
     /// Simulate one superstep; returns its cycle account and accumulates
@@ -68,9 +77,34 @@ impl AccelSimulator {
         // (1)+(2) issue + conflicts: windows of `lanes` edges; each window
         // costs max(ii, worst-bank-collision) plus the flow's per-edge
         // control overhead.
+        //
+        // Direction matters for the banked reduce: a push superstep
+        // scatters one read-modify-write per edge, so every destination
+        // in the window contends. A pull superstep streams its edges as
+        // runs of the same destination (CSC row order); the gather
+        // datapath chains a run through a per-row accumulator register
+        // and commits **one** banked write per run segment — so only
+        // distinct-destination writes inside a window can collide.
         let mut issue: u64 = 0;
-        for window in batch.dsts.chunks(lanes) {
-            issue += self.banks.window_cycles(window, ii) as u64;
+        match batch.direction {
+            Direction::Push => {
+                for window in batch.dsts.chunks(lanes) {
+                    issue += self.banks.window_cycles(window, ii) as u64;
+                }
+            }
+            Direction::Pull => {
+                for window in batch.dsts.chunks(lanes) {
+                    self.run_scratch.clear();
+                    let mut prev = None;
+                    for &d in window {
+                        if prev != Some(d) {
+                            self.run_scratch.push(d);
+                            prev = Some(d);
+                        }
+                    }
+                    issue += self.banks.window_cycles(&self.run_scratch, ii) as u64;
+                }
+            }
         }
         let ideal = edges.div_ceil(lanes as u64) * ii as u64;
         cycles.compute = ideal + (edges as f64 * self.pipeline.per_edge_overhead) as u64;
@@ -96,11 +130,15 @@ impl AccelSimulator {
             index: self.superstep_index,
             edges,
             active_vertices: batch.active_rows,
+            direction: batch.direction,
             cycles,
             launch_seconds: LAUNCH_SECONDS,
         };
         self.superstep_index += 1;
         self.stats.supersteps += 1;
+        if batch.direction == Direction::Pull {
+            self.stats.pull_supersteps += 1;
+        }
         self.stats.total_edges += edges;
         self.stats.cycles.add(&cycles);
         self.stats.launch_seconds += LAUNCH_SECONDS;
@@ -131,7 +169,13 @@ mod tests {
     }
 
     fn batch(dsts: &[u32]) -> EdgeBatch<'_> {
-        EdgeBatch { dsts, active_rows: 10, bytes_per_edge: 8, avg_edge_gap: 100.0 }
+        EdgeBatch {
+            dsts,
+            active_rows: 10,
+            bytes_per_edge: 8,
+            avg_edge_gap: 100.0,
+            direction: Direction::Push,
+        }
     }
 
     #[test]
@@ -143,7 +187,13 @@ mod tests {
         let mut m = std::collections::HashMap::new();
         for kind in TranslatorKind::all() {
             let mut s = sim(kind, ParallelismPlan::default());
-            s.superstep(&EdgeBatch { dsts: &dsts, active_rows: 10_000, bytes_per_edge: 8, avg_edge_gap: 3000.0 });
+            s.superstep(&EdgeBatch {
+                dsts: &dsts,
+                active_rows: 10_000,
+                bytes_per_edge: 8,
+                avg_edge_gap: 3000.0,
+                direction: Direction::Push,
+            });
             m.insert(kind, s.finish().mteps());
         }
         let j = m[&TranslatorKind::JGraph];
@@ -193,12 +243,62 @@ mod tests {
     }
 
     #[test]
+    fn pull_order_stream_conflicts_less_and_is_accounted() {
+        // same destination multiset, two stream orders: scattered (push)
+        // vs ascending CSC-order runs (pull). The banked reduce must see
+        // the pull stream's sequential writes as fewer conflicts — the
+        // whole point of carrying the real access pattern in the trace.
+        let mut rng = crate::graph::SplitMix64::new(11);
+        let push_order: Vec<u32> =
+            (0..80_000).map(|_| rng.next_below(4_000) as u32).collect();
+        let mut pull_order = push_order.clone();
+        pull_order.sort_unstable();
+        let mut a = sim(TranslatorKind::JGraph, ParallelismPlan::default());
+        a.superstep(&EdgeBatch {
+            dsts: &push_order,
+            active_rows: 4_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 100.0,
+            direction: Direction::Push,
+        });
+        let mut b = sim(TranslatorKind::JGraph, ParallelismPlan::default());
+        b.superstep(&EdgeBatch {
+            dsts: &pull_order,
+            active_rows: 4_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 100.0,
+            direction: Direction::Pull,
+        });
+        assert!(
+            b.stats().cycles.conflict < a.stats().cycles.conflict,
+            "pull {} !< push {}",
+            b.stats().cycles.conflict,
+            a.stats().cycles.conflict
+        );
+        assert_eq!(a.stats().pull_supersteps, 0);
+        assert_eq!(b.stats().pull_supersteps, 1);
+        assert_eq!(b.stats().supersteps, 1);
+    }
+
+    #[test]
     fn locality_reduces_row_start() {
         let dsts: Vec<u32> = (0..10_000).collect();
         let mut far = sim(TranslatorKind::JGraph, ParallelismPlan::default());
-        far.superstep(&EdgeBatch { dsts: &dsts, active_rows: 10_000, bytes_per_edge: 8, avg_edge_gap: 100_000.0 });
+        far.superstep(&EdgeBatch {
+            dsts: &dsts,
+            active_rows: 10_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 100_000.0,
+            direction: Direction::Push,
+        });
         let mut near = sim(TranslatorKind::JGraph, ParallelismPlan::default());
-        near.superstep(&EdgeBatch { dsts: &dsts, active_rows: 10_000, bytes_per_edge: 8, avg_edge_gap: 2.0 });
+        near.superstep(&EdgeBatch {
+            dsts: &dsts,
+            active_rows: 10_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 2.0,
+            direction: Direction::Push,
+        });
         assert!(near.stats().cycles.row_start < far.stats().cycles.row_start);
     }
 
@@ -206,9 +306,21 @@ mod tests {
     fn weighted_edges_stream_more_bytes() {
         let dsts: Vec<u32> = (0..2_000_000).map(|i| i % 1000).collect();
         let mut light = sim(TranslatorKind::JGraph, ParallelismPlan::new(64, 2));
-        light.superstep(&EdgeBatch { dsts: &dsts, active_rows: 100, bytes_per_edge: 8, avg_edge_gap: 10.0 });
+        light.superstep(&EdgeBatch {
+            dsts: &dsts,
+            active_rows: 100,
+            bytes_per_edge: 8,
+            avg_edge_gap: 10.0,
+            direction: Direction::Push,
+        });
         let mut heavy = sim(TranslatorKind::JGraph, ParallelismPlan::new(64, 2));
-        heavy.superstep(&EdgeBatch { dsts: &dsts, active_rows: 100, bytes_per_edge: 24, avg_edge_gap: 10.0 });
+        heavy.superstep(&EdgeBatch {
+            dsts: &dsts,
+            active_rows: 100,
+            bytes_per_edge: 24,
+            avg_edge_gap: 10.0,
+            direction: Direction::Push,
+        });
         assert!(heavy.stats().cycles.stream >= light.stats().cycles.stream);
     }
 }

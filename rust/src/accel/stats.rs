@@ -1,5 +1,7 @@
 //! Simulation statistics: per-superstep and aggregate cycle accounting.
 
+use crate::dsl::program::Direction;
+
 
 /// Where the cycles went (per superstep or aggregated).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -44,6 +46,9 @@ pub struct SuperstepSim {
     pub index: u32,
     pub edges: u64,
     pub active_vertices: u64,
+    /// Traversal direction the engine chose for this superstep (push =
+    /// CSR out-edge scatter, pull = CSC in-edge gather).
+    pub direction: Direction,
     pub cycles: CycleBreakdown,
     /// Host launch overhead (seconds — not cycles; it happens off-chip).
     pub launch_seconds: f64,
@@ -53,6 +58,8 @@ pub struct SuperstepSim {
 #[derive(Debug, Clone, Default)]
 pub struct SimStats {
     pub supersteps: u32,
+    /// How many of `supersteps` ran in the pull (CSC) direction.
+    pub pull_supersteps: u32,
     pub total_edges: u64,
     pub cycles: CycleBreakdown,
     pub launch_seconds: f64,
@@ -100,6 +107,7 @@ mod tests {
     fn mteps_math() {
         let s = SimStats {
             supersteps: 1,
+            pull_supersteps: 0,
             total_edges: 1_000_000,
             cycles: CycleBreakdown { compute: 2_500_000, ..Default::default() },
             launch_seconds: 0.0,

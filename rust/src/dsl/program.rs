@@ -179,6 +179,15 @@ impl GasProgram {
         self.kind.is_some()
     }
 
+    /// Whether this program executes on the damped-PageRank engine path
+    /// (`gas::run_pagerank`): the canonical Pr kind, or any program with
+    /// a [`Writeback::DampedSum`] writeback. The engine dispatches on
+    /// this, and the query layer uses it to attach the cached full-sweep
+    /// pull trace only where it will be read.
+    pub fn is_damped_pagerank(&self) -> bool {
+        self.kind == Some(EdgeOpKind::Pr) || matches!(self.writeback, Writeback::DampedSum(_))
+    }
+
     /// Does this program declare runtime parameters that still need
     /// binding before it can run?
     pub fn has_runtime_params(&self) -> bool {

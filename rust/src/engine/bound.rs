@@ -76,6 +76,7 @@ impl QueryContext {
             active_rows: trace.active_rows,
             bytes_per_edge: self.bytes_per_edge,
             avg_edge_gap: self.avg_edge_gap,
+            direction: trace.direction,
         });
         if self.want_trace {
             self.trace.record(step);
@@ -190,9 +191,26 @@ impl<'p> BoundPipeline<'p> {
 
         // --- functional run (software oracle) in lockstep with the cycle
         //     simulator; the scheduler's iteration cap aborts the loop.
+        //     Direction-optimized: pull supersteps execute over the CSC
+        //     (plus out-degrees and the pull trace stream) lazily built
+        //     once per prepared graph and shared by every query on this
+        //     binding, with per-superstep choices flowing into the
+        //     simulator through the trace. Push-only-pinned queries never
+        //     touch (or build) those caches.
         let cap = self.cap_for(opts);
         let mut ctx = QueryContext::new(self, cap, opts.trace_path.is_some());
-        let oracle = gas::run_observed(program, csr, opts.root, |trace| ctx.superstep(trace))?;
+        let view = if opts.direction == gas::DirectionPolicy::PushOnly {
+            gas::EngineGraph::push_only(csr)
+        } else if program.is_damped_pagerank() {
+            // full-sweep pull runs stream the same O(E) trace every
+            // superstep — hand them the per-graph cache
+            self.graph.engine_view().with_pull_stream(self.graph.pull_stream())
+        } else {
+            self.graph.engine_view()
+        };
+        let oracle = gas::run_with_policy(program, &view, opts.root, opts.direction, |trace| {
+            ctx.superstep(trace)
+        })?;
         // The interpreter self-limits at the program's own superstep bound;
         // exhausting that bound without meeting the convergence condition
         // is the same failure the scheduler cap guards against, so it must
@@ -269,6 +287,22 @@ impl<'p> BoundPipeline<'p> {
             trace_log.write_csv(path)?;
         }
 
+        // Direction split, kept consistent with the *reported* superstep
+        // count. The only path where `supersteps` can diverge from the
+        // oracle's is the XLA PageRank kernel (its f32 accumulation
+        // shifts the DeltaBelow crossing) — and PR runs a uniform
+        // direction, so the uniform split is restated over the reported
+        // total. Mixed-direction programs (BFS-like) have deterministic
+        // integer superstep counts on both paths, where the oracle split
+        // is exact.
+        let (push_supersteps, pull_supersteps) = if oracle.pull_supersteps == 0 {
+            (supersteps, 0)
+        } else if oracle.pull_supersteps == oracle.supersteps {
+            (0, supersteps)
+        } else {
+            (oracle.supersteps - oracle.pull_supersteps, oracle.pull_supersteps)
+        };
+
         self.queries_run.fetch_add(1, Ordering::Relaxed);
         let prep_seconds = self.graph.prep_seconds;
         let compile_seconds = design.compile_seconds();
@@ -291,6 +325,8 @@ impl<'p> BoundPipeline<'p> {
             transfer_seconds,
             functional_path,
             supersteps,
+            pull_supersteps,
+            push_supersteps,
             edges_traversed,
             hdl_lines: design.hdl_lines,
             // the report identity: rt = setup + query on every path
@@ -461,6 +497,28 @@ mod tests {
         let r2 = bound.query(&RunOptions::from_root(1)).unwrap();
         assert_eq!(bound.queries_run(), 2);
         assert_eq!(r1.setup_seconds, r2.setup_seconds);
+    }
+
+    #[test]
+    fn reports_record_the_direction_split() {
+        let s = session();
+        let g = generate::rmat(10, 80_000, 0.57, 0.19, 0.19, 3);
+        // a dense rmat BFS has a pull phase in the middle and push phases
+        // at the ends
+        let bfs = s.compile(&algorithms::bfs()).unwrap();
+        let bound = bfs.load(&g, PrepOptions::named("rmat")).unwrap();
+        let r = bound.query(&RunOptions::from_root(0)).unwrap();
+        assert_eq!(r.push_supersteps + r.pull_supersteps, r.supersteps);
+        assert!(r.pull_supersteps > 0, "dense-middle BFS must pull");
+        assert!(r.push_supersteps > 0, "sparse BFS phases must push");
+        assert_eq!(r.sim.pull_supersteps, r.pull_supersteps, "simulator saw the same choices");
+        // every PageRank superstep is dense: all pull (loose tolerance —
+        // this test is about direction accounting, not convergence depth)
+        let pr = s.compile(&algorithms::pagerank()).unwrap();
+        let bound = pr.load(&g, PrepOptions::named("rmat")).unwrap();
+        let r = bound.query(&RunOptions::default().bind("tolerance", 1e-3)).unwrap();
+        assert_eq!(r.pull_supersteps, r.supersteps);
+        assert_eq!(r.push_supersteps, 0);
     }
 
     #[test]

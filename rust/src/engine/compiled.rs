@@ -22,6 +22,7 @@ use crate::sched::{AdmittedPlan, ParallelismPlan};
 use crate::translator::Design;
 
 use super::bound::BoundPipeline;
+use super::gas::DirectionPolicy;
 use super::metrics::RunReport;
 
 /// Per-query knobs — everything that may change between two queries on
@@ -53,6 +54,12 @@ pub struct RunOptions {
     /// the cap aborts the run with an error — the safety net against
     /// non-converging programs.
     pub max_supersteps: Option<u32>,
+    /// Traversal-direction policy for this query's supersteps. The
+    /// default `Adaptive` picks push or pull per superstep by the
+    /// frontier-size heuristic (values are bit-identical either way —
+    /// property-tested); pin `PushOnly` to model the paper's push-stream
+    /// schedule, or `ForcePull` to stress the pull kernels.
+    pub direction: DirectionPolicy,
 }
 
 impl Default for RunOptions {
@@ -65,6 +72,7 @@ impl Default for RunOptions {
             verify: true,
             trace_path: None,
             max_supersteps: None,
+            direction: DirectionPolicy::Adaptive,
         }
     }
 }
@@ -104,6 +112,13 @@ impl RunOptions {
     /// bound); the run errors if it has not converged by then.
     pub fn with_max_supersteps(mut self, cap: u32) -> Self {
         self.max_supersteps = Some(cap);
+        self
+    }
+
+    /// Pin this query's traversal-direction policy (default:
+    /// [`DirectionPolicy::Adaptive`]).
+    pub fn with_direction(mut self, direction: DirectionPolicy) -> Self {
+        self.direction = direction;
         self
     }
 }

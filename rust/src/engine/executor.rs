@@ -163,14 +163,19 @@ impl Executor {
             partition: self.config.partition,
         };
         let mut bound = compiled.load(graph, prep)?;
+        // The shim inherits the lifecycle defaults — including
+        // `DirectionPolicy::Adaptive` — because its tested contract is
+        // equivalence with `Session`/`BoundPipeline`, not bug-for-bug
+        // reproduction of the pre-lifecycle engine. Paper-reproduction
+        // paths pin `PushOnly` explicitly (report::tables, the headline
+        // band test).
         let mut opts = RunOptions {
             root: self.config.root,
             tolerance: self.config.tolerance,
             use_xla: self.config.use_xla,
             verify: self.config.verify,
             trace_path: self.config.trace_path.clone(),
-            max_supersteps: None,
-            params: crate::dsl::params::ParamSet::new(),
+            ..Default::default()
         };
         // Legacy semantics: the config tolerance governs the run. On
         // programs that declare `tolerance` as a runtime parameter it must

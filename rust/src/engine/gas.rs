@@ -3,25 +3,67 @@
 //! emitting a per-superstep trace the accelerator simulator consumes in
 //! lockstep. The AOT/XLA path ([`super::xla_engine`]) is cross-checked
 //! against this engine for the five canonical algorithms.
+//!
+//! ## Direction-optimizing execution
+//!
+//! The engine runs each superstep in one of two directions:
+//!
+//! * **push** — stream the frontier's out-edges over the CSR and scatter
+//!   messages to their destinations (the reference path, and the only
+//!   path of [`run`]/[`run_observed`]);
+//! * **pull** — sweep destination vertices over the cached CSC and gather
+//!   messages from in-neighbors that are in the frontier, testing
+//!   membership against the frontier bitmap
+//!   ([`super::frontier::Frontier`]). Dense frontiers (the middle of a
+//!   BFS on power-law graphs, every PageRank superstep) are much cheaper
+//!   this way: the sweep is sequential, needs no frontier sort, and
+//!   BFS-shaped programs stop scanning a vertex at its first frontier
+//!   neighbor.
+//!
+//! [`run_adaptive`] picks the direction per superstep with the standard
+//! frontier-size heuristic and reports the choice in every
+//! [`SuperstepTrace`] (and, aggregated, in [`GasResult::pull_supersteps`]).
+//!
+//! **Exactness contract:** adaptive execution returns bit-identical
+//! `values` and the same `supersteps` as the push-only reference.
+//! This holds even for non-associative float `Sum` reductions because
+//! [`crate::graph::csr::Csr::transpose`] is stable in CSR-stream order:
+//! within each CSC row, in-neighbors appear in exactly the order the push
+//! direction would deliver their messages, so per-destination
+//! accumulation performs the identical float operations in the identical
+//! order. `edges_traversed` and the trace streams *do* differ by design —
+//! they describe the work actually performed, which is the whole point of
+//! changing direction.
 
 use anyhow::Result;
 
-use crate::dsl::apply::ApplyEnv;
+use crate::dsl::apply::{ApplyEnv, ApplyExpr, CompiledApply};
 use crate::dsl::params::ParamSet;
 use crate::dsl::program::{
-    Convergence, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp, Writeback,
+    Convergence, Direction, FrontierPolicy, GasProgram, InitPolicy, ReduceOp, Writeback,
 };
 use crate::graph::csr::Csr;
 use crate::graph::VertexId;
+
+use super::frontier::Frontier;
 
 /// Per-superstep trace passed to the lockstep observer (the simulator).
 pub struct SuperstepTrace<'a> {
     pub index: u32,
     /// Destination vertex of every edge processed this superstep, stream
-    /// order.
+    /// order. Push supersteps stream the frontier's out-edges in CSR
+    /// order (scattered destinations); pull supersteps stream swept
+    /// vertices' in-edges in CSC order (destinations arrive as ascending
+    /// runs). The simulator's bank-conflict model consumes exactly this
+    /// stream, so it sees the real access pattern of either direction.
     pub dsts: &'a [u32],
-    /// Active CSR rows this superstep.
+    /// Rows opened this superstep: active CSR rows when pushing, swept
+    /// CSC rows when pulling.
     pub active_rows: u64,
+    /// Which direction this superstep ran — part of the lockstep contract
+    /// so downstream models and reports can account push and pull work
+    /// separately.
+    pub direction: Direction,
 }
 
 /// Result of a run.
@@ -37,14 +79,99 @@ pub struct GasResult {
     /// engine turns this into an iteration-cap error; standalone callers
     /// can decide for themselves.
     pub converged: bool,
+    /// Supersteps executed in the pull (CSC) direction; the remaining
+    /// `supersteps - pull_supersteps` ran push. Always 0 on the push-only
+    /// reference path.
+    pub pull_supersteps: u32,
+}
+
+/// How the engine chooses the traversal direction each superstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DirectionPolicy {
+    /// Push from the frontier over the CSR every superstep — the
+    /// reference path ([`run`]/[`run_observed`]).
+    PushOnly,
+    /// Choose per superstep by the frontier-size heuristic. Requires a
+    /// CSC in the [`EngineGraph`]; falls back to push without one.
+    #[default]
+    Adaptive,
+    /// Pull every superstep that structurally can (needs a CSC). Exists
+    /// so tests and benches can pin the pull kernels even on sparse
+    /// frontiers where the heuristic would push.
+    ForcePull,
+}
+
+/// The graph arrays one engine run executes over. The CSR is mandatory;
+/// the CSC (for pull supersteps) and the out-degree array are optional
+/// accelerators normally cached once per graph by
+/// [`crate::prep::prepared::PreparedGraph`] and shared by every query in
+/// a binding.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineGraph<'a> {
+    pub csr: &'a Csr,
+    /// Transposed adjacency (in-edges). Must be `csr.transpose()` — the
+    /// pull direction's bit-exactness relies on its stable row order.
+    pub csc: Option<&'a Csr>,
+    /// Cached out-degrees (`csr.degree(v)` for all v); derived on the fly
+    /// when absent.
+    pub out_deg: Option<&'a [u32]>,
+    /// Cached CSC-order destination stream (`v` repeated in-degree(`v`)
+    /// times, ascending): the trace of a full-sweep pull superstep.
+    /// Full-sweep pull runs (PageRank) rebuild it per run when absent.
+    pub pull_dsts: Option<&'a [u32]>,
+}
+
+impl<'a> EngineGraph<'a> {
+    /// A push-only view: no CSC, so every superstep pushes.
+    pub fn push_only(csr: &'a Csr) -> Self {
+        Self { csr, csc: None, out_deg: None, pull_dsts: None }
+    }
+
+    /// A view with the transpose cached — what
+    /// [`crate::prep::prepared::PreparedGraph`] hands every query.
+    pub fn with_csc(csr: &'a Csr, csc: &'a Csr, out_deg: Option<&'a [u32]>) -> Self {
+        debug_assert_eq!(csr.num_vertices(), csc.num_vertices(), "csc must transpose csr");
+        debug_assert_eq!(csr.num_edges(), csc.num_edges(), "csc must transpose csr");
+        if let Some(d) = out_deg {
+            debug_assert_eq!(d.len(), csr.num_vertices());
+        }
+        Self { csr, csc: Some(csc), out_deg, pull_dsts: None }
+    }
+
+    /// Attach the cached CSC-order destination stream (see
+    /// [`crate::prep::prepared::PreparedGraph::pull_stream`]) so
+    /// full-sweep pull runs skip rebuilding it per query.
+    pub fn with_pull_stream(mut self, pull_dsts: &'a [u32]) -> Self {
+        debug_assert_eq!(pull_dsts.len(), self.csr.num_edges());
+        self.pull_dsts = Some(pull_dsts);
+        self
+    }
+
+    #[inline]
+    fn out_degree(&self, v: VertexId) -> u32 {
+        match self.out_deg {
+            Some(d) => d[v as usize],
+            None => self.csr.degree(v),
+        }
+    }
 }
 
 /// PageRank constants matching python/compile/kernels/ref.py.
 const PR_MAX_ITERS: u32 = 200;
 
+/// Frontier-size thresholds for switching to pull: pull when the
+/// frontier's out-edges exceed `E / alpha`. BFS-shaped programs
+/// (constant message, visited-once writeback) pull earlier because their
+/// pull sweep stops scanning a vertex at its first frontier in-neighbor;
+/// full-scan pulls must read every in-edge of every swept vertex, so
+/// they only pay off near frontier saturation.
+const PULL_ALPHA_EARLY_EXIT: u64 = 8;
+const PULL_ALPHA_FULL_SCAN: u64 = 2;
+
 /// Run `program` over `graph` from `root` (ignored by non-rooted
 /// programs). `observer` sees each superstep's edge trace before state is
-/// committed — the simulator hooks in here.
+/// committed — the simulator hooks in here. **Push-only reference path**;
+/// see [`run_adaptive`] for direction-optimized execution.
 pub fn run(
     program: &GasProgram,
     graph: &Csr,
@@ -65,6 +192,38 @@ pub fn run_observed(
     program: &GasProgram,
     graph: &Csr,
     root: VertexId,
+    observer: impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
+) -> Result<GasResult> {
+    run_with_policy(
+        program,
+        &EngineGraph::push_only(graph),
+        root,
+        DirectionPolicy::PushOnly,
+        observer,
+    )
+}
+
+/// Direction-optimized execution: per superstep, push over the CSR or
+/// pull over the cached CSC, whichever the frontier-size heuristic says
+/// is cheaper. Returns bit-identical `values` and the same `supersteps`
+/// as the push-only [`run`] (see the module docs for why), while
+/// `edges_traversed`/traces reflect the work actually done.
+pub fn run_adaptive(
+    program: &GasProgram,
+    graph: &EngineGraph<'_>,
+    root: VertexId,
+    observer: impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
+) -> Result<GasResult> {
+    run_with_policy(program, graph, root, DirectionPolicy::Adaptive, observer)
+}
+
+/// [`run_adaptive`] with an explicit [`DirectionPolicy`] — the
+/// test/bench entry point that can pin push-only or pull-always.
+pub fn run_with_policy(
+    program: &GasProgram,
+    graph: &EngineGraph<'_>,
+    root: VertexId,
+    policy: DirectionPolicy,
     mut observer: impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
     // A still-parameterized program closes over its declared defaults
@@ -77,12 +236,10 @@ pub fn run_observed(
     } else {
         program
     };
-    if program.kind == Some(EdgeOpKind::Pr)
-        || matches!(program.writeback, Writeback::DampedSum(_))
-    {
-        return run_pagerank(program, graph, &mut observer);
+    if program.is_damped_pagerank() {
+        return run_pagerank(program, graph, policy, &mut observer);
     }
-    run_generic(program, graph, root, &mut observer)
+    run_generic(program, graph, root, policy, &mut observer)
 }
 
 fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
@@ -116,24 +273,83 @@ fn reduce_combine(op: ReduceOp, a: f64, b: f64) -> f64 {
     }
 }
 
+/// One edge's message under the specialized Apply forms — shared by the
+/// push and pull inner loops so the two directions cannot drift.
+/// `dst_value` is a thunk: only the general tree interpreter reads the
+/// destination value, and the push hot loop must not pay the load for
+/// the closed forms.
+#[inline(always)]
+fn eval_msg(
+    compiled: CompiledApply,
+    apply: &ApplyExpr,
+    const_msg: f64,
+    src_value: f64,
+    dst_value: impl FnOnce() -> f64,
+    weight: f32,
+    iter: u32,
+) -> f64 {
+    use CompiledApply as C;
+    match compiled {
+        C::ConstPerIter => const_msg,
+        C::Src => src_value,
+        C::SrcPlusWeight => src_value + weight as f64,
+        C::SrcTimesWeight => src_value * weight as f64,
+        C::General => apply.eval(&ApplyEnv {
+            src_value,
+            dst_value: dst_value(),
+            edge_weight: weight as f64,
+            iter_count: iter as f64,
+        }),
+    }
+}
+
 fn run_generic(
     program: &GasProgram,
-    graph: &Csr,
+    g: &EngineGraph<'_>,
     root: VertexId,
+    policy: DirectionPolicy,
     observer: &mut impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
-    let n = graph.num_vertices();
+    let csr = g.csr;
+    let n = csr.num_vertices();
     let mut values = init_values(program, n, root);
+    if n == 0 {
+        // nothing to traverse and no frontier to drain: an empty graph is
+        // a converged fixpoint, not a panic
+        return Ok(GasResult {
+            values,
+            supersteps: 0,
+            edges_traversed: 0,
+            converged: true,
+            pull_supersteps: 0,
+        });
+    }
+    // Rooted programs must reject a root outside the graph instead of
+    // returning a plausible-looking all-unreachable result (previously
+    // this was an index panic; non-rooted programs ignore `root`).
+    if matches!(program.init, InitPolicy::RootAndDefault { .. }) && (root as usize) >= n {
+        anyhow::bail!("root {root} out of range for a {n}-vertex graph");
+    }
     let unvisited = match &program.init {
         InitPolicy::RootAndDefault { default, .. } => default.lit(),
         _ => f64::NAN,
     };
 
-    // initial frontier
-    let mut frontier: Vec<VertexId> = match (program.frontier, &program.init) {
-        (FrontierPolicy::Active, InitPolicy::RootAndDefault { .. }) => vec![root],
-        _ => (0..n as VertexId).collect(),
-    };
+    // `Active` programs evolve a materialized frontier; `All` programs
+    // sweep every vertex every superstep (no set to maintain).
+    let active_policy = program.frontier == FrontierPolicy::Active;
+    let mut cur = Frontier::new(n);
+    let mut next = Frontier::new(n);
+    if active_policy {
+        match &program.init {
+            InitPolicy::RootAndDefault { .. } => cur.push(root),
+            _ => {
+                for v in 0..n as VertexId {
+                    cur.push(v);
+                }
+            }
+        }
+    }
 
     // Bounded-depth traversal: converging at the depth horizon is a met
     // condition (a legitimate answer), unlike exhausting `max_steps`.
@@ -141,12 +357,26 @@ fn run_generic(
         program.depth_limit.as_ref().map(|s| s.lit()).unwrap_or(f64::INFINITY);
 
     let max_steps = program.max_supersteps(n);
+    let m_total = csr.num_edges() as u64;
     let mut edges_traversed = 0u64;
     let mut supersteps = 0u32;
+    let mut pull_supersteps = 0u32;
     // Specialize the Apply expression once (the software analogue of the
     // translator's fixed ALU chain); the general tree interpreter remains
     // the fallback for custom expressions. §Perf: ~2x on the oracle loop.
-    let compiled = crate::dsl::apply::CompiledApply::compile(&program.apply);
+    let compiled = CompiledApply::compile(&program.apply);
+    // A pull sweep may stop scanning a vertex at its first frontier
+    // in-neighbor when one message decides the outcome: the message is
+    // superstep-constant and the writeback takes it only while the vertex
+    // is unvisited (Sum excluded — k identical messages reduce to k·msg).
+    let early_exit_ok = compiled == CompiledApply::ConstPerIter
+        && program.writeback == Writeback::IfUnvisited
+        && program.reduce != ReduceOp::Sum;
+    // ... and such once-written vertices can never change again, so pull
+    // sweeps skip the already-visited ones entirely.
+    let sweep_unvisited_only = active_policy && program.writeback == Writeback::IfUnvisited;
+    let is_unvisited = |x: f64| x == unvisited || (x.is_nan() && unvisited.is_nan());
+
     // reused scratch (hot loop: no per-superstep allocation)
     let mut acc = vec![reduce_identity(program.reduce); n];
     let mut touched_flag = vec![false; n];
@@ -155,10 +385,35 @@ fn run_generic(
 
     let mut converged = false;
     for iter in 0..max_steps {
-        if frontier.is_empty() {
+        let frontier_len = if active_policy { cur.len() } else { n };
+        if frontier_len == 0 {
             converged = true;
             break;
         }
+
+        let direction = match (policy, g.csc) {
+            (DirectionPolicy::PushOnly, _) | (_, None) => Direction::Push,
+            (DirectionPolicy::ForcePull, Some(_)) => Direction::Pull,
+            (DirectionPolicy::Adaptive, Some(_)) => {
+                if !active_policy {
+                    // an All-policy superstep is dense by definition
+                    Direction::Pull
+                } else {
+                    let m_f: u64 = cur.as_slice().iter().map(|&v| g.out_degree(v) as u64).sum();
+                    let alpha = if early_exit_ok {
+                        PULL_ALPHA_EARLY_EXIT
+                    } else {
+                        PULL_ALPHA_FULL_SCAN
+                    };
+                    if m_f.saturating_mul(alpha) >= m_total.max(1) {
+                        Direction::Pull
+                    } else {
+                        Direction::Push
+                    }
+                }
+            }
+        };
+
         dsts.clear();
         touched.clear();
 
@@ -169,37 +424,96 @@ fn run_generic(
             edge_weight: 0.0,
             iter_count: iter as f64,
         });
-        for &u in &frontier {
-            let src_value = values[u as usize];
-            for (_, v, w) in graph.row_edges(u) {
-                use crate::dsl::apply::CompiledApply as C;
-                let msg = match compiled {
-                    C::ConstPerIter => const_msg,
-                    C::Src => src_value,
-                    C::SrcPlusWeight => src_value + w as f64,
-                    C::SrcTimesWeight => src_value * w as f64,
-                    C::General => program.apply.eval(&ApplyEnv {
-                        src_value,
-                        dst_value: values[v as usize],
-                        edge_weight: w as f64,
-                        iter_count: iter as f64,
-                    }),
+
+        let active_rows: u64;
+        match direction {
+            Direction::Push => {
+                active_rows = frontier_len as u64;
+                let mut process_src = |u: VertexId| {
+                    let src_value = values[u as usize];
+                    for (_, v, w) in csr.row_edges(u) {
+                        let msg = eval_msg(
+                            compiled,
+                            &program.apply,
+                            const_msg,
+                            src_value,
+                            || values[v as usize],
+                            w,
+                            iter,
+                        );
+                        if !touched_flag[v as usize] {
+                            touched_flag[v as usize] = true;
+                            touched.push(v);
+                        }
+                        let slot = &mut acc[v as usize];
+                        *slot = reduce_combine(program.reduce, *slot, msg);
+                        dsts.push(v);
+                    }
                 };
-                if !touched_flag[v as usize] {
-                    touched_flag[v as usize] = true;
-                    touched.push(v);
+                if active_policy {
+                    // `cur` is sealed ascending: the accumulation order
+                    // per destination is fixed, which the pull direction
+                    // reproduces exactly
+                    for &u in cur.as_slice() {
+                        process_src(u);
+                    }
+                } else {
+                    for u in 0..n as VertexId {
+                        process_src(u);
+                    }
                 }
-                let slot = &mut acc[v as usize];
-                *slot = reduce_combine(program.reduce, *slot, msg);
-                dsts.push(v);
+            }
+            Direction::Pull => {
+                let csc = g.csc.expect("pull chosen only with a csc");
+                if active_policy {
+                    cur.ensure_bits();
+                }
+                let mut swept = 0u64;
+                for v in 0..n as VertexId {
+                    if sweep_unvisited_only && !is_unvisited(values[v as usize]) {
+                        continue;
+                    }
+                    swept += 1;
+                    let dst_value = values[v as usize];
+                    for (_, u, w) in csc.row_edges(v) {
+                        // every scanned in-edge is streamed work, whether
+                        // or not its source is in the frontier
+                        dsts.push(v);
+                        if active_policy && !cur.contains(u) {
+                            continue;
+                        }
+                        let src_value = values[u as usize];
+                        let msg = eval_msg(
+                            compiled,
+                            &program.apply,
+                            const_msg,
+                            src_value,
+                            || dst_value,
+                            w,
+                            iter,
+                        );
+                        if !touched_flag[v as usize] {
+                            touched_flag[v as usize] = true;
+                            touched.push(v);
+                        }
+                        let slot = &mut acc[v as usize];
+                        *slot = reduce_combine(program.reduce, *slot, msg);
+                        if early_exit_ok {
+                            break;
+                        }
+                    }
+                }
+                active_rows = swept;
+                pull_supersteps += 1;
             }
         }
         edges_traversed += dsts.len() as u64;
 
-        observer(&SuperstepTrace { index: iter, dsts: &dsts, active_rows: frontier.len() as u64 })?;
+        observer(&SuperstepTrace { index: iter, dsts: &dsts, active_rows, direction })?;
 
-        // writeback
-        let mut next_frontier: Vec<VertexId> = Vec::new();
+        // writeback (direction-independent: `touched`/`acc` hold the same
+        // reduced messages either way)
+        next.clear();
         let mut changed = 0usize;
         // Sweep-overwrite semantics (SpMV/degree-count): vertices that
         // received no message this sweep take the Sum identity (y = A·x
@@ -217,14 +531,14 @@ fn run_generic(
                 }
             }
         }
-        for &v in &touched {
+        for &v in touched.iter() {
             let reduced = acc[v as usize];
             let old = values[v as usize];
             let new = match program.writeback {
                 Writeback::MinCombine => old.min(reduced),
                 Writeback::MaxCombine => old.max(reduced),
                 Writeback::IfUnvisited => {
-                    if old == unvisited || (old.is_nan() && unvisited.is_nan()) {
+                    if is_unvisited(old) {
                         reduced
                     } else {
                         old
@@ -236,7 +550,9 @@ fn run_generic(
             if new != old {
                 values[v as usize] = new;
                 changed += 1;
-                next_frontier.push(v);
+                if active_policy {
+                    next.push(v);
+                }
             }
             acc[v as usize] = reduce_identity(program.reduce);
             touched_flag[v as usize] = false;
@@ -245,7 +561,13 @@ fn run_generic(
 
         // convergence
         let done = match &program.convergence {
-            Convergence::EmptyFrontier => next_frontier.is_empty(),
+            Convergence::EmptyFrontier => {
+                if active_policy {
+                    next.is_empty()
+                } else {
+                    changed == 0
+                }
+            }
             Convergence::NoChange => changed == 0,
             Convergence::FixedIterations(k) => supersteps >= *k,
             Convergence::DeltaBelow(_) => unreachable!("PR handled separately"),
@@ -254,17 +576,13 @@ fn run_generic(
             converged = true;
             break;
         }
-        frontier = match program.frontier {
-            FrontierPolicy::Active => {
-                next_frontier.sort_unstable();
-                next_frontier.dedup();
-                next_frontier
-            }
-            FrontierPolicy::All => (0..n as VertexId).collect(),
-        };
+        if active_policy {
+            next.seal();
+            std::mem::swap(&mut cur, &mut next);
+        }
     }
 
-    Ok(GasResult { values, supersteps, edges_traversed, converged })
+    Ok(GasResult { values, supersteps, edges_traversed, converged, pull_supersteps })
 }
 
 /// PageRank with damping + uniform dangling redistribution, numerically
@@ -272,9 +590,18 @@ fn run_generic(
 /// from the (instantiated) program: damping from the `DampedSum`
 /// writeback, tolerance from the `DeltaBelow` convergence — the engine
 /// honors the query's bound values, never a baked-in default.
+///
+/// Every superstep is dense, so with a CSC available (and the policy
+/// allowing it) the whole run pulls: per-destination sums accumulate over
+/// the CSC row in the exact order the push scatter would deliver them
+/// (see [`crate::graph::csr::Csr::transpose`]), making the ranks
+/// bit-identical between directions. Both directions double-buffer
+/// `rank`/`next` and reuse all scratch across iterations — zero heap
+/// allocation in steady state.
 fn run_pagerank(
     program: &GasProgram,
-    graph: &Csr,
+    g: &EngineGraph<'_>,
+    policy: DirectionPolicy,
     observer: &mut impl FnMut(&SuperstepTrace<'_>) -> Result<()>,
 ) -> Result<GasResult> {
     let damping = match &program.writeback {
@@ -287,32 +614,58 @@ fn run_pagerank(
         Convergence::DeltaBelow(t) => t.lit(),
         _ => 1e-6,
     };
-    let n = graph.num_vertices();
+    let csr = g.csr;
+    let n = csr.num_vertices();
     let nf = n.max(1) as f64;
     let mut rank = vec![1.0 / nf; n];
-    let out_deg: Vec<u32> = (0..n as VertexId).map(|v| graph.degree(v)).collect();
-    // Edge stream in CSR row-major order — the exact order the accelerator
-    // streams `Edges` and the order every other algorithm's trace uses.
-    // (Deriving it through `to_edgelist()` routes the stream through an
-    // intermediate representation whose ordering is not contractual, which
-    // would skew the simulator's bank-conflict model if it ever diverged.)
-    let all_dsts: Vec<u32> = (0..n as VertexId)
-        .flat_map(|v| graph.row_edges(v).map(|(_, d, _)| d))
-        .collect();
+    let mut next = vec![0f64; n];
+    // out-degrees: cached by PreparedGraph ([`EngineGraph::out_deg`]) or
+    // derived once per run — never per superstep, never per query twice
+    let deg_storage;
+    let out_deg: &[u32] = match g.out_deg {
+        Some(d) => d,
+        None => {
+            deg_storage = csr.out_degrees();
+            &deg_storage
+        }
+    };
+
+    let pull = policy != DirectionPolicy::PushOnly && g.csc.is_some();
+    let direction = if pull { Direction::Pull } else { Direction::Push };
+    // Trace stream, fixed for the whole run: push streams the CSR edge
+    // stream — which is literally `csr.targets`, cached, no rebuild —
+    // while pull streams destinations in CSC order (ascending runs),
+    // materialized once.
+    let pull_stream: Vec<u32>;
+    let dsts: &[u32] = if pull {
+        match g.pull_dsts {
+            // the per-load cache (PreparedGraph::pull_stream): no rebuild
+            Some(stream) => stream,
+            None => {
+                pull_stream = g.csc.expect("pull requires a csc").row_run_stream();
+                &pull_stream
+            }
+        }
+    } else {
+        &csr.targets
+    };
+    // push-direction scatter accumulator (reused across iterations; the
+    // pull direction accumulates per destination in a register instead)
+    let mut sums = vec![0f64; if pull { 0 } else { n }];
+    // pull-direction contribution scratch: rank[u]/deg hoisted to one
+    // division per vertex per iteration (the gather would otherwise
+    // divide once per edge); reused across iterations. Bitwise identical
+    // to push — each edge still adds the exact same quotient.
+    let mut contrib = vec![0f64; if pull { n } else { 0 }];
+
     let mut edges_traversed = 0u64;
     let mut supersteps = 0u32;
+    let mut pull_supersteps = 0u32;
     let mut converged = false;
 
     for iter in 0..PR_MAX_ITERS {
-        let mut sums = vec![0f64; n];
-        for v in 0..n as VertexId {
-            let contrib = rank[v as usize] / out_deg[v as usize].max(1) as f64;
-            for (_, d, _) in graph.row_edges(v) {
-                sums[d as usize] += contrib;
-            }
-        }
-        edges_traversed += graph.num_edges() as u64;
-        observer(&SuperstepTrace { index: iter, dsts: &all_dsts, active_rows: n as u64 })?;
+        edges_traversed += csr.num_edges() as u64;
+        observer(&SuperstepTrace { index: iter, dsts, active_rows: n as u64, direction })?;
 
         let dangling: f64 = (0..n)
             .filter(|&v| out_deg[v] == 0)
@@ -320,19 +673,41 @@ fn run_pagerank(
             .sum();
         let base = (1.0 - damping) / nf + damping * dangling / nf;
         let mut delta = 0.0;
-        let mut new_rank = vec![0f64; n];
-        for v in 0..n {
-            new_rank[v] = base + damping * sums[v];
-            delta += (new_rank[v] - rank[v]).abs();
+        if pull {
+            let csc = g.csc.expect("pull requires a csc");
+            for v in 0..n {
+                contrib[v] = rank[v] / out_deg[v].max(1) as f64;
+            }
+            for v in 0..n {
+                let mut sum = 0f64;
+                for (_, u, _) in csc.row_edges(v as VertexId) {
+                    sum += contrib[u as usize];
+                }
+                next[v] = base + damping * sum;
+                delta += (next[v] - rank[v]).abs();
+            }
+            pull_supersteps += 1;
+        } else {
+            sums.fill(0.0);
+            for v in 0..n as VertexId {
+                let contrib = rank[v as usize] / out_deg[v as usize].max(1) as f64;
+                for (_, d, _) in csr.row_edges(v) {
+                    sums[d as usize] += contrib;
+                }
+            }
+            for v in 0..n {
+                next[v] = base + damping * sums[v];
+                delta += (next[v] - rank[v]).abs();
+            }
         }
-        rank = new_rank;
+        std::mem::swap(&mut rank, &mut next);
         supersteps = iter + 1;
         if delta < tol {
             converged = true;
             break;
         }
     }
-    Ok(GasResult { values: rank, supersteps, edges_traversed, converged })
+    Ok(GasResult { values: rank, supersteps, edges_traversed, converged, pull_supersteps })
 }
 
 /// Naive reference PageRank (damping + uniform dangling redistribution)
@@ -397,12 +772,36 @@ mod tests {
         run(p, g, root, |_| {}).unwrap()
     }
 
+    /// Adaptive run over a view with the CSC/out-degree caches built the
+    /// way `PreparedGraph` builds them.
+    fn run_adaptive_silent(
+        p: &crate::dsl::program::GasProgram,
+        g: &Csr,
+        root: u32,
+        policy: DirectionPolicy,
+    ) -> GasResult {
+        let csc = g.transpose();
+        let deg = g.out_degrees();
+        let view = EngineGraph::with_csc(g, &csc, Some(&deg));
+        run_with_policy(p, &view, root, policy, |_| Ok(())).unwrap()
+    }
+
+    fn assert_same_values(a: &GasResult, b: &GasResult, ctx: &str) {
+        assert_eq!(a.supersteps, b.supersteps, "{ctx}: supersteps");
+        assert_eq!(a.converged, b.converged, "{ctx}: converged");
+        assert_eq!(a.values.len(), b.values.len(), "{ctx}: len");
+        for (i, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: vertex {i}: {x} vs {y}");
+        }
+    }
+
     #[test]
     fn bfs_levels_on_diamond() {
         let g = csr(&EdgeList::from_pairs([(0, 1), (0, 2), (1, 3), (2, 3)]));
         let r = run_silent(&algorithms::bfs(), &g, 0);
         assert_eq!(r.values, vec![0.0, 1.0, 1.0, 2.0]);
         assert_eq!(r.edges_traversed, 4);
+        assert_eq!(r.pull_supersteps, 0, "reference path never pulls");
     }
 
     #[test]
@@ -514,7 +913,30 @@ mod tests {
         let mut observed = 0;
         run(&algorithms::pagerank(), &g, 0, |t| {
             assert_eq!(t.dsts, &stream[..], "superstep {} trace order", t.index);
+            assert_eq!(t.direction, Direction::Push);
             observed += 1;
+        })
+        .unwrap();
+        assert!(observed > 0);
+    }
+
+    #[test]
+    fn pagerank_pull_trace_is_csc_stream_order() {
+        // a pull superstep streams in-edges: destinations arrive as
+        // ascending runs of length in-degree — the contract the simulator's
+        // bank-conflict model relies on to see pull's sequential writes
+        let g = csr(&generate::rmat(8, 2_000, 0.57, 0.19, 0.19, 9));
+        let csc = g.transpose();
+        let expect: Vec<u32> = (0..g.num_vertices() as u32)
+            .flat_map(|v| std::iter::repeat(v).take(csc.degree(v) as usize))
+            .collect();
+        let view = EngineGraph::with_csc(&g, &csc, None);
+        let mut observed = 0;
+        run_adaptive(&algorithms::pagerank(), &view, 0, |t| {
+            assert_eq!(t.direction, Direction::Pull, "every PR superstep is dense");
+            assert_eq!(t.dsts, &expect[..], "superstep {} trace order", t.index);
+            observed += 1;
+            Ok(())
         })
         .unwrap();
         assert!(observed > 0);
@@ -595,5 +1017,174 @@ mod tests {
     fn avg_gap_chain_is_one() {
         let g = csr(&generate::chain(100));
         assert!((avg_edge_gap(&g) - 1.0).abs() < 1e-9);
+    }
+
+    // --- direction-optimizing engine ---
+
+    /// A graph whose BFS frontier goes sparse → dense → sparse: an entry
+    /// chain into a K20 clique, with an exit chain out of it.
+    fn chain_clique_chain() -> EdgeList {
+        let mut el = EdgeList::default();
+        for i in 0..9u32 {
+            el.push(i, i + 1, 1.0); // chain 0..9
+        }
+        for i in 10..30u32 {
+            for j in 10..30u32 {
+                if i != j {
+                    el.push(i, j, 1.0); // clique 10..29
+                }
+            }
+        }
+        el.push(9, 10, 1.0); // weld chain -> clique
+        el.push(29, 30, 1.0); // weld clique -> exit chain
+        for i in 30..39u32 {
+            el.push(i, i + 1, 1.0); // chain 30..39
+        }
+        el.num_vertices = 40;
+        el
+    }
+
+    #[test]
+    fn adaptive_bfs_switches_push_pull_push_and_matches_reference() {
+        let g = csr(&chain_clique_chain());
+        let push = run_silent(&algorithms::bfs(), &g, 0);
+        let csc = g.transpose();
+        let deg = g.out_degrees();
+        let view = EngineGraph::with_csc(&g, &csc, Some(&deg));
+        let mut directions = Vec::new();
+        let adaptive = run_adaptive(&algorithms::bfs(), &view, 0, |t| {
+            directions.push(t.direction);
+            Ok(())
+        })
+        .unwrap();
+        assert_same_values(&push, &adaptive, "chain-clique-chain");
+        assert!(adaptive.pull_supersteps > 0, "the dense clique phase must pull");
+        assert!(
+            adaptive.pull_supersteps < adaptive.supersteps,
+            "the sparse chain phases must push"
+        );
+        assert_eq!(directions[0], Direction::Push, "entry chain is sparse");
+        assert_eq!(*directions.last().unwrap(), Direction::Push, "exit chain is sparse");
+        assert!(directions.contains(&Direction::Pull), "clique superstep pulls");
+        assert_eq!(
+            adaptive.pull_supersteps as usize,
+            directions.iter().filter(|d| **d == Direction::Pull).count()
+        );
+    }
+
+    #[test]
+    fn max_depth_lands_inside_a_pull_superstep() {
+        use crate::dsl::params::ParamSet;
+        // depth 12 stops exactly at the superstep that drains the clique
+        // frontier — the dense superstep the heuristic runs in the pull
+        // direction — so the horizon and a pull superstep coincide
+        let g = csr(&chain_clique_chain());
+        let p = algorithms::bfs()
+            .instantiate(&ParamSet::new().bind("max_depth", 12.0))
+            .unwrap();
+        let push = run_silent(&p, &g, 0);
+        let mut last_direction = Direction::Push;
+        let csc = g.transpose();
+        let view = EngineGraph::with_csc(&g, &csc, None);
+        let adaptive = run_with_policy(&p, &view, 0, DirectionPolicy::Adaptive, |t| {
+            last_direction = t.direction;
+            Ok(())
+        })
+        .unwrap();
+        assert_same_values(&push, &adaptive, "depth-capped");
+        assert!(adaptive.converged, "depth horizon is a met condition");
+        assert_eq!(adaptive.supersteps, 12);
+        assert_eq!(last_direction, Direction::Pull, "the horizon superstep pulled");
+        assert_eq!(push.values[30], 12.0, "exit-chain head discovered at the horizon");
+        assert!(push.values[31..].iter().all(|&v| v == -1.0), "beyond-horizon unvisited");
+    }
+
+    #[test]
+    fn empty_graph_is_a_converged_fixpoint_on_every_path() {
+        let el = EdgeList::with_vertices(0);
+        let g = csr(&el);
+        for program in
+            [algorithms::bfs(), algorithms::sssp(), algorithms::wcc(), algorithms::pagerank()]
+        {
+            let push = run(&program, &g, 0, |_| {}).unwrap();
+            assert!(push.converged, "{}", program.name);
+            assert!(push.values.is_empty());
+            let adaptive = run_adaptive_silent(&program, &g, 0, DirectionPolicy::Adaptive);
+            assert!(adaptive.converged, "{}", program.name);
+            assert!(adaptive.values.is_empty());
+        }
+    }
+
+    #[test]
+    fn out_of_range_root_is_an_error_not_a_fake_result() {
+        // Regression: the root guard added for the empty-graph fix must
+        // not turn a bad query into a plausible all-unreachable result.
+        let g = csr(&generate::chain(10));
+        let err = run(&algorithms::bfs(), &g, 99, |_| {}).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let csc = g.transpose();
+        let view = EngineGraph::with_csc(&g, &csc, None);
+        let err = run_adaptive(&algorithms::bfs(), &view, 99, |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // non-rooted programs ignore the root entirely
+        assert!(run(&algorithms::wcc(), &g, 99, |_| {}).is_ok());
+    }
+
+    #[test]
+    fn all_isolated_vertices_finish_in_one_superstep() {
+        let mut el = EdgeList::default();
+        el.num_vertices = 8; // no edges at all
+        let g = csr(&el);
+        let push = run_silent(&algorithms::bfs(), &g, 3);
+        assert_eq!(push.supersteps, 1);
+        assert_eq!(push.edges_traversed, 0);
+        assert_eq!(push.values[3], 0.0);
+        assert!(push.values.iter().enumerate().all(|(i, &v)| i == 3 || v == -1.0));
+        for policy in [DirectionPolicy::Adaptive, DirectionPolicy::ForcePull] {
+            let r = run_adaptive_silent(&algorithms::bfs(), &g, 3, policy);
+            assert_same_values(&push, &r, "isolated");
+        }
+    }
+
+    #[test]
+    fn force_pull_matches_push_for_every_library_algorithm() {
+        // ForcePull exercises the pull kernels even on supersteps the
+        // heuristic would push — the strongest equivalence pin
+        let g = csr(&generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 23));
+        for program in crate::dsl::algorithms::all() {
+            let push = run_silent(&program, &g, 1);
+            for policy in [DirectionPolicy::Adaptive, DirectionPolicy::ForcePull] {
+                let r = run_adaptive_silent(&program, &g, 1, policy);
+                assert_same_values(&push, &r, &format!("{} {policy:?}", program.name));
+            }
+        }
+    }
+
+    #[test]
+    fn pagerank_pull_is_bit_identical_and_allocation_free_shape() {
+        use crate::dsl::params::ParamSet;
+        let g = csr(&generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 31));
+        let p = algorithms::pagerank()
+            .instantiate(&ParamSet::new().bind("damping", 0.85).bind("tolerance", 1e-10))
+            .unwrap();
+        let push = run_silent(&p, &g, 0);
+        let pull = run_adaptive_silent(&p, &g, 0, DirectionPolicy::Adaptive);
+        assert_same_values(&push, &pull, "pagerank");
+        assert_eq!(pull.pull_supersteps, pull.supersteps, "every PR superstep pulls");
+        assert!(push.supersteps > 3, "tolerance tight enough to iterate");
+    }
+
+    #[test]
+    fn adaptive_without_csc_degrades_to_push() {
+        let g = csr(&chain_clique_chain());
+        let view = EngineGraph::push_only(&g);
+        let r = run_with_policy(&algorithms::bfs(), &view, 0, DirectionPolicy::Adaptive, |t| {
+            assert_eq!(t.direction, Direction::Push);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(r.pull_supersteps, 0);
+        let push = run_silent(&algorithms::bfs(), &g, 0);
+        assert_same_values(&push, &r, "no-csc degradation");
     }
 }

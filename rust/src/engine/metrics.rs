@@ -48,6 +48,18 @@ pub struct RunReport {
     pub transfer_seconds: f64,
     pub functional_path: FunctionalPath,
     pub supersteps: u32,
+    /// Supersteps the software oracle ran in the pull (CSC) direction —
+    /// the direction-optimizing engine's per-superstep choices,
+    /// aggregated. The oracle drives the cycle simulator, so these also
+    /// describe the simulated workload (`sim.pull_supersteps` matches).
+    /// 0 on push-only runs. `push_supersteps + pull_supersteps ==
+    /// supersteps` on every path: where the XLA kernel's own superstep
+    /// count diverges from the oracle's (PageRank — f32 accumulation
+    /// shifts the convergence crossing), the run is uniform-direction
+    /// and the split is restated over the reported total.
+    pub pull_supersteps: u32,
+    /// Supersteps the software oracle ran in the push (CSR) direction.
+    pub push_supersteps: u32,
     pub edges_traversed: u64,
 
     // --- Table V metrics
@@ -79,7 +91,7 @@ impl RunReport {
     /// One-line summary for CLI output.
     pub fn summary(&self) -> String {
         format!(
-            "{} [{}] on {} ({}v/{}e): {} supersteps, {:.1} MTEPS simulated, \
+            "{} [{}] on {} ({}v/{}e): {} supersteps ({} pull), {:.1} MTEPS simulated, \
              RT {:.1}s (setup {:.1} = prep {:.2} + compile {:.1} + deploy {:.2}; \
              query {:.4} incl. read-back {:.6}), {} HDL lines{}",
             self.program,
@@ -88,6 +100,7 @@ impl RunReport {
             self.num_vertices,
             self.num_edges,
             self.supersteps,
+            self.pull_supersteps,
             self.simulated_mteps,
             self.rt_seconds,
             self.setup_seconds,
@@ -126,6 +139,8 @@ mod tests {
             transfer_seconds: 0.0001,
             functional_path: FunctionalPath::Software,
             supersteps: 3,
+            pull_supersteps: 1,
+            push_supersteps: 2,
             edges_traversed: 20,
             hdl_lines: 35,
             rt_seconds: 4.1111,

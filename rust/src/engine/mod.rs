@@ -23,6 +23,18 @@
 //! accounting merged deterministically after the join. `run(&mut
 //! self)`/`run_batch` remain as compatibility wrappers over the same core.
 //!
+//! ## Direction-optimizing execution
+//!
+//! The software oracle ([`gas`]) runs each superstep **push** (stream the
+//! frontier's out-edges over the CSR) or **pull** (sweep in-edges over
+//! the CSC cached in [`crate::prep::PreparedGraph`]), chosen per
+//! superstep by the standard frontier-size heuristic over a hybrid
+//! sparse-list/bitmap frontier ([`frontier::Frontier`]). Adaptive
+//! execution is **bit-identical** to the push-only reference in `values`
+//! and `supersteps` (property-tested); the per-superstep choice travels
+//! through the lockstep trace ([`gas::SuperstepTrace::direction`]) into
+//! the simulator and lands in [`metrics::RunReport::pull_supersteps`].
+//!
 //! ## Runtime parameters
 //!
 //! Programs may declare named parameters ([`crate::dsl::params`]); values
@@ -44,6 +56,7 @@
 pub mod bound;
 pub mod compiled;
 pub mod executor;
+pub mod frontier;
 pub mod gas;
 pub mod metrics;
 pub mod session;
@@ -54,7 +67,8 @@ pub use bound::BoundPipeline;
 pub use compiled::{CompiledPipeline, RunOptions};
 #[allow(deprecated)]
 pub use executor::{Executor, ExecutorConfig};
-pub use gas::{GasResult, SuperstepTrace};
+pub use frontier::Frontier;
+pub use gas::{DirectionPolicy, EngineGraph, GasResult, SuperstepTrace};
 pub use metrics::{FunctionalPath, RunReport};
 pub use session::{CompileError, Session, SessionConfig};
 pub use trace::Trace;

@@ -7,6 +7,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::accel::stats::SuperstepSim;
+use crate::dsl::program::Direction;
 
 /// Collects superstep samples during a run.
 #[derive(Debug, Default, Clone)]
@@ -23,11 +24,12 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "superstep,edges,active_vertices,compute,conflict,row_start,\
-             vertex_random,stream,fill_drain,total_cycles,launch_seconds\n",
+             vertex_random,stream,fill_drain,total_cycles,launch_seconds,\
+             direction\n",
         );
         for r in &self.rows {
             out += &format!(
-                "{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.index,
                 r.edges,
                 r.active_vertices,
@@ -39,6 +41,10 @@ impl Trace {
                 r.cycles.fill_drain,
                 r.cycles.total(),
                 r.launch_seconds,
+                match r.direction {
+                    Direction::Push => "push",
+                    Direction::Pull => "pull",
+                },
             );
         }
         out
@@ -53,6 +59,12 @@ impl Trace {
     pub fn frontier_profile(&self) -> Vec<u64> {
         self.rows.iter().map(|r| r.active_vertices).collect()
     }
+
+    /// Direction chosen per superstep (the adaptive engine's push/pull
+    /// trajectory).
+    pub fn direction_profile(&self) -> Vec<Direction> {
+        self.rows.iter().map(|r| r.direction).collect()
+    }
 }
 
 #[cfg(test)]
@@ -65,6 +77,7 @@ mod tests {
             index: i,
             edges,
             active_vertices: edges / 2,
+            direction: if i % 2 == 0 { Direction::Push } else { Direction::Pull },
             cycles: CycleBreakdown { compute: 10 * edges, ..Default::default() },
             launch_seconds: 5e-6,
         }
@@ -78,7 +91,11 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(1).unwrap().starts_with("0,4,2,40,"));
+        assert!(csv.lines().next().unwrap().ends_with(",direction"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",push"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",pull"));
         assert_eq!(t.frontier_profile(), vec![2, 4]);
+        assert_eq!(t.direction_profile(), vec![Direction::Push, Direction::Pull]);
     }
 
     #[test]

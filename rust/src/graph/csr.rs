@@ -68,6 +68,24 @@ impl Csr {
         self.offsets[v as usize + 1] - self.offsets[v as usize]
     }
 
+    /// Degree of every vertex in this orientation (out-degrees on a CSR,
+    /// in-degrees on a CSC) — the flat array the engine's pull heuristic
+    /// and PageRank contribution scaling consume.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices() as VertexId).map(|v| self.degree(v)).collect()
+    }
+
+    /// Each row id repeated once per edge of its row, in row-major order.
+    /// On a CSC this is the pull direction's destination stream
+    /// (ascending runs) — its exact order is load-bearing for the trace
+    /// contract and the simulator's run-compressed reduce model, so every
+    /// consumer derives it through this one helper.
+    pub fn row_run_stream(&self) -> Vec<VertexId> {
+        (0..self.num_vertices() as VertexId)
+            .flat_map(|v| std::iter::repeat(v).take(self.degree(v) as usize))
+            .collect()
+    }
+
     /// Neighbor ids of `v` (the DSL's `Get_dest_V_list` on CSR,
     /// `Get_src_V_list` on CSC).
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
@@ -83,7 +101,10 @@ impl Csr {
 
     /// `(edge_id, neighbor, weight)` triples of `v`'s row — the DSL's
     /// `Get_out_edges_list` return shape.
-    pub fn row_edges(&self, v: VertexId) -> impl Iterator<Item = (EdgeId, VertexId, f32)> + '_ {
+    pub fn row_edges(
+        &self,
+        v: VertexId,
+    ) -> impl Iterator<Item = (EdgeId, VertexId, f32)> + Clone + '_ {
         let (a, b) = self.row_range(v);
         (a..b).map(move |i| (i as EdgeId, self.targets[i], self.weights[i]))
     }
@@ -113,11 +134,23 @@ impl Csr {
         el
     }
 
-    /// Transpose (CSR ↔ CSC).
+    /// Transpose (CSR ↔ CSC): a direct counting-sort build over the edge
+    /// arrays — no intermediate `EdgeList` materialization. Shares
+    /// [`Csr::build`] with the other constructors.
+    ///
+    /// **Ordering contract:** `build`'s scatter is stable in input order,
+    /// and the input here is the CSR stream (row-major), so within each
+    /// transposed row the neighbors appear in CSR-stream order. The pull
+    /// direction of the GAS engine relies on this: per-destination
+    /// reductions over a CSC built by `transpose()` accumulate messages in
+    /// exactly the order the push direction produces them, which is what
+    /// makes pull supersteps **bit-identical** to push even for
+    /// non-associative f32/f64 sums.
     pub fn transpose(&self) -> Csr {
         let n = self.num_vertices();
-        let el = self.to_edgelist();
-        Self::build(n, el.edges.iter().map(|e| (e.dst, e.src, e.weight)))
+        let stream = (0..n as VertexId)
+            .flat_map(|v| self.row_edges(v).map(move |(_, t, w)| (t, v, w)));
+        Self::build(n, stream)
     }
 
     /// Padded COO arrays in the artifact ABI (src, dst, w, real edge count)
@@ -206,6 +239,48 @@ mod tests {
     fn transpose_twice_is_identity() {
         let c = Csr::from_edgelist(&diamond());
         assert_eq!(c.transpose().transpose(), c);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity_on_rmat() {
+        // power-law structure with duplicate edges, self-loops, and
+        // isolated vertices — not just the diamond toy
+        for seed in [3, 17, 99] {
+            let el = crate::graph::generate::rmat(9, 6_000, 0.57, 0.19, 0.19, seed);
+            let c = Csr::from_edgelist(&el);
+            assert_eq!(c.transpose().transpose(), c, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_csc_from_edgelist() {
+        // the direct counting-sort transpose and the EdgeList-based CSC
+        // constructor share `build`; on an edge list already in CSR stream
+        // order (src-major) the two stable scatters see the same input
+        // sequence and must produce identical arrays
+        let el = crate::graph::generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 7).sorted();
+        let csr = Csr::from_edgelist(&el);
+        assert_eq!(csr.transpose(), Csr::csc_from_edgelist(&el));
+    }
+
+    #[test]
+    fn transpose_rows_preserve_csr_stream_order() {
+        // within a CSC row, sources must appear in CSR-stream order (the
+        // stability the pull direction's bit-exactness rests on)
+        let el = crate::graph::generate::rmat(7, 1_500, 0.57, 0.19, 0.19, 5);
+        let csr = Csr::from_edgelist(&el);
+        let csc = csr.transpose();
+        // expected: scan the CSR stream and append each edge's source to
+        // its destination's row
+        let mut expect: Vec<Vec<u32>> = vec![Vec::new(); csr.num_vertices()];
+        for v in 0..csr.num_vertices() as VertexId {
+            for (_, t, _) in csr.row_edges(v) {
+                expect[t as usize].push(v);
+            }
+        }
+        for v in 0..csc.num_vertices() as VertexId {
+            assert_eq!(csc.neighbors(v), &expect[v as usize][..], "row {v}");
+        }
     }
 
     #[test]

@@ -80,8 +80,8 @@ pub mod prelude {
     #[allow(deprecated)]
     pub use crate::engine::{Executor, ExecutorConfig};
     pub use crate::engine::{
-        BoundPipeline, CompileError, CompiledPipeline, FunctionalPath, RunOptions, RunReport,
-        Session, SessionConfig,
+        BoundPipeline, CompileError, CompiledPipeline, DirectionPolicy, FunctionalPath,
+        RunOptions, RunReport, Session, SessionConfig,
     };
     pub use crate::graph::csr::Csr;
     pub use crate::graph::edgelist::EdgeList;

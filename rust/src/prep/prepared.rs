@@ -9,10 +9,12 @@
 //! it to a compiled design; [`PreparedGraph::prepare`] can also be called
 //! directly to share one prepared graph across several pipelines.
 
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::engine::gas::EngineGraph;
 use crate::graph::csr::Csr;
 use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
@@ -67,6 +69,22 @@ pub struct PreparedGraph {
     pub name: String,
     /// The on-device layout (out-edge CSR of the working graph).
     pub csr: Csr,
+    /// The transposed layout (in-edge CSC), built **lazily, once** by the
+    /// stable counting-sort [`Csr::transpose`] on the first pull-capable
+    /// query and shared by every query thereafter (including across
+    /// threads in `run_batch_parallel`). The stability is load-bearing:
+    /// it is what makes pull execution bit-identical to push (see the
+    /// engine docs). Push-only-pinned workloads never pay the transpose
+    /// time or the 2x adjacency memory.
+    csc: OnceLock<Csr>,
+    /// Out-degree of every vertex (`csr.degree(v)`), cached lazily with
+    /// the CSC so PageRank contribution scaling and the push/pull
+    /// frontier heuristic never rebuild it per query.
+    out_deg: OnceLock<Vec<u32>>,
+    /// CSC-order destination stream (`v` repeated in-degree(`v`) times):
+    /// the trace every full-sweep pull superstep streams, cached lazily
+    /// so PageRank queries don't rebuild an O(E) array each.
+    pull_stream: OnceLock<Vec<u32>>,
     /// `(strategy, perm)` with `perm[old] = new` when reordering was
     /// applied. Roots passed to queries address the *reordered* id space,
     /// matching the old executor's semantics.
@@ -102,11 +120,50 @@ impl PreparedGraph {
         Ok(Self {
             name: opts.graph_name.clone(),
             csr,
+            csc: OnceLock::new(),
+            out_deg: OnceLock::new(),
+            pull_stream: OnceLock::new(),
             reorder: reordered.map(|(strategy, _, perm)| (strategy, perm)),
             partitioning,
             avg_edge_gap,
             prep_seconds: t0.elapsed().as_secs_f64(),
         })
+    }
+
+    /// The cached transpose (in-edge CSC), built on first use.
+    pub fn csc(&self) -> &Csr {
+        self.csc.get_or_init(|| self.csr.transpose())
+    }
+
+    /// Cached out-degrees, built on first use.
+    pub fn out_deg(&self) -> &[u32] {
+        self.out_deg.get_or_init(|| self.csr.out_degrees())
+    }
+
+    /// Cached CSC-order destination stream (the full-sweep pull trace),
+    /// built on first use.
+    pub fn pull_stream(&self) -> &[u32] {
+        self.pull_stream.get_or_init(|| self.csc().row_run_stream())
+    }
+
+    /// The engine's view of the cached arrays — what every pull-capable
+    /// query on a binding executes over (CSR + CSC + out-degrees, all
+    /// shared; those lazy caches materialize here). The O(E)
+    /// [`PreparedGraph::pull_stream`] is **not** attached: only
+    /// full-sweep PageRank runs read it, so the query layer chains
+    /// `.with_pull_stream(..)` for exactly those programs. Push-only
+    /// callers should use [`crate::engine::gas::EngineGraph::push_only`]
+    /// instead, which touches none of the caches.
+    pub fn engine_view(&self) -> EngineGraph<'_> {
+        EngineGraph::with_csc(&self.csr, self.csc(), Some(self.out_deg()))
+    }
+
+    /// The CSR edge stream (destination per edge, row-major) — exactly
+    /// the order the accelerator streams `Edges` and the order every
+    /// push-direction trace uses. This **is** `csr.targets`: cached by
+    /// construction, never re-derived per query.
+    pub fn edge_stream(&self) -> &[VertexId] {
+        &self.csr.targets
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -150,6 +207,29 @@ mod tests {
         assert_eq!(part.assignment.len(), g.num_vertices);
         // reordering preserves the edge multiset size
         assert_eq!(p.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn lazy_caches_agree_with_direct_derivation() {
+        let g = generate::rmat(8, 2_500, 0.57, 0.19, 0.19, 13);
+        let p = PreparedGraph::prepare(&g, &PrepOptions::named("rmat")).unwrap();
+        assert_eq!(p.csc(), &p.csr.transpose(), "cached CSC is the stable transpose");
+        assert_eq!(p.out_deg().len(), p.num_vertices());
+        for v in 0..p.num_vertices() as u32 {
+            assert_eq!(p.out_deg()[v as usize], p.csr.degree(v));
+        }
+        assert_eq!(p.edge_stream(), &p.csr.targets[..]);
+        let expect: Vec<u32> = (0..p.num_vertices() as u32)
+            .flat_map(|v| std::iter::repeat(v).take(p.csc().degree(v) as usize))
+            .collect();
+        assert_eq!(p.pull_stream(), &expect[..]);
+        // the engine view exposes the same cached arrays; the O(E) pull
+        // stream stays detached until a PageRank query asks for it
+        let view = p.engine_view();
+        assert_eq!(view.csr.num_edges(), p.num_edges());
+        assert!(view.csc.is_some() && view.out_deg.is_some());
+        assert!(view.pull_dsts.is_none(), "pull stream is opt-in per program");
+        assert!(view.with_pull_stream(p.pull_stream()).pull_dsts.is_some());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::dsl::{algorithms, registry};
-use crate::engine::{RunOptions, Session, SessionConfig};
+use crate::engine::{DirectionPolicy, RunOptions, Session, SessionConfig};
 use crate::graph::edgelist::EdgeList;
 use crate::graph::generate;
 use crate::prep::prepared::PrepOptions;
@@ -141,7 +141,11 @@ pub fn table5(use_xla: bool, small_only: bool) -> Result<(String, Vec<Table5Row>
         let compiled = session.compile_with(Translator::of_kind(kind), &program)?;
         for (name, el) in &graphs {
             let mut bound = compiled.load(el, PrepOptions::named(name.clone()))?;
-            let r = bound.run(&RunOptions::default())?;
+            // Reproduction fidelity: the paper's Table V models the push
+            // schedule, so the table pins PushOnly. Direction-optimized
+            // numbers are tracked in benches/engine_mteps.rs instead.
+            let r = bound
+                .run(&RunOptions::default().with_direction(DirectionPolicy::PushOnly))?;
             rows.push(Table5Row {
                 translator: kind.label(),
                 code_lines: r.hdl_lines,

@@ -123,12 +123,22 @@ fn parallelism_scales_simulated_throughput() {
 
 #[test]
 fn headline_shape_bfs_email_vs_slashdot() {
-    // the larger graph must amortize launches better (paper: 314 -> 409)
+    // the larger graph must amortize launches better (paper: 314 -> 409).
+    // The paper's headline models the push schedule (its BFS streams the
+    // frontier's out-edges), so the reproduction band pins PushOnly; the
+    // direction-optimizing engine traverses far fewer edges per query and
+    // is gated separately in benches/engine_mteps.rs.
+    use jgraph::engine::{DirectionPolicy, RunOptions, Session, SessionConfig};
+    use jgraph::prep::prepared::PrepOptions;
     let program = algorithms::bfs();
-    let design = Translator::jgraph().translate(&program).unwrap();
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let compiled = session.compile(&program).unwrap();
     let small = generate::email_eu_core_like(42);
-    let mut ex = Executor::new(config("email"));
-    let r_small = ex.run(&program, &design, &small).unwrap();
+    let bound = compiled.load(&small, PrepOptions::named("email")).unwrap();
+    let r_small = bound
+        .query(&RunOptions::default().with_direction(DirectionPolicy::PushOnly))
+        .unwrap();
+    assert_eq!(r_small.pull_supersteps, 0, "push-only pin must hold");
     assert!(
         r_small.simulated_mteps > 150.0 && r_small.simulated_mteps < 900.0,
         "email BFS: {} MTEPS out of plausible band",

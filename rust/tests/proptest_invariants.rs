@@ -7,7 +7,9 @@
 use jgraph::accel::device::DeviceModel;
 use jgraph::accel::simulator::{AccelSimulator, EdgeBatch};
 use jgraph::dsl::algorithms;
+use jgraph::dsl::program::Direction;
 use jgraph::engine::gas;
+use jgraph::engine::gas::{DirectionPolicy, EngineGraph};
 use jgraph::graph::csr::Csr;
 use jgraph::graph::edgelist::EdgeList;
 use jgraph::graph::{generate, SplitMix64};
@@ -216,6 +218,7 @@ fn prop_simulator_cycles_monotone_in_work_and_antitone_in_lanes() {
                 active_rows: n_dst as u64,
                 bytes_per_edge: 8,
                 avg_edge_gap: 50.0,
+                direction: Direction::Push,
             });
             sim.finish().cycles.total()
         };
@@ -350,6 +353,66 @@ fn prop_isa_dynamic_count_consistent_with_oracle_trace() {
         acc += isa_prog.per_edge as u64 * total_edges;
         assert_eq!(dyn_count, acc, "seed {seed}");
         assert!(dyn_count > 0, "seed {seed}");
+    });
+}
+
+/// The PR 5 tentpole pin: direction-optimized execution is **value- and
+/// superstep-identical** to the push-only reference — bitwise on the f64
+/// values — across random graphs, algorithms, and roots. Both the
+/// heuristic (`Adaptive`) and the always-pull stress mode (`ForcePull`,
+/// which exercises the pull kernels even on sparse frontiers) are pinned.
+#[test]
+fn prop_adaptive_execution_identical_to_push_only() {
+    // 104 random graphs overall (the acceptance floor is 100), cycling a
+    // mix of Active- and All-frontier programs, rooted and not, weighted
+    // and not, Min/Max/Sum reductions.
+    cases(104, |seed, rng| {
+        let g = random_graph(rng, 220, 2_600);
+        let csr = Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let out_deg = csr.out_degrees();
+        let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        let programs = [
+            algorithms::bfs(),
+            algorithms::sssp(),
+            algorithms::wcc(),
+            algorithms::spmv(),
+            // loose tolerance keeps the 312-run sweep fast; the equality
+            // must hold at any tolerance since every iterate is pinned
+            algorithms::pagerank()
+                .instantiate(&jgraph::dsl::params::ParamSet::new().bind("tolerance", 1e-3))
+                .unwrap(),
+            algorithms::reachability(),
+            algorithms::widest_path(),
+        ];
+        for program in &programs {
+            let push = gas::run(program, &csr, root, |_| {}).unwrap();
+            for policy in [DirectionPolicy::Adaptive, DirectionPolicy::ForcePull] {
+                let got =
+                    gas::run_with_policy(program, &view, root, policy, |_| Ok(())).unwrap();
+                assert_eq!(
+                    got.supersteps, push.supersteps,
+                    "seed {seed} {} {policy:?}: supersteps",
+                    program.name
+                );
+                assert_eq!(
+                    got.converged, push.converged,
+                    "seed {seed} {} {policy:?}: converged",
+                    program.name
+                );
+                for v in 0..csr.num_vertices() {
+                    assert_eq!(
+                        got.values[v].to_bits(),
+                        push.values[v].to_bits(),
+                        "seed {seed} {} {policy:?} vertex {v}: {} vs {}",
+                        program.name,
+                        got.values[v],
+                        push.values[v]
+                    );
+                }
+            }
+        }
     });
 }
 
