@@ -86,6 +86,10 @@ impl AccelSimulator {
         // and commits **one** banked write per run segment — so only
         // distinct-destination writes inside a window can collide.
         let mut issue: u64 = 0;
+        // Pull supersteps commit one vertex write per destination *run*
+        // (the CSC-order sequential writeback), not one per edge; the run
+        // count feeds the uncached-vertex memory model below.
+        let mut pull_runs: u64 = 0;
         match batch.direction {
             Direction::Push => {
                 for window in batch.dsts.chunks(lanes) {
@@ -102,6 +106,7 @@ impl AccelSimulator {
                             prev = Some(d);
                         }
                     }
+                    pull_runs += self.run_scratch.len() as u64;
                     issue += self.banks.window_cycles(&self.run_scratch, ii) as u64;
                 }
             }
@@ -119,9 +124,17 @@ impl AccelSimulator {
         cycles.row_start = memctrl::row_start_cycles(&self.device, batch.active_rows, locality);
 
         if !self.pipeline.bram_vertex_cache {
-            // gather read + writeback per edge hit DRAM directly
+            // Uncached vertex state hits DRAM directly. The gather read
+            // side is one access per edge either way; the writeback side
+            // is direction-dependent: push scatters one random write per
+            // edge, while pull's per-destination accumulator commits one
+            // sequential write per run of equal destinations.
+            let accesses = match batch.direction {
+                Direction::Push => 2 * edges,
+                Direction::Pull => edges + pull_runs,
+            };
             cycles.vertex_random =
-                memctrl::vertex_random_cycles(&self.device, 2 * edges, VERTEX_MSHRS);
+                memctrl::vertex_random_cycles(&self.device, accesses, VERTEX_MSHRS);
         }
 
         cycles.fill_drain = self.pipeline.depth as u64;
@@ -278,6 +291,38 @@ mod tests {
         assert_eq!(a.stats().pull_supersteps, 0);
         assert_eq!(b.stats().pull_supersteps, 1);
         assert_eq!(b.stats().supersteps, 1);
+    }
+
+    #[test]
+    fn pull_writeback_is_sequential_per_run_not_per_edge() {
+        // Uncached flows (Vivado-HLS-like) pay DRAM for vertex traffic.
+        // Pull's accumulator commits one write per destination run, so on
+        // the same multiset of destinations the pull superstep must cost
+        // fewer random vertex cycles than the push superstep's
+        // write-per-edge scatter.
+        let mut rng = crate::graph::SplitMix64::new(17);
+        let mut dsts: Vec<u32> =
+            (0..60_000).map(|_| rng.next_below(2_000) as u32).collect();
+        dsts.sort_unstable(); // CSC order: long same-destination runs
+        let mk = |direction| EdgeBatch {
+            dsts: &dsts,
+            active_rows: 2_000,
+            bytes_per_edge: 8,
+            avg_edge_gap: 100.0,
+            direction,
+        };
+        let mut push = sim(TranslatorKind::VivadoHls, ParallelismPlan::default());
+        push.superstep(&mk(Direction::Push));
+        let mut pull = sim(TranslatorKind::VivadoHls, ParallelismPlan::default());
+        pull.superstep(&mk(Direction::Pull));
+        let pv = pull.stats().cycles.vertex_random;
+        let sv = push.stats().cycles.vertex_random;
+        assert!(pv < sv, "pull {pv} !< push {sv}");
+        // the BRAM-cached flow never touches DRAM for vertices, so its
+        // reports are untouched by the direction-dependent model
+        let mut cached = sim(TranslatorKind::JGraph, ParallelismPlan::default());
+        cached.superstep(&mk(Direction::Pull));
+        assert_eq!(cached.stats().cycles.vertex_random, 0);
     }
 
     #[test]

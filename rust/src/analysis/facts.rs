@@ -1,0 +1,407 @@
+//! [`ProgramFacts`] — the algebraic facts the static analyzer derives from
+//! a [`GasProgram`]. Everything downstream consumers used to hard-code at
+//! scattered sites (pull early-exit legality, damped-iteration dispatch,
+//! conflict-unit need, argument-register liveness) is derived here once
+//! and read everywhere:
+//!
+//! * the **engine** dispatches on [`ProgramFacts::damped_iteration`] and
+//!   gates pull early-exit on [`ProgramFacts::pull_early_exit`];
+//! * the **translator** elides the reduce conflict-resolution unit when
+//!   the reduce is idempotent and narrows the argument register file to
+//!   [`ProgramFacts::datapath_params`];
+//! * the **lint engine** ([`super::lint`]) turns impossible combinations
+//!   into stable `JG***` diagnostics;
+//! * [`crate::engine::CompiledPipeline`] carries the
+//!   [`ParallelSafety`] certificate future sharded execution must check.
+
+use crate::dsl::apply::CompiledApply;
+use crate::dsl::params::Scalar;
+use crate::dsl::program::{Convergence, GasProgram, ReduceOp, StateType, Writeback};
+
+/// Direction of monotone state evolution under a reduce operator: applying
+/// the operator can only move a value this way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Monotonicity {
+    /// `op(a, b) <= min(a, b)` — values only shrink (Min).
+    Decreasing,
+    /// `op(a, b) >= max(a, b)` — values only grow (Max).
+    Increasing,
+    /// Neither bound holds (Sum).
+    NonMonotone,
+}
+
+/// The algebraic profile of a [`ReduceOp`] over the program's state type.
+/// These flags are what correctness arguments actually rest on: pull
+/// early-exit needs idempotence, parallel bit-exactness needs
+/// associativity, and any parallel scatter at all needs commutativity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceAlgebra {
+    /// `op(a, a) == a`: re-delivering a message cannot change the result.
+    pub idempotent: bool,
+    /// `op(a, b) == op(b, a)`: message arrival order within one reduction
+    /// is free.
+    pub commutative: bool,
+    /// `op(op(a, b), c) == op(a, op(b, c))` **bit-exactly** for the
+    /// program's state type. Float summation fails this (rounding depends
+    /// on grouping); integer and min/max reductions hold it.
+    pub associative: bool,
+    pub monotonicity: Monotonicity,
+}
+
+impl ReduceAlgebra {
+    /// The algebra of `op` over `state`. Associativity is judged at the
+    /// bit-exact level the engine's push/pull identity pin demands, so
+    /// `Sum` over F32 is *not* associative.
+    pub fn of(op: ReduceOp, state: StateType) -> Self {
+        match op {
+            ReduceOp::Min => ReduceAlgebra {
+                idempotent: true,
+                commutative: true,
+                associative: true,
+                monotonicity: Monotonicity::Decreasing,
+            },
+            ReduceOp::Max => ReduceAlgebra {
+                idempotent: true,
+                commutative: true,
+                associative: true,
+                monotonicity: Monotonicity::Increasing,
+            },
+            ReduceOp::Sum => ReduceAlgebra {
+                idempotent: false,
+                commutative: true,
+                associative: state == StateType::I32,
+                monotonicity: Monotonicity::NonMonotone,
+            },
+        }
+    }
+
+    /// One-word rendering for reports (`translate --emit stats`).
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.idempotent {
+            parts.push("idempotent");
+        }
+        if self.commutative {
+            parts.push("commutative");
+        }
+        if self.associative {
+            parts.push("associative");
+        }
+        let mono = match self.monotonicity {
+            Monotonicity::Decreasing => "monotone-decreasing",
+            Monotonicity::Increasing => "monotone-increasing",
+            Monotonicity::NonMonotone => "non-monotone",
+        };
+        parts.push(mono);
+        parts.join(", ")
+    }
+}
+
+/// How a program terminates — with the previously-hidden internal
+/// iteration bound of the delta path surfaced as a fact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvergenceClass {
+    /// Frontier/fixpoint detection (`EmptyFrontier` / `NoChange`): bounded
+    /// by the graph diameter, at most `V` supersteps.
+    FixpointByDepth,
+    /// Exactly this many supersteps (SpMV's single sweep).
+    FixedIterations(u32),
+    /// Contraction mapping driven by an L1-delta threshold (PageRank).
+    /// `iteration_bound` is the scheduler's safety net: hitting it without
+    /// meeting the delta condition is an **error**, never a silent
+    /// truncation (see
+    /// [`crate::dsl::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND`]).
+    ContractionByDelta { iteration_bound: u32 },
+}
+
+impl ConvergenceClass {
+    pub fn describe(&self) -> String {
+        match self {
+            ConvergenceClass::FixpointByDepth => "fixpoint-by-depth".into(),
+            ConvergenceClass::FixedIterations(k) => format!("fixed-iterations({k})"),
+            ConvergenceClass::ContractionByDelta { iteration_bound } => {
+                format!("contraction-by-delta(bound {iteration_bound})")
+            }
+        }
+    }
+}
+
+/// A closed interval over the values a [`Scalar`] can take at query time:
+/// a literal is a point, a parameter reference spans its declared range,
+/// and an undeclared reference (a deny lint of its own) spans everything.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub const FULL: Interval = Interval { lo: f64::NEG_INFINITY, hi: f64::INFINITY };
+
+    pub fn point(v: f64) -> Self {
+        Interval { lo: v, hi: v }
+    }
+
+    /// The interval a scalar can bind to under `p`'s declared signature.
+    pub fn of_scalar(s: &Scalar, p: &GasProgram) -> Interval {
+        match s {
+            Scalar::Lit(v) => Interval::point(*v),
+            Scalar::Param(name) => match p.params.get(name) {
+                Some(spec) => Interval {
+                    lo: spec.min.unwrap_or(f64::NEG_INFINITY),
+                    hi: spec.max.unwrap_or(f64::INFINITY),
+                },
+                None => Interval::FULL,
+            },
+        }
+    }
+
+    pub fn render(&self) -> String {
+        if self.lo == self.hi {
+            format!("{}", self.lo)
+        } else {
+            format!("[{}, {}]", self.lo, self.hi)
+        }
+    }
+}
+
+/// The parallel-execution certificate stamped on every
+/// [`crate::engine::CompiledPipeline`]. Future sharded/threaded execution
+/// must check it before reordering scatter writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelSafety {
+    /// Any scatter order produces bit-identical results (idempotent +
+    /// commutative + associative reduce): shard freely.
+    BitExact,
+    /// Results are order-dependent at the ULP level (float summation):
+    /// parallel execution needs a fixed reduction order to stay
+    /// reproducible.
+    OrderSensitive,
+    /// Concurrent writebacks race (a non-reducible writeback such as a
+    /// visited-gate over a non-idempotent accumulator): parallel scatter
+    /// is a data race, not merely a reordering.
+    Racy,
+}
+
+impl ParallelSafety {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            ParallelSafety::BitExact => "bit-exact",
+            ParallelSafety::OrderSensitive => "order-sensitive",
+            ParallelSafety::Racy => "racy",
+        }
+    }
+}
+
+/// Everything the analyzer can prove about one program. Derived by
+/// [`analyze`]; immutable; cheap to clone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramFacts {
+    /// Algebra of the declared reduce over the declared state type.
+    pub reduce: ReduceAlgebra,
+    /// Termination class with the internal iteration bound surfaced.
+    pub convergence: ConvergenceClass,
+    /// The parallel-scatter certificate.
+    pub parallel_safety: ParallelSafety,
+    /// May a pull superstep stop scanning a destination's in-edges at the
+    /// first frontier neighbor? Legal iff the message is constant within a
+    /// superstep, the writeback is a visited-gate, and the reduce is
+    /// idempotent-monotone — any one frontier message equals their
+    /// reduction.
+    pub pull_early_exit: bool,
+    /// Does this program run the damped (PageRank-shaped) engine
+    /// iteration? Driven by the writeback shape, never by the `kind` tag.
+    pub damped_iteration: bool,
+    /// Value interval of the damping factor, when the writeback is damped.
+    pub damping: Option<Interval>,
+    /// Value interval of the depth limit, when one is declared.
+    pub depth_interval: Option<Interval>,
+    /// Declared parameters the **datapath** consumes (Apply operands and
+    /// the damped writeback's factor): these need argument registers.
+    pub datapath_params: Vec<String>,
+    /// Declared parameters only the **host loop** reads (convergence
+    /// threshold, depth horizon, init values): no datapath register.
+    pub host_params: Vec<String>,
+    /// Declared parameters nothing references.
+    pub unused_params: Vec<String>,
+}
+
+impl ProgramFacts {
+    /// Does the lowered reduce stage need a conflict-resolution unit in
+    /// front of the banked accumulator? Idempotent reduces tolerate
+    /// same-bank replays, so the unit is elided.
+    pub fn needs_conflict_unit(&self) -> bool {
+        !self.reduce.idempotent
+    }
+}
+
+/// Derive the full fact record for a program. Pure structural analysis —
+/// no graph, no bindings; parameter references are judged by their
+/// declared intervals.
+pub fn analyze(p: &GasProgram) -> ProgramFacts {
+    let reduce = ReduceAlgebra::of(p.reduce, p.state);
+
+    let convergence = match &p.convergence {
+        Convergence::FixedIterations(k) => ConvergenceClass::FixedIterations(*k),
+        Convergence::DeltaBelow(_) => {
+            ConvergenceClass::ContractionByDelta { iteration_bound: p.delta_bound() }
+        }
+        Convergence::EmptyFrontier | Convergence::NoChange => ConvergenceClass::FixpointByDepth,
+    };
+
+    // Scatter-race check: every concurrent write to a destination must
+    // flow through the declared reduce. A visited-gate over a
+    // non-idempotent accumulator double-counts on replay — a data race,
+    // not a reordering. (A non-commutative reduce would race too; none of
+    // the current operators is, but the derivation keeps the condition.)
+    let parallel_safety = if !reduce.commutative
+        || (p.writeback == Writeback::IfUnvisited && !reduce.idempotent)
+    {
+        ParallelSafety::Racy
+    } else if !reduce.associative {
+        ParallelSafety::OrderSensitive
+    } else {
+        ParallelSafety::BitExact
+    };
+
+    // Pull early-exit: with a per-superstep-constant message, a
+    // visited-gate writeback and an idempotent-monotone reduce, the first
+    // frontier in-neighbor's message already equals the reduction of all
+    // of them — the scan may stop. (Property-tested equivalent to the
+    // engine's previous `ConstPerIter && IfUnvisited && reduce != Sum`.)
+    let pull_early_exit = CompiledApply::compile(&p.apply) == CompiledApply::ConstPerIter
+        && p.writeback == Writeback::IfUnvisited
+        && reduce.idempotent
+        && reduce.monotonicity != Monotonicity::NonMonotone;
+
+    let damped_iteration = matches!(p.writeback, Writeback::DampedSum(_));
+    let damping = match &p.writeback {
+        Writeback::DampedSum(d) => Some(Interval::of_scalar(d, p)),
+        _ => None,
+    };
+    let depth_interval = p.depth_limit.as_ref().map(|s| Interval::of_scalar(s, p));
+
+    // Parameter liveness: datapath operands (Apply terms, the damped
+    // factor the writer consumes) vs host-loop scalars (thresholds,
+    // horizons, init values) vs declared-but-unreferenced.
+    let mut datapath: Vec<&str> = Vec::new();
+    p.apply.param_names(&mut datapath);
+    if let Writeback::DampedSum(Scalar::Param(name)) = &p.writeback {
+        datapath.push(name);
+    }
+    let referenced = p.param_refs();
+    let mut datapath_params = Vec::new();
+    let mut host_params = Vec::new();
+    let mut unused_params = Vec::new();
+    for spec in p.params.iter() {
+        let name = spec.name.as_str();
+        if datapath.contains(&name) {
+            datapath_params.push(name.to_string());
+        } else if referenced.contains(&name) {
+            host_params.push(name.to_string());
+        } else {
+            unused_params.push(name.to_string());
+        }
+    }
+
+    ProgramFacts {
+        reduce,
+        convergence,
+        parallel_safety,
+        pull_early_exit,
+        damped_iteration,
+        damping,
+        depth_interval,
+        datapath_params,
+        host_params,
+        unused_params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+    use crate::dsl::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND;
+
+    #[test]
+    fn reduce_algebra_table() {
+        let min = ReduceAlgebra::of(ReduceOp::Min, StateType::I32);
+        assert!(min.idempotent && min.commutative && min.associative);
+        assert_eq!(min.monotonicity, Monotonicity::Decreasing);
+        let max = ReduceAlgebra::of(ReduceOp::Max, StateType::F32);
+        assert!(max.idempotent && max.associative);
+        assert_eq!(max.monotonicity, Monotonicity::Increasing);
+        // float summation is commutative but not bit-exactly associative
+        let fsum = ReduceAlgebra::of(ReduceOp::Sum, StateType::F32);
+        assert!(!fsum.idempotent && fsum.commutative && !fsum.associative);
+        let isum = ReduceAlgebra::of(ReduceOp::Sum, StateType::I32);
+        assert!(isum.associative, "integer addition is associative");
+    }
+
+    #[test]
+    fn library_certificates() {
+        // traversals: idempotent min/max reduces shard bit-exactly
+        for p in [algorithms::bfs(), algorithms::sssp(), algorithms::wcc()] {
+            let f = analyze(&p);
+            assert_eq!(f.parallel_safety, ParallelSafety::BitExact, "{}", p.name);
+            assert!(!f.needs_conflict_unit(), "{}", p.name);
+        }
+        // float sums are order-sensitive and keep the conflict unit
+        for p in [algorithms::pagerank(), algorithms::spmv()] {
+            let f = analyze(&p);
+            assert_eq!(f.parallel_safety, ParallelSafety::OrderSensitive, "{}", p.name);
+            assert!(f.needs_conflict_unit(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn pull_early_exit_only_for_visited_gate_traversals() {
+        assert!(analyze(&algorithms::bfs()).pull_early_exit);
+        assert!(analyze(&algorithms::reachability()).pull_early_exit);
+        for p in [
+            algorithms::sssp(),
+            algorithms::wcc(),
+            algorithms::pagerank(),
+            algorithms::spmv(),
+            algorithms::widest_path(),
+        ] {
+            assert!(!analyze(&p).pull_early_exit, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn convergence_class_surfaces_internal_bound() {
+        let f = analyze(&algorithms::pagerank());
+        assert_eq!(
+            f.convergence,
+            ConvergenceClass::ContractionByDelta {
+                iteration_bound: DELTA_CONVERGENCE_SUPERSTEP_BOUND
+            }
+        );
+        assert!(f.damped_iteration);
+        assert_eq!(analyze(&algorithms::spmv()).convergence, ConvergenceClass::FixedIterations(1));
+        assert_eq!(analyze(&algorithms::bfs()).convergence, ConvergenceClass::FixpointByDepth);
+    }
+
+    #[test]
+    fn damping_interval_comes_from_declared_range() {
+        let f = analyze(&algorithms::pagerank());
+        assert_eq!(f.damping, Some(Interval { lo: 0.0, hi: 1.0 }));
+        assert!(analyze(&algorithms::bfs()).damping.is_none());
+    }
+
+    #[test]
+    fn parameter_liveness_split() {
+        // pagerank: damping feeds the writer (datapath), tolerance only
+        // the host convergence loop
+        let f = analyze(&algorithms::pagerank());
+        assert_eq!(f.datapath_params, vec!["damping"]);
+        assert_eq!(f.host_params, vec!["tolerance"]);
+        assert!(f.unused_params.is_empty());
+        // bfs: max_depth is a host-side horizon — no datapath register
+        let f = analyze(&algorithms::bfs());
+        assert!(f.datapath_params.is_empty());
+        assert_eq!(f.host_params, vec!["max_depth"]);
+    }
+}

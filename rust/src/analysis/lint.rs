@@ -1,0 +1,680 @@
+//! The clippy-style lint engine over [`GasProgram`]s: every diagnostic
+//! carries a stable `JG***` code, a deny/warn level, and a message naming
+//! the *user's* interface (Reduce, Writeback::DampedSum, depth_limit, …)
+//! rather than translator internals.
+//!
+//! Deny-level lints are programs that cannot execute correctly — they are
+//! what [`crate::dsl::validate::check`] (and therefore every compile path)
+//! rejects, and they are **not suppressible**. Warn-level lints flag
+//! legal-but-noteworthy shapes (order-sensitive float sums, unused
+//! parameters) and can be silenced per program with
+//! [`GasProgramBuilder::allow`].
+//!
+//! The full catalog with rationale lives in the [module docs of
+//! `analysis`](super). Run it from the CLI: `jgraph lint [--emit json]`.
+//!
+//! [`GasProgramBuilder::allow`]: crate::dsl::builder::GasProgramBuilder::allow
+
+use crate::dsl::apply::{ApplyExpr, BinOp};
+use crate::dsl::program::{Convergence, GasProgram, InitPolicy, ReduceOp, StateType, Writeback};
+
+use super::facts::{analyze, Interval};
+
+/// Severity of a diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintLevel {
+    /// The program cannot execute correctly; compilation rejects it.
+    /// Never suppressible.
+    Deny,
+    /// Legal but noteworthy; suppressible via `GasProgramBuilder::allow`.
+    Warn,
+}
+
+/// Stable lint codes. The numeric ranges are part of the contract:
+/// `JG0**` = deny, `JG1**` = warn. Codes are never reused or renumbered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LintCode {
+    /// `Reduce(Sum)` driving `Writeback::IfUnvisited` double-counts.
+    Jg001SumGatesVisited,
+    /// `Writeback::DampedSum` without `Reduce(Sum)`.
+    Jg002DampedNeedsSumReduce,
+    /// `Writeback::DampedSum` over I32 state.
+    Jg003DampedNeedsF32,
+    /// `Writeback::DampedSum` combined with a `depth_limit`.
+    Jg004DampedWithDepthLimit,
+    /// A structural reference to a parameter the signature never declares.
+    Jg005UndeclaredParam,
+    /// A declared default outside the parameter's own range.
+    Jg006DefaultOutsideRange,
+    /// A `depth_limit` that is below one superstep for every allowed
+    /// binding.
+    Jg007DepthLimitNeverRuns,
+    /// Division in the Apply expression over I32 state.
+    Jg008IntDivision,
+    /// `Convergence::DeltaBelow` over I32 state.
+    Jg009DeltaNeedsF32,
+    /// An infinite init default with I32 state.
+    Jg010InfiniteIntInit,
+    /// `Convergence::FixedIterations(0)`.
+    Jg011ZeroIterations,
+    /// A damping factor that is `>= 1` for every allowed binding: the
+    /// damped iteration is statically divergent.
+    Jg012DivergentDamping,
+    /// A declared parameter nothing references.
+    Jg101UnusedParam,
+    /// `Reduce(Sum)` over F32 state: parallel execution is
+    /// order-sensitive, not bit-exact.
+    Jg102FloatSumOrderSensitive,
+    /// A damping range that *admits* divergent (`> 1`) bindings.
+    Jg103DampingRangeAdmitsDivergent,
+    /// `EdgeOpKind::Pr` tag on a program whose writeback is not damped:
+    /// dispatch follows the writeback shape, so the tag is misleading.
+    Jg104PrKindNotDamped,
+}
+
+impl LintCode {
+    /// The stable code string (`"JG001"`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            LintCode::Jg001SumGatesVisited => "JG001",
+            LintCode::Jg002DampedNeedsSumReduce => "JG002",
+            LintCode::Jg003DampedNeedsF32 => "JG003",
+            LintCode::Jg004DampedWithDepthLimit => "JG004",
+            LintCode::Jg005UndeclaredParam => "JG005",
+            LintCode::Jg006DefaultOutsideRange => "JG006",
+            LintCode::Jg007DepthLimitNeverRuns => "JG007",
+            LintCode::Jg008IntDivision => "JG008",
+            LintCode::Jg009DeltaNeedsF32 => "JG009",
+            LintCode::Jg010InfiniteIntInit => "JG010",
+            LintCode::Jg011ZeroIterations => "JG011",
+            LintCode::Jg012DivergentDamping => "JG012",
+            LintCode::Jg101UnusedParam => "JG101",
+            LintCode::Jg102FloatSumOrderSensitive => "JG102",
+            LintCode::Jg103DampingRangeAdmitsDivergent => "JG103",
+            LintCode::Jg104PrKindNotDamped => "JG104",
+        }
+    }
+
+    pub fn level(&self) -> LintLevel {
+        if self.code().as_bytes()[2] == b'0' {
+            LintLevel::Deny
+        } else {
+            LintLevel::Warn
+        }
+    }
+
+    /// One-line summary for the catalog and `jgraph lint` listings.
+    pub fn summary(&self) -> &'static str {
+        match self {
+            LintCode::Jg001SumGatesVisited => {
+                "Reduce(Sum) cannot drive Writeback::IfUnvisited (not idempotent)"
+            }
+            LintCode::Jg002DampedNeedsSumReduce => "Writeback::DampedSum requires Reduce(Sum)",
+            LintCode::Jg003DampedNeedsF32 => "Writeback::DampedSum requires F32 state",
+            LintCode::Jg004DampedWithDepthLimit => {
+                "Writeback::DampedSum cannot combine with a depth_limit"
+            }
+            LintCode::Jg005UndeclaredParam => "reference to an undeclared runtime parameter",
+            LintCode::Jg006DefaultOutsideRange => "parameter default outside its declared range",
+            LintCode::Jg007DepthLimitNeverRuns => "depth_limit below one superstep",
+            LintCode::Jg008IntDivision => "Apply divides but the I32 datapath has no divider",
+            LintCode::Jg009DeltaNeedsF32 => "Convergence::DeltaBelow requires F32 state",
+            LintCode::Jg010InfiniteIntInit => "infinite init default with I32 state",
+            LintCode::Jg011ZeroIterations => "FixedIterations(0) never runs",
+            LintCode::Jg012DivergentDamping => "damping >= 1 for every binding (divergent)",
+            LintCode::Jg101UnusedParam => "declared parameter is never referenced",
+            LintCode::Jg102FloatSumOrderSensitive => {
+                "float Sum reduce: parallel execution is order-sensitive"
+            }
+            LintCode::Jg103DampingRangeAdmitsDivergent => {
+                "damping range admits divergent (> 1) bindings"
+            }
+            LintCode::Jg104PrKindNotDamped => {
+                "EdgeOpKind::Pr tag on a non-damped writeback (generic dispatch)"
+            }
+        }
+    }
+
+    /// Every code, catalog order.
+    pub fn all() -> [LintCode; 16] {
+        [
+            LintCode::Jg001SumGatesVisited,
+            LintCode::Jg002DampedNeedsSumReduce,
+            LintCode::Jg003DampedNeedsF32,
+            LintCode::Jg004DampedWithDepthLimit,
+            LintCode::Jg005UndeclaredParam,
+            LintCode::Jg006DefaultOutsideRange,
+            LintCode::Jg007DepthLimitNeverRuns,
+            LintCode::Jg008IntDivision,
+            LintCode::Jg009DeltaNeedsF32,
+            LintCode::Jg010InfiniteIntInit,
+            LintCode::Jg011ZeroIterations,
+            LintCode::Jg012DivergentDamping,
+            LintCode::Jg101UnusedParam,
+            LintCode::Jg102FloatSumOrderSensitive,
+            LintCode::Jg103DampingRangeAdmitsDivergent,
+            LintCode::Jg104PrKindNotDamped,
+        ]
+    }
+}
+
+/// One diagnostic: a code, its level, the user-facing interface it is
+/// anchored to, and a full message (which always ends with the `[JG***]`
+/// code so log greps stay stable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: LintCode,
+    pub level: LintLevel,
+    /// The DSL interface the finding is anchored to (the "span").
+    pub interface: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(code: LintCode, interface: &'static str, message: String) -> Self {
+        let message = format!("{message} [{}]", code.code());
+        Diagnostic { code, level: code.level(), interface, message }
+    }
+}
+
+/// Run every lint over a program. Deny diagnostics come first, in the
+/// stable catalog order compilation error messages rely on; warn
+/// diagnostics follow, with the program's
+/// [`allowed_lints`](GasProgram::allowed_lints) suppressed (deny lints
+/// ignore the allow list).
+pub fn lint(p: &GasProgram) -> Vec<Diagnostic> {
+    let facts = analyze(p);
+    let mut out = Vec::new();
+
+    // --- deny lints, in the order the legacy validator checked them
+    if p.reduce == ReduceOp::Sum && p.writeback == Writeback::IfUnvisited {
+        out.push(Diagnostic::new(
+            LintCode::Jg001SumGatesVisited,
+            "Reduce",
+            format!(
+                "program {:?}: Reduce(Sum) cannot drive Writeback::IfUnvisited — \
+                 accumulated sums are not idempotent across supersteps",
+                p.name
+            ),
+        ));
+    }
+
+    if let Writeback::DampedSum(_) = &p.writeback {
+        if p.reduce != ReduceOp::Sum {
+            out.push(Diagnostic::new(
+                LintCode::Jg002DampedNeedsSumReduce,
+                "Writeback::DampedSum",
+                format!(
+                    "program {:?}: Writeback::DampedSum requires Reduce(Sum) — \
+                     damping redistributes summed rank mass",
+                    p.name
+                ),
+            ));
+        }
+        if p.state == StateType::I32 {
+            out.push(Diagnostic::new(
+                LintCode::Jg003DampedNeedsF32,
+                "Writeback::DampedSum",
+                format!("program {:?}: Writeback::DampedSum requires F32 state", p.name),
+            ));
+        }
+        if p.depth_limit.is_some() {
+            out.push(Diagnostic::new(
+                LintCode::Jg004DampedWithDepthLimit,
+                "Writeback::DampedSum",
+                format!(
+                    "program {:?}: Writeback::DampedSum cannot combine with a \
+                     depth_limit — damped iteration converges on delta, not depth",
+                    p.name
+                ),
+            ));
+        }
+    }
+
+    for name in p.param_refs() {
+        if p.params.get(name).is_none() {
+            out.push(Diagnostic::new(
+                LintCode::Jg005UndeclaredParam,
+                "GasProgramBuilder::param",
+                format!(
+                    "program {:?}: references undeclared parameter {:?} — declare \
+                     it with GasProgramBuilder::param (declared: {})",
+                    p.name,
+                    name,
+                    if p.params.is_empty() {
+                        "none".to_string()
+                    } else {
+                        p.params.names().join(", ")
+                    }
+                ),
+            ));
+        }
+    }
+
+    for spec in p.params.iter() {
+        if let Some(default) = spec.default {
+            let lo = spec.min.unwrap_or(f64::NEG_INFINITY);
+            let hi = spec.max.unwrap_or(f64::INFINITY);
+            if default < lo || default > hi {
+                out.push(Diagnostic::new(
+                    LintCode::Jg006DefaultOutsideRange,
+                    "ParamSpec",
+                    format!(
+                        "program {:?}: parameter {:?} default {} outside its own \
+                         range [{}, {}]",
+                        p.name, spec.name, default, lo, hi
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Interval analysis over the depth horizon: a limit whose *entire*
+    // allowed range sits below one superstep can never run — for a
+    // literal this is the legacy check, for a parameter it rejects the
+    // declaration whose every binding is impossible.
+    if let (Some(limit), Some(iv)) = (&p.depth_limit, facts.depth_interval) {
+        if iv.hi < 1.0 {
+            out.push(Diagnostic::new(
+                LintCode::Jg007DepthLimitNeverRuns,
+                "depth_limit",
+                format!(
+                    "program {:?}: depth_limit {} would never run a superstep",
+                    p.name,
+                    limit.render()
+                ),
+            ));
+        }
+    }
+
+    if p.state == StateType::I32 && expr_has_div(&p.apply) {
+        out.push(Diagnostic::new(
+            LintCode::Jg008IntDivision,
+            "Apply",
+            format!(
+                "program {:?}: Apply uses division but state is I32 — the integer \
+                 datapath has no divider; use F32 state",
+                p.name
+            ),
+        ));
+    }
+
+    if matches!(p.convergence, Convergence::DeltaBelow(_)) && p.state == StateType::I32 {
+        out.push(Diagnostic::new(
+            LintCode::Jg009DeltaNeedsF32,
+            "Convergence::DeltaBelow",
+            format!("program {:?}: Convergence::DeltaBelow requires F32 state", p.name),
+        ));
+    }
+
+    if let InitPolicy::RootAndDefault { default, .. } = &p.init {
+        if default.as_lit().is_some_and(f64::is_infinite) && p.state == StateType::I32 {
+            out.push(Diagnostic::new(
+                LintCode::Jg010InfiniteIntInit,
+                "InitPolicy",
+                format!(
+                    "program {:?}: infinite init default with I32 state; use -1 \
+                     (unvisited sentinel) instead",
+                    p.name
+                ),
+            ));
+        }
+    }
+
+    if p.convergence == Convergence::FixedIterations(0) {
+        out.push(Diagnostic::new(
+            LintCode::Jg011ZeroIterations,
+            "Convergence::FixedIterations",
+            format!("program {:?}: FixedIterations(0) would never run", p.name),
+        ));
+    }
+
+    // Interval analysis over the damping factor: when every allowed
+    // binding is >= 1 the contraction factor is >= 1 and the delta
+    // condition can never be met — statically divergent.
+    if let (Writeback::DampedSum(d), Some(iv)) = (&p.writeback, facts.damping.as_ref()) {
+        if iv.lo >= 1.0 {
+            out.push(Diagnostic::new(
+                LintCode::Jg012DivergentDamping,
+                "Writeback::DampedSum",
+                format!(
+                    "program {:?}: Writeback::DampedSum damping {} is >= 1 for \
+                     every allowed binding — the damped iteration cannot converge",
+                    p.name,
+                    d.render()
+                ),
+            ));
+        }
+    }
+
+    // --- warn lints (suppressible)
+    for name in &facts.unused_params {
+        out.push(Diagnostic::new(
+            LintCode::Jg101UnusedParam,
+            "GasProgramBuilder::param",
+            format!(
+                "program {:?}: parameter {:?} is declared but nothing references \
+                 it — bindings will be accepted and ignored",
+                p.name, name
+            ),
+        ));
+    }
+
+    if p.reduce == ReduceOp::Sum && p.state == StateType::F32 {
+        out.push(Diagnostic::new(
+            LintCode::Jg102FloatSumOrderSensitive,
+            "Reduce",
+            format!(
+                "program {:?}: Reduce(Sum) over F32 state accumulates in traversal \
+                 order — parallel scatter is certified order-sensitive, not bit-exact",
+                p.name
+            ),
+        ));
+    }
+
+    if let (Writeback::DampedSum(d), Some(iv)) = (&p.writeback, facts.damping.as_ref()) {
+        if iv.hi > 1.0 && iv.lo < 1.0 {
+            out.push(Diagnostic::new(
+                LintCode::Jg103DampingRangeAdmitsDivergent,
+                "Writeback::DampedSum",
+                format!(
+                    "program {:?}: damping {} admits bindings > 1, which diverge — \
+                     tighten the declared range",
+                    p.name,
+                    d.render()
+                ),
+            ));
+        }
+    }
+
+    if p.kind == Some(crate::dsl::program::EdgeOpKind::Pr) && !facts.damped_iteration {
+        out.push(Diagnostic::new(
+            LintCode::Jg104PrKindNotDamped,
+            "GasProgramBuilder::kind",
+            format!(
+                "program {:?}: tagged EdgeOpKind::Pr but the writeback is {:?} — \
+                 engine dispatch follows the writeback shape, so this program runs \
+                 the generic path, not the damped iteration",
+                p.name, p.writeback
+            ),
+        ));
+    }
+
+    // Suppression: warns named in the program's allow list drop out; deny
+    // lints are never suppressible.
+    out.retain(|d| {
+        d.level == LintLevel::Deny || !p.allowed_lints.iter().any(|a| a == d.code.code())
+    });
+    out
+}
+
+/// The first deny-level diagnostic, if any — what `validate::check` (and
+/// through it every compile path) reports.
+pub fn first_deny(p: &GasProgram) -> Option<Diagnostic> {
+    lint(p).into_iter().find(|d| d.level == LintLevel::Deny)
+}
+
+fn expr_has_div(e: &ApplyExpr) -> bool {
+    match e {
+        ApplyExpr::Term(_) => false,
+        ApplyExpr::Unary(_, a) => expr_has_div(a),
+        ApplyExpr::Binary(op, a, b) => *op == BinOp::Div || expr_has_div(a) || expr_has_div(b),
+    }
+}
+
+/// Escape a string for JSON embedding (no external deps).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one program's diagnostics as a JSON object (the `--emit json`
+/// payload element).
+pub fn diagnostics_json(program: &str, diags: &[Diagnostic]) -> String {
+    let items: Vec<String> = diags
+        .iter()
+        .map(|d| {
+            format!(
+                "{{ \"code\": \"{}\", \"level\": \"{}\", \"interface\": \"{}\", \"message\": \"{}\" }}",
+                d.code.code(),
+                match d.level {
+                    LintLevel::Deny => "deny",
+                    LintLevel::Warn => "warn",
+                },
+                json_escape(d.interface),
+                json_escape(&d.message)
+            )
+        })
+        .collect();
+    format!(
+        "{{ \"program\": \"{}\", \"diagnostics\": [{}] }}",
+        json_escape(program),
+        items.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::apply::ApplyExpr;
+    use crate::dsl::params::{ParamSignature, ParamSpec, Scalar};
+    use crate::dsl::program::{Direction, EdgeOpKind, FrontierPolicy};
+
+    /// A minimal well-formed program to corrupt per test. Hand-assembled
+    /// (not via the builder) so deny-level shapes can be constructed.
+    fn base() -> GasProgram {
+        GasProgram {
+            name: "lint-case".into(),
+            state: StateType::F32,
+            init: InitPolicy::Constant(0.0.into()),
+            apply: ApplyExpr::src(),
+            reduce: ReduceOp::Min,
+            writeback: Writeback::MinCombine,
+            frontier: FrontierPolicy::All,
+            direction: Direction::Push,
+            convergence: Convergence::NoChange,
+            uses_weights: false,
+            kind: None,
+            params: ParamSignature::default(),
+            depth_limit: None,
+            delta_iteration_bound: None,
+            allowed_lints: Vec::new(),
+        }
+    }
+
+    fn codes(p: &GasProgram) -> Vec<&'static str> {
+        lint(p).iter().map(|d| d.code.code()).collect()
+    }
+
+    #[test]
+    fn jg001_sum_gates_visited() {
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.writeback = Writeback::IfUnvisited;
+        assert!(codes(&p).contains(&"JG001"), "{:?}", codes(&p));
+        let d = first_deny(&p).unwrap();
+        assert!(d.message.contains("not idempotent") && d.message.ends_with("[JG001]"));
+        assert_eq!(d.interface, "Reduce");
+    }
+
+    #[test]
+    fn jg002_jg003_jg004_damped_shape() {
+        let mut p = base();
+        p.writeback = Writeback::DampedSum(0.85.into());
+        assert!(codes(&p).contains(&"JG002"), "Min reduce under DampedSum");
+        p.reduce = ReduceOp::Sum;
+        p.state = StateType::I32;
+        assert!(codes(&p).contains(&"JG003"));
+        p.state = StateType::F32;
+        p.depth_limit = Some(3.0.into());
+        assert!(codes(&p).contains(&"JG004"));
+    }
+
+    #[test]
+    fn jg005_undeclared_param() {
+        let mut p = base();
+        p.apply = ApplyExpr::src().mul(ApplyExpr::param("beta"));
+        let d = first_deny(&p).unwrap();
+        assert_eq!(d.code.code(), "JG005");
+        assert!(d.message.contains("undeclared parameter \"beta\""));
+    }
+
+    #[test]
+    fn jg006_default_outside_range() {
+        let mut p = base();
+        p.params.declare(ParamSpec::new("alpha", 2.0).with_range(0.0, 1.0));
+        p.apply = ApplyExpr::src().mul(ApplyExpr::param("alpha"));
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG006");
+    }
+
+    #[test]
+    fn jg007_depth_limit_never_runs_literal_and_interval() {
+        let mut p = base();
+        p.depth_limit = Some(0.0.into());
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG007");
+        // parameter whose whole declared range is below one superstep
+        let mut p = base();
+        p.params.declare(ParamSpec::new("h", 0.5).with_range(0.0, 0.9));
+        p.depth_limit = Some(Scalar::param("h"));
+        let d = first_deny(&p).unwrap();
+        assert_eq!(d.code.code(), "JG007");
+        assert!(d.message.contains("would never run a superstep"));
+    }
+
+    #[test]
+    fn jg008_int_division() {
+        let mut p = base();
+        p.state = StateType::I32;
+        p.apply = ApplyExpr::bin(BinOp::Div, ApplyExpr::src(), ApplyExpr::constant(2.0));
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG008");
+    }
+
+    #[test]
+    fn jg009_delta_needs_f32() {
+        let mut p = base();
+        p.state = StateType::I32;
+        p.convergence = Convergence::DeltaBelow(0.1.into());
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG009");
+    }
+
+    #[test]
+    fn jg010_infinite_int_init() {
+        let mut p = base();
+        p.state = StateType::I32;
+        p.init = InitPolicy::root_and_default(0.0, f64::INFINITY);
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG010");
+    }
+
+    #[test]
+    fn jg011_zero_iterations() {
+        let mut p = base();
+        p.convergence = Convergence::FixedIterations(0);
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG011");
+    }
+
+    #[test]
+    fn jg012_statically_divergent_damping() {
+        // literal damping >= 1
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.writeback = Writeback::DampedSum(1.5.into());
+        assert_eq!(first_deny(&p).unwrap().code.code(), "JG012");
+        // parameter whose whole declared range is >= 1
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.params.declare(ParamSpec::new("d", 1.2).with_range(1.1, 2.0));
+        p.writeback = Writeback::DampedSum(Scalar::param("d"));
+        let d = first_deny(&p).unwrap();
+        assert_eq!(d.code.code(), "JG012");
+        assert!(d.message.contains("cannot converge"));
+    }
+
+    #[test]
+    fn jg101_unused_param_warns_and_suppresses() {
+        let mut p = base();
+        p.params.declare(ParamSpec::new("ghost", 1.0));
+        let diags = lint(&p);
+        let w = diags.iter().find(|d| d.code.code() == "JG101").unwrap();
+        assert_eq!(w.level, LintLevel::Warn);
+        assert!(first_deny(&p).is_none(), "unused param is warn, not deny");
+        p.allowed_lints.push("JG101".into());
+        assert!(!codes(&p).contains(&"JG101"), "allow list suppresses warns");
+    }
+
+    #[test]
+    fn jg102_float_sum_warns_library_pagerank() {
+        let diags = lint(&crate::dsl::algorithms::pagerank());
+        assert!(diags.iter().any(|d| d.code.code() == "JG102"));
+        assert!(diags.iter().all(|d| d.level == LintLevel::Warn), "{diags:?}");
+    }
+
+    #[test]
+    fn jg103_damping_range_admitting_divergence() {
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.params.declare(ParamSpec::new("d", 0.9).with_range(0.0, 1.5));
+        p.writeback = Writeback::DampedSum(Scalar::param("d"));
+        let diags = lint(&p);
+        let w = diags.iter().find(|d| d.code.code() == "JG103").unwrap();
+        assert_eq!(w.level, LintLevel::Warn);
+        assert!(first_deny(&p).is_none());
+    }
+
+    #[test]
+    fn jg104_pr_kind_without_damped_writeback() {
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.writeback = Writeback::Overwrite;
+        p.kind = Some(EdgeOpKind::Pr);
+        let diags = lint(&p);
+        assert!(diags.iter().any(|d| d.code.code() == "JG104"), "{diags:?}");
+    }
+
+    #[test]
+    fn deny_lints_are_not_suppressible() {
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.writeback = Writeback::IfUnvisited;
+        p.allowed_lints.push("JG001".into());
+        assert!(first_deny(&p).is_some(), "deny ignores the allow list");
+    }
+
+    #[test]
+    fn library_algorithms_have_zero_deny_diagnostics() {
+        for p in crate::dsl::algorithms::all() {
+            assert!(first_deny(&p).is_none(), "{}: {:?}", p.name, first_deny(&p));
+        }
+    }
+
+    #[test]
+    fn code_levels_follow_numbering() {
+        for c in LintCode::all() {
+            let expect =
+                if c.code().starts_with("JG0") { LintLevel::Deny } else { LintLevel::Warn };
+            assert_eq!(c.level(), expect, "{}", c.code());
+            assert!(!c.summary().is_empty());
+        }
+        assert_eq!(LintCode::all().iter().filter(|c| c.level() == LintLevel::Deny).count(), 12);
+    }
+
+    #[test]
+    fn json_payload_escapes_quotes() {
+        let mut p = base();
+        p.reduce = ReduceOp::Sum;
+        p.writeback = Writeback::IfUnvisited;
+        let js = diagnostics_json(&p.name, &lint(&p));
+        assert!(js.contains("\"code\": \"JG001\""));
+        assert!(js.contains("\\\"lint-case\\\""), "program name quotes escaped: {js}");
+    }
+}

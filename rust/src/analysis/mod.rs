@@ -1,0 +1,61 @@
+//! # Static program analysis — facts, certificates, and the lint catalog
+//!
+//! The paper's light-weight translator "deliberately skips general-purpose
+//! semantic analysis" (§V); this module is the *domain-specific* analysis
+//! that replaces it. [`analyze`] derives a [`ProgramFacts`] record from a
+//! [`GasProgram`](crate::dsl::program::GasProgram) — reduce algebra,
+//! convergence class, parameter intervals, parallel-scatter safety — and
+//! three consumers read it:
+//!
+//! 1. the **lint engine** ([`lint`]) turns impossible or suspicious
+//!    combinations into stable `JG***` diagnostics (run inside
+//!    `Session::compile` and by the `jgraph lint` CLI subcommand);
+//! 2. the **engine** dispatches the damped iteration and gates pull
+//!    early-exit on derived facts instead of hard-coded shape checks, and
+//!    stamps the [`ParallelSafety`] certificate on every
+//!    `CompiledPipeline`;
+//! 3. the **translator** elides the reduce conflict-resolution unit for
+//!    idempotent reduces and narrows the argument register file to
+//!    datapath-live parameters (visible in `translate --emit stats`).
+//!
+//! ## Lint catalog
+//!
+//! Codes are stable: never reused, never renumbered. `JG0**` are
+//! **deny**-level — the program cannot execute correctly, compilation
+//! rejects it, and the diagnostic cannot be suppressed. `JG1**` are
+//! **warn**-level — legal but noteworthy, suppressible per program with
+//! [`GasProgramBuilder::allow`]`("JG1xx")`.
+//!
+//! | Code | Level | What it detects | Why |
+//! |------|-------|-----------------|-----|
+//! | JG001 | deny | `Reduce(Sum)` driving `Writeback::IfUnvisited` | a sum is not idempotent: re-delivery across supersteps double-counts behind the visited gate — a data race, not a reordering |
+//! | JG002 | deny | `Writeback::DampedSum` without `Reduce(Sum)` | damping redistributes *summed* rank mass; min/max reductions have no mass to redistribute |
+//! | JG003 | deny | `Writeback::DampedSum` over I32 state | the damped update `(1-d)/N + d·x` needs the float datapath |
+//! | JG004 | deny | `Writeback::DampedSum` with a `depth_limit` | damped iteration converges on delta, not depth; a horizon would truncate, not converge |
+//! | JG005 | deny | reference to an undeclared parameter | `GasProgramBuilder::param` is the single declaration site; undeclared names cannot be bound or register-allocated |
+//! | JG006 | deny | a declared default outside its own range | a default-only query would immediately violate the declared contract |
+//! | JG007 | deny | a `depth_limit` below one superstep for **every** allowed binding | interval analysis over the declared range: the program can never run a superstep |
+//! | JG008 | deny | division in Apply over I32 state | the integer datapath has no divider |
+//! | JG009 | deny | `Convergence::DeltaBelow` over I32 state | L1 deltas are float quantities |
+//! | JG010 | deny | infinite init default with I32 state | i32 has no infinity; use the `-1` unvisited sentinel |
+//! | JG011 | deny | `Convergence::FixedIterations(0)` | the program would never run |
+//! | JG012 | deny | damping `>= 1` for **every** allowed binding | interval analysis: the contraction factor is ≥ 1, so the delta condition can never be met — statically divergent |
+//! | JG101 | warn | a declared parameter nothing references | bindings are accepted and silently ignored |
+//! | JG102 | warn | `Reduce(Sum)` over F32 state | float summation is not bit-exactly associative: the parallel certificate is order-sensitive, not bit-exact |
+//! | JG103 | warn | a damping range that *admits* `> 1` bindings | some legal bindings diverge; tighten the declared range |
+//! | JG104 | warn | `EdgeOpKind::Pr` tag with a non-damped writeback | engine dispatch follows the writeback shape; the tag is misleading and the program runs the generic path |
+//!
+//! To suppress a warn:
+//! `GasProgramBuilder::new("x")....allow("JG101").build()`. Deny codes
+//! ignore the allow list by design.
+//!
+//! [`GasProgramBuilder::allow`]: crate::dsl::builder::GasProgramBuilder::allow
+
+pub mod facts;
+pub mod lint;
+
+pub use facts::{
+    analyze, ConvergenceClass, Interval, Monotonicity, ParallelSafety, ProgramFacts,
+    ReduceAlgebra,
+};
+pub use lint::{lint, Diagnostic, LintCode, LintLevel};

@@ -54,6 +54,8 @@ pub struct GasProgramBuilder {
     kind: Option<EdgeOpKind>,
     params: ParamSignature,
     depth_limit: Option<Scalar>,
+    delta_iteration_bound: Option<u32>,
+    allowed_lints: Vec<String>,
 }
 
 impl GasProgramBuilder {
@@ -71,6 +73,8 @@ impl GasProgramBuilder {
             kind: None,
             params: ParamSignature::default(),
             depth_limit: None,
+            delta_iteration_bound: None,
+            allowed_lints: Vec::new(),
         }
     }
 
@@ -133,6 +137,29 @@ impl GasProgramBuilder {
         self
     }
 
+    /// Override the superstep safety net a `Convergence::DeltaBelow`
+    /// program runs under (default:
+    /// [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`]). Hitting the bound without
+    /// converging is still an error at the query layer, never a
+    /// truncation.
+    ///
+    /// [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`]:
+    ///     super::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND
+    pub fn delta_iteration_bound(mut self, bound: u32) -> Self {
+        self.delta_iteration_bound = Some(bound);
+        self
+    }
+
+    /// Suppress a **warn-level** lint for this program — the builder's
+    /// `#[allow(...)]` analogue (`.allow("JG101")`). Deny-level lints
+    /// describe programs that cannot execute correctly and are not
+    /// suppressible; allowing a `JG0**` code has no effect. See the
+    /// lint catalog in [`crate::analysis`].
+    pub fn allow(mut self, code: impl Into<String>) -> Self {
+        self.allowed_lints.push(code.into());
+        self
+    }
+
     /// Tag as a canonical kind (enables the AOT kernel path). The
     /// algorithm library sets this; custom programs normally leave it
     /// unset and run on the software engine.
@@ -185,6 +212,8 @@ impl GasProgramBuilder {
             kind: self.kind,
             params: self.params,
             depth_limit: self.depth_limit,
+            delta_iteration_bound: self.delta_iteration_bound,
+            allowed_lints: self.allowed_lints,
         };
         validate::check(&p)?;
         Ok(p)

@@ -43,6 +43,12 @@ pub enum HwModule {
     GatherUnit,
     ApplyAlu,
     ReduceUnit,
+    /// Same-destination conflict resolution in front of the reduce
+    /// accumulator: combines in-flight updates to one vertex before the
+    /// read-modify-write. Only instantiated for **non-idempotent** reduces
+    /// (`Sum`) — for min/max the analyzer proves re-delivery harmless and
+    /// the translator elides this unit entirely.
+    ConflictUnit,
     ScatterUnit,
     FrontierQueue,
     BramCache,

@@ -7,6 +7,21 @@
 use super::apply::ApplyExpr;
 use super::params::{ParamError, ParamSet, ParamSignature, ResolvedParams, Scalar};
 
+/// Default superstep safety net for [`Convergence::DeltaBelow`] programs.
+///
+/// A contraction-by-delta iteration (PageRank) has no structural depth
+/// bound the way frontier algorithms do, so the scheduler caps it here.
+/// Hitting the cap without meeting the delta condition is an **error**
+/// surfaced by the query layer ("iteration cap hit"), never a silent
+/// truncation. The bound is surfaced as a fact through
+/// [`crate::analysis::ConvergenceClass::ContractionByDelta`] and can be
+/// overridden per program with
+/// [`GasProgramBuilder::delta_iteration_bound`].
+///
+/// [`GasProgramBuilder::delta_iteration_bound`]:
+///     super::builder::GasProgramBuilder::delta_iteration_bound
+pub const DELTA_CONVERGENCE_SUPERSTEP_BOUND: u32 = 200;
+
 /// Vertex-state element type carried through the datapath.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StateType {
@@ -143,6 +158,13 @@ pub struct GasProgram {
     /// converges once `supersteps >= depth_limit`, even if the frontier is
     /// non-empty. Typically `Scalar::param("max_depth")`.
     pub depth_limit: Option<Scalar>,
+    /// Override of [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`] for
+    /// [`Convergence::DeltaBelow`] programs; `None` uses the default.
+    pub delta_iteration_bound: Option<u32>,
+    /// Warn-level lint codes (`"JG101"`, ...) suppressed for this program
+    /// — the builder's `#[allow]` analogue. Deny-level lints ignore this
+    /// list.
+    pub allowed_lints: Vec<String>,
 }
 
 /// How the reduced message updates the vertex value.
@@ -169,9 +191,16 @@ impl GasProgram {
     pub fn max_supersteps(&self, num_vertices: usize) -> u32 {
         match &self.convergence {
             Convergence::FixedIterations(k) => *k,
-            Convergence::DeltaBelow(_) => 200,
+            Convergence::DeltaBelow(_) => self.delta_bound(),
             _ => num_vertices.max(2) as u32,
         }
+    }
+
+    /// The superstep safety net a [`Convergence::DeltaBelow`] iteration
+    /// runs under: the per-program override, or
+    /// [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`].
+    pub fn delta_bound(&self) -> u32 {
+        self.delta_iteration_bound.unwrap_or(DELTA_CONVERGENCE_SUPERSTEP_BOUND)
     }
 
     /// Whether the engine can offload this program to an AOT artifact.
@@ -180,12 +209,15 @@ impl GasProgram {
     }
 
     /// Whether this program executes on the damped-PageRank engine path
-    /// (`gas::run_pagerank`): the canonical Pr kind, or any program with
-    /// a [`Writeback::DampedSum`] writeback. The engine dispatches on
-    /// this, and the query layer uses it to attach the cached full-sweep
-    /// pull trace only where it will be read.
+    /// (`gas::run_pagerank`): any program with a [`Writeback::DampedSum`]
+    /// writeback. Dispatch follows the writeback *shape*, never the
+    /// `kind` tag — a hand-built program tagged `EdgeOpKind::Pr` with a
+    /// plain `Overwrite` writeback runs the generic path (and gets a
+    /// `JG104` warn from the lint pass). The query layer uses the same
+    /// fact to attach the cached full-sweep pull trace only where it
+    /// will be read.
     pub fn is_damped_pagerank(&self) -> bool {
-        self.kind == Some(EdgeOpKind::Pr) || matches!(self.writeback, Writeback::DampedSum(_))
+        matches!(self.writeback, Writeback::DampedSum(_))
     }
 
     /// Does this program declare runtime parameters that still need
@@ -300,9 +332,21 @@ mod tests {
         let bfs = algorithms::bfs();
         assert_eq!(bfs.max_supersteps(100), 100);
         let pr = algorithms::pagerank();
-        assert_eq!(pr.max_supersteps(100), 200);
+        assert_eq!(pr.max_supersteps(100), DELTA_CONVERGENCE_SUPERSTEP_BOUND);
         let spmv = algorithms::spmv();
         assert_eq!(spmv.max_supersteps(100), 1);
+    }
+
+    #[test]
+    fn delta_bound_is_overridable_per_program() {
+        let mut pr = algorithms::pagerank();
+        assert_eq!(pr.delta_bound(), DELTA_CONVERGENCE_SUPERSTEP_BOUND);
+        pr.delta_iteration_bound = Some(7);
+        assert_eq!(pr.delta_bound(), 7);
+        assert_eq!(pr.max_supersteps(1_000_000), 7);
+        // the override is scoped to delta convergence
+        let bfs = algorithms::bfs();
+        assert_eq!(bfs.max_supersteps(100), 100);
     }
 
     #[test]

@@ -6,134 +6,21 @@
 
 use anyhow::{bail, Result};
 
-use super::program::{Convergence, GasProgram, InitPolicy, ReduceOp, StateType, Writeback};
+use super::program::GasProgram;
 
 /// Check a program. Errors name the offending interface so that DSL users
 /// see "their" function names, not translator internals.
+///
+/// Since PR 6 this is a thin shim over the static analyzer: the domain
+/// rules live in [`crate::analysis::lint`] as deny-level diagnostics with
+/// stable `JG***` codes, and `check` reports the first one. The legacy
+/// message texts are preserved verbatim (with the code appended), so
+/// existing error handling and tests keep matching.
 pub fn check(p: &GasProgram) -> Result<()> {
-    // Reduce/writeback compatibility: a Sum accumulator cannot feed the
-    // visited-gate (it would double-count on revisits).
-    if p.reduce == ReduceOp::Sum && p.writeback == Writeback::IfUnvisited {
-        bail!(
-            "program {:?}: Reduce(Sum) cannot drive Writeback::IfUnvisited — \
-             accumulated sums are not idempotent across supersteps",
-            p.name
-        );
+    if let Some(d) = crate::analysis::lint::first_deny(p) {
+        bail!("{}", d.message);
     }
-
-    // The damped-sum writeback is PageRank-shaped: it redistributes the
-    // un-damped mass over a Sum of float contributions.
-    if let Writeback::DampedSum(_) = &p.writeback {
-        if p.reduce != ReduceOp::Sum {
-            bail!(
-                "program {:?}: Writeback::DampedSum requires Reduce(Sum) — \
-                 damping redistributes summed rank mass",
-                p.name
-            );
-        }
-        if p.state == StateType::I32 {
-            bail!("program {:?}: Writeback::DampedSum requires F32 state", p.name);
-        }
-        // The damped (PageRank) engine path iterates to its delta
-        // condition and has no frontier horizon to truncate at.
-        if p.depth_limit.is_some() {
-            bail!(
-                "program {:?}: Writeback::DampedSum cannot combine with a \
-                 depth_limit — damped iteration converges on delta, not depth",
-                p.name
-            );
-        }
-    }
-
-    // Every parameter the structure references must be declared in the
-    // signature — the builder's `.param()` is the single declaration site.
-    for name in p.param_refs() {
-        if p.params.get(name).is_none() {
-            bail!(
-                "program {:?}: references undeclared parameter {:?} — declare \
-                 it with GasProgramBuilder::param (declared: {})",
-                p.name,
-                name,
-                if p.params.is_empty() { "none".to_string() } else { p.params.names().join(", ") }
-            );
-        }
-    }
-
-    // Declared defaults must themselves satisfy the declared range, so a
-    // default-only query can never produce an out-of-range value.
-    for spec in p.params.iter() {
-        if let Some(default) = spec.default {
-            let lo = spec.min.unwrap_or(f64::NEG_INFINITY);
-            let hi = spec.max.unwrap_or(f64::INFINITY);
-            if default < lo || default > hi {
-                bail!(
-                    "program {:?}: parameter {:?} default {} outside its own \
-                     range [{}, {}]",
-                    p.name,
-                    spec.name,
-                    default,
-                    lo,
-                    hi
-                );
-            }
-        }
-    }
-
-    // A literal depth limit below one superstep would never run.
-    if let Some(limit) = &p.depth_limit {
-        if let Some(v) = limit.as_lit() {
-            if v < 1.0 {
-                bail!("program {:?}: depth_limit {} would never run a superstep", p.name, v);
-            }
-        }
-    }
-
-    // Integer state with division: the fixed-point datapath has no divider.
-    if p.state == StateType::I32 && expr_has_div(&p.apply) {
-        bail!(
-            "program {:?}: Apply uses division but state is I32 — the integer \
-             datapath has no divider; use F32 state",
-            p.name
-        );
-    }
-
-    // Delta-based convergence needs float state.
-    if matches!(p.convergence, Convergence::DeltaBelow(_)) && p.state == StateType::I32 {
-        bail!(
-            "program {:?}: Convergence::DeltaBelow requires F32 state",
-            p.name
-        );
-    }
-
-    // Infinity defaults only make sense for f32 state; the i32 datapath
-    // uses the INF_I32 sentinel internally but the DSL surfaces -1/INF.
-    if let InitPolicy::RootAndDefault { default, .. } = &p.init {
-        if default.as_lit().is_some_and(f64::is_infinite) && p.state == StateType::I32 {
-            bail!(
-                "program {:?}: infinite init default with I32 state; use -1 \
-                 (unvisited sentinel) instead",
-                p.name
-            );
-        }
-    }
-
-    // Fixed iteration counts of 0 do nothing.
-    if p.convergence == Convergence::FixedIterations(0) {
-        bail!("program {:?}: FixedIterations(0) would never run", p.name);
-    }
-
     Ok(())
-}
-
-fn expr_has_div(e: &super::apply::ApplyExpr) -> bool {
-    use super::apply::{ApplyExpr, BinOp};
-    match e {
-        ApplyExpr::Term(_) => false,
-        ApplyExpr::Unary(_, a) => expr_has_div(a),
-        ApplyExpr::Binary(op, a, b) => {
-            *op == BinOp::Div || expr_has_div(a) || expr_has_div(b)
-        }
-    }
 }
 
 #[cfg(test)]
@@ -248,6 +135,17 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("never run"));
+    }
+
+    #[test]
+    fn rejections_carry_stable_lint_codes() {
+        let err = GasProgramBuilder::new("bad")
+            .apply(ApplyExpr::src())
+            .reduce(ReduceOp::Sum)
+            .writeback(Writeback::IfUnvisited)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().ends_with("[JG001]"), "{err}");
     }
 
     #[test]

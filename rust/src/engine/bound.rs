@@ -149,13 +149,20 @@ impl<'p> BoundPipeline<'p> {
     }
 
     /// The iteration cap for one query: the program's own superstep bound
-    /// (floored at 200 so short programs still have headroom before the
-    /// safety net trips), optionally **tightened** by the per-query
-    /// override. The interpreter never runs past the program bound, so an
-    /// override above it is clamped rather than silently ignored.
+    /// (floored at [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`] so short programs
+    /// still have headroom before the safety net trips), optionally
+    /// **tightened** by the per-query override. The interpreter never runs
+    /// past the program bound, so an override above it is clamped rather
+    /// than silently ignored.
+    ///
+    /// [`DELTA_CONVERGENCE_SUPERSTEP_BOUND`]: crate::dsl::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND
     fn cap_for(&self, opts: &RunOptions) -> u32 {
         let n = self.graph.csr.num_vertices();
-        let bound = self.pipeline.program.max_supersteps(n).max(200);
+        let bound = self
+            .pipeline
+            .program
+            .max_supersteps(n)
+            .max(crate::dsl::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND);
         opts.max_supersteps.map_or(bound, |cap| cap.min(bound))
     }
 

@@ -136,6 +136,11 @@ pub struct CompiledPipeline {
     /// Measured wall time of the compile stage (validation + translate +
     /// artifact lookup) — the real cost `load`/`run` no longer pay.
     pub(crate) compile_wall_seconds: f64,
+    /// The analyzer's fact record, derived once at compile time. Carries
+    /// the [`ParallelSafety`] certificate sharded execution must check.
+    ///
+    /// [`ParallelSafety`]: crate::analysis::ParallelSafety
+    pub(crate) facts: crate::analysis::ProgramFacts,
 }
 
 // Manual Debug: the PJRT registry handle is opaque.
@@ -159,11 +164,23 @@ impl CompiledPipeline {
         flash_seconds: f64,
         compile_wall_seconds: f64,
     ) -> Self {
-        Self { program, design, device, registry, flash_seconds, compile_wall_seconds }
+        let facts = crate::analysis::analyze(&program);
+        Self { program, design, device, registry, flash_seconds, compile_wall_seconds, facts }
     }
 
     pub fn program(&self) -> &GasProgram {
         &self.program
+    }
+
+    /// The full fact record the static analyzer derived at compile time.
+    pub fn facts(&self) -> &crate::analysis::ProgramFacts {
+        &self.facts
+    }
+
+    /// The parallel-scatter certificate stamped on this pipeline: future
+    /// sharded/threaded execution must check it before reordering writes.
+    pub fn parallel_safety(&self) -> crate::analysis::ParallelSafety {
+        self.facts.parallel_safety
     }
 
     pub fn design(&self) -> &Design {
@@ -263,6 +280,18 @@ mod tests {
         let bound = c.load(&g, PrepOptions::named("er")).unwrap();
         assert!(bound.deploy_seconds() >= crate::engine::executor::FLASH_SECONDS);
         assert_eq!(bound.graph().num_vertices(), 100);
+    }
+
+    #[test]
+    fn pipelines_carry_the_parallel_safety_certificate() {
+        use crate::analysis::ParallelSafety;
+        let s = session();
+        let bfs = s.compile(&algorithms::bfs()).unwrap();
+        assert_eq!(bfs.parallel_safety(), ParallelSafety::BitExact);
+        assert!(bfs.facts().pull_early_exit);
+        let pr = s.compile(&algorithms::pagerank()).unwrap();
+        assert_eq!(pr.parallel_safety(), ParallelSafety::OrderSensitive);
+        assert!(pr.facts().damped_iteration);
     }
 
     #[test]

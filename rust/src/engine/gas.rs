@@ -156,9 +156,6 @@ impl<'a> EngineGraph<'a> {
     }
 }
 
-/// PageRank constants matching python/compile/kernels/ref.py.
-const PR_MAX_ITERS: u32 = 200;
-
 /// Frontier-size thresholds for switching to pull: pull when the
 /// frontier's out-edges exceed `E / alpha`. BFS-shaped programs
 /// (constant message, visited-once writeback) pull earlier because their
@@ -236,10 +233,13 @@ pub fn run_with_policy(
     } else {
         program
     };
-    if program.is_damped_pagerank() {
+    // Derive the program's facts once per run: dispatch and the pull
+    // early-exit gate read the analyzer, not ad-hoc shape checks.
+    let facts = crate::analysis::analyze(program);
+    if facts.damped_iteration {
         return run_pagerank(program, graph, policy, &mut observer);
     }
-    run_generic(program, graph, root, policy, &mut observer)
+    run_generic(program, &facts, graph, root, policy, &mut observer)
 }
 
 fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
@@ -305,6 +305,7 @@ fn eval_msg(
 
 fn run_generic(
     program: &GasProgram,
+    facts: &crate::analysis::ProgramFacts,
     g: &EngineGraph<'_>,
     root: VertexId,
     policy: DirectionPolicy,
@@ -366,12 +367,11 @@ fn run_generic(
     // the fallback for custom expressions. §Perf: ~2x on the oracle loop.
     let compiled = CompiledApply::compile(&program.apply);
     // A pull sweep may stop scanning a vertex at its first frontier
-    // in-neighbor when one message decides the outcome: the message is
-    // superstep-constant and the writeback takes it only while the vertex
-    // is unvisited (Sum excluded — k identical messages reduce to k·msg).
-    let early_exit_ok = compiled == CompiledApply::ConstPerIter
-        && program.writeback == Writeback::IfUnvisited
-        && program.reduce != ReduceOp::Sum;
+    // in-neighbor when one message decides the outcome. The legality is
+    // an analyzer fact now (superstep-constant message + visited-gate
+    // writeback + idempotent-monotone reduce), property-tested equivalent
+    // to the previous inline `ConstPerIter && IfUnvisited && != Sum`.
+    let early_exit_ok = facts.pull_early_exit;
     // ... and such once-written vertices can never change again, so pull
     // sweeps skip the already-visited ones entirely.
     let sweep_unvisited_only = active_policy && program.writeback == Writeback::IfUnvisited;
@@ -606,9 +606,10 @@ fn run_pagerank(
 ) -> Result<GasResult> {
     let damping = match &program.writeback {
         Writeback::DampedSum(d) => d.lit(),
-        // Pr-kind programs hand-built with a plain Overwrite writeback
-        // keep the reference kernel's constant.
-        _ => 0.85,
+        // Dispatch is fact-driven (`ProgramFacts::damped_iteration` keys
+        // on the writeback shape), so a non-damped program can no longer
+        // slide into this path with a silently-assumed 0.85.
+        other => unreachable!("run_pagerank dispatched on a non-damped writeback {other:?}"),
     };
     let tol = match &program.convergence {
         Convergence::DeltaBelow(t) => t.lit(),
@@ -663,7 +664,9 @@ fn run_pagerank(
     let mut pull_supersteps = 0u32;
     let mut converged = false;
 
-    for iter in 0..PR_MAX_ITERS {
+    // The superstep safety net (`GasProgram::delta_bound`): the default
+    // matches python/compile/kernels/ref.py; builders can override it.
+    for iter in 0..program.delta_bound() {
         edges_traversed += csr.num_edges() as u64;
         observer(&SuperstepTrace { index: iter, dsts, active_rows: n as u64, direction })?;
 
@@ -954,7 +957,62 @@ mod tests {
             .unwrap();
         let r = run_silent(&p, &g, 0);
         assert!(!r.converged, "delta < -1 is unsatisfiable");
-        assert_eq!(r.supersteps, PR_MAX_ITERS);
+        assert_eq!(r.supersteps, crate::dsl::program::DELTA_CONVERGENCE_SUPERSTEP_BOUND);
+    }
+
+    #[test]
+    fn overridden_delta_bound_truncates_at_the_override() {
+        // Regression for the promoted constant: the per-program override
+        // must reach the engine loop, and expiring it must still report
+        // `converged = false` (the query layer turns that into an error,
+        // never a silent truncation).
+        use crate::dsl::apply::ApplyExpr;
+        use crate::dsl::builder::GasProgramBuilder;
+        use crate::dsl::program::Writeback;
+        let g = csr(&generate::chain(30));
+        let p = GasProgramBuilder::new("tight-pr")
+            .apply(ApplyExpr::src())
+            .reduce(ReduceOp::Sum)
+            .writeback(Writeback::DampedSum(0.85.into()))
+            .convergence(Convergence::DeltaBelow((-1.0).into()))
+            .delta_iteration_bound(3)
+            .build()
+            .unwrap();
+        assert_eq!(p.delta_bound(), 3);
+        let r = run_silent(&p, &g, 0);
+        assert!(!r.converged, "delta < -1 is unsatisfiable");
+        assert_eq!(r.supersteps, 3, "the override bounds the loop");
+    }
+
+    #[test]
+    fn pr_kind_tag_with_plain_overwrite_runs_the_generic_path() {
+        // Regression for the old `_ => 0.85` fallback: a hand-built
+        // program tagged EdgeOpKind::Pr whose writeback is a plain
+        // Overwrite used to slide into the damped path and compute with a
+        // silently-assumed damping constant. Dispatch now follows the
+        // derived facts (writeback shape), so this shape runs the generic
+        // engine — one fixed sweep here, not 200 damped iterations.
+        use crate::dsl::apply::ApplyExpr;
+        use crate::dsl::builder::GasProgramBuilder;
+        use crate::dsl::program::EdgeOpKind;
+        let mk = |name: &str, tagged: bool| {
+            let b = GasProgramBuilder::new(name)
+                .apply(ApplyExpr::src())
+                .reduce(ReduceOp::Sum)
+                .convergence(Convergence::FixedIterations(1));
+            if tagged { b.kind(EdgeOpKind::Pr) } else { b }.build().unwrap()
+        };
+        let tagged = mk("fake-pr", true);
+        assert!(!crate::analysis::analyze(&tagged).damped_iteration);
+        assert!(
+            crate::analysis::lint::lint(&tagged).iter().any(|d| d.code.code() == "JG104"),
+            "the misleading tag warns"
+        );
+        let g = csr(&generate::rmat(7, 800, 0.57, 0.19, 0.19, 5));
+        let r_tagged = run_silent(&tagged, &g, 0);
+        let r_plain = run_silent(&mk("fake-pr-untagged", false), &g, 0);
+        assert_eq!(r_tagged.supersteps, 1, "generic path honors FixedIterations(1)");
+        assert_eq!(r_tagged.values, r_plain.values, "the kind tag must not change semantics");
     }
 
     #[test]

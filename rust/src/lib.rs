@@ -15,6 +15,14 @@
 //!   estimates FPGA resources, and schedules pipelines × PEs ([`sched`]),
 //!   assisted by a host↔FPGA communication manager ([`comm`]).
 //!
+//! Between the two sits the **program-facts analyzer** ([`analysis`]): a
+//! static pass deriving reduce algebra, convergence class, parameter
+//! intervals, and the parallel-safety certificate from every program. It
+//! powers a clippy-style lint engine with stable `JG***` codes (see the
+//! [lint catalog](analysis#lint-catalog), or run `jgraph lint`), drives
+//! engine dispatch, and lets the translator elide hardware a proven-safe
+//! program does not need.
+//!
 //! Because no FPGA is attached, the Alveo U200 target is **simulated**:
 //! [`accel`] is a cycle-level model of the generated design (pipelines, BRAM
 //! vertex cache, DDR4 channels), while the design's *numeric behaviour* runs
@@ -58,6 +66,7 @@
 //! ```
 
 pub mod accel;
+pub mod analysis;
 pub mod comm;
 pub mod dsl;
 pub mod engine;
@@ -73,6 +82,7 @@ pub mod translator;
 /// report.
 pub mod prelude {
     pub use crate::accel::device::DeviceModel;
+    pub use crate::analysis::{analyze, ParallelSafety, ProgramFacts};
     pub use crate::dsl::algorithms;
     pub use crate::dsl::builder::GasProgramBuilder;
     pub use crate::dsl::params::{ParamError, ParamSet, ParamSpec, Scalar};

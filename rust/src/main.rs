@@ -169,11 +169,13 @@ fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
     })
 }
 
-const USAGE: &str = "usage: jgraph <run|translate|report|gen|sweep|info> [--help]
+const USAGE: &str = "usage: jgraph <run|translate|lint|report|gen|sweep|info> [--help]
   run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
             [--root V] [--param name=value]... [--reorder S] [--trace out.csv]
             [--no-xla] [--verbose]
   translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
+  lint      [--algo A] [--emit text|json]   (all library algorithms by default;
+            exits nonzero on any deny-level JG*** diagnostic)
   report    [--table N] [--fig N] [--interfaces] [--full]
   gen       --out PATH [--preset P] [--seed S]
   sweep     --algo A [--graph G] [--reorders]
@@ -193,6 +195,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "translate" => cmd_translate(rest),
+        "lint" => cmd_lint(rest),
         "report" => cmd_report(rest),
         "gen" => cmd_gen(rest),
         "sweep" => cmd_sweep(rest),
@@ -311,6 +314,60 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `jgraph lint`: run the static analyzer's lint pass over one algorithm
+/// (`--algo`) or the whole library, print diagnostics as text or JSON
+/// (`--emit json`), and exit nonzero if any deny-level diagnostic fired —
+/// the CI gate shape (see `.github/workflows/ci.yml`).
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    use jgraph::analysis::lint::{diagnostics_json, lint};
+    use jgraph::analysis::LintLevel;
+    let args = Args::parse(argv, &[])?;
+    let programs: Vec<GasProgram> = match args.get("algo") {
+        Some(name) => vec![program_of(name)?],
+        None => algorithms::all(),
+    };
+    let emit = args.get_or("emit", "text");
+    let mut denies = 0usize;
+    let mut warns = 0usize;
+    let mut json_blocks = Vec::new();
+    for p in &programs {
+        let diags = lint(p);
+        denies += diags.iter().filter(|d| d.level == LintLevel::Deny).count();
+        warns += diags.iter().filter(|d| d.level == LintLevel::Warn).count();
+        match emit.as_str() {
+            "json" => json_blocks.push(diagnostics_json(&p.name, &diags)),
+            "text" => {
+                if diags.is_empty() {
+                    println!("{}: clean", p.name);
+                } else {
+                    println!("{}:", p.name);
+                    for d in &diags {
+                        let level = match d.level {
+                            LintLevel::Deny => "deny",
+                            LintLevel::Warn => "warn",
+                        };
+                        println!("  {level} {}: {} ({})", d.code.code(), d.message, d.interface);
+                    }
+                }
+            }
+            other => bail!("unknown emit mode {other:?} (text|json)"),
+        }
+    }
+    if emit == "json" {
+        println!("[{}]", json_blocks.join(","));
+    } else {
+        println!(
+            "{} program(s): {denies} deny, {warns} warn (warns suppressible via \
+             GasProgramBuilder::allow; see the lint catalog in the crate docs)",
+            programs.len()
+        );
+    }
+    if denies > 0 {
+        bail!("lint: {denies} deny-level diagnostic(s)");
+    }
+    Ok(())
+}
+
 fn cmd_translate(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[])?;
     let program = program_of(&args.get_or("algo", "bfs"))?;
@@ -350,7 +407,31 @@ fn cmd_translate(argv: &[String]) -> Result<()> {
         ),
         other => bail!("unknown emit mode {other:?}"),
     }
-    if args.get_or("emit", "both") == "stats" && program.has_runtime_params() {
+    if args.get_or("emit", "both") == "stats" {
+        // what the analyzer proved, and what hardware that saved
+        let facts = jgraph::analysis::analyze(&program);
+        println!("  reduce algebra : {}", facts.reduce.describe());
+        println!("  convergence    : {}", facts.convergence.describe());
+        println!("  parallel safety: {} certificate", facts.parallel_safety.describe());
+        println!("  pull early-exit: {}", facts.pull_early_exit);
+        println!(
+            "  conflict unit  : {}",
+            if facts.needs_conflict_unit() {
+                "kept (non-idempotent reduce)".to_string()
+            } else {
+                let c = jgraph::translator::modules::cost(jgraph::dsl::ops::HwModule::ConflictUnit);
+                format!(
+                    "elided — reduce proven idempotent (saves {} LUT / {} FF per lane)",
+                    c.lut, c.ff
+                )
+            }
+        );
+        println!(
+            "  arg registers  : {} datapath-live of {} declared (host-loop: {})",
+            facts.datapath_params.len(),
+            program.params.len(),
+            if facts.host_params.is_empty() { "none".into() } else { facts.host_params.join(", ") },
+        );
         for spec in program.params.iter() {
             println!(
                 "  param {:<12} default {:?} range [{}, {}] {}",

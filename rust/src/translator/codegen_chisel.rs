@@ -18,7 +18,10 @@ use super::codegen_hdl::{code_lines, emit_jgraph, sanitize};
 use super::lower::alu_chain;
 
 /// Emit the Chisel (Scala-embedded) generator for a translated design.
+/// Fact-driven like the lowering: datapath-narrowed `ArgRegFile`, conflict
+/// resolver only for non-idempotent reduces.
 pub fn emit_chisel(program: &GasProgram, plan: &ParallelismPlan) -> String {
+    let facts = crate::analysis::analyze(program);
     let name = sanitize(&program.name);
     let chain = alu_chain(&program.apply);
     let acc = match program.reduce {
@@ -40,10 +43,11 @@ pub fn emit_chisel(program: &GasProgram, plan: &ParallelismPlan) -> String {
     s += "  val io = IO(new AcceleratorBundle)\n";
     s += "  val dma   = Module(new PcieDma)\n";
     s += "  val mem   = Module(new MemCtrl(channels = 4))\n";
-    if program.has_runtime_params() {
-        // host-written per query: parameter names elaborate, values never do
+    if !facts.datapath_params.is_empty() {
+        // host-written per query: parameter names elaborate, values never
+        // do — and only datapath-live names elaborate at all
         let names: Vec<String> =
-            program.params.names().iter().map(|n| format!("\"{n}\"")).collect();
+            facts.datapath_params.iter().map(|n| format!("\"{n}\"")).collect();
         s += &format!("  val args  = Module(new ArgRegFile(Seq({})))\n", names.join(", "));
     }
     s += &format!("  val vbram = Module(new VertexBram({dtype}))\n");
@@ -63,6 +67,11 @@ pub fn emit_chisel(program: &GasProgram, plan: &ParallelismPlan) -> String {
         s += &format!("    val a{k} = Module(new ApplyAlu(AluOp.{}))\n", capitalize(op));
         s += &format!("    a{k}.in := {prev}\n");
         prev = format!("a{k}.out");
+    }
+    if facts.needs_conflict_unit() {
+        s += &format!("    val cu = Module(new ConflictUnit({acc}))\n");
+        s += &format!("    cu.in := {prev}\n");
+        prev = "cu.out".to_string();
     }
     s += &format!("    val r = Module(new ReduceUnit({acc}, banks = 16))\n");
     s += &format!("    r.in := {prev}\n");
@@ -149,7 +158,14 @@ mod tests {
     fn pagerank_has_no_frontier_queue_in_chisel() {
         let ch = emit_chisel(&algorithms::pagerank(), &ParallelismPlan::default());
         assert!(!ch.contains("FrontierQueue"));
-        assert!(ch.contains("ArgRegFile(Seq(\"damping\", \"tolerance\"))"));
+        // datapath-narrowed register file: tolerance stays on the host
+        assert!(ch.contains("ArgRegFile(Seq(\"damping\"))"), "{ch}");
+        assert!(!ch.contains("tolerance"), "host-only params must not elaborate");
         assert!(!ch.contains("0.85"), "parameter values must not elaborate");
+        // the non-idempotent reduce keeps its conflict resolver ...
+        assert!(ch.contains("ConflictUnit(AccOp.Sum)"));
+        // ... which idempotent designs elide
+        let bfs = emit_chisel(&algorithms::bfs(), &ParallelismPlan::default());
+        assert!(!bfs.contains("ConflictUnit"));
     }
 }

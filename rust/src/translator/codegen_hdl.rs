@@ -14,7 +14,12 @@ use crate::sched::ParallelismPlan;
 use super::lower::alu_chain;
 
 /// Emit compact Verilog for a lowered design (the light-weight flow).
+/// Mirrors the fact-driven lowering ([`super::lower::lower`]): the
+/// argument register file holds only datapath-live parameters and the
+/// same-destination conflict resolver appears only for non-idempotent
+/// reduces.
 pub fn emit_jgraph(program: &GasProgram, plan: &ParallelismPlan) -> String {
+    let facts = crate::analysis::analyze(program);
     let mut s = String::new();
     let name = sanitize(&program.name);
     let dtype = match program.state {
@@ -41,13 +46,14 @@ pub fn emit_jgraph(program: &GasProgram, plan: &ParallelismPlan) -> String {
     s += &format!("  wire [31:0] msg [0:PES*LANES-1]; // {dtype} messages\n");
     s += "  pcie_dma      u_dma   (.clk(clk), .rst(rst), .csr(csr_cmd));\n";
     s += "  mem_ctrl #(4) u_mem   (.clk(clk), .rd_addr(ddr_rd_addr), .rd_data(ddr_rd_data));\n";
-    if program.has_runtime_params() {
-        // one register per declared parameter, host-written per query —
-        // names only: the emitted HDL is identical for every bound value
+    if !facts.datapath_params.is_empty() {
+        // one register per *datapath-live* parameter, host-written per
+        // query — names only: the emitted HDL is identical for every bound
+        // value. Host-loop params (tolerance, max_depth) get no register.
         s += &format!(
             "  arg_regs #(.N({})) u_args (.clk(clk), .rst(rst), .wr_data(csr_cmd)); // runtime params: {}\n",
-            program.params.len(),
-            program.params.names().join(", ")
+            facts.datapath_params.len(),
+            facts.datapath_params.join(", ")
         );
     }
     s += "  vertex_bram   u_vbram (.clk(clk), .wr(wb_bus), .rd(vload_bus)); // state in URAM\n";
@@ -68,7 +74,12 @@ pub fn emit_jgraph(program: &GasProgram, plan: &ParallelismPlan) -> String {
     if chain.is_empty() {
         s += "    assign msg[i] = g.out; // pass-through apply\n";
     }
-    s += "    reduce_unit #(.OP(ACC_OP), .BANKS(16)) r (.clk(clk), .in(msg[i]), .wb(wb_bus));\n";
+    if facts.needs_conflict_unit() {
+        s += "    conflict_unit #(.OP(ACC_OP)) c (.clk(clk), .in(msg[i])); // non-idempotent reduce\n";
+        s += "    reduce_unit #(.OP(ACC_OP), .BANKS(16)) r (.clk(clk), .in(c.out), .wb(wb_bus));\n";
+    } else {
+        s += "    reduce_unit #(.OP(ACC_OP), .BANKS(16)) r (.clk(clk), .in(msg[i]), .wb(wb_bus));\n";
+    }
     s += "    vertex_wr    w (.clk(clk), .in(r.out), .bram(wb_bus));\n";
     s += "  end endgenerate\n";
     s += "  assign csr_status = {u_mem.busy, 31'd0};\nendmodule\n";
@@ -133,11 +144,29 @@ mod tests {
     fn runtime_params_become_registers_never_literals() {
         let pr = emit_jgraph(&algorithms::pagerank(), &ParallelismPlan::default());
         assert!(pr.contains("arg_regs"), "parameterized design needs the register file");
-        assert!(pr.contains("runtime params: damping, tolerance"));
+        // analyzer-narrowed layout: tolerance is host-loop state
+        assert!(pr.contains("runtime params: damping"));
+        assert!(!pr.contains("tolerance"), "host-only params cost no registers");
+        assert!(pr.contains(".N(1)"), "one register: damping only");
         assert!(!pr.contains("0.85"), "parameter values must not leak into HDL");
         // closed programs carry no register file
         let wcc = emit_jgraph(&algorithms::wcc(), &ParallelismPlan::default());
         assert!(!wcc.contains("arg_regs"));
+        // ... and neither do programs whose params are all host-consumed
+        let bfs = emit_jgraph(&algorithms::bfs(), &ParallelismPlan::default());
+        assert!(!bfs.contains("arg_regs"), "max_depth lives in the host loop");
+    }
+
+    #[test]
+    fn conflict_unit_emitted_only_for_non_idempotent_reduces() {
+        let pr = emit_jgraph(&algorithms::pagerank(), &ParallelismPlan::default());
+        assert!(pr.contains("conflict_unit"), "Sum reduce needs the resolver");
+        assert!(pr.contains(".in(c.out)"), "reduce consumes the resolved stream");
+        for p in [algorithms::bfs(), algorithms::wcc(), algorithms::sssp()] {
+            let hdl = emit_jgraph(&p, &ParallelismPlan::default());
+            assert!(!hdl.contains("conflict_unit"), "{}: idempotent reduce elides it", p.name);
+            assert!(hdl.contains(".in(msg[i])"));
+        }
     }
 
     #[test]

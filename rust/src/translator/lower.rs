@@ -5,9 +5,11 @@
 //! No syntax analysis, no design-space exploration — selection and wiring
 //! only.
 
+use crate::analysis::analyze;
 use crate::dsl::apply::ApplyExpr;
 use crate::dsl::ops::HwModule;
-use crate::dsl::program::{FrontierPolicy, GasProgram, ReduceOp, StateType};
+use crate::dsl::params::Scalar;
+use crate::dsl::program::{FrontierPolicy, GasProgram, ReduceOp, StateType, Writeback};
 use crate::sched::ParallelismPlan;
 
 use super::modules::ModuleGraph;
@@ -19,9 +21,20 @@ const VALUE_BUS: u32 = 32;
 /// Lower one GAS program into the accelerator module graph for `plan`.
 /// Layout (paper Fig. 4): shared infrastructure (PCIe DMA, memory
 /// controller, control regs, vertex BRAM) + `pipelines × pes` edge lanes,
-/// each `EdgeFetcher → GatherUnit → ApplyAlu* → ReduceUnit →
-/// VertexWriter`, with an optional FrontierQueue feeding the fetchers.
+/// each `EdgeFetcher → GatherUnit → ApplyAlu* → [ConflictUnit] →
+/// ReduceUnit → VertexWriter`, with an optional FrontierQueue feeding the
+/// fetchers.
+///
+/// Lowering is **fact-driven** ([`crate::analysis::analyze`]):
+/// * the same-destination [`HwModule::ConflictUnit`] is instantiated only
+///   when the reduce is not idempotent — for min/max the analyzer proves
+///   re-delivered updates harmless, so the resolver is elided per lane;
+/// * the argument register file is narrowed to the **datapath-live**
+///   parameters (those the Apply expression or the damped writeback read
+///   on-chip). Host-consumed parameters (`tolerance`, `max_depth`) live in
+///   the host superstep loop and never cost registers.
 pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
+    let facts = analyze(program);
     let mut g = ModuleGraph::default();
 
     // --- shared infrastructure
@@ -42,21 +55,22 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
     g.connect(dma, memc, 512);
     g.connect(ctrl, memc, 32);
 
-    // Runtime-argument register file for programs with declared params:
-    // the host writes bound values here before each query launch, so the
-    // lowered structure — and the emitted HDL — is identical for every
-    // parameter value. The parameter *names* (not values) are recorded as
-    // instance annotations; they are the register layout.
-    let args = if program.has_runtime_params() {
+    // Runtime-argument register file for programs whose *datapath* reads
+    // declared params: the host writes bound values here before each query
+    // launch, so the lowered structure — and the emitted HDL — is
+    // identical for every parameter value. The register layout is the
+    // analyzer's datapath-liveness set (declared order preserved), not the
+    // full signature: host-loop parameters never reach the fabric.
+    let args = if facts.datapath_params.is_empty() {
+        None
+    } else {
         let a = g.add(
             HwModule::ArgRegFile,
             "arg_regs",
-            vec![("params".into(), program.params.names().join(","))],
+            vec![("params".into(), facts.datapath_params.join(","))],
         );
         g.connect(ctrl, a, 32);
         Some(a)
-    } else {
-        None
     };
 
     // vertex state resident on chip (the paper's BRAM preload)
@@ -127,18 +141,28 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
                 prev = alu;
             }
 
-            let reduce = g.add(
-                HwModule::ReduceUnit,
-                format!("reduce_{tag}"),
-                vec![(
-                    "acc".into(),
-                    match program.reduce {
-                        ReduceOp::Min => "min".into(),
-                        ReduceOp::Max => "max".into(),
-                        ReduceOp::Sum => "sum".into(),
-                    },
-                )],
-            );
+            let acc: String = match program.reduce {
+                ReduceOp::Min => "min".into(),
+                ReduceOp::Max => "max".into(),
+                ReduceOp::Sum => "sum".into(),
+            };
+
+            // Same-destination conflict resolver in front of the reduce's
+            // read-modify-write — required when the reduce is not
+            // idempotent (Sum double-counts a re-delivered message),
+            // elided when the analyzer certifies idempotence.
+            if facts.needs_conflict_unit() {
+                let cu = g.add(
+                    HwModule::ConflictUnit,
+                    format!("conflict_{tag}"),
+                    vec![("acc".into(), acc.clone())],
+                );
+                g.connect(prev, cu, VALUE_BUS);
+                prev = cu;
+            }
+
+            let reduce =
+                g.add(HwModule::ReduceUnit, format!("reduce_{tag}"), vec![("acc".into(), acc)]);
             g.connect(prev, reduce, VALUE_BUS);
 
             // Writeback closes the superstep loop *through the BRAM state*,
@@ -151,8 +175,9 @@ pub fn lower(program: &GasProgram, plan: &ParallelismPlan) -> ModuleGraph {
             );
             g.connect(reduce, writer, VALUE_BUS);
             // the damped writeback consumes its damping factor from the
-            // argument registers (PageRank's per-query damping)
-            if let (Some(a), crate::dsl::program::Writeback::DampedSum(_)) =
+            // argument registers (PageRank's per-query damping); a literal
+            // damping elaborates into the writer, needing no register
+            if let (Some(a), Writeback::DampedSum(Scalar::Param(_))) =
                 (args, &program.writeback)
             {
                 g.connect(a, writer, VALUE_BUS);
@@ -222,10 +247,55 @@ mod tests {
             .find(|m| m.kind == HwModule::ArgRegFile)
             .unwrap()
             .params;
-        assert_eq!(names[0].1, "damping,tolerance", "register layout = declared order");
+        // interval/liveness narrowing: only datapath-live params get
+        // registers — `tolerance` is host-loop state, not fabric state
+        assert_eq!(names[0].1, "damping", "register layout = datapath-live params");
         // a closed program carries none
         let g = lower(&algorithms::wcc(), &ParallelismPlan::new(8, 1));
         assert_eq!(g.count(HwModule::ArgRegFile), 0);
+    }
+
+    #[test]
+    fn host_only_parameters_do_not_cost_registers() {
+        // BFS declares `max_depth`, but it is consumed by the host
+        // superstep loop (depth_limit), never by the datapath: the
+        // analyzer-narrowed register file disappears entirely.
+        for p in [algorithms::bfs(), algorithms::sssp()] {
+            assert!(p.has_runtime_params(), "{} declares params", p.name);
+            let g = lower(&p, &ParallelismPlan::new(4, 1));
+            assert_eq!(g.count(HwModule::ArgRegFile), 0, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn conflict_unit_elided_exactly_when_reduce_is_idempotent() {
+        let plan = ParallelismPlan::new(4, 1);
+        // Sum (non-idempotent): one resolver per lane, in front of reduce
+        for p in [algorithms::pagerank(), algorithms::spmv()] {
+            let g = lower(&p, &plan);
+            assert_eq!(g.count(HwModule::ConflictUnit), 4, "{}", p.name);
+            g.validate().unwrap();
+        }
+        // Min/Max (idempotent): the analyzer proves re-delivery harmless
+        for p in [algorithms::bfs(), algorithms::wcc(), algorithms::widest_path()] {
+            let g = lower(&p, &plan);
+            assert_eq!(g.count(HwModule::ConflictUnit), 0, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn conflict_unit_insertion_keeps_pipeline_depth() {
+        // the resolver is forwarding-only (latency 0): a Sum design's
+        // pipeline depth matches an otherwise-identical idempotent one
+        let plan = ParallelismPlan::new(2, 1);
+        let sum = lower(&algorithms::spmv(), &plan);
+        let mut min_spmv = algorithms::spmv();
+        min_spmv.reduce = crate::dsl::program::ReduceOp::Min;
+        min_spmv.writeback = crate::dsl::program::Writeback::Overwrite;
+        let min = lower(&min_spmv, &plan);
+        assert!(sum.count(HwModule::ConflictUnit) > 0);
+        assert_eq!(min.count(HwModule::ConflictUnit), 0);
+        assert_eq!(sum.pipeline_depth(), min.pipeline_depth());
     }
 
     #[test]

@@ -179,6 +179,35 @@ module reduce_unit #(parameter OP = "MIN", parameter BANKS = 16) (
   end
 endmodule
 "#,
+        HwModule::ConflictUnit => r#"
+// conflict_unit: same-destination combining network in front of the
+// reduce accumulator. When two in-flight messages inside the dispatch
+// window target one vertex, they are merged with the reduce operator
+// *before* the read-modify-write, so a non-idempotent accumulator (SUM)
+// never sees the same update twice. The data path is combinational
+// forwarding (latency 0); only the one-deep match window is registered.
+// Elided entirely for idempotent reduces — the analyzer proves
+// re-delivery harmless there (ParallelSafety certificate).
+module conflict_unit #(parameter OP = "SUM") (
+  input clk, input rst,
+  input  [31:0] in_msg, input [31:0] in_vid, input in_valid,
+  output [31:0] out_msg, output [31:0] out_vid, output out_valid
+);
+  reg [31:0] held_msg; reg [31:0] held_vid; reg held;
+  wire match = held && in_valid && (in_vid == held_vid);
+  wire [31:0] merged = (OP == "SUM") ? held_msg + in_msg
+                     : (OP == "MAX") ? ((held_msg > in_msg) ? held_msg : in_msg)
+                     : ((held_msg < in_msg) ? held_msg : in_msg);
+  // forward combinationally; a matched pair leaves as one message
+  assign out_msg   = match ? merged : in_msg;
+  assign out_vid   = in_vid;
+  assign out_valid = in_valid;
+  always @(posedge clk) begin
+    if (rst) held <= 0;
+    else begin held_msg <= out_msg; held_vid <= in_vid; held <= in_valid; end
+  end
+endmodule
+"#,
         HwModule::ScatterUnit => r#"
 // scatter: routes updated messages to destination queues (the DSL's
 // Send). latency 2.
@@ -361,6 +390,7 @@ mod tests {
             HwModule::GatherUnit,
             HwModule::ApplyAlu,
             HwModule::ReduceUnit,
+            HwModule::ConflictUnit,
             HwModule::ScatterUnit,
             HwModule::FrontierQueue,
             HwModule::BramCache,

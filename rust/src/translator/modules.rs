@@ -148,7 +148,14 @@ pub fn cost(kind: HwModule) -> ModuleCost {
         HwModule::OffsetFetcher => ModuleCost { lut: 1_200, ff: 1_500, bram_kb: 36, uram: 0, dsp: 0 },
         HwModule::GatherUnit => ModuleCost { lut: 2_500, ff: 3_200, bram_kb: 36, uram: 0, dsp: 0 },
         HwModule::ApplyAlu => ModuleCost { lut: 900, ff: 1_100, bram_kb: 0, uram: 0, dsp: 3 },
-        HwModule::ReduceUnit => ModuleCost { lut: 3_000, ff: 3_600, bram_kb: 144, uram: 0, dsp: 2 },
+        // The reduce accumulator and its same-destination conflict
+        // resolver are separate library entries so the translator can
+        // elide the resolver when the analyzer proves the reduce
+        // idempotent. Their costs sum to the pre-split ReduceUnit
+        // datasheet line (2_200+800 LUT, 2_600+1_000 FF, 108+36 BRAM kb,
+        // 2+0 DSP), so non-idempotent designs price identically.
+        HwModule::ReduceUnit => ModuleCost { lut: 2_200, ff: 2_600, bram_kb: 108, uram: 0, dsp: 2 },
+        HwModule::ConflictUnit => ModuleCost { lut: 800, ff: 1_000, bram_kb: 36, uram: 0, dsp: 0 },
         HwModule::ScatterUnit => ModuleCost { lut: 2_000, ff: 2_600, bram_kb: 36, uram: 0, dsp: 0 },
         HwModule::FrontierQueue => ModuleCost { lut: 1_600, ff: 2_200, bram_kb: 72, uram: 0, dsp: 0 },
         HwModule::BramCache => ModuleCost { lut: 2_800, ff: 3_000, bram_kb: 0, uram: 16, dsp: 0 },
@@ -170,6 +177,9 @@ pub fn latency(kind: HwModule) -> u32 {
         HwModule::GatherUnit => 2,
         HwModule::ApplyAlu => 1,
         HwModule::ReduceUnit => 3, // read-modify-write on banked BRAM
+        // combinational forwarding: combines in-flight same-vertex
+        // messages inside the reduce's dispatch window, adding no stage
+        HwModule::ConflictUnit => 0,
         HwModule::ScatterUnit => 2,
         HwModule::FrontierQueue => 1,
         HwModule::BramCache => 1,
@@ -233,5 +243,22 @@ mod tests {
             assert!(latency(kind) > 0, "{kind:?}");
         }
         assert_eq!(cost(HwModule::HostOnly), ModuleCost::default());
+    }
+
+    #[test]
+    fn conflict_split_preserves_the_combined_reduce_datasheet() {
+        // ReduceUnit + ConflictUnit must sum to the pre-split datasheet
+        // line so Sum designs (which instantiate both) price identically
+        // to PR 5 and earlier.
+        let r = cost(HwModule::ReduceUnit);
+        let c = cost(HwModule::ConflictUnit);
+        assert_eq!(r.lut + c.lut, 3_000);
+        assert_eq!(r.ff + c.ff, 3_600);
+        assert_eq!(r.bram_kb + c.bram_kb, 144);
+        assert_eq!(r.dsp + c.dsp, 2);
+        // ... and the resolver is forwarding-only: no pipeline stage, so
+        // inserting it does not change any design's pipeline depth
+        assert_eq!(latency(HwModule::ConflictUnit), 0);
+        assert_eq!(latency(HwModule::ReduceUnit), 3);
     }
 }

@@ -115,7 +115,7 @@ mod tests {
     #[test]
     fn estimate_sums_module_costs() {
         let r = ResourceEstimate::of(&sample_graph());
-        assert_eq!(r.lut, 2_200 + 900 + 3_000);
+        assert_eq!(r.lut, 2_200 + 900 + 2_200);
         assert_eq!(r.dsp, 3 + 2);
     }
 

@@ -416,6 +416,238 @@ fn prop_adaptive_execution_identical_to_push_only() {
     });
 }
 
+/// Random (frequently ill-formed) [`jgraph::dsl::program::GasProgram`]:
+/// independent draws across the shape axes the lint catalog covers, so the
+/// sweep hits both accepted programs and every deny family.
+fn random_program(rng: &mut SplitMix64) -> jgraph::dsl::program::GasProgram {
+    use jgraph::dsl::apply::{ApplyExpr, BinOp};
+    use jgraph::dsl::params::{ParamSignature, ParamSpec, Scalar};
+    use jgraph::dsl::program::{
+        Convergence, EdgeOpKind, FrontierPolicy, GasProgram, InitPolicy, ReduceOp, StateType,
+        Writeback,
+    };
+    let state = if rng.next_below(2) == 0 { StateType::I32 } else { StateType::F32 };
+    let reduce = match rng.next_below(3) {
+        0 => ReduceOp::Min,
+        1 => ReduceOp::Max,
+        _ => ReduceOp::Sum,
+    };
+    let apply = match rng.next_below(5) {
+        0 => ApplyExpr::src(),
+        1 => ApplyExpr::bin(BinOp::Add, ApplyExpr::src(), ApplyExpr::weight()),
+        2 => ApplyExpr::bin(BinOp::Div, ApplyExpr::src(), ApplyExpr::constant(2.0)),
+        3 => ApplyExpr::bin(BinOp::Add, ApplyExpr::iter(), ApplyExpr::constant(1.0)),
+        _ => ApplyExpr::src().mul(ApplyExpr::param("alpha")),
+    };
+    let writeback = match rng.next_below(5) {
+        0 => Writeback::MinCombine,
+        1 => Writeback::MaxCombine,
+        2 => Writeback::IfUnvisited,
+        3 => Writeback::Overwrite,
+        _ => Writeback::DampedSum(match rng.next_below(3) {
+            0 => 0.85.into(),
+            1 => 1.5.into(), // statically divergent damping
+            _ => Scalar::param("damping"),
+        }),
+    };
+    let convergence = match rng.next_below(4) {
+        0 => Convergence::EmptyFrontier,
+        1 => Convergence::NoChange,
+        2 => Convergence::FixedIterations(rng.next_below(3) as u32),
+        _ => Convergence::DeltaBelow(1e-4.into()),
+    };
+    let mut params = ParamSignature::default();
+    if rng.next_below(2) == 0 {
+        let spec = if rng.next_below(4) == 0 {
+            ParamSpec::new("alpha", 2.0).with_range(0.0, 1.0) // default outside range
+        } else {
+            ParamSpec::new("alpha", 0.5).with_range(0.0, 1.0)
+        };
+        params.declare(spec);
+    }
+    if rng.next_below(3) == 0 {
+        params.declare(ParamSpec::new("damping", 0.85).with_range(0.0, 0.99));
+    }
+    if rng.next_below(4) == 0 {
+        params.declare(ParamSpec::new("ghost", 1.0)); // unused: warn only
+    }
+    let depth_limit = if rng.next_below(4) == 0 {
+        Some(Scalar::from(rng.next_below(4) as f64)) // 0 can never run
+    } else {
+        None
+    };
+    let init = match rng.next_below(3) {
+        0 => InitPolicy::Constant(0.0.into()),
+        1 => InitPolicy::root_and_default(0.0, f64::INFINITY), // deny under I32
+        _ => InitPolicy::VertexId,
+    };
+    GasProgram {
+        name: "prop-case".into(),
+        state,
+        init,
+        apply,
+        reduce,
+        writeback,
+        frontier: if rng.next_below(2) == 0 { FrontierPolicy::Active } else { FrontierPolicy::All },
+        direction: Direction::Push,
+        convergence,
+        uses_weights: rng.next_below(2) == 0,
+        kind: if rng.next_below(5) == 0 { Some(EdgeOpKind::Pr) } else { None },
+        params,
+        depth_limit,
+        delta_iteration_bound: None,
+        allowed_lints: Vec::new(),
+    }
+}
+
+/// The analyzer's reduce-algebra table must agree with brute force: every
+/// flag it claims holds on all random triples, and every flag it denies
+/// has a concrete counterexample in the sample.
+#[test]
+fn prop_reduce_algebra_facts_match_brute_force() {
+    use jgraph::analysis::{Monotonicity, ReduceAlgebra};
+    use jgraph::dsl::program::{ReduceOp, StateType};
+
+    // Evaluate the reduce the way the engine's state type does: the F32
+    // datapath rounds every combine, I32 sums are exact.
+    fn eval(op: ReduceOp, state: StateType, a: f64, b: f64) -> f64 {
+        match (op, state) {
+            (ReduceOp::Min, _) => a.min(b),
+            (ReduceOp::Max, _) => a.max(b),
+            (ReduceOp::Sum, StateType::F32) => (a as f32 + b as f32) as f64,
+            (ReduceOp::Sum, StateType::I32) => ((a as i64) + (b as i64)) as f64,
+        }
+    }
+
+    for op in [ReduceOp::Min, ReduceOp::Max, ReduceOp::Sum] {
+        for state in [StateType::I32, StateType::F32] {
+            let alg = ReduceAlgebra::of(op, state);
+            let mut rng = SplitMix64::new(0xA16E ^ ((op as u64) << 8) ^ (state as u64));
+            // nonzero magnitudes across six decades: enough dynamic range
+            // to trip float rounding, never a ±0.0 bit ambiguity
+            let mut draw = |rng: &mut SplitMix64| {
+                let sign = if rng.next_below(2) == 0 { 1.0 } else { -1.0 };
+                let v = sign * (1.0 + rng.next_f64() * 9.0)
+                    * 10f64.powi(rng.next_below(6) as i32);
+                match state {
+                    StateType::I32 => v.trunc(),
+                    StateType::F32 => v,
+                }
+            };
+            let mut idem_break = false;
+            let mut assoc_break = false;
+            let mut dec_break = false;
+            let mut inc_break = false;
+            for i in 0..600 {
+                let (a, b, c) = (draw(&mut rng), draw(&mut rng), draw(&mut rng));
+                let ab = eval(op, state, a, b);
+                // every operator is claimed commutative: bit-exact both ways
+                assert_eq!(
+                    ab.to_bits(),
+                    eval(op, state, b, a).to_bits(),
+                    "{op:?}/{state:?} case {i}: not commutative"
+                );
+                let aa = eval(op, state, a, a);
+                if alg.idempotent {
+                    assert_eq!(aa.to_bits(), a.to_bits(), "{op:?}/{state:?} case {i}");
+                } else if aa.to_bits() != a.to_bits() {
+                    idem_break = true;
+                }
+                let l = eval(op, state, ab, c);
+                let r = eval(op, state, a, eval(op, state, b, c));
+                if alg.associative {
+                    assert_eq!(
+                        l.to_bits(),
+                        r.to_bits(),
+                        "{op:?}/{state:?} case {i}: ({a}, {b}, {c}) regroups"
+                    );
+                } else if l.to_bits() != r.to_bits() {
+                    assoc_break = true;
+                }
+                match alg.monotonicity {
+                    Monotonicity::Decreasing => {
+                        assert!(ab <= a.min(b), "{op:?}/{state:?} case {i}")
+                    }
+                    Monotonicity::Increasing => {
+                        assert!(ab >= a.max(b), "{op:?}/{state:?} case {i}")
+                    }
+                    Monotonicity::NonMonotone => {
+                        if ab > a.min(b) {
+                            dec_break = true;
+                        }
+                        if ab < a.max(b) {
+                            inc_break = true;
+                        }
+                    }
+                }
+            }
+            if !alg.idempotent {
+                assert!(idem_break, "{op:?}/{state:?}: no idempotence counterexample");
+            }
+            if !alg.associative {
+                assert!(assoc_break, "{op:?}/{state:?}: no associativity counterexample");
+            }
+            if alg.monotonicity == Monotonicity::NonMonotone {
+                assert!(dec_break && inc_break, "{op:?}/{state:?}: monotone after all?");
+            }
+        }
+    }
+}
+
+/// `validate::check` and the lint engine are the same judgment: a random
+/// program is rejected iff it has a deny-level diagnostic, and the
+/// rejection message carries the stable `[JGxxx]` code.
+#[test]
+fn prop_check_rejects_exactly_the_deny_linted_programs() {
+    use jgraph::analysis::lint::first_deny;
+    let (mut accepted, mut rejected) = (0u32, 0u32);
+    for seed in 0..400u64 {
+        let mut rng = SplitMix64::new(0xBADC0DE ^ (seed * 2654435761));
+        let p = random_program(&mut rng);
+        let deny = first_deny(&p);
+        match jgraph::dsl::validate::check(&p) {
+            Ok(()) => {
+                assert!(deny.is_none(), "seed {seed}: check passed but lint denies {deny:?}");
+                accepted += 1;
+            }
+            Err(e) => {
+                let d = deny
+                    .unwrap_or_else(|| panic!("seed {seed}: rejected without a deny lint: {e}"));
+                assert_eq!(e.to_string(), d.message, "seed {seed}");
+                assert!(
+                    e.to_string().ends_with(&format!("[{}]", d.code.code())),
+                    "seed {seed}: rejection must end with the stable code: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    // the generator must exercise both sides or the property is vacuous
+    assert!(accepted >= 25, "only {accepted}/400 accepted");
+    assert!(rejected >= 25, "only {rejected}/400 rejected");
+}
+
+/// The derived `pull_early_exit` fact is exactly the engine's legacy
+/// shape condition (constant-per-superstep message, visited-gate
+/// writeback, non-Sum reduce) on arbitrary programs.
+#[test]
+fn prop_pull_early_exit_fact_equals_legacy_shape_condition() {
+    use jgraph::analysis::analyze;
+    use jgraph::dsl::apply::CompiledApply;
+    use jgraph::dsl::program::{ReduceOp, Writeback};
+    let mut saw_exit = false;
+    for seed in 0..600u64 {
+        let mut rng = SplitMix64::new(0xEA51E ^ (seed * 40503));
+        let p = random_program(&mut rng);
+        let legacy = CompiledApply::compile(&p.apply) == CompiledApply::ConstPerIter
+            && p.writeback == Writeback::IfUnvisited
+            && p.reduce != ReduceOp::Sum;
+        assert_eq!(analyze(&p).pull_early_exit, legacy, "seed {seed}: {p:?}");
+        saw_exit |= legacy;
+    }
+    assert!(saw_exit, "generator never produced an early-exit-legal shape");
+}
+
 #[test]
 fn prop_generators_always_valid() {
     cases(15, |seed, rng| {
