@@ -1,0 +1,125 @@
+//! Shard-worker scaling: the PR 7 tentpole perf claim. The sharded
+//! engine executes k per-partition shards across a pool of worker
+//! threads with a deterministic boundary merge; because destination
+//! ownership makes every worker write a private accumulator slice, the
+//! threaded sweep is bit-identical to the monolithic interpreter — so
+//! any wall-time win is free. This bench measures that win on a
+//! pull-heavy PageRank sweep and refreshes `BENCH_shard.json`, the
+//! perf-trajectory artifact CI tracks across PRs.
+//!
+//! Modes:
+//! * default — 2^15-vertex rmat (~1M edges), DegreeBalanced 4-way
+//!   partition; **asserts** >= 1.5x query-exec speedup at 4 shard
+//!   workers over 1;
+//! * `--quick` — small graph, few iterations, no threshold: the CI
+//!   smoke that keeps the bench compiling and the JSON schema stable.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::params::ParamSet;
+use jgraph::engine::gas::{self, DirectionPolicy, EngineGraph};
+use jgraph::engine::run_sharded;
+use jgraph::graph::csr::Csr;
+use jgraph::graph::generate;
+use jgraph::prep::partition::{partition, PartitionStrategy};
+use jgraph::prep::shard::ShardedGraph;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (scale, edges, tol, warmup, iters) = if quick {
+        (11u32, 60_000usize, 1e-3, 1, 2)
+    } else {
+        (15u32, 1_048_576usize, 1e-4, 1, 5)
+    };
+    let mode = if quick { "quick" } else { "full" };
+    let parts = 4usize;
+
+    section(&format!(
+        "shard-worker scaling, rmat scale {scale} ({edges} edges, {parts} shards, mode {mode})"
+    ));
+    let el = generate::rmat(scale, edges, 0.57, 0.19, 0.19, 7);
+    let csr = Csr::from_edgelist(&el);
+    let csc = csr.transpose();
+    let out_deg = csr.out_degrees();
+    let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+    let root = (0..csr.num_vertices() as u32).max_by_key(|&v| csr.degree(v)).unwrap_or(0);
+
+    let p = partition(&el, parts, PartitionStrategy::DegreeBalanced).unwrap();
+    let sg = ShardedGraph::build(&csr, &csc, &p);
+    println!(
+        "partition: {} cut edges ({:.1}% of {}), edge imbalance {:.3}",
+        p.cut_edges,
+        100.0 * p.cut_fraction(csr.num_edges()),
+        csr.num_edges(),
+        p.edge_imbalance(),
+    );
+
+    // pull-heavy sweep: PageRank runs every superstep dense, so the
+    // sharded engine gathers over every shard's CSC slice each iteration
+    let pr = algorithms::pagerank().instantiate(&ParamSet::new().bind("tolerance", tol)).unwrap();
+
+    // exactness pin on the exact graph being measured (the property test
+    // covers random graphs; this guards the bench configuration)
+    let mono = gas::run(&pr, &csr, root, |_| {}).unwrap();
+    let sharded_ref =
+        run_sharded(&pr, &view, &sg, root, DirectionPolicy::PushOnly, 4, |_| Ok(())).unwrap();
+    assert_eq!(mono.supersteps, sharded_ref.result.supersteps, "superstep drift");
+    assert!(
+        mono.values
+            .iter()
+            .zip(&sharded_ref.result.values)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "sharded values drifted from the monolithic reference"
+    );
+    println!(
+        "PageRank: {} supersteps, {} crossing msgs/run",
+        sharded_ref.result.supersteps, sharded_ref.crossing_msgs,
+    );
+
+    let time_workers = |w: usize, warmup: usize, iters: usize| {
+        bench(&format!("PageRank sharded, {w} worker(s)"), warmup, iters, || {
+            run_sharded(&pr, &view, &sg, root, DirectionPolicy::Adaptive, w, |_| Ok(()))
+                .unwrap()
+                .result
+                .supersteps
+        })
+    };
+    let d1 = time_workers(1, warmup, iters);
+    let d2 = time_workers(2, warmup, iters);
+    let d4 = time_workers(4, warmup, iters);
+    let speedup2 = d1.as_secs_f64() / d2.as_secs_f64();
+    let speedup4 = d1.as_secs_f64() / d4.as_secs_f64();
+    report_metric("shard scaling speedup (2 workers)", speedup2, "x");
+    report_metric("shard scaling speedup (4 workers)", speedup4, "x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"shard_scaling\",\n  \"mode\": \"{mode}\",\n  \
+         \"graph\": {{ \"kind\": \"rmat\", \"scale\": {scale}, \"vertices\": {}, \"edges\": {} }},\n  \
+         \"shards\": {parts},\n  \"cut_edges\": {},\n  \"crossing_msgs\": {},\n  \
+         \"supersteps\": {},\n  \
+         \"seconds_1_worker\": {:.6},\n  \"seconds_2_workers\": {:.6},\n  \
+         \"seconds_4_workers\": {:.6},\n  \
+         \"speedup_2_workers\": {speedup2:.2},\n  \"speedup_4_workers\": {speedup4:.2}\n}}\n",
+        csr.num_vertices(),
+        csr.num_edges(),
+        p.cut_edges,
+        sharded_ref.crossing_msgs,
+        sharded_ref.result.supersteps,
+        d1.as_secs_f64(),
+        d2.as_secs_f64(),
+        d4.as_secs_f64(),
+    );
+    std::fs::write("BENCH_shard.json", &json).expect("writing BENCH_shard.json");
+    println!("\nwrote BENCH_shard.json:\n{json}");
+
+    // quick mode is the CI smoke: no threshold, shared runners are noisy
+    if !quick {
+        assert!(
+            speedup4 >= 1.5,
+            "4 shard workers must be >= 1.5x over 1 on the 2^15 rmat (got {speedup4:.2}x)"
+        );
+    }
+}

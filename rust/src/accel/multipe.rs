@@ -90,6 +90,13 @@ impl MultiPeSimulator {
     /// order; `partitioning.assignment` maps vertices to PEs (the
     /// scheduler's placement collapses parts onto PEs round-robin before
     /// calling this).
+    ///
+    /// The apply/reduce read-modify-write for every message runs in the
+    /// bank of the PE **owning the destination** — a crossing message
+    /// consumes the receiving PE's reduce stage, not just interconnect
+    /// bandwidth (previously cut edges were charged to the wire only,
+    /// making cut-heavy partitions look free on the PE side). The source
+    /// PE still streams its outgoing cut edges at pipeline issue rate.
     pub fn superstep(
         &mut self,
         edges: impl Iterator<Item = (u32, u32)>,
@@ -103,17 +110,20 @@ impl MultiPeSimulator {
         let mut windows: Vec<Vec<u32>> = vec![Vec::with_capacity(lanes); pes];
         let mut pe_cycles = vec![0u64; pes];
         let mut crossing = 0u64;
+        // outgoing cut edges each source PE issues (streamed there,
+        // reduced at the destination)
+        let mut crossing_issued = vec![0u64; pes];
         for (src, dst) in edges {
             let pe_s = pe_of_part[partitioning.assignment[src as usize] as usize] as usize;
             let pe_d = pe_of_part[partitioning.assignment[dst as usize] as usize] as usize;
             if pe_s != pe_d {
                 crossing += 1;
+                crossing_issued[pe_s] += 1;
             }
-            // the owning PE of the source streams the edge
-            let w = &mut windows[pe_s];
+            let w = &mut windows[pe_d];
             w.push(dst);
             if w.len() == lanes {
-                pe_cycles[pe_s] += self.banks[pe_s].window_cycles(w, ii) as u64;
+                pe_cycles[pe_d] += self.banks[pe_d].window_cycles(w, ii) as u64;
                 w.clear();
             }
         }
@@ -122,6 +132,42 @@ impl MultiPeSimulator {
                 pe_cycles[pe] += self.banks[pe].window_cycles(w, ii) as u64;
             }
         }
+        for (pe, &issued) in crossing_issued.iter().enumerate() {
+            pe_cycles[pe] += ii as u64 * issued.div_ceil(lanes as u64);
+        }
+        self.finish_superstep(pe_cycles, crossing)
+    }
+
+    /// Simulate one superstep from **real per-shard traces** — the entry
+    /// point the sharded engine drives. `shard_dsts[s]` is shard `s`'s
+    /// destination stream this superstep (the engine's
+    /// [`ShardedSuperstepTrace`](crate::engine::ShardedSuperstepTrace)),
+    /// `shard_crossing[s]` its boundary messages, and `pe_of_shard[s]`
+    /// the PE the scheduler placed it on. Destination ownership means a
+    /// shard's whole stream reduces in its own PE's banks; boundary
+    /// traffic is serialized on the interconnect.
+    pub fn superstep_shards(
+        &mut self,
+        shard_dsts: &[&[u32]],
+        shard_crossing: &[u64],
+        pe_of_shard: &[u32],
+    ) -> MultiPeSuperstep {
+        let pes = self.banks.len();
+        let lanes = self.pipeline.lanes.max(1) as usize;
+        let ii = self.pipeline.ii;
+        let mut pe_cycles = vec![0u64; pes];
+        let mut crossing = 0u64;
+        for (s, dsts) in shard_dsts.iter().enumerate() {
+            let pe = pe_of_shard[s] as usize;
+            for w in dsts.chunks(lanes) {
+                pe_cycles[pe] += self.banks[pe].window_cycles(w, ii) as u64;
+            }
+            crossing += shard_crossing[s];
+        }
+        self.finish_superstep(pe_cycles, crossing)
+    }
+
+    fn finish_superstep(&mut self, pe_cycles: Vec<u64>, crossing: u64) -> MultiPeSuperstep {
         let interconnect_cycles = self.interconnect.latency_cycles as u64
             + (crossing as f64 * self.interconnect.bytes_per_msg as f64
                 / self.interconnect.bytes_per_cycle) as u64;
@@ -227,6 +273,58 @@ mod tests {
         let on_card = run(InterconnectModel::default());
         let multi_card = run(InterconnectModel::multi_fpga());
         assert!(multi_card > 10 * on_card, "{multi_card} vs {on_card}");
+    }
+
+    #[test]
+    fn crossing_messages_bill_the_receiving_pe() {
+        // 100 edges, all from part-0 sources to part-1 destinations.
+        use crate::graph::edgelist::{Edge, EdgeList};
+        let edges: Vec<Edge> =
+            (0..100u32).map(|i| Edge { src: i, dst: 100 + i, weight: 1.0 }).collect();
+        let el = EdgeList { num_vertices: 200, edges };
+        let cut = partition(&el, 2, PartitionStrategy::Range).unwrap();
+        let mut s = sim(2);
+        let step = s.superstep(el.edges.iter().map(|e| (e.src, e.dst)), &cut, &[0, 1]);
+        assert_eq!(step.crossing_msgs, 100);
+        // the receiving PE does the apply/reduce work for every incoming
+        // boundary message...
+        assert!(step.pe_cycles[1] > 0, "destination PE must be billed, got {:?}", step.pe_cycles);
+        // ...and the source PE still pays to issue the stream
+        assert!(step.pe_cycles[0] > 0, "source PE must pay issue cycles, got {:?}", step.pe_cycles);
+
+        // the same edges uncut (everything collapsed into part 0) must be
+        // strictly cheaper: no interconnect serialization, no double-side
+        // billing
+        let mut uncut = cut.clone();
+        uncut.assignment.iter_mut().for_each(|a| *a = 0);
+        let mut s2 = sim(2);
+        let local = s2.superstep(el.edges.iter().map(|e| (e.src, e.dst)), &uncut, &[0, 1]);
+        assert_eq!(local.crossing_msgs, 0);
+        assert!(
+            step.critical_cycles > local.critical_cycles,
+            "cut-heavy layout must cost more: cut {} vs uncut {}",
+            step.critical_cycles,
+            local.critical_cycles
+        );
+    }
+
+    #[test]
+    fn shard_traces_drive_per_pe_banks() {
+        let mut s = sim(2);
+        // shard 0 on PE 0 (12 conflict-free dsts), shard 1 on PE 1
+        // (4 dsts all in one bank), shard 1 reports 3 boundary messages
+        let d0: Vec<u32> = (0..12).collect();
+        let d1: Vec<u32> = vec![0, 16, 32, 48];
+        let step = s.superstep_shards(&[&d0, &d1], &[0, 3], &[0, 1]);
+        assert_eq!(step.crossing_msgs, 3);
+        assert!(step.pe_cycles[0] > 0 && step.pe_cycles[1] > 0);
+        assert_eq!(
+            step.critical_cycles,
+            step.pe_cycles.iter().copied().max().unwrap() + step.interconnect_cycles
+        );
+        assert_eq!(s.supersteps, 1);
+        assert_eq!(s.total_crossing, 3);
+        assert!(s.seconds() > 0.0);
     }
 
     #[test]

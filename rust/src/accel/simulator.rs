@@ -144,6 +144,7 @@ impl AccelSimulator {
             edges,
             active_vertices: batch.active_rows,
             direction: batch.direction,
+            shards: 0,
             cycles,
             launch_seconds: LAUNCH_SECONDS,
         };

@@ -49,6 +49,10 @@ pub struct SuperstepSim {
     /// Traversal direction the engine chose for this superstep (push =
     /// CSR out-edge scatter, pull = CSC in-edge gather).
     pub direction: Direction,
+    /// Shards this superstep executed across (0 = monolithic, no
+    /// sharding; sharded supersteps record the shard count and derive
+    /// `cycles` from the multi-PE critical path).
+    pub shards: u32,
     pub cycles: CycleBreakdown,
     /// Host launch overhead (seconds — not cycles; it happens off-chip).
     pub launch_seconds: f64,

@@ -50,6 +50,16 @@ pub struct TransferRecord {
     pub seconds: f64,
 }
 
+/// Payload bytes per boundary-exchange message (dst id + f64 value
+/// packed to the interconnect flit, matching
+/// [`crate::accel::multipe::InterconnectModel::bytes_per_msg`]).
+pub const EXCHANGE_BYTES_PER_MSG: u64 = 8;
+/// Peer-to-peer exchange bandwidth (card-to-card / PE-to-PE DMA class,
+/// ~16 GB/s — an order below the bulk PCIe Gen3×16 stream rate).
+pub const EXCHANGE_BYTES_PER_SECOND: f64 = 16.0e9;
+/// Fixed handshake latency per exchange round.
+pub const EXCHANGE_LATENCY_SECONDS: f64 = 2.0e-6;
+
 impl CommManager {
     /// Gen3×16 link to a freshly "flashed" U200 shell.
     pub fn new() -> Self {
@@ -92,6 +102,22 @@ impl CommManager {
     /// engine commits the records deterministically after the join.
     pub fn plan_read_back(&self, bytes: u64) -> TransferRecord {
         TransferRecord { bytes, seconds: self.pcie.transfer_seconds(bytes) }
+    }
+
+    /// Model a boundary-exchange transfer (sharded execution's cut-edge
+    /// messages between PEs / devices) **without** touching the ledger —
+    /// the exchange analogue of [`Self::plan_read_back`], committed the
+    /// same deterministic way. Small-message traffic, so it is priced by
+    /// its own class: [`EXCHANGE_BYTES_PER_MSG`] bytes per message over a
+    /// peer-to-peer link ([`EXCHANGE_BYTES_PER_SECOND`]) with one
+    /// [`EXCHANGE_LATENCY_SECONDS`] handshake per exchange round, not by
+    /// the bulk PCIe DMA model.
+    pub fn plan_exchange(&self, msgs: u64) -> TransferRecord {
+        let bytes = msgs * EXCHANGE_BYTES_PER_MSG;
+        TransferRecord {
+            bytes,
+            seconds: EXCHANGE_LATENCY_SECONDS + bytes as f64 / EXCHANGE_BYTES_PER_SECOND,
+        }
     }
 
     /// Fold one transfer record into the shared accounting.
@@ -170,5 +196,20 @@ mod tests {
         }
         assert_eq!(direct.bytes_moved(), deferred.bytes_moved());
         assert_eq!(direct.transfer_seconds().to_bits(), deferred.transfer_seconds().to_bits());
+    }
+
+    #[test]
+    fn exchange_plans_are_pure_and_scale_with_messages() {
+        let cm = CommManager::new();
+        let small = cm.plan_exchange(100);
+        let big = cm.plan_exchange(100_000);
+        assert_eq!(small.bytes, 100 * EXCHANGE_BYTES_PER_MSG);
+        assert!(small.seconds >= EXCHANGE_LATENCY_SECONDS);
+        assert!(big.seconds > small.seconds);
+        assert_eq!(cm.bytes_moved(), 0, "planning must not touch the ledger");
+        // committed through the same ledger as DMA records
+        cm.commit(&small);
+        assert_eq!(cm.bytes_moved(), small.bytes);
+        assert_eq!(cm.transfer_seconds().to_bits(), small.seconds.to_bits());
     }
 }

@@ -18,17 +18,20 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::accel::simulator::{AccelSimulator, EdgeBatch};
+use crate::accel::multipe::{InterconnectModel, MultiPeSimulator};
+use crate::accel::simulator::{AccelSimulator, EdgeBatch, LAUNCH_SECONDS};
+use crate::accel::stats::{CycleBreakdown, SimStats, SuperstepSim};
 use crate::comm::{CommManager, TransferRecord};
 use crate::prep::prepared::PreparedGraph;
 use crate::sched::{AdmittedPlan, ParallelismPlan, RuntimeScheduler};
 
-use crate::dsl::program::GasProgram;
+use crate::dsl::program::{Direction, GasProgram};
 
 use super::compiled::{CompiledPipeline, RunOptions};
 use super::executor::ORACLE_TOLERANCE;
 use super::gas::{self, SuperstepTrace};
 use super::metrics::{FunctionalPath, RunReport};
+use super::sharded::{run_sharded, ShardedSuperstepTrace};
 use super::trace::Trace;
 use super::xla_engine;
 
@@ -42,6 +45,18 @@ use super::xla_engine;
 pub struct QueryContext {
     scheduler: RuntimeScheduler,
     sim: AccelSimulator,
+    /// Multi-PE simulator + the binding's shard→PE placement, present
+    /// only on sharded queries (partitioned bindings). When set, the
+    /// query's simulated workload comes from the multi-PE critical path
+    /// driven by real per-shard traces, not from `sim`.
+    multipe: Option<(MultiPeSimulator, Vec<u32>)>,
+    /// Edges traversed across all sharded supersteps (feeds the
+    /// synthesized [`SimStats`]).
+    mp_edges: u64,
+    /// Sharded supersteps where at least one shard pulled.
+    mp_pull: u32,
+    /// Pipeline fill/drain depth (cycles) for sharded trace rows.
+    pipeline_depth: u64,
     trace: Trace,
     /// DMA records modeled (not yet committed) by this query; the engine
     /// folds them into the shared [`CommManager`] ledger in query order.
@@ -54,11 +69,26 @@ pub struct QueryContext {
 impl QueryContext {
     fn new(bound: &BoundPipeline<'_>, cap: u32, want_trace: bool) -> Self {
         let pipeline = bound.pipeline;
+        // Sharded queries route every shard's destination stream into its
+        // own PE's reduce banks; boundary messages serialize on the
+        // interconnect. Placement was fixed at bind time.
+        let multipe = bound.graph.sharded().map(|sg| {
+            let sim = MultiPeSimulator::new(
+                pipeline.device.clone(),
+                pipeline.design.pipeline,
+                InterconnectModel::default(),
+            );
+            (sim, bound.admitted.place_shards(sg.num_shards))
+        });
         Self {
             // Reuse the plan granted at bind time: no per-query resource
             // re-validation.
             scheduler: bound.admitted.scheduler(cap),
             sim: AccelSimulator::new(pipeline.device.clone(), pipeline.design.pipeline),
+            multipe,
+            mp_edges: 0,
+            mp_pull: 0,
+            pipeline_depth: pipeline.design.pipeline.depth as u64,
             trace: Trace::default(),
             transfers: Vec::with_capacity(1),
             bytes_per_edge: if pipeline.program.uses_weights { 12 } else { 8 },
@@ -82,6 +112,39 @@ impl QueryContext {
             self.trace.record(step);
         }
         self.scheduler.end_superstep(trace.dsts.len());
+        Ok(())
+    }
+
+    /// Sharded lockstep observer body: account one superstep in the
+    /// scheduler and drive the multi-PE simulator with the engine's real
+    /// per-shard destination streams and boundary-message counts.
+    fn sharded_superstep(&mut self, trace: &ShardedSuperstepTrace<'_>) -> Result<()> {
+        self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        let (mp, pe_of_shard) =
+            self.multipe.as_mut().expect("sharded superstep requires a partitioned binding");
+        let step = mp.superstep_shards(trace.shard_dsts, trace.shard_crossing, pe_of_shard);
+        let edges: u64 = trace.shard_dsts.iter().map(|d| d.len() as u64).sum();
+        self.mp_edges += edges;
+        let pulled = trace.directions.contains(&Direction::Pull);
+        if pulled {
+            self.mp_pull += 1;
+        }
+        if self.want_trace {
+            self.trace.record(SuperstepSim {
+                index: trace.index,
+                edges,
+                active_vertices: trace.active_rows,
+                direction: if pulled { Direction::Pull } else { Direction::Push },
+                shards: trace.shard_dsts.len() as u32,
+                cycles: CycleBreakdown {
+                    compute: step.critical_cycles,
+                    fill_drain: self.pipeline_depth,
+                    ..Default::default()
+                },
+                launch_seconds: LAUNCH_SECONDS,
+            });
+        }
+        self.scheduler.end_superstep(edges as usize);
         Ok(())
     }
 }
@@ -206,7 +269,17 @@ impl<'p> BoundPipeline<'p> {
         //     touch (or build) those caches.
         let cap = self.cap_for(opts);
         let mut ctx = QueryContext::new(self, cap, opts.trace_path.is_some());
-        let view = if opts.direction == gas::DirectionPolicy::PushOnly {
+        // Partitioned bindings execute the sharded engine: one shard per
+        // part, per-shard push/pull decisions, threaded shard workers —
+        // bit-identical values to the monolithic interpreter (the
+        // destination-ownership invariant; property-tested).
+        let sharded = self.graph.sharded();
+        let num_shards = sharded.map_or(0, |sg| sg.num_shards);
+        let view = if sharded.is_some() {
+            // shards carry their own CSR/CSC slices; the monolithic view
+            // only supplies init sizing and PageRank out-degrees
+            self.graph.engine_view()
+        } else if opts.direction == gas::DirectionPolicy::PushOnly {
             gas::EngineGraph::push_only(csr)
         } else if program.is_damped_pagerank() {
             // full-sweep pull runs stream the same O(E) trace every
@@ -215,9 +288,21 @@ impl<'p> BoundPipeline<'p> {
         } else {
             self.graph.engine_view()
         };
-        let oracle = gas::run_with_policy(program, &view, opts.root, opts.direction, |trace| {
-            ctx.superstep(trace)
-        })?;
+        let mut crossing_msgs = 0u64;
+        let oracle = match sharded {
+            Some(sg) => {
+                let workers = opts.shard_workers.unwrap_or(sg.num_shards).max(1);
+                let run =
+                    run_sharded(program, &view, sg, opts.root, opts.direction, workers, |t| {
+                        ctx.sharded_superstep(t)
+                    })?;
+                crossing_msgs = run.crossing_msgs;
+                run.result
+            }
+            None => gas::run_with_policy(program, &view, opts.root, opts.direction, |trace| {
+                ctx.superstep(trace)
+            })?,
+        };
         // The interpreter self-limits at the program's own superstep bound;
         // exhausting that bound without meeting the convergence condition
         // is the same failure the scheduler cap guards against, so it must
@@ -285,10 +370,34 @@ impl<'p> BoundPipeline<'p> {
 
         // results DMA back (vertex values): modeled here, committed to the
         // shared ledger by the caller
-        let QueryContext { sim, trace: trace_log, mut transfers, .. } = ctx;
+        let QueryContext { sim, multipe, mp_edges, mp_pull, trace: trace_log, mut transfers, .. } =
+            ctx;
         transfers.push(self.comm.plan_read_back(4 * csr.num_vertices() as u64));
+        // Sharded queries: simulated workload is the multi-PE critical
+        // path; boundary-exchange traffic is a transfer class of its own,
+        // committed through the same ledger as the DMA records (so it is
+        // inside `transfer_seconds` — and thus `query_seconds` — while
+        // also reported separately as `exchange_seconds`).
+        let mut exchange_seconds = 0.0;
+        let sim_stats = match multipe {
+            Some((mp, _)) => {
+                if crossing_msgs > 0 {
+                    let exchange = self.comm.plan_exchange(crossing_msgs);
+                    exchange_seconds = exchange.seconds;
+                    transfers.push(exchange);
+                }
+                SimStats {
+                    supersteps: mp.supersteps,
+                    pull_supersteps: mp_pull,
+                    total_edges: mp_edges,
+                    cycles: mp.total,
+                    launch_seconds: mp.supersteps as f64 * LAUNCH_SECONDS,
+                    clock_hz: pipeline.design.pipeline.clock_hz,
+                }
+            }
+            None => sim.finish(),
+        };
         let transfer_seconds: f64 = transfers.iter().map(|r| r.seconds).sum();
-        let sim_stats = sim.finish();
 
         if let Some(path) = &opts.trace_path {
             trace_log.write_csv(path)?;
@@ -335,6 +444,9 @@ impl<'p> BoundPipeline<'p> {
             pull_supersteps,
             push_supersteps,
             edges_traversed,
+            shards: num_shards,
+            crossing_msgs,
+            exchange_seconds,
             hdl_lines: design.hdl_lines,
             // the report identity: rt = setup + query on every path
             rt_seconds: setup_seconds + query_seconds,
@@ -674,6 +786,84 @@ mod tests {
             seq_bound.comm().transfer_seconds().to_bits()
         );
         assert_eq!(par_bound.queries_run(), queries.len() as u64);
+    }
+
+    #[test]
+    fn partitioned_binding_runs_sharded_and_reports_exchange() {
+        use crate::prep::partition::PartitionStrategy;
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(10, 20_000, 0.57, 0.19, 0.19, 21);
+        let mono = c.load(&g, PrepOptions::named("rmat")).unwrap();
+        let shard = c
+            .load(
+                &g,
+                PrepOptions::named("rmat").with_partition(4, PartitionStrategy::BfsGrow),
+            )
+            .unwrap();
+        let rm = mono.query(&RunOptions::from_root(0)).unwrap();
+        let rs = shard.query(&RunOptions::from_root(0)).unwrap();
+        // monolithic reports stay shard-free
+        assert_eq!(rm.shards, 0);
+        assert_eq!(rm.crossing_msgs, 0);
+        assert_eq!(rm.exchange_seconds, 0.0);
+        // the sharded run converges identically (per-shard direction
+        // choices never change values or the superstep count)...
+        assert_eq!(rs.supersteps, rm.supersteps);
+        // ...and pinned push-only, it traverses exactly the same edges
+        let push = RunOptions::from_root(0).with_direction(gas::DirectionPolicy::PushOnly);
+        let pm = mono.query(&push).unwrap();
+        let ps = shard.query(&push).unwrap();
+        assert_eq!(ps.supersteps, pm.supersteps);
+        assert_eq!(ps.edges_traversed, pm.edges_traversed);
+        // ...with the sharding visible in the report
+        assert_eq!(rs.shards, 4);
+        assert!(rs.crossing_msgs > 0, "a 4-way rmat cut must cross");
+        assert!(rs.exchange_seconds > 0.0);
+        // exchange is priced inside transfer_seconds alongside read-back
+        let read_back = shard.comm().plan_read_back(4 * rs.num_vertices as u64).seconds;
+        assert!(
+            (rs.transfer_seconds - (read_back + rs.exchange_seconds)).abs() < 1e-15,
+            "transfer {} != read_back {} + exchange {}",
+            rs.transfer_seconds,
+            read_back,
+            rs.exchange_seconds
+        );
+        // the simulated workload is the multi-PE model over real traces
+        assert_eq!(rs.sim.supersteps, rs.supersteps);
+        assert_eq!(rs.sim.total_edges, rs.edges_traversed);
+        assert_eq!(rs.sim.pull_supersteps, rs.pull_supersteps);
+        assert!(rs.sim.cycles.total() > 0);
+        // the report identity holds on the sharded path too
+        assert!((rs.setup_seconds + rs.query_seconds - rs.rt_seconds).abs() < 1e-12);
+        assert!(
+            (rs.query_seconds
+                - (rs.sim_exec_seconds + rs.functional_exec_seconds + rs.transfer_seconds))
+                .abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn shard_worker_count_does_not_change_the_report() {
+        use crate::prep::partition::PartitionStrategy;
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 5);
+        let bound = c
+            .load(&g, PrepOptions::named("rmat").with_partition(4, PartitionStrategy::Hash))
+            .unwrap();
+        let base = bound.query(&RunOptions::from_root(0)).unwrap();
+        for workers in [1, 2, 7] {
+            let r = bound
+                .query(&RunOptions::from_root(0).with_shard_workers(workers))
+                .unwrap();
+            assert_eq!(r.supersteps, base.supersteps, "workers={workers}");
+            assert_eq!(r.edges_traversed, base.edges_traversed);
+            assert_eq!(r.crossing_msgs, base.crossing_msgs);
+            assert_eq!(r.sim.cycles.total(), base.sim.cycles.total());
+            assert_eq!(r.query_seconds.to_bits(), base.query_seconds.to_bits());
+        }
     }
 
     #[test]

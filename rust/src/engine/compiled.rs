@@ -60,6 +60,12 @@ pub struct RunOptions {
     /// property-tested); pin `PushOnly` to model the paper's push-stream
     /// schedule, or `ForcePull` to stress the pull kernels.
     pub direction: DirectionPolicy,
+    /// Worker threads for sharded execution (graphs prepared with a
+    /// partitioning execute their shards across `std::thread::scope`
+    /// workers). `None` = one worker per shard; values are clamped to the
+    /// shard count. Ignored on unpartitioned graphs. Results are
+    /// bit-identical for every worker count (property-tested).
+    pub shard_workers: Option<usize>,
 }
 
 impl Default for RunOptions {
@@ -73,6 +79,7 @@ impl Default for RunOptions {
             trace_path: None,
             max_supersteps: None,
             direction: DirectionPolicy::Adaptive,
+            shard_workers: None,
         }
     }
 }
@@ -119,6 +126,13 @@ impl RunOptions {
     /// [`DirectionPolicy::Adaptive`]).
     pub fn with_direction(mut self, direction: DirectionPolicy) -> Self {
         self.direction = direction;
+        self
+    }
+
+    /// Cap the worker threads a sharded query fans its shards across
+    /// (default: one worker per shard).
+    pub fn with_shard_workers(mut self, workers: usize) -> Self {
+        self.shard_workers = Some(workers);
         self
     }
 }

@@ -162,8 +162,8 @@ impl<'a> EngineGraph<'a> {
 /// pull sweep stops scanning a vertex at its first frontier in-neighbor;
 /// full-scan pulls must read every in-edge of every swept vertex, so
 /// they only pay off near frontier saturation.
-const PULL_ALPHA_EARLY_EXIT: u64 = 8;
-const PULL_ALPHA_FULL_SCAN: u64 = 2;
+pub(crate) const PULL_ALPHA_EARLY_EXIT: u64 = 8;
+pub(crate) const PULL_ALPHA_FULL_SCAN: u64 = 2;
 
 /// Run `program` over `graph` from `root` (ignored by non-rooted
 /// programs). `observer` sees each superstep's edge trace before state is
@@ -242,7 +242,7 @@ pub fn run_with_policy(
     run_generic(program, &facts, graph, root, policy, &mut observer)
 }
 
-fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
+pub(crate) fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
     match &program.init {
         InitPolicy::RootAndDefault { root_value, default } => {
             let mut v = vec![default.lit(); n];
@@ -257,7 +257,7 @@ fn init_values(program: &GasProgram, n: usize, root: VertexId) -> Vec<f64> {
     }
 }
 
-fn reduce_identity(op: ReduceOp) -> f64 {
+pub(crate) fn reduce_identity(op: ReduceOp) -> f64 {
     match op {
         ReduceOp::Min => f64::INFINITY,
         ReduceOp::Max => f64::NEG_INFINITY,
@@ -265,7 +265,7 @@ fn reduce_identity(op: ReduceOp) -> f64 {
     }
 }
 
-fn reduce_combine(op: ReduceOp, a: f64, b: f64) -> f64 {
+pub(crate) fn reduce_combine(op: ReduceOp, a: f64, b: f64) -> f64 {
     match op {
         ReduceOp::Min => a.min(b),
         ReduceOp::Max => a.max(b),
@@ -279,7 +279,7 @@ fn reduce_combine(op: ReduceOp, a: f64, b: f64) -> f64 {
 /// destination value, and the push hot loop must not pay the load for
 /// the closed forms.
 #[inline(always)]
-fn eval_msg(
+pub(crate) fn eval_msg(
     compiled: CompiledApply,
     apply: &ApplyExpr,
     const_msg: f64,

@@ -62,6 +62,20 @@ pub struct RunReport {
     pub push_supersteps: u32,
     pub edges_traversed: u64,
 
+    // --- sharded execution (0 / 0 / 0.0 on monolithic runs)
+    /// Shards the query executed across (partitioned bindings run the
+    /// sharded engine: one shard per partition part, lockstep supersteps).
+    pub shards: usize,
+    /// Boundary-exchange messages: edge traversals whose source value
+    /// lived on a different shard than the owning destination, summed
+    /// over all supersteps.
+    pub crossing_msgs: u64,
+    /// Modeled seconds for the boundary-exchange traffic (priced by the
+    /// peer-to-peer exchange class, committed to the shared ledger).
+    /// Included in `transfer_seconds` — reported separately so the
+    /// exchange cost of a partitioning is visible on its own.
+    pub exchange_seconds: f64,
+
     // --- Table V metrics
     pub hdl_lines: usize,
     /// RT = `setup_seconds + query_seconds` (the paper's "running time
@@ -110,9 +124,18 @@ impl RunReport {
             self.query_seconds,
             self.transfer_seconds,
             self.hdl_lines,
-            match self.oracle_deviation {
-                Some(d) => format!(", oracle dev {d:.2e}"),
-                None => String::new(),
+            match (self.shards, self.oracle_deviation) {
+                (0, None) => String::new(),
+                (0, Some(d)) => format!(", oracle dev {d:.2e}"),
+                (k, dev) => format!(
+                    ", {k} shards ({} crossing msgs, exchange {:.6}s){}",
+                    self.crossing_msgs,
+                    self.exchange_seconds,
+                    match dev {
+                        Some(d) => format!(", oracle dev {d:.2e}"),
+                        None => String::new(),
+                    }
+                ),
             }
         )
     }
@@ -142,6 +165,9 @@ mod tests {
             pull_supersteps: 1,
             push_supersteps: 2,
             edges_traversed: 20,
+            shards: 0,
+            crossing_msgs: 0,
+            exchange_seconds: 0.0,
             hdl_lines: 35,
             rt_seconds: 4.1111,
             setup_seconds: 4.1,
@@ -153,5 +179,14 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("314.0 MTEPS"));
         assert!(s.contains("35 HDL lines"));
+        assert!(!s.contains("shards"), "monolithic summary stays shard-free");
+        let mut sharded = r.clone();
+        sharded.shards = 4;
+        sharded.crossing_msgs = 123;
+        sharded.exchange_seconds = 1.5e-5;
+        let s = sharded.summary();
+        assert!(s.contains("4 shards"), "{s}");
+        assert!(s.contains("123 crossing msgs"), "{s}");
+        assert!(s.contains("oracle dev"), "{s}");
     }
 }

@@ -60,6 +60,7 @@ pub mod frontier;
 pub mod gas;
 pub mod metrics;
 pub mod session;
+pub mod sharded;
 pub mod trace;
 pub mod xla_engine;
 
@@ -71,5 +72,6 @@ pub use frontier::Frontier;
 pub use gas::{DirectionPolicy, EngineGraph, GasResult, SuperstepTrace};
 pub use metrics::{FunctionalPath, RunReport};
 pub use session::{CompileError, Session, SessionConfig};
+pub use sharded::{run_sharded, ShardedRun, ShardedSuperstepTrace};
 pub use trace::Trace;
 pub use xla_engine::XlaRunResult;

@@ -1,0 +1,865 @@
+//! Sharded GAS execution — "k shards, one superstep". Each superstep
+//! fans out across the shards of a [`ShardedGraph`] on scoped worker
+//! threads (per-shard push/pull decision, Graphitron-style), then a
+//! deterministic boundary-exchange merge commits results on the main
+//! thread.
+//!
+//! ## Exactness contract
+//!
+//! `values`, `supersteps`, and `converged` are **bit-identical** to the
+//! monolithic engine ([`super::gas`]) for any program, shard count,
+//! worker count, and [`crate::prep::partition::PartitionStrategy`]. The
+//! load-bearing fact is destination ownership (see
+//! [`crate::prep::shard`]): every message destined to vertex `v` is
+//! produced and reduced inside `v`'s owner shard, in the monolithic
+//! delivery order, into a private accumulator. The cross-shard merge
+//! only writes disjoint vertex sets back, so merge order cannot
+//! reassociate any reduction.
+//!
+//! ## Merge discipline
+//!
+//! The merge order is still pinned by the program's
+//! [`ParallelSafety`](crate::analysis::ParallelSafety) certificate:
+//! `BitExact` (idempotent, order-insensitive) programs commit shards in
+//! worker *completion* order — first shard done, first merged — while
+//! `OrderSensitive`/`Racy` programs commit in fixed shard-major order.
+//! Both produce identical bits here (disjoint writebacks); the pin keeps
+//! the committed discipline aligned with the certificate so downstream
+//! consumers (multi-PE placement, future cross-device exchange where
+//! merges *could* touch shared rows) inherit a safe default.
+//!
+//! Like the monolithic engine, `edges_traversed`, traces, and the
+//! direction split describe the work actually performed — per-shard
+//! direction choices make those legitimately different from both the
+//! monolithic engine and other shard counts. `crossing_msgs` counts the
+//! boundary messages (edges whose source value lives in another shard)
+//! actually traversed, the volume the comm layer ledgers as exchange.
+
+use anyhow::Result;
+use std::sync::mpsc;
+
+use crate::analysis::ParallelSafety;
+use crate::dsl::apply::{ApplyEnv, CompiledApply};
+use crate::dsl::params::ParamSet;
+use crate::dsl::program::{
+    Convergence, Direction, FrontierPolicy, GasProgram, InitPolicy, ReduceOp, Writeback,
+};
+use crate::graph::VertexId;
+use crate::prep::shard::{Shard, ShardedGraph};
+
+use super::frontier::Frontier;
+use super::gas::{
+    eval_msg, init_values, reduce_combine, reduce_identity, DirectionPolicy, EngineGraph,
+    GasResult, PULL_ALPHA_EARLY_EXIT, PULL_ALPHA_FULL_SCAN,
+};
+
+/// Per-superstep trace of a sharded run — the sharded analogue of
+/// [`super::gas::SuperstepTrace`], carrying one destination stream per
+/// shard so the multi-PE simulator can charge each shard's traffic to
+/// its own PE.
+pub struct ShardedSuperstepTrace<'a> {
+    pub index: u32,
+    /// Destination stream of every shard this superstep (push sub-row
+    /// scatter order or CSC ascending runs, per that shard's direction).
+    pub shard_dsts: &'a [&'a [u32]],
+    /// Boundary messages each shard traversed this superstep (edges with
+    /// a foreign source).
+    pub shard_crossing: &'a [u64],
+    /// Direction each shard ran this superstep.
+    pub directions: &'a [Direction],
+    /// Rows opened across all shards (active push rows + swept pull rows).
+    pub active_rows: u64,
+}
+
+/// Result of a sharded run: the monolithic-identical [`GasResult`] plus
+/// the total boundary-exchange volume for the comm ledger.
+pub struct ShardedRun {
+    pub result: GasResult,
+    /// Total boundary messages traversed (summed over shards and
+    /// supersteps) — the exchange volume `CommManager::plan_exchange`
+    /// prices.
+    pub crossing_msgs: u64,
+}
+
+/// Sharded analogue of [`super::gas::run_with_policy`]: execute
+/// `program` over the shards of `sg` with up to `workers` threads.
+/// `g` supplies the monolithic arrays the serial parts still read
+/// (init sizing, PageRank out-degrees); `sg` must be built from the
+/// same graph.
+pub fn run_sharded(
+    program: &GasProgram,
+    g: &EngineGraph<'_>,
+    sg: &ShardedGraph,
+    root: VertexId,
+    policy: DirectionPolicy,
+    workers: usize,
+    mut observer: impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
+) -> Result<ShardedRun> {
+    let owned;
+    let program = if program.has_runtime_params() {
+        owned = program.instantiate(&ParamSet::new())?;
+        &owned
+    } else {
+        program
+    };
+    let facts = crate::analysis::analyze(program);
+    if facts.damped_iteration {
+        return run_pagerank_sharded(program, g, sg, policy, workers, &mut observer);
+    }
+    run_generic_sharded(program, &facts, g, sg, root, policy, workers, &mut observer)
+}
+
+/// Per-shard reusable scratch: the sharded split of the monolithic
+/// engine's `acc`/`touched`/`dsts` arrays, local-indexed so each worker
+/// touches only its own cache lines.
+struct ShardScratch {
+    /// Reduction accumulator per owned vertex (local index), reset to the
+    /// reduce identity after every writeback.
+    acc: Vec<f64>,
+    touched_flag: Vec<bool>,
+    /// Local ids of vertices that received a message, insertion order.
+    touched: Vec<u32>,
+    /// Global destination stream (this shard's slice of the superstep
+    /// trace).
+    dsts: Vec<u32>,
+    /// Boundary messages this superstep (foreign-source edges traversed).
+    crossing: u64,
+    /// Rows this shard opened (frontier rows pushed or owned rows swept).
+    rows: u64,
+    direction: Direction,
+}
+
+/// One shard's share of one superstep: direction decision, then the
+/// push-scatter or pull-gather inner loop of the monolithic engine
+/// restricted to this shard's slice. Runs on a worker thread; writes
+/// only `scr`.
+#[allow(clippy::too_many_arguments)]
+fn process_shard(
+    s: usize,
+    shard: &Shard,
+    scr: &mut ShardScratch,
+    sg: &ShardedGraph,
+    program: &GasProgram,
+    compiled: CompiledApply,
+    const_msg: f64,
+    iter: u32,
+    values: &[f64],
+    cur: &Frontier,
+    n: usize,
+    active_policy: bool,
+    policy: DirectionPolicy,
+    early_exit_ok: bool,
+    sweep_unvisited_only: bool,
+    unvisited: f64,
+) {
+    let is_unvisited = |x: f64| x == unvisited || (x.is_nan() && unvisited.is_nan());
+    scr.dsts.clear();
+    scr.touched.clear();
+    scr.crossing = 0;
+    // Per-shard direction decision (Graphitron-style): the frontier's
+    // sub-row mass *into this shard* against this shard's edge count.
+    // A frontier dense into one shard and sparse into another legally
+    // splits push/pull within one superstep — values are unaffected
+    // because both inner loops reduce in delivery order.
+    let m_s = shard.push_dsts.len() as u64;
+    scr.direction = match policy {
+        DirectionPolicy::PushOnly => Direction::Push,
+        DirectionPolicy::ForcePull => Direction::Pull,
+        DirectionPolicy::Adaptive => {
+            if !active_policy {
+                Direction::Pull
+            } else {
+                let m_f: u64 =
+                    cur.as_slice().iter().map(|&u| shard.push_row_len(u) as u64).sum();
+                let alpha =
+                    if early_exit_ok { PULL_ALPHA_EARLY_EXIT } else { PULL_ALPHA_FULL_SCAN };
+                if m_f.saturating_mul(alpha) >= m_s.max(1) {
+                    Direction::Pull
+                } else {
+                    Direction::Push
+                }
+            }
+        }
+    };
+    match scr.direction {
+        Direction::Push => {
+            scr.rows = if active_policy { cur.len() as u64 } else { n as u64 };
+            let mut process_src = |u: VertexId| {
+                let src_value = values[u as usize];
+                let foreign = sg.owner[u as usize] as usize != s;
+                for (v, w) in shard.push_row(u) {
+                    let msg = eval_msg(
+                        compiled,
+                        &program.apply,
+                        const_msg,
+                        src_value,
+                        || values[v as usize],
+                        w,
+                        iter,
+                    );
+                    let local = sg.local_id[v as usize] as usize;
+                    if !scr.touched_flag[local] {
+                        scr.touched_flag[local] = true;
+                        scr.touched.push(local as u32);
+                    }
+                    let slot = &mut scr.acc[local];
+                    *slot = reduce_combine(program.reduce, *slot, msg);
+                    scr.dsts.push(v);
+                    if foreign {
+                        scr.crossing += 1;
+                    }
+                }
+            };
+            if active_policy {
+                for &u in cur.as_slice() {
+                    process_src(u);
+                }
+            } else {
+                for u in 0..n as VertexId {
+                    process_src(u);
+                }
+            }
+        }
+        Direction::Pull => {
+            let mut swept = 0u64;
+            for (local, &v) in shard.owned.iter().enumerate() {
+                if sweep_unvisited_only && !is_unvisited(values[v as usize]) {
+                    continue;
+                }
+                swept += 1;
+                let dst_value = values[v as usize];
+                for (u, w) in shard.pull_row(local as u32) {
+                    scr.dsts.push(v);
+                    if sg.owner[u as usize] as usize != s {
+                        scr.crossing += 1;
+                    }
+                    if active_policy && !cur.contains(u) {
+                        continue;
+                    }
+                    let src_value = values[u as usize];
+                    let msg = eval_msg(
+                        compiled,
+                        &program.apply,
+                        const_msg,
+                        src_value,
+                        || dst_value,
+                        w,
+                        iter,
+                    );
+                    if !scr.touched_flag[local] {
+                        scr.touched_flag[local] = true;
+                        scr.touched.push(local as u32);
+                    }
+                    let slot = &mut scr.acc[local];
+                    *slot = reduce_combine(program.reduce, *slot, msg);
+                    if early_exit_ok {
+                        break;
+                    }
+                }
+            }
+            scr.rows = swept;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_generic_sharded(
+    program: &GasProgram,
+    facts: &crate::analysis::ProgramFacts,
+    g: &EngineGraph<'_>,
+    sg: &ShardedGraph,
+    root: VertexId,
+    policy: DirectionPolicy,
+    workers: usize,
+    observer: &mut impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
+) -> Result<ShardedRun> {
+    let csr = g.csr;
+    let n = csr.num_vertices();
+    let mut values = init_values(program, n, root);
+    if n == 0 {
+        return Ok(ShardedRun {
+            result: GasResult {
+                values,
+                supersteps: 0,
+                edges_traversed: 0,
+                converged: true,
+                pull_supersteps: 0,
+            },
+            crossing_msgs: 0,
+        });
+    }
+    if matches!(program.init, InitPolicy::RootAndDefault { .. }) && (root as usize) >= n {
+        anyhow::bail!("root {root} out of range for a {n}-vertex graph");
+    }
+    let unvisited = match &program.init {
+        InitPolicy::RootAndDefault { default, .. } => default.lit(),
+        _ => f64::NAN,
+    };
+
+    let active_policy = program.frontier == FrontierPolicy::Active;
+    let mut cur = Frontier::new(n);
+    let mut next = Frontier::new(n);
+    if active_policy {
+        match &program.init {
+            InitPolicy::RootAndDefault { .. } => cur.push(root),
+            _ => {
+                for v in 0..n as VertexId {
+                    cur.push(v);
+                }
+            }
+        }
+    }
+
+    let depth_cap: f64 =
+        program.depth_limit.as_ref().map(|s| s.lit()).unwrap_or(f64::INFINITY);
+    let max_steps = program.max_supersteps(n);
+    let compiled = CompiledApply::compile(&program.apply);
+    let early_exit_ok = facts.pull_early_exit;
+    let sweep_unvisited_only = active_policy && program.writeback == Writeback::IfUnvisited;
+    let is_unvisited = |x: f64| x == unvisited || (x.is_nan() && unvisited.is_nan());
+    // Merge discipline from the safety certificate (see module docs).
+    let pinned = !matches!(facts.parallel_safety, ParallelSafety::BitExact);
+
+    let k = sg.num_shards;
+    let w = workers.min(k).max(1);
+    let mut scratch: Vec<ShardScratch> = sg
+        .shards
+        .iter()
+        .map(|sh| ShardScratch {
+            acc: vec![reduce_identity(program.reduce); sh.num_owned()],
+            touched_flag: vec![false; sh.num_owned()],
+            touched: Vec::new(),
+            dsts: Vec::new(),
+            crossing: 0,
+            rows: 0,
+            direction: Direction::Push,
+        })
+        .collect();
+
+    let mut shard_crossing = vec![0u64; k];
+    let mut directions = vec![Direction::Push; k];
+    let mut merge_order: Vec<usize> = (0..k).collect();
+
+    let mut edges_traversed = 0u64;
+    let mut crossing_msgs = 0u64;
+    let mut supersteps = 0u32;
+    let mut pull_supersteps = 0u32;
+    let mut converged = false;
+
+    for iter in 0..max_steps {
+        let frontier_len = if active_policy { cur.len() } else { n };
+        if frontier_len == 0 {
+            converged = true;
+            break;
+        }
+        // The frontier bitmap must exist before workers share `&cur`
+        // (pull membership tests read it immutably).
+        if active_policy && policy != DirectionPolicy::PushOnly {
+            cur.ensure_bits();
+        }
+        let const_msg = program.apply.eval(&ApplyEnv {
+            src_value: 0.0,
+            dst_value: 0.0,
+            edge_weight: 0.0,
+            iter_count: iter as f64,
+        });
+
+        if w <= 1 {
+            for (s, scr) in scratch.iter_mut().enumerate() {
+                process_shard(
+                    s,
+                    &sg.shards[s],
+                    scr,
+                    sg,
+                    program,
+                    compiled,
+                    const_msg,
+                    iter,
+                    &values,
+                    &cur,
+                    n,
+                    active_policy,
+                    policy,
+                    early_exit_ok,
+                    sweep_unvisited_only,
+                    unvisited,
+                );
+            }
+        } else {
+            // Static bucketing: shard s runs on worker s % w — placement
+            // is deterministic, only completion timing varies.
+            let values_ref: &[f64] = &values;
+            let cur_ref: &Frontier = &cur;
+            let (tx, rx) = mpsc::channel::<usize>();
+            let mut buckets: Vec<Vec<(usize, &mut ShardScratch)>> =
+                (0..w).map(|_| Vec::new()).collect();
+            for (s, scr) in scratch.iter_mut().enumerate() {
+                buckets[s % w].push((s, scr));
+            }
+            std::thread::scope(|scope| {
+                for bucket in buckets {
+                    let tx = tx.clone();
+                    scope.spawn(move || {
+                        for (s, scr) in bucket {
+                            process_shard(
+                                s,
+                                &sg.shards[s],
+                                scr,
+                                sg,
+                                program,
+                                compiled,
+                                const_msg,
+                                iter,
+                                values_ref,
+                                cur_ref,
+                                n,
+                                active_policy,
+                                policy,
+                                early_exit_ok,
+                                sweep_unvisited_only,
+                                unvisited,
+                            );
+                            let _ = tx.send(s);
+                        }
+                    });
+                }
+            });
+            drop(tx);
+            if !pinned {
+                // BitExact: merge in completion order. All sends landed
+                // before the scope closed, so this drains exactly k.
+                merge_order.clear();
+                merge_order.extend(rx.try_iter());
+                debug_assert_eq!(merge_order.len(), k);
+            }
+        }
+
+        let mut active_rows = 0u64;
+        for (s, scr) in scratch.iter().enumerate() {
+            edges_traversed += scr.dsts.len() as u64;
+            shard_crossing[s] = scr.crossing;
+            directions[s] = scr.direction;
+            active_rows += scr.rows;
+        }
+        crossing_msgs += shard_crossing.iter().sum::<u64>();
+        if directions.iter().any(|d| *d == Direction::Pull) {
+            pull_supersteps += 1;
+        }
+
+        {
+            let shard_dsts: Vec<&[u32]> = scratch.iter().map(|scr| scr.dsts.as_slice()).collect();
+            observer(&ShardedSuperstepTrace {
+                index: iter,
+                shard_dsts: &shard_dsts,
+                shard_crossing: &shard_crossing,
+                directions: &directions,
+                active_rows,
+            })?;
+        }
+
+        // Boundary-exchange merge: commit each shard's reduced messages.
+        // Writebacks are disjoint (destination ownership), so this is the
+        // monolithic writeback re-ordered by shard — same values, same
+        // `changed` total, same next frontier after seal().
+        next.clear();
+        let mut changed = 0usize;
+        let zero_fill = program.writeback == Writeback::Overwrite
+            && program.frontier == FrontierPolicy::All
+            && program.reduce == ReduceOp::Sum;
+        for &s in &merge_order {
+            let shard = &sg.shards[s];
+            let scr = &mut scratch[s];
+            if zero_fill {
+                for (local, &v) in shard.owned.iter().enumerate() {
+                    if !scr.touched_flag[local] && values[v as usize] != 0.0 {
+                        values[v as usize] = 0.0;
+                        changed += 1;
+                    }
+                }
+            }
+            for &local in scr.touched.iter() {
+                let v = shard.owned[local as usize];
+                let reduced = scr.acc[local as usize];
+                let old = values[v as usize];
+                let new = match program.writeback {
+                    Writeback::MinCombine => old.min(reduced),
+                    Writeback::MaxCombine => old.max(reduced),
+                    Writeback::IfUnvisited => {
+                        if is_unvisited(old) {
+                            reduced
+                        } else {
+                            old
+                        }
+                    }
+                    Writeback::Overwrite => reduced,
+                    Writeback::DampedSum(_) => {
+                        unreachable!("damped programs run in run_pagerank_sharded")
+                    }
+                };
+                if new != old {
+                    values[v as usize] = new;
+                    changed += 1;
+                    if active_policy {
+                        next.push(v);
+                    }
+                }
+                scr.acc[local as usize] = reduce_identity(program.reduce);
+                scr.touched_flag[local as usize] = false;
+            }
+        }
+        supersteps = iter + 1;
+
+        let done = match &program.convergence {
+            Convergence::EmptyFrontier => {
+                if active_policy {
+                    next.is_empty()
+                } else {
+                    changed == 0
+                }
+            }
+            Convergence::NoChange => changed == 0,
+            Convergence::FixedIterations(c) => supersteps >= *c,
+            Convergence::DeltaBelow(_) => unreachable!("PR handled separately"),
+        } || supersteps as f64 >= depth_cap;
+        if done {
+            converged = true;
+            break;
+        }
+        if active_policy {
+            next.seal();
+            std::mem::swap(&mut cur, &mut next);
+        }
+    }
+
+    Ok(ShardedRun {
+        result: GasResult { values, supersteps, edges_traversed, converged, pull_supersteps },
+        crossing_msgs,
+    })
+}
+
+/// Per-shard PageRank scratch: the owner's slice of the `next` vector.
+struct PrShardScratch {
+    next_local: Vec<f64>,
+}
+
+/// One shard's PageRank gather: every owned destination sums its CSC row
+/// in delivery order — the identical float sequence the monolithic
+/// engine performs in either direction.
+fn pr_gather(shard: &Shard, scr: &mut PrShardScratch, contrib: &[f64], base: f64, damping: f64) {
+    for local in 0..shard.num_owned() {
+        let mut sum = 0f64;
+        for (u, _) in shard.pull_row(local as u32) {
+            sum += contrib[u as usize];
+        }
+        scr.next_local[local] = base + damping * sum;
+    }
+}
+
+/// Sharded PageRank. Ranks are bit-identical to [`super::gas`] in either
+/// direction because each destination's sum accumulates over its pull
+/// slice in delivery order; the policy only decides which trace stream
+/// the observer sees (and the push/pull accounting), exactly like the
+/// monolithic engine. Dangling mass, base, and the L1 delta are computed
+/// serially ascending-vertex on the merge thread — never as shard-major
+/// partial sums, which would reassociate the float reduction.
+fn run_pagerank_sharded(
+    program: &GasProgram,
+    g: &EngineGraph<'_>,
+    sg: &ShardedGraph,
+    policy: DirectionPolicy,
+    workers: usize,
+    observer: &mut impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
+) -> Result<ShardedRun> {
+    let damping = match &program.writeback {
+        Writeback::DampedSum(d) => d.lit(),
+        other => unreachable!("run_pagerank_sharded dispatched on a non-damped writeback {other:?}"),
+    };
+    let tol = match &program.convergence {
+        Convergence::DeltaBelow(t) => t.lit(),
+        _ => 1e-6,
+    };
+    let csr = g.csr;
+    let n = csr.num_vertices();
+    let nf = n.max(1) as f64;
+    let mut rank = vec![1.0 / nf; n];
+    let mut next = vec![0f64; n];
+    let deg_storage;
+    let out_deg: &[u32] = match g.out_deg {
+        Some(d) => d,
+        None => {
+            deg_storage = csr.out_degrees();
+            &deg_storage
+        }
+    };
+
+    // The shards carry their own pull slices, so the sharded engine can
+    // always gather; the policy only picks the reported direction and
+    // trace streams (push streams the shard's scatter order, pull its
+    // CSC ascending runs), fixed for the whole run like the monolithic
+    // PageRank.
+    let pull = policy != DirectionPolicy::PushOnly;
+    let direction = if pull { Direction::Pull } else { Direction::Push };
+    let k = sg.num_shards;
+    let w = workers.min(k).max(1);
+    let shard_dsts: Vec<&[u32]> = sg
+        .shards
+        .iter()
+        .map(|sh| if pull { sh.pull_dst_stream.as_slice() } else { sh.push_dsts.as_slice() })
+        .collect();
+    let shard_crossing: Vec<u64> = sg.shards.iter().map(|sh| sh.crossing_in).collect();
+    let directions = vec![direction; k];
+
+    let mut contrib = vec![0f64; n];
+    let mut scratch: Vec<PrShardScratch> = sg
+        .shards
+        .iter()
+        .map(|sh| PrShardScratch { next_local: vec![0f64; sh.num_owned()] })
+        .collect();
+
+    let mut edges_traversed = 0u64;
+    let mut crossing_msgs = 0u64;
+    let mut supersteps = 0u32;
+    let mut pull_supersteps = 0u32;
+    let mut converged = false;
+
+    for iter in 0..program.delta_bound() {
+        edges_traversed += csr.num_edges() as u64;
+        observer(&ShardedSuperstepTrace {
+            index: iter,
+            shard_dsts: &shard_dsts,
+            shard_crossing: &shard_crossing,
+            directions: &directions,
+            active_rows: n as u64,
+        })?;
+        crossing_msgs += sg.total_crossing;
+
+        let dangling: f64 = (0..n).filter(|&v| out_deg[v] == 0).map(|v| rank[v]).sum();
+        let base = (1.0 - damping) / nf + damping * dangling / nf;
+        for v in 0..n {
+            contrib[v] = rank[v] / out_deg[v].max(1) as f64;
+        }
+
+        if w <= 1 {
+            for (s, scr) in scratch.iter_mut().enumerate() {
+                pr_gather(&sg.shards[s], scr, &contrib, base, damping);
+            }
+        } else {
+            let contrib_ref: &[f64] = &contrib;
+            let mut buckets: Vec<Vec<(usize, &mut PrShardScratch)>> =
+                (0..w).map(|_| Vec::new()).collect();
+            for (s, scr) in scratch.iter_mut().enumerate() {
+                buckets[s % w].push((s, scr));
+            }
+            std::thread::scope(|scope| {
+                for bucket in buckets {
+                    scope.spawn(move || {
+                        for (s, scr) in bucket {
+                            pr_gather(&sg.shards[s], scr, contrib_ref, base, damping);
+                        }
+                    });
+                }
+            });
+        }
+
+        // Merge: disjoint scatter of each shard's owned slice, then the
+        // L1 delta serially ascending — the monolithic summation order.
+        for (s, scr) in scratch.iter().enumerate() {
+            for (local, &v) in sg.shards[s].owned.iter().enumerate() {
+                next[v as usize] = scr.next_local[local];
+            }
+        }
+        let mut delta = 0.0;
+        for v in 0..n {
+            delta += (next[v] - rank[v]).abs();
+        }
+        std::mem::swap(&mut rank, &mut next);
+        supersteps = iter + 1;
+        if pull {
+            pull_supersteps += 1;
+        }
+        if delta < tol {
+            converged = true;
+            break;
+        }
+    }
+    Ok(ShardedRun {
+        result: GasResult { values: rank, supersteps, edges_traversed, converged, pull_supersteps },
+        crossing_msgs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::algorithms;
+    use crate::graph::csr::Csr;
+    use crate::graph::{edgelist::EdgeList, generate};
+    use crate::prep::partition::{partition, PartitionStrategy};
+
+    fn sharded_setup(el: &EdgeList, k: usize, strat: PartitionStrategy) -> (Csr, Csr, ShardedGraph) {
+        let csr = Csr::from_edgelist(el);
+        let csc = csr.transpose();
+        let p = partition(el, k, strat).unwrap();
+        let sg = ShardedGraph::build(&csr, &csc, &p);
+        (csr, csc, sg)
+    }
+
+    fn assert_bit_identical(a: &GasResult, b: &GasResult, ctx: &str) {
+        assert_eq!(a.supersteps, b.supersteps, "{ctx}: supersteps");
+        assert_eq!(a.converged, b.converged, "{ctx}: converged");
+        assert_eq!(a.values.len(), b.values.len(), "{ctx}: len");
+        for (v, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: vertex {v}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sharded_bfs_matches_monolithic_across_shards_and_workers() {
+        let el = generate::rmat(9, 6_000, 0.57, 0.19, 0.19, 7);
+        let (csr, csc, _) = sharded_setup(&el, 1, PartitionStrategy::Range);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let mono =
+            crate::engine::gas::run_with_policy(&algorithms::bfs(), &g, 0, DirectionPolicy::Adaptive, |_| {
+                Ok(())
+            })
+            .unwrap();
+        for k in [1usize, 2, 4, 7] {
+            let (_, _, sg) = sharded_setup(&el, k, PartitionStrategy::DegreeBalanced);
+            for workers in [1usize, 4] {
+                let sh = run_sharded(
+                    &algorithms::bfs(),
+                    &g,
+                    &sg,
+                    0,
+                    DirectionPolicy::Adaptive,
+                    workers,
+                    |_| Ok(()),
+                )
+                .unwrap();
+                assert_bit_identical(&sh.result, &mono, &format!("bfs k={k} w={workers}"));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_pagerank_matches_monolithic_bitwise() {
+        let el = generate::rmat(8, 4_000, 0.57, 0.19, 0.19, 13);
+        let (csr, csc, sg) = sharded_setup(&el, 4, PartitionStrategy::Hash);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let program = algorithms::pagerank()
+            .instantiate(&ParamSet::new().bind("tolerance", 1e-4))
+            .unwrap();
+        let mono = crate::engine::gas::run_with_policy(
+            &program,
+            &g,
+            0,
+            DirectionPolicy::Adaptive,
+            |_| Ok(()),
+        )
+        .unwrap();
+        for workers in [1usize, 3] {
+            let sh =
+                run_sharded(&program, &g, &sg, 0, DirectionPolicy::Adaptive, workers, |_| Ok(()))
+                    .unwrap();
+            assert_bit_identical(&sh.result, &mono, &format!("pagerank w={workers}"));
+            assert_eq!(
+                sh.crossing_msgs,
+                sg.total_crossing * sh.result.supersteps as u64,
+                "dense sweeps exchange the full cut every superstep"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_sssp_order_sensitive_sum_still_bit_identical() {
+        // widest_path (Max) and sssp (Min) are BitExact; spmv (Sum over
+        // All frontier) is the OrderSensitive case that exercises the
+        // pinned merge path.
+        let el = generate::rmat(8, 3_500, 0.5, 0.2, 0.2, 29);
+        let (csr, csc, sg) = sharded_setup(&el, 4, PartitionStrategy::BfsGrow);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        for program in [algorithms::sssp(), algorithms::spmv(), algorithms::widest_path()] {
+            let mono = crate::engine::gas::run_with_policy(
+                &program,
+                &g,
+                2,
+                DirectionPolicy::Adaptive,
+                |_| Ok(()),
+            )
+            .unwrap();
+            for workers in [1usize, 4] {
+                let sh = run_sharded(&program, &g, &sg, 2, DirectionPolicy::Adaptive, workers, |_| {
+                    Ok(())
+                })
+                .unwrap();
+                assert_bit_identical(&sh.result, &mono, &format!("{} w={workers}", program.name));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_trace_streams_partition_the_monolithic_work() {
+        // Σ per-shard dsts per superstep == monolithic edges for push-only
+        // (where both engines traverse exactly the frontier's out-edges).
+        let el = generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 3);
+        let (csr, csc, sg) = sharded_setup(&el, 3, PartitionStrategy::Range);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let mut mono_edges = Vec::new();
+        let mono = crate::engine::gas::run_with_policy(
+            &algorithms::bfs(),
+            &g,
+            0,
+            DirectionPolicy::PushOnly,
+            |t| {
+                mono_edges.push(t.dsts.len());
+                Ok(())
+            },
+        )
+        .unwrap();
+        let mut shard_edges = Vec::new();
+        let mut crossings = 0u64;
+        let sh = run_sharded(&algorithms::bfs(), &g, &sg, 0, DirectionPolicy::PushOnly, 2, |t| {
+            shard_edges.push(t.shard_dsts.iter().map(|d| d.len()).sum::<usize>());
+            crossings += t.shard_crossing.iter().sum::<u64>();
+            Ok(())
+        })
+        .unwrap();
+        assert_bit_identical(&sh.result, &mono, "push-only trace");
+        assert_eq!(shard_edges, mono_edges);
+        assert_eq!(crossings, sh.crossing_msgs);
+        assert_eq!(sh.result.edges_traversed, mono.edges_traversed);
+    }
+
+    #[test]
+    fn sharded_handles_empty_and_tiny_graphs() {
+        // n == 0: converged fixpoint, no shards do anything
+        let el = EdgeList { num_vertices: 0, edges: Vec::new() };
+        let (csr, csc, sg) = sharded_setup(&el, 4, PartitionStrategy::Range);
+        let g = EngineGraph::with_csc(&csr, &csc, None);
+        // root-out-of-range applies only to n > 0; n == 0 short-circuits
+        let sh =
+            run_sharded(&algorithms::bfs(), &g, &sg, 0, DirectionPolicy::Adaptive, 4, |_| Ok(()))
+                .unwrap();
+        assert!(sh.result.converged);
+        assert_eq!(sh.result.supersteps, 0);
+        // single vertex per shard (n == k)
+        let el = generate::chain(4);
+        let (csr, csc, sg) = sharded_setup(&el, 4, PartitionStrategy::Range);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let mono =
+            crate::engine::gas::run_with_policy(&algorithms::bfs(), &g, 0, DirectionPolicy::Adaptive, |_| {
+                Ok(())
+            })
+            .unwrap();
+        let sh = run_sharded(&algorithms::bfs(), &g, &sg, 0, DirectionPolicy::Adaptive, 4, |_| {
+            Ok(())
+        })
+        .unwrap();
+        assert_bit_identical(&sh.result, &mono, "n == k");
+    }
+}

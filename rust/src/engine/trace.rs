@@ -25,11 +25,11 @@ impl Trace {
         let mut out = String::from(
             "superstep,edges,active_vertices,compute,conflict,row_start,\
              vertex_random,stream,fill_drain,total_cycles,launch_seconds,\
-             direction\n",
+             direction,shards\n",
         );
         for r in &self.rows {
             out += &format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.index,
                 r.edges,
                 r.active_vertices,
@@ -45,6 +45,7 @@ impl Trace {
                     Direction::Push => "push",
                     Direction::Pull => "pull",
                 },
+                r.shards,
             );
         }
         out
@@ -78,6 +79,7 @@ mod tests {
             edges,
             active_vertices: edges / 2,
             direction: if i % 2 == 0 { Direction::Push } else { Direction::Pull },
+            shards: 0,
             cycles: CycleBreakdown { compute: 10 * edges, ..Default::default() },
             launch_seconds: 5e-6,
         }
@@ -91,9 +93,9 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(1).unwrap().starts_with("0,4,2,40,"));
-        assert!(csv.lines().next().unwrap().ends_with(",direction"));
-        assert!(csv.lines().nth(1).unwrap().ends_with(",push"));
-        assert!(csv.lines().nth(2).unwrap().ends_with(",pull"));
+        assert!(csv.lines().next().unwrap().ends_with(",direction,shards"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",push,0"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",pull,0"));
         assert_eq!(t.frontier_profile(), vec![2, 4]);
         assert_eq!(t.direction_profile(), vec![Direction::Push, Direction::Pull]);
     }

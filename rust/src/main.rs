@@ -169,13 +169,15 @@ fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
     })
 }
 
-const USAGE: &str = "usage: jgraph <run|translate|lint|report|gen|sweep|info> [--help]
+const USAGE: &str = "usage: jgraph <run|translate|lint|partition|report|gen|sweep|info> [--help]
   run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
             [--root V] [--param name=value]... [--reorder S] [--trace out.csv]
             [--no-xla] [--verbose]
   translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
   lint      [--algo A] [--emit text|json]   (all library algorithms by default;
             exits nonzero on any deny-level JG*** diagnostic)
+  partition [--graph G] [--parts K] [--seed S] [--emit text|json]
+            (per-strategy split quality: edge imbalance, cut fraction, sizes)
   report    [--table N] [--fig N] [--interfaces] [--full]
   gen       --out PATH [--preset P] [--seed S]
   sweep     --algo A [--graph G] [--reorders]
@@ -196,6 +198,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(rest),
         "translate" => cmd_translate(rest),
         "lint" => cmd_lint(rest),
+        "partition" => cmd_partition(rest),
         "report" => cmd_report(rest),
         "gen" => cmd_gen(rest),
         "sweep" => cmd_sweep(rest),
@@ -364,6 +367,78 @@ fn cmd_lint(argv: &[String]) -> Result<()> {
     }
     if denies > 0 {
         bail!("lint: {denies} deny-level diagnostic(s)");
+    }
+    Ok(())
+}
+
+/// `jgraph partition`: split one graph with every strategy and print the
+/// quality statistics sharded execution cares about — edge imbalance
+/// (max/mean part edges: the slowest shard bounds every superstep), cut
+/// fraction (boundary-exchange volume), and part sizes. Text or JSON.
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    use jgraph::prep::partition::{partition, PartitionStrategy};
+    let args = Args::parse(argv, &[])?;
+    let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
+    let parts: usize = args.get_num("parts", 4)?;
+    let emit = args.get_or("emit", "text");
+    let strategies = [
+        PartitionStrategy::Range,
+        PartitionStrategy::Hash,
+        PartitionStrategy::DegreeBalanced,
+        PartitionStrategy::BfsGrow,
+    ];
+    let total_edges = el.num_edges();
+    if emit == "text" {
+        println!(
+            "partition quality: {name} ({}v/{}e) into {parts} parts",
+            el.num_vertices, total_edges
+        );
+        println!(
+            "{:>15} | {:>13} | {:>12} | part sizes (vertices)",
+            "strategy", "edge imbal.", "cut fraction"
+        );
+    }
+    let mut json_blocks = Vec::new();
+    for strategy in strategies {
+        let p = partition(&el, parts, strategy)?;
+        match emit.as_str() {
+            "text" => {
+                let sizes: Vec<String> =
+                    p.part_sizes.iter().map(|s| s.to_string()).collect();
+                println!(
+                    "{:>15} | {:>13.3} | {:>12.4} | [{}]",
+                    format!("{strategy:?}"),
+                    p.edge_imbalance(),
+                    p.cut_fraction(total_edges),
+                    sizes.join(", ")
+                );
+            }
+            "json" => {
+                let sizes: Vec<String> =
+                    p.part_sizes.iter().map(|s| s.to_string()).collect();
+                let edges: Vec<String> =
+                    p.part_edges.iter().map(|e| e.to_string()).collect();
+                json_blocks.push(format!(
+                    "{{\"strategy\":\"{strategy:?}\",\"parts\":{parts},\
+                     \"edge_imbalance\":{},\"cut_fraction\":{},\"cut_edges\":{},\
+                     \"part_sizes\":[{}],\"part_edges\":[{}]}}",
+                    p.edge_imbalance(),
+                    p.cut_fraction(total_edges),
+                    p.cut_edges,
+                    sizes.join(","),
+                    edges.join(",")
+                ));
+            }
+            other => bail!("unknown emit mode {other:?} (text|json)"),
+        }
+    }
+    if emit == "json" {
+        println!(
+            "{{\"graph\":\"{name}\",\"num_vertices\":{},\"num_edges\":{total_edges},\
+             \"strategies\":[{}]}}",
+            el.num_vertices,
+            json_blocks.join(",")
+        );
     }
     Ok(())
 }

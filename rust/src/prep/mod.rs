@@ -6,8 +6,10 @@ pub mod layout;
 pub mod partition;
 pub mod prepared;
 pub mod reorder;
+pub mod shard;
 
 pub use layout::{convert, Layout};
 pub use partition::{partition, PartitionStrategy, Partitioning};
 pub use prepared::{PrepOptions, PreparedGraph};
 pub use reorder::{reorder, ReorderStrategy};
+pub use shard::{Shard, ShardedGraph};

@@ -171,12 +171,21 @@ fn bfs_grow(el: &EdgeList, k: usize) -> Vec<u32> {
             }
         }
     }
-    // leftovers (disconnected tails): round-robin
-    let mut rr = 0u32;
+    // Leftovers (disconnected tails): least-loaded part. A blind
+    // round-robin starting at part 0 piles isolated vertices onto parts
+    // that already grew to their target, so graphs with many disconnected
+    // vertices came out badly imbalanced.
+    let mut load = vec![0usize; k];
+    for &a in assignment.iter() {
+        if a != u32::MAX {
+            load[a as usize] += 1;
+        }
+    }
     for a in assignment.iter_mut() {
         if *a == u32::MAX {
-            *a = rr % k as u32;
-            rr += 1;
+            let best = (0..k).min_by_key(|&p| load[p]).unwrap();
+            *a = best as u32;
+            load[best] += 1;
         }
     }
     assignment
@@ -256,6 +265,23 @@ mod tests {
             assert_eq!(p.assignment.len(), 3);
             assert!(p.assignment.iter().all(|&a| a < 8));
         }
+    }
+
+    #[test]
+    fn bfs_grow_spreads_isolated_leftovers_to_least_loaded_parts() {
+        // 20-vertex chain + 80 isolated vertices: the BFS growth fills
+        // parts from the chain, then the isolated tail must level the
+        // loads instead of piling onto the parts the chain already filled.
+        let mut g = generate::chain(20);
+        g.num_vertices = 100;
+        let p = partition(&g, 4, PartitionStrategy::BfsGrow).unwrap();
+        let max = p.part_sizes.iter().copied().max().unwrap();
+        let min = p.part_sizes.iter().copied().min().unwrap();
+        assert!(
+            max - min <= 1,
+            "leftover assignment must level part sizes, got {:?}",
+            p.part_sizes
+        );
     }
 
     #[test]

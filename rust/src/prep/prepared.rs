@@ -21,6 +21,7 @@ use crate::graph::VertexId;
 
 use super::partition::{partition, PartitionStrategy, Partitioning};
 use super::reorder::{reorder, ReorderStrategy};
+use super::shard::ShardedGraph;
 
 /// Per-graph deployment knobs: everything that shapes how a graph is laid
 /// out on the device, decided once per graph (not per query). This is the
@@ -85,6 +86,10 @@ pub struct PreparedGraph {
     /// the trace every full-sweep pull superstep streams, cached lazily
     /// so PageRank queries don't rebuild an O(E) array each.
     pull_stream: OnceLock<Vec<u32>>,
+    /// Per-partition CSR/CSC shards ([`ShardedGraph`]), built **lazily,
+    /// once** from the partitioning (and the CSC, which it forces) on the
+    /// first sharded query. Unpartitioned graphs never build shards.
+    sharded: OnceLock<ShardedGraph>,
     /// `(strategy, perm)` with `perm[old] = new` when reordering was
     /// applied. Roots passed to queries address the *reordered* id space,
     /// matching the old executor's semantics.
@@ -123,6 +128,7 @@ impl PreparedGraph {
             csc: OnceLock::new(),
             out_deg: OnceLock::new(),
             pull_stream: OnceLock::new(),
+            sharded: OnceLock::new(),
             reorder: reordered.map(|(strategy, _, perm)| (strategy, perm)),
             partitioning,
             avg_edge_gap,
@@ -144,6 +150,15 @@ impl PreparedGraph {
     /// built on first use.
     pub fn pull_stream(&self) -> &[u32] {
         self.pull_stream.get_or_init(|| self.csc().row_run_stream())
+    }
+
+    /// The cached [`ShardedGraph`], built on first use from the
+    /// partitioning; `None` when the graph was prepared without one.
+    /// Forces the CSC (the pull slices copy its rows).
+    pub fn sharded(&self) -> Option<&ShardedGraph> {
+        self.partitioning
+            .as_ref()
+            .map(|p| self.sharded.get_or_init(|| ShardedGraph::build(&self.csr, self.csc(), p)))
     }
 
     /// The engine's view of the cached arrays — what every pull-capable

@@ -1,0 +1,319 @@
+//! **ShardedGraph** — per-partition CSR/CSC slices with an owned/halo
+//! split and a precomputed boundary-exchange plan, built once from a
+//! [`Partitioning`] and cached on
+//! [`crate::prep::prepared::PreparedGraph`] the same lazy `OnceLock` way
+//! as the CSC and the pull stream.
+//!
+//! ## Ownership layout
+//!
+//! Sharding is by **destination**: shard `s` owns exactly the vertices
+//! the partitioning assigned to part `s`, and every edge belongs to the
+//! shard that owns its *destination*. Each shard therefore holds
+//!
+//! * a **push slice** — for every global source row `u`, the sub-row of
+//!   `u`'s out-edges whose destination this shard owns, in CSR stream
+//!   order (`push_offsets` is indexed by *global* source id so a worker
+//!   can walk any frontier without translation);
+//! * a **pull slice** — for every *owned* destination (local index), its
+//!   full in-edge row in CSC order, plus the CSC-order destination
+//!   stream (`pull_dst_stream`) that is the shard's full-sweep pull
+//!   trace;
+//! * the **halo** — the sorted, deduplicated set of foreign source
+//!   vertices this shard reads during a pull sweep (boundary vertices
+//!   whose values must be visible before the superstep), and
+//!   `crossing_in`, the number of cut edges entering the shard — the
+//!   per-superstep boundary-exchange volume of a dense sweep.
+//!
+//! ## Why destination ownership makes sharding bit-exact
+//!
+//! The engine's exactness contract (see [`crate::engine::gas`]) is that
+//! per-destination reductions accumulate messages in CSR-stream order.
+//! Destination ownership preserves exactly that order inside one shard:
+//! a push worker walks frontier sources ascending and each filtered
+//! sub-row keeps CSR order, so the message sequence arriving at any
+//! owned vertex `v` is identical to the monolithic engine's; a pull
+//! worker reads `v`'s CSC row, which [`Csr::transpose`] keeps in the
+//! same delivery order. Because owned sets are disjoint, workers write
+//! only private accumulators and **no cross-shard merge ever combines
+//! two partial reductions for the same vertex** — the merge-order rule
+//! is that ordering only matters *within* a destination row, and the
+//! layout confines every row to one shard. Boundary exchange is
+//! therefore pure message traffic (reads of foreign source values),
+//! never a float reassociation, which is what lets the sharded engine
+//! honor any [`crate::analysis::ParallelSafety`] certificate while
+//! staying bit-identical even for `OrderSensitive` float sums.
+
+use crate::graph::csr::Csr;
+use crate::graph::VertexId;
+
+use super::partition::Partitioning;
+
+/// One shard: the edges destined to its owned vertices, sliced both ways.
+#[derive(Debug, Clone, Default)]
+pub struct Shard {
+    /// Owned global vertex ids, ascending. `owned[local] = global`.
+    pub owned: Vec<u32>,
+    /// Push slice row pointers, indexed by **global** source id
+    /// (`len == n + 1`): `push_offsets[u]..push_offsets[u+1]` is `u`'s
+    /// sub-row of out-edges destined to this shard.
+    pub push_offsets: Vec<u32>,
+    /// Global destination ids of the push slice, CSR stream order.
+    pub push_dsts: Vec<u32>,
+    /// Weights parallel to `push_dsts`.
+    pub push_weights: Vec<f32>,
+    /// Pull slice row pointers, indexed by **local** owned index
+    /// (`len == owned.len() + 1`).
+    pub pull_offsets: Vec<u32>,
+    /// Global source ids of the pull slice, CSC (= delivery) order.
+    pub pull_srcs: Vec<u32>,
+    /// Weights parallel to `pull_srcs`.
+    pub pull_weights: Vec<f32>,
+    /// Each owned destination repeated in-degree times, ascending runs —
+    /// the shard's full-sweep pull trace stream.
+    pub pull_dst_stream: Vec<u32>,
+    /// Distinct foreign (boundary) source vertices read by this shard's
+    /// pull slice, sorted ascending.
+    pub halo: Vec<u32>,
+    /// Cut edges entering this shard (foreign source, owned destination):
+    /// the shard's per-dense-superstep exchange volume.
+    pub crossing_in: u64,
+}
+
+impl Shard {
+    pub fn num_owned(&self) -> usize {
+        self.owned.len()
+    }
+
+    /// Edges destined to this shard in the push slice.
+    pub fn num_push_edges(&self) -> usize {
+        self.push_dsts.len()
+    }
+
+    /// Length of global source `u`'s sub-row.
+    #[inline]
+    pub fn push_row_len(&self, u: VertexId) -> u32 {
+        self.push_offsets[u as usize + 1] - self.push_offsets[u as usize]
+    }
+
+    /// `(dst, weight)` pairs of global source `u`'s sub-row, CSR order.
+    #[inline]
+    pub fn push_row(&self, u: VertexId) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let a = self.push_offsets[u as usize] as usize;
+        let b = self.push_offsets[u as usize + 1] as usize;
+        self.push_dsts[a..b].iter().copied().zip(self.push_weights[a..b].iter().copied())
+    }
+
+    /// `(src, weight)` pairs of local destination `local`'s in-row, CSC
+    /// (= delivery) order.
+    #[inline]
+    pub fn pull_row(&self, local: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let a = self.pull_offsets[local as usize] as usize;
+        let b = self.pull_offsets[local as usize + 1] as usize;
+        self.pull_srcs[a..b].iter().copied().zip(self.pull_weights[a..b].iter().copied())
+    }
+}
+
+/// A prepared graph split into per-partition shards (see module docs).
+#[derive(Debug, Clone)]
+pub struct ShardedGraph {
+    pub num_shards: usize,
+    /// `owner[v]` = shard owning global vertex `v` (the partitioning's
+    /// assignment).
+    pub owner: Vec<u32>,
+    /// `local_id[v]` = `v`'s index in its owner's `owned` list.
+    pub local_id: Vec<u32>,
+    pub shards: Vec<Shard>,
+    /// Total cut edges (= `Σ shards[s].crossing_in` =
+    /// `Partitioning::cut_edges`).
+    pub total_crossing: u64,
+}
+
+impl ShardedGraph {
+    /// Slice `csr`/`csc` along `partitioning`. `csc` must be
+    /// `csr.transpose()` — the pull slices inherit its stable delivery
+    /// order.
+    pub fn build(csr: &Csr, csc: &Csr, partitioning: &Partitioning) -> Self {
+        let n = csr.num_vertices();
+        let k = partitioning.num_parts.max(1);
+        debug_assert_eq!(partitioning.assignment.len(), n, "partitioning matches graph");
+        debug_assert_eq!(csc.num_edges(), csr.num_edges(), "csc must transpose csr");
+        let owner = partitioning.assignment.clone();
+        let mut local_id = vec![0u32; n];
+        let mut shards: Vec<Shard> = (0..k).map(|_| Shard::default()).collect();
+        for (v, &s) in owner.iter().enumerate() {
+            local_id[v] = shards[s as usize].owned.len() as u32;
+            shards[s as usize].owned.push(v as u32);
+        }
+        // Push slices: one pass over the CSR stream, scattering each edge
+        // to its destination's shard and closing every shard's row after
+        // each source — O(E + k·n), and each sub-row keeps CSR order.
+        for shard in shards.iter_mut() {
+            shard.push_offsets.reserve(n + 1);
+            shard.push_offsets.push(0);
+        }
+        for u in 0..n as VertexId {
+            for (_, v, w) in csr.row_edges(u) {
+                let s = &mut shards[owner[v as usize] as usize];
+                s.push_dsts.push(v);
+                s.push_weights.push(w);
+            }
+            for shard in shards.iter_mut() {
+                shard.push_offsets.push(shard.push_dsts.len() as u32);
+            }
+        }
+        // Pull slices + halo + exchange plan: each shard copies its owned
+        // vertices' CSC rows verbatim (delivery order preserved).
+        let mut total_crossing = 0u64;
+        for (s, shard) in shards.iter_mut().enumerate() {
+            shard.pull_offsets.push(0);
+            let mut halo = Vec::new();
+            // borrow `owned` out of the shard we're mutating
+            let owned = std::mem::take(&mut shard.owned);
+            for &v in &owned {
+                for (_, u, w) in csc.row_edges(v) {
+                    shard.pull_srcs.push(u);
+                    shard.pull_weights.push(w);
+                    shard.pull_dst_stream.push(v);
+                    if owner[u as usize] as usize != s {
+                        shard.crossing_in += 1;
+                        halo.push(u);
+                    }
+                }
+                shard.pull_offsets.push(shard.pull_srcs.len() as u32);
+            }
+            shard.owned = owned;
+            halo.sort_unstable();
+            halo.dedup();
+            shard.halo = halo;
+            total_crossing += shard.crossing_in;
+        }
+        Self { num_shards: k, owner, local_id, shards, total_crossing }
+    }
+
+    /// Total edges across all shards' push slices (must equal the graph's
+    /// edge count: every edge lands in exactly one shard).
+    pub fn num_edges(&self) -> usize {
+        self.shards.iter().map(|s| s.push_dsts.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::prep::partition::{partition, PartitionStrategy};
+
+    const STRATS: [PartitionStrategy; 4] = [
+        PartitionStrategy::Range,
+        PartitionStrategy::Hash,
+        PartitionStrategy::DegreeBalanced,
+        PartitionStrategy::BfsGrow,
+    ];
+
+    fn build(el: &crate::graph::edgelist::EdgeList, k: usize, s: PartitionStrategy) -> ShardedGraph {
+        let csr = Csr::from_edgelist(el);
+        let csc = csr.transpose();
+        let p = partition(el, k, s).unwrap();
+        ShardedGraph::build(&csr, &csc, &p)
+    }
+
+    #[test]
+    fn shards_partition_vertices_and_edges_exactly() {
+        let el = generate::rmat(8, 2_500, 0.57, 0.19, 0.19, 11);
+        for strat in STRATS {
+            let sg = build(&el, 4, strat);
+            let mut seen = vec![false; el.num_vertices];
+            for (s, shard) in sg.shards.iter().enumerate() {
+                for (local, &v) in shard.owned.iter().enumerate() {
+                    assert!(!seen[v as usize], "{strat:?}: vertex owned twice");
+                    seen[v as usize] = true;
+                    assert_eq!(sg.owner[v as usize] as usize, s, "{strat:?}");
+                    assert_eq!(sg.local_id[v as usize] as usize, local, "{strat:?}");
+                }
+                // both slices carry the same edge set (destination-owned)
+                assert_eq!(shard.push_dsts.len(), shard.pull_srcs.len(), "{strat:?}");
+                assert_eq!(shard.pull_dst_stream.len(), shard.pull_srcs.len(), "{strat:?}");
+            }
+            assert!(seen.iter().all(|&b| b), "{strat:?}: uncovered vertex");
+            assert_eq!(sg.num_edges(), el.num_edges(), "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn crossing_sums_to_the_partition_cut() {
+        let el = generate::rmat(8, 3_000, 0.57, 0.19, 0.19, 5);
+        for strat in STRATS {
+            let csr = Csr::from_edgelist(&el);
+            let csc = csr.transpose();
+            let p = partition(&el, 4, strat).unwrap();
+            let sg = ShardedGraph::build(&csr, &csc, &p);
+            let sum: u64 = sg.shards.iter().map(|s| s.crossing_in).sum();
+            assert_eq!(sum, p.cut_edges as u64, "{strat:?}");
+            assert_eq!(sg.total_crossing, p.cut_edges as u64, "{strat:?}");
+            // halo vertices are foreign, sorted, and deduplicated
+            for (s, shard) in sg.shards.iter().enumerate() {
+                assert!(shard.halo.windows(2).all(|w| w[0] < w[1]), "{strat:?} shard {s}");
+                assert!(
+                    shard.halo.iter().all(|&u| sg.owner[u as usize] as usize != s),
+                    "{strat:?} shard {s}: owned vertex in halo"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pull_rows_preserve_monolithic_delivery_order() {
+        // the bit-exactness invariant: the (src, weight) sequence a shard
+        // gathers for any owned vertex equals the monolithic CSC row
+        let el = generate::rmat(7, 1_500, 0.57, 0.19, 0.19, 23);
+        let csr = Csr::from_edgelist(&el);
+        let csc = csr.transpose();
+        let p = partition(&el, 3, PartitionStrategy::Hash).unwrap();
+        let sg = ShardedGraph::build(&csr, &csc, &p);
+        for v in 0..csr.num_vertices() as u32 {
+            let shard = &sg.shards[sg.owner[v as usize] as usize];
+            let got: Vec<(u32, f32)> = shard.pull_row(sg.local_id[v as usize]).collect();
+            let want: Vec<(u32, f32)> =
+                csc.row_edges(v).map(|(_, u, w)| (u, w)).collect();
+            assert_eq!(got, want, "vertex {v}");
+        }
+        // and every push sub-row is exactly the CSR row filtered to the
+        // shard's owned destinations, in CSR order
+        for u in 0..csr.num_vertices() as u32 {
+            for (s, shard) in sg.shards.iter().enumerate() {
+                let got: Vec<(u32, f32)> = shard.push_row(u).collect();
+                let want: Vec<(u32, f32)> = csr
+                    .row_edges(u)
+                    .filter(|&(_, v, _)| sg.owner[v as usize] as usize == s)
+                    .map(|(_, v, w)| (v, w))
+                    .collect();
+                assert_eq!(got, want, "source {u} shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_whole_graph_with_no_crossing() {
+        let el = generate::erdos_renyi(120, 900, 3);
+        let sg = build(&el, 1, PartitionStrategy::Range);
+        assert_eq!(sg.num_shards, 1);
+        assert_eq!(sg.shards[0].num_owned(), el.num_vertices);
+        assert_eq!(sg.shards[0].num_push_edges(), el.num_edges());
+        assert_eq!(sg.total_crossing, 0);
+        assert!(sg.shards[0].halo.is_empty());
+    }
+
+    #[test]
+    fn more_shards_than_vertices_leaves_empty_shards_wellformed() {
+        let el = generate::chain(3);
+        let sg = build(&el, 8, PartitionStrategy::Range);
+        assert_eq!(sg.num_shards, 8);
+        let nonempty = sg.shards.iter().filter(|s| s.num_owned() > 0).count();
+        assert!(nonempty <= 3);
+        for shard in &sg.shards {
+            assert_eq!(shard.push_offsets.len(), el.num_vertices + 1);
+            assert_eq!(shard.pull_offsets.len(), shard.num_owned() + 1);
+        }
+        assert_eq!(sg.num_edges(), el.num_edges());
+    }
+}

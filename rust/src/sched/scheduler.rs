@@ -83,6 +83,14 @@ impl AdmittedPlan {
     pub fn scheduler(&self, cap: u32) -> RuntimeScheduler {
         RuntimeScheduler { plan: self.granted, events: self.events.clone(), superstep: 0, cap }
     }
+
+    /// Place execution shards onto the granted PEs round-robin; returns
+    /// `pe_of_shard`. The binding-time analogue of
+    /// [`RuntimeScheduler::place_partitions`] — shard placement is fixed
+    /// per binding, not per query, so it lives on the admitted plan.
+    pub fn place_shards(&self, num_shards: usize) -> Vec<u32> {
+        (0..num_shards).map(|s| (s as u32) % self.granted.pes.max(1)).collect()
+    }
 }
 
 /// Scheduler state for one run.
@@ -299,5 +307,14 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.place_partitions(&p), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn shard_placement_round_robin_over_granted_pes() {
+        let admitted =
+            AdmittedPlan::admit(ParallelismPlan::new(2, 2), &lane(), &DeviceModel::u200())
+                .unwrap();
+        assert_eq!(admitted.place_shards(5), vec![0, 1, 0, 1, 0]);
+        assert_eq!(admitted.place_shards(0), Vec::<u32>::new());
     }
 }

@@ -648,6 +648,130 @@ fn prop_pull_early_exit_fact_equals_legacy_shape_condition() {
     assert!(saw_exit, "generator never produced an early-exit-legal shape");
 }
 
+/// The PR 7 tentpole pin: sharded execution — per-partition CSR/CSC
+/// shards, per-shard push/pull decisions, threaded shard workers,
+/// deterministic boundary merge — is **bitwise identical** to the
+/// monolithic interpreter in values and supersteps, across random
+/// graphs, every partition strategy, shard counts {1,2,4,7}, and every
+/// direction policy. Destination ownership is what makes this hold even
+/// for the order-sensitive float Sum programs.
+#[test]
+fn prop_sharded_execution_identical_to_monolithic() {
+    use jgraph::engine::run_sharded;
+    use jgraph::prep::shard::ShardedGraph;
+    let strategies = [
+        PartitionStrategy::Range,
+        PartitionStrategy::Hash,
+        PartitionStrategy::DegreeBalanced,
+        PartitionStrategy::BfsGrow,
+    ];
+    cases(8, |seed, rng| {
+        let g = random_graph(rng, 150, 1_200);
+        let csr = Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let out_deg = csr.out_degrees();
+        let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        // one worker count per case, cycling 1..=4 (1 = the inline serial
+        // path, >1 = the std::thread::scope path)
+        let workers = 1 + (seed as usize % 4);
+        let programs = [
+            algorithms::bfs(),
+            algorithms::pagerank()
+                .instantiate(&jgraph::dsl::params::ParamSet::new().bind("tolerance", 1e-3))
+                .unwrap(),
+        ];
+        let monos: Vec<_> = programs
+            .iter()
+            .map(|p| gas::run(p, &csr, root, |_| {}).unwrap())
+            .collect();
+        for strategy in strategies {
+            for k in [1usize, 2, 4, 7] {
+                let p = partition(&g, k, strategy).unwrap();
+                let sg = ShardedGraph::build(&csr, &csc, &p);
+                for (program, mono) in programs.iter().zip(&monos) {
+                    for policy in [
+                        DirectionPolicy::Adaptive,
+                        DirectionPolicy::PushOnly,
+                        DirectionPolicy::ForcePull,
+                    ] {
+                        let got =
+                            run_sharded(program, &view, &sg, root, policy, workers, |_| Ok(()))
+                                .unwrap();
+                        assert_eq!(
+                            got.result.supersteps, mono.supersteps,
+                            "seed {seed} {} {strategy:?} k={k} {policy:?}: supersteps",
+                            program.name
+                        );
+                        assert_eq!(
+                            got.result.converged, mono.converged,
+                            "seed {seed} {} {strategy:?} k={k} {policy:?}: converged",
+                            program.name
+                        );
+                        for v in 0..csr.num_vertices() {
+                            assert_eq!(
+                                got.result.values[v].to_bits(),
+                                mono.values[v].to_bits(),
+                                "seed {seed} {} {strategy:?} k={k} {policy:?} vertex {v}: \
+                                 {} vs {}",
+                                program.name,
+                                got.result.values[v],
+                                mono.values[v]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Sharded edge cases: empty shards (more parts than vertices), an
+/// all-cut partitioning (hash split of a chain — every edge crosses),
+/// and one vertex per shard — all bit-identical to monolithic.
+#[test]
+fn prop_sharded_edge_cases_empty_allcut_and_singleton_shards() {
+    use jgraph::engine::run_sharded;
+    use jgraph::prep::shard::ShardedGraph;
+    let check = |g: &EdgeList, k: usize, strategy: PartitionStrategy| {
+        let csr = Csr::from_edgelist(g);
+        let csc = csr.transpose();
+        let out_deg = csr.out_degrees();
+        let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let p = partition(g, k, strategy).unwrap();
+        let sg = ShardedGraph::build(&csr, &csc, &p);
+        for program in [algorithms::bfs(), algorithms::sssp()] {
+            let mono = gas::run(&program, &csr, 0, |_| {}).unwrap();
+            let got = run_sharded(&program, &view, &sg, 0, DirectionPolicy::Adaptive, 4, |_| {
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(
+                got.result.supersteps, mono.supersteps,
+                "{} k={k} {strategy:?}",
+                program.name
+            );
+            for v in 0..csr.num_vertices() {
+                assert_eq!(
+                    got.result.values[v].to_bits(),
+                    mono.values[v].to_bits(),
+                    "{} k={k} {strategy:?} vertex {v}",
+                    program.name
+                );
+            }
+        }
+    };
+    // empty shards: 7 parts over 3 vertices
+    check(&generate::chain(3), 7, PartitionStrategy::Range);
+    // all-cut: hash split of a chain alternates parts along every edge
+    let chain = generate::chain(12);
+    let p = partition(&chain, 2, PartitionStrategy::Hash).unwrap();
+    assert_eq!(p.cut_edges, chain.num_edges(), "hash chain: every edge must cross");
+    check(&chain, 2, PartitionStrategy::Hash);
+    // one vertex per shard
+    check(&generate::chain(5), 5, PartitionStrategy::Range);
+}
+
 #[test]
 fn prop_generators_always_valid() {
     cases(15, |seed, rng| {
