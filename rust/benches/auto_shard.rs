@@ -1,0 +1,131 @@
+//! Auto-shard scaling: the PR 8 tentpole perf claim. An *un-partitioned*
+//! binding now auto-shards into degree-balanced destination ranges and
+//! fans each superstep across worker threads — same bit-exact sharded
+//! engine as user partitionings, zero user configuration. This bench
+//! pins the exactness on the measured graph, measures the wall-time win
+//! of the auto layout at 1/2/4 workers, and refreshes
+//! `BENCH_autoshard.json`, the perf-trajectory artifact CI tracks.
+//!
+//! Modes:
+//! * default — 2^15-vertex rmat (~1M edges) PageRank, auto-sharded
+//!   4-way; **asserts** >= 1.5x speedup at 4 workers over 1 when the
+//!   machine has >= 4 workers;
+//! * `--quick` — small graph, few iterations, no threshold: the CI
+//!   smoke that keeps the bench compiling and the JSON schema stable.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use jgraph::dsl::algorithms;
+use jgraph::dsl::params::ParamSet;
+use jgraph::engine::gas::{self, DirectionPolicy};
+use jgraph::engine::run_sharded;
+use jgraph::graph::generate;
+use jgraph::prep::partition::destination_ranges;
+use jgraph::prep::prepared::{PrepOptions, PreparedGraph};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (scale, edges, tol, warmup, iters) = if quick {
+        (11u32, 60_000usize, 1e-3, 1, 2)
+    } else {
+        (15u32, 1_048_576usize, 1e-4, 1, 5)
+    };
+    let mode = if quick { "quick" } else { "full" };
+    let shards = 4usize;
+
+    section(&format!(
+        "auto-shard scaling, rmat scale {scale} ({edges} edges, {shards} auto-shards, mode {mode})"
+    ));
+    let el = generate::rmat(scale, edges, 0.57, 0.19, 0.19, 7);
+    // Un-partitioned prepare: the auto layout is the only sharding. The
+    // count is pinned so the measurement is machine-independent; the
+    // automatic path picks the same layout with k = worker budget.
+    let prepared =
+        PreparedGraph::prepare(&el, &PrepOptions::named("rmat").with_auto_shards(shards))
+            .unwrap();
+    assert!(prepared.partitioning.is_none(), "bench must exercise the un-partitioned path");
+    let sg = prepared.auto_sharded().expect("pinned auto-shards must engage");
+    assert_eq!(sg.num_shards, shards);
+    let p = destination_ranges(&prepared.csr, prepared.csc(), shards);
+    println!(
+        "auto layout: {} cut edges ({:.1}% of {}), edge imbalance {:.3}",
+        p.cut_edges,
+        100.0 * p.cut_fraction(prepared.num_edges()),
+        prepared.num_edges(),
+        p.edge_imbalance(),
+    );
+
+    let view = prepared.engine_view();
+    let root = (0..prepared.num_vertices() as u32)
+        .max_by_key(|&v| prepared.csr.degree(v))
+        .unwrap_or(0);
+
+    // pull-heavy sweep: PageRank gathers over every shard's CSC slice
+    // each superstep — the workload auto-sharding exists to speed up
+    let pr = algorithms::pagerank().instantiate(&ParamSet::new().bind("tolerance", tol)).unwrap();
+
+    // exactness pin on the exact graph being measured (the property test
+    // covers random graphs; this guards the bench configuration)
+    let mono = gas::run(&pr, &prepared.csr, root, |_| {}).unwrap();
+    let auto_ref =
+        run_sharded(&pr, &view, sg, root, DirectionPolicy::Adaptive, 4, |_| Ok(())).unwrap();
+    assert_eq!(mono.supersteps, auto_ref.result.supersteps, "superstep drift");
+    assert!(
+        mono.values
+            .iter()
+            .zip(&auto_ref.result.values)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "auto-sharded values drifted from the monolithic reference"
+    );
+    println!("PageRank: {} supersteps", auto_ref.result.supersteps);
+
+    let time_workers = |w: usize, warmup: usize, iters: usize| {
+        bench(&format!("PageRank auto-sharded, {w} worker(s)"), warmup, iters, || {
+            run_sharded(&pr, &view, sg, root, DirectionPolicy::Adaptive, w, |_| Ok(()))
+                .unwrap()
+                .result
+                .supersteps
+        })
+    };
+    let d1 = time_workers(1, warmup, iters);
+    let d2 = time_workers(2, warmup, iters);
+    let d4 = time_workers(4, warmup, iters);
+    let speedup2 = d1.as_secs_f64() / d2.as_secs_f64();
+    let speedup4 = d1.as_secs_f64() / d4.as_secs_f64();
+    report_metric("auto-shard speedup (2 workers)", speedup2, "x");
+    report_metric("auto-shard speedup (4 workers)", speedup4, "x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"auto_shard\",\n  \"mode\": \"{mode}\",\n  \
+         \"graph\": {{ \"kind\": \"rmat\", \"scale\": {scale}, \"vertices\": {}, \"edges\": {} }},\n  \
+         \"auto_shards\": {shards},\n  \"cut_edges\": {},\n  \
+         \"supersteps\": {},\n  \
+         \"seconds_1_worker\": {:.6},\n  \"seconds_2_workers\": {:.6},\n  \
+         \"seconds_4_workers\": {:.6},\n  \
+         \"speedup_2_workers\": {speedup2:.2},\n  \"speedup_4_workers\": {speedup4:.2}\n}}\n",
+        prepared.num_vertices(),
+        prepared.num_edges(),
+        p.cut_edges,
+        auto_ref.result.supersteps,
+        d1.as_secs_f64(),
+        d2.as_secs_f64(),
+        d4.as_secs_f64(),
+    );
+    std::fs::write("BENCH_autoshard.json", &json).expect("writing BENCH_autoshard.json");
+    println!("\nwrote BENCH_autoshard.json:\n{json}");
+
+    // quick mode is the CI smoke: no threshold. The full-mode gate also
+    // needs the cores to exist — a box with fewer than 4 workers cannot
+    // make a 4-worker pool beat 1.
+    let cores = jgraph::sched::available_workers();
+    if !quick && cores >= 4 {
+        assert!(
+            speedup4 >= 1.5,
+            "4 auto-shard workers must be >= 1.5x over 1 on the 2^15 rmat (got {speedup4:.2}x)"
+        );
+    } else if !quick {
+        println!("skipping the 1.5x gate: only {cores} worker(s) available");
+    }
+}

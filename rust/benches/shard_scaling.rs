@@ -115,11 +115,17 @@ fn main() {
     std::fs::write("BENCH_shard.json", &json).expect("writing BENCH_shard.json");
     println!("\nwrote BENCH_shard.json:\n{json}");
 
-    // quick mode is the CI smoke: no threshold, shared runners are noisy
-    if !quick {
+    // quick mode is the CI smoke: no threshold, shared runners are noisy.
+    // The full-mode gate also needs the cores to exist: on a box with
+    // fewer than 4 workers the 4-worker pool physically cannot beat 1,
+    // so the wall-clock claim is only checkable where it can hold.
+    let cores = jgraph::sched::available_workers();
+    if !quick && cores >= 4 {
         assert!(
             speedup4 >= 1.5,
             "4 shard workers must be >= 1.5x over 1 on the 2^15 rmat (got {speedup4:.2}x)"
         );
+    } else if !quick {
+        println!("skipping the 1.5x gate: only {cores} worker(s) available");
     }
 }

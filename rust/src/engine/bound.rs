@@ -23,7 +23,9 @@ use crate::accel::simulator::{AccelSimulator, EdgeBatch, LAUNCH_SECONDS};
 use crate::accel::stats::{CycleBreakdown, SimStats, SuperstepSim};
 use crate::comm::{CommManager, TransferRecord};
 use crate::prep::prepared::PreparedGraph;
-use crate::sched::{AdmittedPlan, ParallelismPlan, RuntimeScheduler};
+use crate::sched::{
+    available_workers, AdmittedPlan, ParallelismPlan, RuntimeScheduler, WorkerBudget,
+};
 
 use crate::dsl::program::{Direction, GasProgram};
 
@@ -57,6 +59,10 @@ pub struct QueryContext {
     mp_pull: u32,
     /// Pipeline fill/drain depth (cycles) for sharded trace rows.
     pipeline_depth: u64,
+    /// Reused merge buffer for auto-sharded supersteps: the per-shard
+    /// destination streams concatenated in shard order, fed to the
+    /// single-PE simulator as one monolithic-style batch.
+    merged: Vec<u32>,
     trace: Trace,
     /// DMA records modeled (not yet committed) by this query; the engine
     /// folds them into the shared [`CommManager`] ledger in query order.
@@ -89,6 +95,7 @@ impl QueryContext {
             mp_edges: 0,
             mp_pull: 0,
             pipeline_depth: pipeline.design.pipeline.depth as u64,
+            merged: Vec::new(),
             trace: Trace::default(),
             transfers: Vec::with_capacity(1),
             bytes_per_edge: if pipeline.program.uses_weights { 12 } else { 8 },
@@ -145,6 +152,40 @@ impl QueryContext {
             });
         }
         self.scheduler.end_superstep(edges as usize);
+        Ok(())
+    }
+
+    /// Auto-sharded lockstep observer body: the engine fanned the
+    /// superstep across worker threads, but the *binding* is
+    /// un-partitioned — one simulated accelerator — so the per-shard
+    /// destination streams fold back into a single monolithic-style
+    /// [`EdgeBatch`] for the single-PE simulator. Shards are concatenated
+    /// in shard order (destination ownership makes that the monolithic
+    /// stream re-ordered by owner range); the batch direction is `Pull`
+    /// iff any shard pulled, matching the engine's `pull_supersteps`
+    /// accounting.
+    fn auto_sharded_superstep(&mut self, trace: &ShardedSuperstepTrace<'_>) -> Result<()> {
+        self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        self.merged.clear();
+        for dsts in trace.shard_dsts {
+            self.merged.extend_from_slice(dsts);
+        }
+        let direction = if trace.directions.contains(&Direction::Pull) {
+            Direction::Pull
+        } else {
+            Direction::Push
+        };
+        let step = self.sim.superstep(&EdgeBatch {
+            dsts: &self.merged,
+            active_rows: trace.active_rows,
+            bytes_per_edge: self.bytes_per_edge,
+            avg_edge_gap: self.avg_edge_gap,
+            direction,
+        });
+        if self.want_trace {
+            self.trace.record(step);
+        }
+        self.scheduler.end_superstep(self.merged.len());
         Ok(())
     }
 }
@@ -275,7 +316,19 @@ impl<'p> BoundPipeline<'p> {
         // destination-ownership invariant; property-tested).
         let sharded = self.graph.sharded();
         let num_shards = sharded.map_or(0, |sg| sg.num_shards);
-        let view = if sharded.is_some() {
+        // Un-partitioned bindings auto-shard for intra-superstep thread
+        // parallelism (degree-balanced destination ranges; see
+        // `PreparedGraph::auto_sharded`). The decision is static per
+        // binding — it never consults the momentary budget — so every
+        // query takes the same execution path and sequential vs
+        // batch-parallel reports stay bit-identical.
+        let auto = if sharded.is_some() {
+            None
+        } else {
+            self.graph.auto_sharded_for(opts.direction == gas::DirectionPolicy::PushOnly)
+        };
+        let auto_shards = auto.map_or(0, |sg| sg.num_shards as u32);
+        let view = if sharded.is_some() || auto.is_some() {
             // shards carry their own CSR/CSC slices; the monolithic view
             // only supplies init sizing and PageRank out-degrees
             self.graph.engine_view()
@@ -289,19 +342,57 @@ impl<'p> BoundPipeline<'p> {
             self.graph.engine_view()
         };
         let mut crossing_msgs = 0u64;
-        let oracle = match sharded {
-            Some(sg) => {
-                let workers = opts.shard_workers.unwrap_or(sg.num_shards).max(1);
-                let run =
-                    run_sharded(program, &view, sg, opts.root, opts.direction, workers, |t| {
-                        ctx.sharded_superstep(t)
-                    })?;
+        let oracle = match (sharded, auto) {
+            (Some(sg), _) => {
+                // Worker pool: the requested (or default one-per-shard,
+                // capped at the machine) size, leased from the global
+                // budget so batch × shard nesting divides the cores
+                // instead of multiplying. Results are identical at every
+                // granted size.
+                let want = opts
+                    .shard_workers
+                    .unwrap_or_else(|| sg.num_shards.min(available_workers()))
+                    .max(1);
+                let lease = WorkerBudget::global().lease(want);
+                let run = run_sharded(
+                    program,
+                    &view,
+                    sg,
+                    opts.root,
+                    opts.direction,
+                    lease.workers(),
+                    |t| ctx.sharded_superstep(t),
+                )?;
                 crossing_msgs = run.crossing_msgs;
                 run.result
             }
-            None => gas::run_with_policy(program, &view, opts.root, opts.direction, |trace| {
-                ctx.superstep(trace)
-            })?,
+            (None, Some(sg)) => {
+                // Auto-sharded: threads are an execution detail of the
+                // monolithic sweep, not a deployment shape — the report
+                // keeps monolithic accounting (`shards` 0, no exchange
+                // billing; the host never pays boundary DMA for shards
+                // that share one memory).
+                let want = opts
+                    .shard_workers
+                    .unwrap_or_else(available_workers)
+                    .clamp(1, sg.num_shards);
+                let lease = WorkerBudget::global().lease(want);
+                let run = run_sharded(
+                    program,
+                    &view,
+                    sg,
+                    opts.root,
+                    opts.direction,
+                    lease.workers(),
+                    |t| ctx.auto_sharded_superstep(t),
+                )?;
+                run.result
+            }
+            (None, None) => {
+                gas::run_with_policy(program, &view, opts.root, opts.direction, |trace| {
+                    ctx.superstep(trace)
+                })?
+            }
         };
         // The interpreter self-limits at the program's own superstep bound;
         // exhausting that bound without meeting the convergence condition
@@ -445,6 +536,7 @@ impl<'p> BoundPipeline<'p> {
             push_supersteps,
             edges_traversed,
             shards: num_shards,
+            auto_shards,
             crossing_msgs,
             exchange_seconds,
             hdl_lines: design.hdl_lines,
@@ -507,7 +599,16 @@ impl<'p> BoundPipeline<'p> {
         queries: &[RunOptions],
         num_workers: usize,
     ) -> Result<Vec<RunReport>> {
-        let workers = num_workers.clamp(1, queries.len().max(1));
+        // Lease the batch pool from the global budget: per-query shard
+        // pools lease from the same ledger, so queries × shards nesting
+        // *divides* the machine's cores instead of multiplying. The
+        // caller participates as worker 0, so a pool of `workers` spawns
+        // only `workers - 1` threads. Budget pressure shrinks the pool,
+        // never the reports (each query is modeled identically at any
+        // concurrency).
+        let want = num_workers.clamp(1, queries.len().max(1));
+        let lease = WorkerBudget::global().lease(want);
+        let workers = lease.workers();
         if workers == 1 {
             return queries.iter().map(|opts| self.query(opts)).collect();
         }
@@ -516,24 +617,27 @@ impl<'p> BoundPipeline<'p> {
         let failed = AtomicBool::new(false);
         let slots: Vec<Mutex<Option<Result<(RunReport, Vec<TransferRecord>)>>>> =
             queries.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    if failed.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= queries.len() {
-                        break;
-                    }
-                    let outcome = self.run_query(&queries[i]);
-                    if outcome.is_err() {
-                        failed.store(true, Ordering::Relaxed);
-                    }
-                    *slots[i].lock().unwrap() = Some(outcome);
-                });
+        let work = || loop {
+            if failed.load(Ordering::Relaxed) {
+                break;
             }
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= queries.len() {
+                break;
+            }
+            let outcome = self.run_query(&queries[i]);
+            if outcome.is_err() {
+                failed.store(true, Ordering::Relaxed);
+            }
+            *slots[i].lock().unwrap() = Some(outcome);
+        };
+        std::thread::scope(|scope| {
+            for _ in 1..workers {
+                scope.spawn(&work);
+            }
+            work();
         });
+        drop(lease);
 
         // merge: commit each query's DMA records in batch order so the shared
         // ledger is bit-identical to the sequential path
@@ -864,6 +968,72 @@ mod tests {
             assert_eq!(r.sim.cycles.total(), base.sim.cycles.total());
             assert_eq!(r.query_seconds.to_bits(), base.query_seconds.to_bits());
         }
+    }
+
+    #[test]
+    fn auto_sharded_query_keeps_monolithic_reporting() {
+        // An un-partitioned binding with pinned auto-shards runs the
+        // sharded engine but reports like the monolithic sweep: threads
+        // are an execution detail, not a deployment shape.
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(10, 40_000, 0.57, 0.19, 0.19, 17);
+        let mono = c.load(&g, PrepOptions::named("rmat").with_auto_shards(1)).unwrap();
+        let auto = c.load(&g, PrepOptions::named("rmat").with_auto_shards(4)).unwrap();
+        let rm = mono.query(&RunOptions::from_root(0)).unwrap();
+        let ra = auto.query(&RunOptions::from_root(0)).unwrap();
+        // sharding is visible in its own field, not the user-shard one
+        assert_eq!(rm.auto_shards, 0);
+        assert_eq!(ra.auto_shards, 4);
+        assert_eq!(ra.shards, 0, "auto-shards are not deployment shards");
+        assert_eq!(ra.crossing_msgs, 0);
+        assert_eq!(ra.exchange_seconds, 0.0);
+        // values/supersteps are the sharded-engine exactness contract
+        assert_eq!(ra.supersteps, rm.supersteps);
+        // the single-PE simulator sees one merged batch per superstep
+        assert_eq!(ra.sim.supersteps, ra.supersteps);
+        assert_eq!(ra.sim.total_edges, ra.edges_traversed);
+        assert_eq!(ra.sim.pull_supersteps, ra.pull_supersteps);
+        // no exchange billing: the read-back is the only transfer
+        let read_back = auto.comm().plan_read_back(4 * ra.num_vertices as u64).seconds;
+        assert_eq!(ra.transfer_seconds.to_bits(), read_back.to_bits());
+        // push-only pinned traverses exactly the monolithic edges
+        let push = RunOptions::from_root(0).with_direction(gas::DirectionPolicy::PushOnly);
+        let pm = mono.query(&push).unwrap();
+        let pa = auto.query(&push).unwrap();
+        assert_eq!(pa.supersteps, pm.supersteps);
+        assert_eq!(pa.edges_traversed, pm.edges_traversed);
+        assert_eq!(pa.pull_supersteps, 0);
+        // worker squeeze never changes an auto-sharded report
+        let one = auto.query(&RunOptions::from_root(0).with_shard_workers(1)).unwrap();
+        assert_eq!(one.supersteps, ra.supersteps);
+        assert_eq!(one.edges_traversed, ra.edges_traversed);
+        assert_eq!(one.query_seconds.to_bits(), ra.query_seconds.to_bits());
+    }
+
+    #[test]
+    fn global_budget_caps_nested_thread_fanout() {
+        // queries × shards nesting leases every thread from one ledger:
+        // the peak lease can never exceed the budget's extra permits, no
+        // matter how the batch and shard pools stack.
+        use crate::prep::partition::PartitionStrategy;
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 5);
+        let bound = c
+            .load(&g, PrepOptions::named("rmat").with_partition(4, PartitionStrategy::Hash))
+            .unwrap();
+        let queries: Vec<RunOptions> = (0..6).map(RunOptions::from_root).collect();
+        let reports = bound.run_batch_parallel(&queries, 16).unwrap();
+        assert_eq!(reports.len(), 6);
+        let budget = WorkerBudget::global();
+        // live threads = 1 root + leased extras ≤ the budgeted total
+        assert!(
+            budget.peak_leased() < budget.total_workers(),
+            "peak {} extras exceeds a {}-worker budget",
+            budget.peak_leased(),
+            budget.total_workers()
+        );
     }
 
     #[test]

@@ -60,11 +60,15 @@ pub struct RunOptions {
     /// property-tested); pin `PushOnly` to model the paper's push-stream
     /// schedule, or `ForcePull` to stress the pull kernels.
     pub direction: DirectionPolicy,
-    /// Worker threads for sharded execution (graphs prepared with a
-    /// partitioning execute their shards across `std::thread::scope`
-    /// workers). `None` = one worker per shard; values are clamped to the
-    /// shard count. Ignored on unpartitioned graphs. Results are
-    /// bit-identical for every worker count (property-tested).
+    /// Worker threads for sharded execution — user partitionings *and*
+    /// auto-sharded un-partitioned bindings fan their shards across
+    /// `std::thread::scope` workers. `None` = one worker per shard,
+    /// capped at [`crate::sched::available_workers`]; every pool
+    /// (requested or default) is then leased from the process-wide
+    /// [`crate::sched::WorkerBudget`], so nested parallelism
+    /// (`run_batch_parallel` × shard pools) divides the cores instead of
+    /// multiplying. Results are bit-identical for every worker count
+    /// (property-tested) — the budget only shapes timing.
     pub shard_workers: Option<usize>,
 }
 
@@ -130,7 +134,8 @@ impl RunOptions {
     }
 
     /// Cap the worker threads a sharded query fans its shards across
-    /// (default: one worker per shard).
+    /// (default: one worker per shard, capped at the machine's worker
+    /// budget).
     pub fn with_shard_workers(mut self, workers: usize) -> Self {
         self.shard_workers = Some(workers);
         self

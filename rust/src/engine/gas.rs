@@ -119,12 +119,16 @@ pub struct EngineGraph<'a> {
     /// times, ascending): the trace of a full-sweep pull superstep.
     /// Full-sweep pull runs (PageRank) rebuild it per run when absent.
     pub pull_dsts: Option<&'a [u32]>,
+    /// Push↔pull crossover constants the adaptive policy reads; defaults
+    /// to the hand-set `PULL_ALPHA_*` values, replaced by fitted ones
+    /// when the binding's graph has been calibrated.
+    pub crossover: Crossover,
 }
 
 impl<'a> EngineGraph<'a> {
     /// A push-only view: no CSC, so every superstep pushes.
     pub fn push_only(csr: &'a Csr) -> Self {
-        Self { csr, csc: None, out_deg: None, pull_dsts: None }
+        Self { csr, csc: None, out_deg: None, pull_dsts: None, crossover: Crossover::default() }
     }
 
     /// A view with the transpose cached — what
@@ -135,7 +139,7 @@ impl<'a> EngineGraph<'a> {
         if let Some(d) = out_deg {
             debug_assert_eq!(d.len(), csr.num_vertices());
         }
-        Self { csr, csc: Some(csc), out_deg, pull_dsts: None }
+        Self { csr, csc: Some(csc), out_deg, pull_dsts: None, crossover: Crossover::default() }
     }
 
     /// Attach the cached CSC-order destination stream (see
@@ -144,6 +148,13 @@ impl<'a> EngineGraph<'a> {
     pub fn with_pull_stream(mut self, pull_dsts: &'a [u32]) -> Self {
         debug_assert_eq!(pull_dsts.len(), self.csr.num_edges());
         self.pull_dsts = Some(pull_dsts);
+        self
+    }
+
+    /// Replace the default push↔pull crossover with fitted constants
+    /// (see [`crate::prep::calibrate`]).
+    pub fn with_crossover(mut self, crossover: Crossover) -> Self {
+        self.crossover = crossover;
         self
     }
 
@@ -164,6 +175,44 @@ impl<'a> EngineGraph<'a> {
 /// they only pay off near frontier saturation.
 pub(crate) const PULL_ALPHA_EARLY_EXIT: u64 = 8;
 pub(crate) const PULL_ALPHA_FULL_SCAN: u64 = 2;
+
+/// The push↔pull crossover constants one run decides directions with.
+/// The defaults are the hand-set `PULL_ALPHA_*` values above;
+/// `jgraph calibrate` fits per-graph replacements
+/// ([`crate::prep::calibrate`]) that
+/// [`crate::prep::prepared::PreparedGraph`] then hands every query via
+/// [`EngineGraph::with_crossover`]. Only the direction *choice* depends
+/// on these — values stay bit-identical under any crossover because push
+/// and pull reduce in the same delivery order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Crossover {
+    /// Alpha for early-exit-capable pulls (BFS-shaped programs).
+    pub alpha_early_exit: u64,
+    /// Alpha for full-scan pulls (every in-edge of every swept vertex).
+    pub alpha_full_scan: u64,
+}
+
+impl Default for Crossover {
+    fn default() -> Self {
+        Crossover {
+            alpha_early_exit: PULL_ALPHA_EARLY_EXIT,
+            alpha_full_scan: PULL_ALPHA_FULL_SCAN,
+        }
+    }
+}
+
+impl Crossover {
+    /// The alpha the adaptive policy compares frontier edge mass against,
+    /// picked by whether the program's pull sweep can early-exit.
+    #[inline]
+    pub(crate) fn alpha(&self, early_exit_ok: bool) -> u64 {
+        if early_exit_ok {
+            self.alpha_early_exit
+        } else {
+            self.alpha_full_scan
+        }
+    }
+}
 
 /// Run `program` over `graph` from `root` (ignored by non-rooted
 /// programs). `observer` sees each superstep's edge trace before state is
@@ -400,11 +449,7 @@ fn run_generic(
                     Direction::Pull
                 } else {
                     let m_f: u64 = cur.as_slice().iter().map(|&v| g.out_degree(v) as u64).sum();
-                    let alpha = if early_exit_ok {
-                        PULL_ALPHA_EARLY_EXIT
-                    } else {
-                        PULL_ALPHA_FULL_SCAN
-                    };
+                    let alpha = g.crossover.alpha(early_exit_ok);
                     if m_f.saturating_mul(alpha) >= m_total.max(1) {
                         Direction::Pull
                     } else {

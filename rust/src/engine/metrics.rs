@@ -66,6 +66,13 @@ pub struct RunReport {
     /// Shards the query executed across (partitioned bindings run the
     /// sharded engine: one shard per partition part, lockstep supersteps).
     pub shards: usize,
+    /// Auto-shards an *un-partitioned* binding fanned this query's
+    /// supersteps across (degree-balanced destination ranges; see
+    /// `PreparedGraph::auto_sharded`). Purely an execution detail: the
+    /// report keeps monolithic accounting (`shards` 0, `crossing_msgs`
+    /// 0, no exchange billing). 0 when the query ran the monolithic
+    /// sweep or a user partitioning.
+    pub auto_shards: u32,
     /// Boundary-exchange messages: edge traversals whose source value
     /// lived on a different shard than the owning destination, summed
     /// over all supersteps.
@@ -107,7 +114,7 @@ impl RunReport {
         format!(
             "{} [{}] on {} ({}v/{}e): {} supersteps ({} pull), {:.1} MTEPS simulated, \
              RT {:.1}s (setup {:.1} = prep {:.2} + compile {:.1} + deploy {:.2}; \
-             query {:.4} incl. read-back {:.6}), {} HDL lines{}",
+             query {:.4} incl. read-back {:.6}), {} HDL lines{}{}",
             self.program,
             self.translator,
             self.graph_name,
@@ -136,6 +143,11 @@ impl RunReport {
                         None => String::new(),
                     }
                 ),
+            },
+            if self.auto_shards > 1 {
+                format!(", {} auto-shards", self.auto_shards)
+            } else {
+                String::new()
             }
         )
     }
@@ -166,6 +178,7 @@ mod tests {
             push_supersteps: 2,
             edges_traversed: 20,
             shards: 0,
+            auto_shards: 0,
             crossing_msgs: 0,
             exchange_seconds: 0.0,
             hdl_lines: 35,
@@ -188,5 +201,10 @@ mod tests {
         assert!(s.contains("4 shards"), "{s}");
         assert!(s.contains("123 crossing msgs"), "{s}");
         assert!(s.contains("oracle dev"), "{s}");
+        let mut auto = r.clone();
+        auto.auto_shards = 8;
+        let s = auto.summary();
+        assert!(s.contains("8 auto-shards"), "{s}");
+        assert!(!s.contains("crossing msgs"), "auto-sharding bills no exchange: {s}");
     }
 }

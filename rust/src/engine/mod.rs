@@ -69,7 +69,7 @@ pub use compiled::{CompiledPipeline, RunOptions};
 #[allow(deprecated)]
 pub use executor::{Executor, ExecutorConfig};
 pub use frontier::Frontier;
-pub use gas::{DirectionPolicy, EngineGraph, GasResult, SuperstepTrace};
+pub use gas::{Crossover, DirectionPolicy, EngineGraph, GasResult, SuperstepTrace};
 pub use metrics::{FunctionalPath, RunReport};
 pub use session::{CompileError, Session, SessionConfig};
 pub use sharded::{run_sharded, ShardedRun, ShardedSuperstepTrace};

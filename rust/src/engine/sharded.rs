@@ -49,9 +49,16 @@ use crate::prep::shard::{Shard, ShardedGraph};
 
 use super::frontier::Frontier;
 use super::gas::{
-    eval_msg, init_values, reduce_combine, reduce_identity, DirectionPolicy, EngineGraph,
-    GasResult, PULL_ALPHA_EARLY_EXIT, PULL_ALPHA_FULL_SCAN,
+    eval_msg, init_values, reduce_combine, reduce_identity, Crossover, DirectionPolicy,
+    EngineGraph, GasResult,
 };
+
+/// Frontier size (in vertices) below which a superstep skips thread
+/// dispatch and sweeps the shards serially on the calling thread: for a
+/// sparse frontier the scoped-spawn cost exceeds the scatter itself.
+/// Purely a latency gate — serial and threaded supersteps produce the
+/// same scratch, so values and traces are unaffected.
+pub(crate) const SHARD_DISPATCH_MIN_FRONTIER: usize = 1024;
 
 /// Per-superstep trace of a sharded run — the sharded analogue of
 /// [`super::gas::SuperstepTrace`], carrying one destination stream per
@@ -148,6 +155,7 @@ fn process_shard(
     n: usize,
     active_policy: bool,
     policy: DirectionPolicy,
+    crossover: Crossover,
     early_exit_ok: bool,
     sweep_unvisited_only: bool,
     unvisited: f64,
@@ -171,8 +179,7 @@ fn process_shard(
             } else {
                 let m_f: u64 =
                     cur.as_slice().iter().map(|&u| shard.push_row_len(u) as u64).sum();
-                let alpha =
-                    if early_exit_ok { PULL_ALPHA_EARLY_EXIT } else { PULL_ALPHA_FULL_SCAN };
+                let alpha = crossover.alpha(early_exit_ok);
                 if m_f.saturating_mul(alpha) >= m_s.max(1) {
                     Direction::Pull
                 } else {
@@ -364,7 +371,11 @@ fn run_generic_sharded(
             iter_count: iter as f64,
         });
 
-        if w <= 1 {
+        // Cost gate: a frontier this sparse finishes faster swept
+        // serially than fanned out — scoped-spawn latency would dominate
+        // the scatter. Serial and threaded supersteps fill the same
+        // scratch, so the gate never changes values or traces.
+        if w <= 1 || frontier_len < SHARD_DISPATCH_MIN_FRONTIER {
             for (s, scr) in scratch.iter_mut().enumerate() {
                 process_shard(
                     s,
@@ -380,6 +391,7 @@ fn run_generic_sharded(
                     n,
                     active_policy,
                     policy,
+                    g.crossover,
                     early_exit_ok,
                     sweep_unvisited_only,
                     unvisited,
@@ -387,7 +399,9 @@ fn run_generic_sharded(
             }
         } else {
             // Static bucketing: shard s runs on worker s % w — placement
-            // is deterministic, only completion timing varies.
+            // is deterministic, only completion timing varies. Worker 0's
+            // bucket runs on the calling thread, so a pool of `w` workers
+            // spawns only `w - 1` threads (the caller is one worker).
             let values_ref: &[f64] = &values;
             let cur_ref: &Frontier = &cur;
             let (tx, rx) = mpsc::channel::<usize>();
@@ -397,6 +411,8 @@ fn run_generic_sharded(
                 buckets[s % w].push((s, scr));
             }
             std::thread::scope(|scope| {
+                let mut buckets = buckets.into_iter();
+                let mine = buckets.next().unwrap_or_default();
                 for bucket in buckets {
                     let tx = tx.clone();
                     scope.spawn(move || {
@@ -415,6 +431,7 @@ fn run_generic_sharded(
                                 n,
                                 active_policy,
                                 policy,
+                                g.crossover,
                                 early_exit_ok,
                                 sweep_unvisited_only,
                                 unvisited,
@@ -422,6 +439,28 @@ fn run_generic_sharded(
                             let _ = tx.send(s);
                         }
                     });
+                }
+                for (s, scr) in mine {
+                    process_shard(
+                        s,
+                        &sg.shards[s],
+                        scr,
+                        sg,
+                        program,
+                        compiled,
+                        const_msg,
+                        iter,
+                        values_ref,
+                        cur_ref,
+                        n,
+                        active_policy,
+                        policy,
+                        g.crossover,
+                        early_exit_ok,
+                        sweep_unvisited_only,
+                        unvisited,
+                    );
+                    let _ = tx.send(s);
                 }
             });
             drop(tx);
@@ -650,13 +689,20 @@ fn run_pagerank_sharded(
             for (s, scr) in scratch.iter_mut().enumerate() {
                 buckets[s % w].push((s, scr));
             }
+            // Worker 0's bucket runs on the calling thread (see the
+            // generic loop): `w` workers spawn only `w - 1` threads.
             std::thread::scope(|scope| {
+                let mut buckets = buckets.into_iter();
+                let mine = buckets.next().unwrap_or_default();
                 for bucket in buckets {
                     scope.spawn(move || {
                         for (s, scr) in bucket {
                             pr_gather(&sg.shards[s], scr, contrib_ref, base, damping);
                         }
                     });
+                }
+                for (s, scr) in mine {
+                    pr_gather(&sg.shards[s], scr, contrib_ref, base, damping);
                 }
             });
         }

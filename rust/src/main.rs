@@ -169,7 +169,8 @@ fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
     })
 }
 
-const USAGE: &str = "usage: jgraph <run|translate|lint|partition|report|gen|sweep|info> [--help]
+const USAGE: &str =
+    "usage: jgraph <run|translate|lint|partition|calibrate|report|gen|sweep|info> [--help]
   run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
             [--root V] [--param name=value]... [--reorder S] [--trace out.csv]
             [--no-xla] [--verbose]
@@ -178,6 +179,9 @@ const USAGE: &str = "usage: jgraph <run|translate|lint|partition|report|gen|swee
             exits nonzero on any deny-level JG*** diagnostic)
   partition [--graph G] [--parts K] [--seed S] [--emit text|json]
             (per-strategy split quality: edge imbalance, cut fraction, sizes)
+  calibrate [--graph G] [--seed S] [--iters N] [--tolerance T] [--root V]
+            [--emit text|json]  (sweep the push/pull crossover alphas and the
+            auto-shard count on the actual graph; prints fitted constants)
   report    [--table N] [--fig N] [--interfaces] [--full]
   gen       --out PATH [--preset P] [--seed S]
   sweep     --algo A [--graph G] [--reorders]
@@ -199,6 +203,7 @@ fn main() -> Result<()> {
         "translate" => cmd_translate(rest),
         "lint" => cmd_lint(rest),
         "partition" => cmd_partition(rest),
+        "calibrate" => cmd_calibrate(rest),
         "report" => cmd_report(rest),
         "gen" => cmd_gen(rest),
         "sweep" => cmd_sweep(rest),
@@ -439,6 +444,69 @@ fn cmd_partition(argv: &[String]) -> Result<()> {
             el.num_vertices,
             json_blocks.join(",")
         );
+    }
+    Ok(())
+}
+
+/// `jgraph calibrate`: measure the push↔pull crossover alphas and the
+/// auto-shard count on one graph and print every candidate's timing plus
+/// the fitted argmin — the constants
+/// [`jgraph::prep::PreparedGraph::set_calibration`] applies so queries
+/// run measured numbers instead of hand-set defaults.
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    use jgraph::prep::prepared::PreparedGraph;
+    use jgraph::prep::{calibrate, CalibrateOptions};
+    let args = Args::parse(argv, &[])?;
+    let (name, el) = load_graph(&args.get_or("graph", "email"), args.get_num("seed", 42u64)?)?;
+    let prepared = PreparedGraph::prepare(&el, &PrepOptions::named(name))?;
+    let root = match args.get("root") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<jgraph::graph::VertexId>()
+                .map_err(|e| anyhow::anyhow!("--root: {e}"))?,
+        ),
+    };
+    let opts = CalibrateOptions {
+        iters: args.get_num("iters", 3usize)?.max(1),
+        root,
+        tolerance: args.get_num("tolerance", 1e-3f64)?,
+    };
+    let report = calibrate(&prepared, &opts)?;
+    match args.get_or("emit", "text").as_str() {
+        "json" => print!("{}", report.to_json()),
+        "text" => {
+            println!(
+                "calibration: {} ({}v/{}e), best of {} run(s) per candidate",
+                report.graph, report.vertices, report.edges, opts.iters
+            );
+            println!("  alpha_early_exit sweep (adaptive BFS):");
+            for (a, t) in &report.early_exit_sweep {
+                let mark =
+                    if *a == report.fitted.pull_alpha_early_exit { "  <- fitted" } else { "" };
+                println!("    {a:>5} | {t:>9.6}s{mark}");
+            }
+            println!("  alpha_full_scan sweep (adaptive WCC):");
+            for (a, t) in &report.full_scan_sweep {
+                let mark =
+                    if *a == report.fitted.pull_alpha_full_scan { "  <- fitted" } else { "" };
+                println!("    {a:>5} | {t:>9.6}s{mark}");
+            }
+            println!("  auto-shard sweep (PageRank to fixpoint):");
+            for (k, t) in &report.shard_sweep {
+                let mark = if Some(*k) == report.fitted.auto_shards { "  <- fitted" } else { "" };
+                println!("    {k:>5} | {t:>9.6}s{mark}");
+            }
+            println!(
+                "fitted: pull_alpha_early_exit={} pull_alpha_full_scan={} auto_shards={}",
+                report.fitted.pull_alpha_early_exit,
+                report.fitted.pull_alpha_full_scan,
+                match report.fitted.auto_shards {
+                    Some(k) => k.to_string(),
+                    None => "auto".into(),
+                },
+            );
+        }
+        other => bail!("unknown emit mode {other:?} (text|json)"),
     }
     Ok(())
 }

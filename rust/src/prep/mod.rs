@@ -2,14 +2,16 @@
 //! **FIFO** (file I/O, provided by [`crate::graph::io`]), **Layout**
 //! (format conversion), **Partition**, and **Reorder**.
 
+pub mod calibrate;
 pub mod layout;
 pub mod partition;
 pub mod prepared;
 pub mod reorder;
 pub mod shard;
 
+pub use calibrate::{calibrate, CalibrateOptions, Calibration, CalibrationReport};
 pub use layout::{convert, Layout};
-pub use partition::{partition, PartitionStrategy, Partitioning};
+pub use partition::{destination_ranges, partition, PartitionStrategy, Partitioning};
 pub use prepared::{PrepOptions, PreparedGraph};
 pub use reorder::{reorder, ReorderStrategy};
 pub use shard::{Shard, ShardedGraph};

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::graph::csr::Csr;
 use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
 
@@ -90,6 +91,67 @@ pub fn partition(el: &EdgeList, k: usize, strategy: PartitionStrategy) -> Result
         PartitionStrategy::BfsGrow => bfs_grow(el, k),
     };
     Ok(summarize(el, k, strategy, assignment))
+}
+
+/// Degree-balanced contiguous destination ranges — the auto-sharding
+/// split [`crate::prep::prepared::PreparedGraph`] builds when a binding
+/// has no user-requested partitioning. Vertices `[0, n)` are chunked
+/// into `k` contiguous ranges by walking the in-edge prefix sum and
+/// cutting at ~equal edge mass — **not** at equal vertex counts: a shard
+/// worker's per-superstep cost is proportional to the in-edges it
+/// gathers, so equal-count ranges leave skewed graphs serialized behind
+/// their heaviest range. Each vertex weighs `in_degree + 1` so
+/// zero-degree tails still spread instead of piling onto the last range.
+/// Destination ownership makes the resulting sharded execution
+/// bit-identical to the monolithic engine for free (see
+/// [`crate::engine::sharded`]).
+///
+/// `csc` must be `csr.transpose()`. Labeled [`PartitionStrategy::Range`]
+/// (it is one — the ranges are just edge-balanced).
+pub fn destination_ranges(csr: &Csr, csc: &Csr, k: usize) -> Partitioning {
+    debug_assert_eq!(csr.num_vertices(), csc.num_vertices(), "csc must transpose csr");
+    debug_assert_eq!(csr.num_edges(), csc.num_edges(), "csc must transpose csr");
+    let n = csc.num_vertices();
+    let k = k.max(1);
+    let total = csc.num_edges() as u64 + n as u64;
+    let mut assignment = vec![0u32; n];
+    let mut cum = 0u64;
+    let mut part = 0usize;
+    for v in 0..n {
+        // Advance to the next range once the running mass crosses this
+        // part's quota of `total / k` (kept in integer cross-multiplied
+        // form so the boundaries are exact and deterministic).
+        while part + 1 < k && cum * k as u64 >= (part as u64 + 1) * total {
+            part += 1;
+        }
+        assignment[v] = part as u32;
+        cum += csc.degree(v as VertexId) as u64 + 1;
+    }
+    let mut part_sizes = vec![0usize; k];
+    for &a in &assignment {
+        part_sizes[a as usize] += 1;
+    }
+    // Same summary semantics as `summarize`: part_edges counts src-side
+    // edges, cut_edges the src/dst-straddling ones.
+    let mut part_edges = vec![0usize; k];
+    let mut cut_edges = 0usize;
+    for u in 0..n as VertexId {
+        let pu = assignment[u as usize];
+        part_edges[pu as usize] += csr.degree(u) as usize;
+        for &v in csr.neighbors(u) {
+            if assignment[v as usize] != pu {
+                cut_edges += 1;
+            }
+        }
+    }
+    Partitioning {
+        strategy: PartitionStrategy::Range,
+        num_parts: k,
+        assignment,
+        part_sizes,
+        part_edges,
+        cut_edges,
+    }
 }
 
 fn summarize(
@@ -282,6 +344,75 @@ mod tests {
             "leftover assignment must level part sizes, got {:?}",
             p.part_sizes
         );
+    }
+
+    #[test]
+    fn destination_ranges_are_contiguous_and_edge_balanced() {
+        let g = generate::rmat(10, 30_000, 0.57, 0.19, 0.19, 7);
+        let csr = crate::graph::csr::Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let p = destination_ranges(&csr, &csc, 4);
+        assert_eq!(p.num_parts, 4);
+        assert_eq!(p.assignment.len(), g.num_vertices);
+        // contiguous ranges: part ids never decrease along the vertex axis
+        assert!(p.assignment.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(p.part_sizes.iter().sum::<usize>(), g.num_vertices);
+        assert_eq!(p.part_edges.iter().sum::<usize>(), g.num_edges());
+        // balance target is in-edge mass per range: every range's mass
+        // stays within one quota plus the heaviest single vertex
+        let in_deg = csc.out_degrees();
+        let mut mass = vec![0u64; 4];
+        for (v, &a) in p.assignment.iter().enumerate() {
+            mass[a as usize] += in_deg[v] as u64 + 1;
+        }
+        let total: u64 = mass.iter().sum();
+        let heaviest = in_deg.iter().map(|&d| d as u64 + 1).max().unwrap();
+        for (i, &m) in mass.iter().enumerate() {
+            assert!(
+                m <= total / 4 + heaviest,
+                "range {i} mass {m} exceeds quota {} + heaviest {heaviest}",
+                total / 4
+            );
+        }
+        // the plain Range split ignores edge mass; on a skewed rmat the
+        // prefix-sum cut must balance it strictly better
+        let r = partition(&g, 4, PartitionStrategy::Range).unwrap();
+        let mut range_mass = vec![0u64; 4];
+        for (v, &a) in r.assignment.iter().enumerate() {
+            range_mass[a as usize] += in_deg[v] as u64 + 1;
+        }
+        assert!(
+            mass.iter().max().unwrap() < range_mass.iter().max().unwrap(),
+            "edge-balanced {mass:?} vs equal-count {range_mass:?}"
+        );
+    }
+
+    #[test]
+    fn destination_ranges_edge_cases() {
+        // more parts than vertices: all parts present, trailing ones empty
+        let g = generate::chain(3);
+        let csr = crate::graph::csr::Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let p = destination_ranges(&csr, &csc, 8);
+        assert_eq!(p.num_parts, 8);
+        assert_eq!(p.assignment.len(), 3);
+        assert!(p.assignment.iter().all(|&a| a < 8));
+        assert_eq!(p.part_sizes.iter().sum::<usize>(), 3);
+        // empty graph
+        let g = crate::graph::edgelist::EdgeList { num_vertices: 0, edges: Vec::new() };
+        let csr = crate::graph::csr::Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let p = destination_ranges(&csr, &csc, 4);
+        assert_eq!(p.num_parts, 4);
+        assert!(p.assignment.is_empty());
+        assert_eq!(p.cut_edges, 0);
+        // k == 0 clamps to one part
+        let g = generate::chain(5);
+        let csr = crate::graph::csr::Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let p = destination_ranges(&csr, &csc, 0);
+        assert_eq!(p.num_parts, 1);
+        assert!(p.assignment.iter().all(|&a| a == 0));
     }
 
     #[test]

@@ -19,7 +19,8 @@ use crate::graph::csr::Csr;
 use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
 
-use super::partition::{partition, PartitionStrategy, Partitioning};
+use super::calibrate::Calibration;
+use super::partition::{destination_ranges, partition, PartitionStrategy, Partitioning};
 use super::reorder::{reorder, ReorderStrategy};
 use super::shard::ShardedGraph;
 
@@ -36,11 +37,19 @@ pub struct PrepOptions {
     /// Optional Partition preprocessing (parts, strategy) for multi-PE
     /// placement.
     pub partition: Option<(usize, PartitionStrategy)>,
+    /// Auto-shard count for intra-superstep parallelism on an
+    /// *un-partitioned* binding. `None` (the default) sizes it
+    /// automatically from the worker budget with a cost gate
+    /// ([`PreparedGraph::AUTO_SHARD_MIN_EDGES`]); `Some(k)` pins `k`
+    /// shards regardless of the gate; `Some(1)` disables auto-sharding —
+    /// the pre-PR-8 single-thread monolithic sweep. Ignored when an
+    /// explicit `partition` is set (user shards win).
+    pub auto_shards: Option<usize>,
 }
 
 impl Default for PrepOptions {
     fn default() -> Self {
-        Self { graph_name: "graph".into(), reorder: None, partition: None }
+        Self { graph_name: "graph".into(), reorder: None, partition: None, auto_shards: None }
     }
 }
 
@@ -57,6 +66,13 @@ impl PrepOptions {
 
     pub fn with_partition(mut self, parts: usize, strategy: PartitionStrategy) -> Self {
         self.partition = Some((parts, strategy));
+        self
+    }
+
+    /// Pin the auto-shard count (see [`PrepOptions::auto_shards`]);
+    /// `with_auto_shards(1)` disables auto-sharding.
+    pub fn with_auto_shards(mut self, k: usize) -> Self {
+        self.auto_shards = Some(k);
         self
     }
 }
@@ -90,6 +106,17 @@ pub struct PreparedGraph {
     /// once** from the partitioning (and the CSC, which it forces) on the
     /// first sharded query. Unpartitioned graphs never build shards.
     sharded: OnceLock<ShardedGraph>,
+    /// Auto-sharding for un-partitioned bindings: degree-balanced
+    /// destination ranges ([`destination_ranges`]), built **lazily, once**
+    /// on the first query that can use them. `None` inside when the graph
+    /// is below the cost gate or the resolved shard count is 1.
+    auto_sharded: OnceLock<Option<ShardedGraph>>,
+    /// Requested auto-shard count ([`PrepOptions::auto_shards`]).
+    auto_shards: Option<usize>,
+    /// Fitted calibration constants (`jgraph calibrate`), set at most
+    /// once; queries read [`PreparedGraph::calibration`] which falls back
+    /// to the hand-set defaults.
+    calibration: OnceLock<Calibration>,
     /// `(strategy, perm)` with `perm[old] = new` when reordering was
     /// applied. Roots passed to queries address the *reordered* id space,
     /// matching the old executor's semantics.
@@ -129,6 +156,9 @@ impl PreparedGraph {
             out_deg: OnceLock::new(),
             pull_stream: OnceLock::new(),
             sharded: OnceLock::new(),
+            auto_sharded: OnceLock::new(),
+            auto_shards: opts.auto_shards,
+            calibration: OnceLock::new(),
             reorder: reordered.map(|(strategy, _, perm)| (strategy, perm)),
             partitioning,
             avg_edge_gap,
@@ -161,16 +191,104 @@ impl PreparedGraph {
             .map(|p| self.sharded.get_or_init(|| ShardedGraph::build(&self.csr, self.csc(), p)))
     }
 
+    /// Minimum edge count before *automatic* auto-sharding engages: below
+    /// this, one superstep finishes faster than the shard-merge machinery
+    /// costs, so tiny graphs keep the monolithic sweep. An explicit
+    /// [`PrepOptions::with_auto_shards`] bypasses the gate.
+    pub const AUTO_SHARD_MIN_EDGES: usize = 32_768;
+
+    /// Ceiling on the automatically-chosen shard count: beyond this the
+    /// per-superstep merge overhead outgrows what extra workers return.
+    pub const AUTO_SHARD_MAX: usize = 16;
+
+    /// The auto-sharding for an *un-partitioned* binding: degree-balanced
+    /// contiguous destination ranges (see [`destination_ranges`]), built
+    /// lazily once and shared by every query. Returns `None` when the
+    /// graph has a user partitioning (use [`PreparedGraph::sharded`]),
+    /// when automatic sizing is below the
+    /// [`PreparedGraph::AUTO_SHARD_MIN_EDGES`] cost gate or resolves to
+    /// fewer than 2 shards (single-core budget), or when
+    /// [`PrepOptions::auto_shards`] pinned the count to 1.
+    ///
+    /// The decision is **static** per prepared graph — it never depends
+    /// on momentary budget contention — so every query on a binding takes
+    /// the same execution path and reports stay bit-identical between
+    /// sequential and batch-parallel runs.
+    pub fn auto_sharded(&self) -> Option<&ShardedGraph> {
+        if self.partitioning.is_some() {
+            return None;
+        }
+        self.auto_sharded
+            .get_or_init(|| {
+                let k = self.auto_shard_count();
+                if k < 2 {
+                    return None;
+                }
+                let p = destination_ranges(&self.csr, self.csc(), k);
+                Some(ShardedGraph::build(&self.csr, self.csc(), &p))
+            })
+            .as_ref()
+    }
+
+    /// [`PreparedGraph::auto_sharded`] filtered by the query's direction
+    /// policy: *automatic* auto-sharding never engages for a
+    /// push-only-pinned query — those queries keep the promise of never
+    /// paying the transpose (the shard build forces the CSC) — while an
+    /// explicit [`PrepOptions::with_auto_shards`] engages regardless (the
+    /// user asked for shards; the shard slices carry their own CSC rows).
+    pub fn auto_sharded_for(&self, push_only: bool) -> Option<&ShardedGraph> {
+        if push_only && self.auto_shards.is_none() {
+            return None;
+        }
+        self.auto_sharded()
+    }
+
+    /// Resolve the auto-shard count: the pinned
+    /// [`PrepOptions::auto_shards`] verbatim; else a calibrated count
+    /// (trusted over the edge-count gate — it was *measured* on this
+    /// graph); else, past the cost gate, the machine's worker budget,
+    /// capped.
+    fn auto_shard_count(&self) -> usize {
+        let k = match (self.auto_shards, self.calibration().auto_shards) {
+            (Some(k), _) => k.max(1),
+            (None, Some(k)) => k.clamp(1, Self::AUTO_SHARD_MAX),
+            (None, None) => {
+                if self.num_edges() < Self::AUTO_SHARD_MIN_EDGES {
+                    return 1;
+                }
+                crate::sched::available_workers().min(Self::AUTO_SHARD_MAX)
+            }
+        };
+        k.min(self.num_vertices().max(1))
+    }
+
+    /// The constants queries on this graph tune themselves with: fitted
+    /// values when [`PreparedGraph::set_calibration`] ran, defaults
+    /// otherwise.
+    pub fn calibration(&self) -> Calibration {
+        self.calibration.get().copied().unwrap_or_default()
+    }
+
+    /// Store fitted calibration constants (at most once per prepared
+    /// graph; returns `false` if already set). Call **before** the first
+    /// query: the auto-shard layout is itself built once on first use, so
+    /// a calibrated shard count only takes effect if it arrives first.
+    pub fn set_calibration(&self, calibration: Calibration) -> bool {
+        self.calibration.set(calibration).is_ok()
+    }
+
     /// The engine's view of the cached arrays — what every pull-capable
     /// query on a binding executes over (CSR + CSC + out-degrees, all
-    /// shared; those lazy caches materialize here). The O(E)
-    /// [`PreparedGraph::pull_stream`] is **not** attached: only
+    /// shared; those lazy caches materialize here), carrying the graph's
+    /// [`PreparedGraph::calibration`] crossover for the adaptive policy.
+    /// The O(E) [`PreparedGraph::pull_stream`] is **not** attached: only
     /// full-sweep PageRank runs read it, so the query layer chains
     /// `.with_pull_stream(..)` for exactly those programs. Push-only
     /// callers should use [`crate::engine::gas::EngineGraph::push_only`]
     /// instead, which touches none of the caches.
     pub fn engine_view(&self) -> EngineGraph<'_> {
         EngineGraph::with_csc(&self.csr, self.csc(), Some(self.out_deg()))
+            .with_crossover(self.calibration().crossover())
     }
 
     /// The CSR edge stream (destination per edge, row-major) — exactly
@@ -245,6 +363,57 @@ mod tests {
         assert!(view.csc.is_some() && view.out_deg.is_some());
         assert!(view.pull_dsts.is_none(), "pull stream is opt-in per program");
         assert!(view.with_pull_stream(p.pull_stream()).pull_dsts.is_some());
+    }
+
+    #[test]
+    fn auto_sharding_gates_and_pins() {
+        // below the cost gate, automatic sizing declines to shard
+        let g = generate::rmat(8, 2_000, 0.57, 0.19, 0.19, 5);
+        let p = PreparedGraph::prepare(&g, &PrepOptions::named("small")).unwrap();
+        assert!(p.auto_sharded().is_none(), "2k edges is below the gate");
+        // an explicit count bypasses the gate
+        let p =
+            PreparedGraph::prepare(&g, &PrepOptions::named("small").with_auto_shards(4)).unwrap();
+        let sg = p.auto_sharded().expect("pinned auto-shards");
+        assert_eq!(sg.num_shards, 4);
+        assert!(std::ptr::eq(sg, p.auto_sharded().unwrap()), "built once, cached");
+        // auto_shards == 1 pins the monolithic sweep
+        let p =
+            PreparedGraph::prepare(&g, &PrepOptions::named("small").with_auto_shards(1)).unwrap();
+        assert!(p.auto_sharded().is_none());
+        // a user partitioning wins over auto-sharding
+        let opts = PrepOptions::named("small")
+            .with_partition(2, PartitionStrategy::Hash)
+            .with_auto_shards(4);
+        let p = PreparedGraph::prepare(&g, &opts).unwrap();
+        assert!(p.auto_sharded().is_none());
+        assert!(p.sharded().is_some());
+        // pinned counts clamp to the vertex count
+        let tiny = generate::chain(3);
+        let p =
+            PreparedGraph::prepare(&tiny, &PrepOptions::named("tiny").with_auto_shards(8)).unwrap();
+        if let Some(sg) = p.auto_sharded() {
+            assert!(sg.num_shards <= 3);
+        }
+    }
+
+    #[test]
+    fn calibration_defaults_and_sets_once() {
+        let g = generate::chain(10);
+        let p = PreparedGraph::prepare(&g, &PrepOptions::named("chain")).unwrap();
+        let def = p.calibration();
+        assert_eq!(def, Calibration::default());
+        assert_eq!(p.engine_view().crossover, def.crossover());
+        let fitted = Calibration {
+            pull_alpha_early_exit: 16,
+            pull_alpha_full_scan: 3,
+            auto_shards: Some(2),
+        };
+        assert!(p.set_calibration(fitted));
+        assert!(!p.set_calibration(Calibration::default()), "set-once");
+        assert_eq!(p.calibration(), fitted);
+        assert_eq!(p.engine_view().crossover.alpha_early_exit, 16);
+        assert_eq!(p.engine_view().crossover.alpha_full_scan, 3);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Process-wide worker budget: one ledger every thread pool leases from,
+//! so nested parallelism **divides** the machine instead of multiplying
+//! into oversubscription. The failure mode this kills: a
+//! `run_batch_parallel` sweep of 16 queries, each auto-sharded 8 ways,
+//! used to spawn 16 × 8 threads on an 8-core box — now the batch pool
+//! and every per-query shard pool draw from the same
+//! [`WorkerBudget::global`] ledger, and the *total* live thread count
+//! stays within the core count.
+//!
+//! ## Accounting model
+//!
+//! The ledger counts **extra** threads: every pool's calling thread
+//! participates as worker 0 (see [`crate::engine::sharded`] — worker 0's
+//! bucket runs inline), so a pool of `w` workers spawns `w - 1` threads
+//! and leases exactly that many permits. A budget of `N` workers
+//! therefore holds `N - 1` permits, and with one root caller the live
+//! thread count is `1 + leased ≤ N`. Leases never block: a pool asks for
+//! the size it wants and is granted whatever is left (possibly zero —
+//! the pool then runs serially on its caller). Releases are RAII
+//! ([`PoolLease`]), so permits return even on unwind.
+//!
+//! Budget pressure only shrinks pools, never changes results: the
+//! sharded engine is bit-identical at every worker count, so a query
+//! squeezed to one worker returns the same report it would have with
+//! eight.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Worker-thread count the process should target: the `JGRAPH_WORKERS`
+/// environment variable when set (≥ 1; read once, cached — export it
+/// before the first query to pin single-threaded execution), otherwise
+/// [`std::thread::available_parallelism`], falling back to 1.
+pub fn available_workers() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("JGRAPH_WORKERS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&w| w >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// A permit ledger for extra worker threads (see the module docs for the
+/// accounting model). [`WorkerBudget::global`] is the process-wide
+/// instance the engine uses; [`WorkerBudget::new`] builds local ones for
+/// tests and embedders that want their own ceiling.
+#[derive(Debug)]
+pub struct WorkerBudget {
+    /// Permits: extra threads allowed beyond the root caller.
+    extra_limit: usize,
+    leased: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl WorkerBudget {
+    /// A budget targeting `workers` total live threads (so
+    /// `workers - 1` spawnable extras; `workers` is clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        WorkerBudget {
+            extra_limit: workers.max(1) - 1,
+            leased: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// The process-wide budget, sized from [`available_workers`] on
+    /// first use.
+    pub fn global() -> &'static WorkerBudget {
+        static GLOBAL: OnceLock<WorkerBudget> = OnceLock::new();
+        GLOBAL.get_or_init(|| WorkerBudget::new(available_workers()))
+    }
+
+    /// Total live threads this budget targets (extras + the root caller).
+    pub fn total_workers(&self) -> usize {
+        self.extra_limit + 1
+    }
+
+    /// Extra-thread permits currently out on leases.
+    pub fn leased(&self) -> usize {
+        self.leased.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Self::leased`] over the budget's lifetime —
+    /// what tests assert never exceeded `total_workers() - 1`.
+    pub fn peak_leased(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Lease permits for a pool that wants `pool` workers total. Grants
+    /// up to `pool - 1` extras, bounded by what is left; never blocks.
+    /// The returned lease's [`PoolLease::workers`] is the pool size to
+    /// actually run with (1 when nothing was available — run serially).
+    pub fn lease(&self, pool: usize) -> PoolLease<'_> {
+        let want = pool.max(1) - 1;
+        let mut cur = self.leased.load(Ordering::Relaxed);
+        let extras = loop {
+            let take = want.min(self.extra_limit.saturating_sub(cur));
+            if take == 0 {
+                break 0;
+            }
+            match self.leased.compare_exchange_weak(
+                cur,
+                cur + take,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + take, Ordering::Relaxed);
+                    break take;
+                }
+                Err(actual) => cur = actual,
+            }
+        };
+        PoolLease { budget: self, extras }
+    }
+}
+
+/// RAII grant from [`WorkerBudget::lease`]: holds `extras` permits and
+/// returns them on drop.
+#[derive(Debug)]
+pub struct PoolLease<'a> {
+    budget: &'a WorkerBudget,
+    extras: usize,
+}
+
+impl PoolLease<'_> {
+    /// Extra threads this lease covers spawning.
+    pub fn extras(&self) -> usize {
+        self.extras
+    }
+
+    /// Pool size to run with: the granted extras plus the calling thread.
+    pub fn workers(&self) -> usize {
+        self.extras + 1
+    }
+}
+
+impl Drop for PoolLease<'_> {
+    fn drop(&mut self) {
+        if self.extras > 0 {
+            self.budget.leased.fetch_sub(self.extras, Ordering::AcqRel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leases_cap_at_the_extra_limit_and_release_on_drop() {
+        let b = WorkerBudget::new(4);
+        assert_eq!(b.total_workers(), 4);
+        let batch = b.lease(4);
+        assert_eq!(batch.workers(), 4);
+        assert_eq!(batch.extras(), 3);
+        assert_eq!(b.leased(), 3);
+        // the ledger is drained: a nested pool runs on its caller alone
+        let nested = b.lease(8);
+        assert_eq!(nested.workers(), 1);
+        drop(nested);
+        drop(batch);
+        assert_eq!(b.leased(), 0);
+        // permits came back
+        assert_eq!(b.lease(2).workers(), 2);
+        assert_eq!(b.peak_leased(), 3);
+    }
+
+    #[test]
+    fn nested_batch_and_shard_leases_divide_not_multiply() {
+        // 8-core budget, batch pool of 4 workers, each nesting a
+        // shard pool that asks for 8: the old behavior would be
+        // 4 × 8 = 32 live threads; the ledger bounds it to 8.
+        let b = WorkerBudget::new(8);
+        let batch = b.lease(4);
+        assert_eq!(batch.workers(), 4);
+        let per_query: Vec<_> = (0..4).map(|_| b.lease(8)).collect();
+        let live = 1 + b.leased();
+        assert!(live <= b.total_workers(), "live {live} > budget {}", b.total_workers());
+        // every granted extra is accounted: batch extras + shard extras
+        let shard_extras: usize = per_query.iter().map(|l| l.extras()).sum();
+        assert_eq!(b.leased(), batch.extras() + shard_extras);
+        drop(per_query);
+        drop(batch);
+        assert_eq!(b.leased(), 0);
+        assert!(b.peak_leased() <= b.total_workers() - 1);
+    }
+
+    #[test]
+    fn single_core_budget_grants_nothing() {
+        let b = WorkerBudget::new(1);
+        assert_eq!(b.total_workers(), 1);
+        assert_eq!(b.lease(16).workers(), 1);
+        assert_eq!(b.leased(), 0);
+        // degenerate asks are clamped
+        let b = WorkerBudget::new(0);
+        assert_eq!(b.total_workers(), 1);
+        assert_eq!(b.lease(0).workers(), 1);
+    }
+
+    #[test]
+    fn concurrent_leases_never_exceed_the_limit() {
+        let b = WorkerBudget::new(5);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for want in [1usize, 2, 3, 7] {
+                        let lease = b.lease(want);
+                        assert!(b.leased() <= b.total_workers() - 1);
+                        assert!(lease.workers() <= want.max(1));
+                        drop(lease);
+                    }
+                });
+            }
+        });
+        assert_eq!(b.leased(), 0);
+        assert!(b.peak_leased() <= 4);
+    }
+}

@@ -3,8 +3,10 @@
 //! for the whole project... We can specify a specific number of pipelines
 //! and PE for the program to achieve flexible parallelism."
 
+pub mod budget;
 pub mod scheduler;
 
+pub use budget::{available_workers, PoolLease, WorkerBudget};
 pub use scheduler::{auto_plan, AdmittedPlan, RuntimeScheduler, SchedulerEvent};
 
 

@@ -14,7 +14,7 @@ use jgraph::graph::csr::Csr;
 use jgraph::graph::edgelist::EdgeList;
 use jgraph::graph::{generate, SplitMix64};
 use jgraph::prep::layout::{convert, Layout};
-use jgraph::prep::partition::{partition, PartitionStrategy};
+use jgraph::prep::partition::{destination_ranges, partition, PartitionStrategy};
 use jgraph::prep::reorder;
 use jgraph::sched::ParallelismPlan;
 use jgraph::translator::pipeline::schedule;
@@ -770,6 +770,143 @@ fn prop_sharded_edge_cases_empty_allcut_and_singleton_shards() {
     check(&chain, 2, PartitionStrategy::Hash);
     // one vertex per shard
     check(&generate::chain(5), 5, PartitionStrategy::Range);
+}
+
+/// The PR 8 tentpole pin: the *auto* layout — edge-prefix-sum
+/// destination ranges built for an un-partitioned binding — run through
+/// the sharded engine is **bitwise identical** to the monolithic
+/// interpreter across random graphs, {BFS, parameterized PageRank}
+/// (float Sum included), shard counts {1,2,4,7}, and worker counts
+/// including 1 (the single-core budget: every shard runs serially
+/// inline). Destination ownership is what makes the float Sum hold.
+#[test]
+fn prop_auto_sharded_execution_identical_to_monolithic() {
+    use jgraph::engine::run_sharded;
+    use jgraph::prep::shard::ShardedGraph;
+    cases(10, |seed, rng| {
+        let g = random_graph(rng, 150, 1_200);
+        let csr = Csr::from_edgelist(&g);
+        let csc = csr.transpose();
+        let out_deg = csr.out_degrees();
+        let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let root = rng.next_below(g.num_vertices as u64) as u32;
+        // one worker count per case, cycling 1..=4 (1 = the serial inline
+        // path a single-core WorkerBudget degrades to, >1 = threaded)
+        let workers = 1 + (seed as usize % 4);
+        let programs = [
+            algorithms::bfs(),
+            algorithms::pagerank()
+                .instantiate(&jgraph::dsl::params::ParamSet::new().bind("tolerance", 1e-3))
+                .unwrap(),
+        ];
+        let monos: Vec<_> =
+            programs.iter().map(|p| gas::run(p, &csr, root, |_| {}).unwrap()).collect();
+        for k in [1usize, 2, 4, 7] {
+            let p = destination_ranges(&csr, &csc, k);
+            // the auto layout owns destinations in contiguous ranges:
+            // that is the invariant the exchange-free merge relies on
+            let mut prev = 0u32;
+            for &a in &p.assignment {
+                assert!(a >= prev, "seed {seed} k={k}: ranges must be contiguous");
+                prev = a;
+            }
+            let sg = ShardedGraph::build(&csr, &csc, &p);
+            for (program, mono) in programs.iter().zip(&monos) {
+                for policy in [
+                    DirectionPolicy::Adaptive,
+                    DirectionPolicy::PushOnly,
+                    DirectionPolicy::ForcePull,
+                ] {
+                    let got = run_sharded(program, &view, &sg, root, policy, workers, |_| Ok(()))
+                        .unwrap();
+                    assert_eq!(
+                        got.result.supersteps, mono.supersteps,
+                        "seed {seed} {} k={k} {policy:?}: supersteps",
+                        program.name
+                    );
+                    assert_eq!(
+                        got.result.converged, mono.converged,
+                        "seed {seed} {} k={k} {policy:?}: converged",
+                        program.name
+                    );
+                    for v in 0..csr.num_vertices() {
+                        assert_eq!(
+                            got.result.values[v].to_bits(),
+                            mono.values[v].to_bits(),
+                            "seed {seed} {} k={k} {policy:?} vertex {v}: {} vs {}",
+                            program.name,
+                            got.result.values[v],
+                            mono.values[v]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Auto-shard edge cases: fewer vertices than shards (trailing ranges
+/// empty), an edge-free graph, and a single-worker budget — all
+/// bit-identical to monolithic, and the end-to-end `PreparedGraph` gate
+/// behaves: tiny graphs never auto-shard on their own, a pin clamps to
+/// the vertex count, and user partitionings suppress the auto layout.
+#[test]
+fn prop_auto_shard_edge_cases_and_prepared_gating() {
+    use jgraph::engine::run_sharded;
+    use jgraph::prep::prepared::{PrepOptions, PreparedGraph};
+    use jgraph::prep::shard::ShardedGraph;
+    let check = |g: &EdgeList, k: usize, workers: usize| {
+        let csr = Csr::from_edgelist(g);
+        let csc = csr.transpose();
+        let out_deg = csr.out_degrees();
+        let view = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let p = destination_ranges(&csr, &csc, k);
+        let sg = ShardedGraph::build(&csr, &csc, &p);
+        for program in [algorithms::bfs(), algorithms::sssp()] {
+            let mono = gas::run(&program, &csr, 0, |_| {}).unwrap();
+            let got =
+                run_sharded(&program, &view, &sg, 0, DirectionPolicy::Adaptive, workers, |_| {
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(
+                got.result.supersteps, mono.supersteps,
+                "{} k={k} w={workers}",
+                program.name
+            );
+            for v in 0..csr.num_vertices() {
+                assert_eq!(
+                    got.result.values[v].to_bits(),
+                    mono.values[v].to_bits(),
+                    "{} k={k} w={workers} vertex {v}",
+                    program.name
+                );
+            }
+        }
+    };
+    // fewer vertices than shards: 7 ranges over 3 vertices
+    check(&generate::chain(3), 7, 4);
+    // edge-free graph: every range empty of work
+    check(&EdgeList::with_vertices(5), 4, 4);
+    // single-worker budget: the threaded dispatch degrades to serial
+    check(&generate::chain(12), 4, 1);
+
+    // end-to-end gating on PreparedGraph: a tiny graph stays monolithic
+    // unless pinned, and the pin clamps to the vertex count
+    let tiny = generate::chain(3);
+    let auto = PreparedGraph::prepare(&tiny, &PrepOptions::named("tiny")).unwrap();
+    assert!(auto.auto_sharded().is_none(), "3-vertex chain is far below the auto gate");
+    let pinned =
+        PreparedGraph::prepare(&tiny, &PrepOptions::named("tiny").with_auto_shards(7)).unwrap();
+    let sg = pinned.auto_sharded().expect("pinned auto-shards must engage");
+    assert!(sg.num_shards >= 2 && sg.num_shards <= 3, "pin clamps to the vertex count");
+    // a user partitioning always wins over the auto layout
+    let parted = PreparedGraph::prepare(
+        &tiny,
+        &PrepOptions::named("tiny").with_partition(2, PartitionStrategy::Hash).with_auto_shards(4),
+    )
+    .unwrap();
+    assert!(parted.auto_sharded().is_none(), "user partitioning suppresses auto-sharding");
 }
 
 #[test]
