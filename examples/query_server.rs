@@ -40,18 +40,21 @@ fn main() -> anyhow::Result<()> {
         bound.setup_seconds(),
     );
 
-    // a 64-root sweep over vertices that actually have out-edges
+    // a 64-root sweep over vertices that actually have out-edges; the
+    // probe is bounded to one lap of the vertex set so an edge-free
+    // graph fails loudly instead of spinning forever
     let csr = &bound.graph().csr;
     let n = csr.num_vertices() as u32;
     let queries: Vec<RunOptions> = (0..NUM_QUERIES)
         .map(|i| {
-            let mut v = (i as u32 * 104_729) % n;
-            while csr.degree(v) == 0 {
-                v = (v + 1) % n;
-            }
-            RunOptions::from_root(v)
+            let start = (i as u32 * 104_729) % n;
+            (0..n)
+                .map(|probe| (start + probe) % n)
+                .find(|&v| csr.degree(v) > 0)
+                .map(RunOptions::from_root)
+                .ok_or_else(|| anyhow::anyhow!("graph has no vertex with out-edges"))
         })
-        .collect();
+        .collect::<anyhow::Result<_>>()?;
 
     // ------------------------------------------------------------------
     // sequential sweep (the baseline run_batch loop)

@@ -1,0 +1,130 @@
+//! End-to-end smoke of the `jgraph serve` daemon: start a server on an
+//! ephemeral port, push 32 mixed queries (2 graphs x 2 algorithms x
+//! 3 tenants) through a real TCP client, read the rolling stats, then
+//! drain and join cleanly. This is the CI serve smoke — every assertion
+//! here is a protocol contract, not a timing gate.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jgraph::engine::{Session, SessionConfig};
+use jgraph::serve::wire::DEFAULT_TENANT;
+use jgraph::serve::{QueryRequest, ServeClient, ServeConfig, ServeRegistry, Server};
+
+fn query(graph: &str, algo: &str, root: u32, tenant: &str) -> QueryRequest {
+    QueryRequest {
+        graph: graph.into(),
+        algo: algo.into(),
+        root,
+        params: Vec::new(),
+        direction: None,
+        tenant: tenant.into(),
+        max_supersteps: None,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // in-process daemon: software oracle only, so the smoke runs the
+    // same everywhere (no XLA artifacts required)
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let registry = Arc::new(ServeRegistry::new(session, 4));
+    registry.register_edges("er", jgraph::graph::generate::erdos_renyi(2_000, 12_000, 7));
+    registry.register_edges("grid", jgraph::graph::generate::grid2d(32, 32, 7));
+    let config = ServeConfig { batch_window: Duration::from_millis(3), ..Default::default() };
+    let server = Server::start(config, registry)?;
+    let addr = server.local_addr();
+    println!("serve_demo: daemon on {addr}");
+
+    // -------- phase 1: 32 mixed queries, pipelined per tenant ---------
+    let tenants = [DEFAULT_TENANT, "alice", "bob"];
+    let mut clients: Vec<ServeClient> =
+        tenants.iter().map(|_| ServeClient::connect(addr)).collect::<anyhow::Result<_>>()?;
+    let mut sent = vec![0usize; tenants.len()];
+    for i in 0..32u32 {
+        let t = (i as usize) % tenants.len();
+        let graph = if i % 2 == 0 { "er" } else { "grid" };
+        let algo = if i % 4 < 2 { "bfs" } else { "pagerank" };
+        clients[t].send_query(&query(graph, algo, i % 100, tenants[t]))?;
+        sent[t] += 1;
+    }
+    let mut ok = 0usize;
+    for (t, client) in clients.iter_mut().enumerate() {
+        for _ in 0..sent[t] {
+            let resp = client.recv()?;
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "query failed: {}",
+                resp.render()
+            );
+            let report = resp.get("report").expect("response carries the full report");
+            assert!(report.get("supersteps").unwrap().as_u64().unwrap() > 0);
+            ok += 1;
+        }
+    }
+    println!("serve_demo: {ok}/32 queries served");
+    assert_eq!(ok, 32);
+
+    // -------- phase 2: stats reflect the traffic ----------------------
+    let stats = clients[0].stats()?;
+    assert_eq!(stats.get("served").unwrap().as_u64(), Some(32));
+    assert_eq!(stats.get("errors").unwrap().as_u64(), Some(0));
+    assert!(stats.get("batches").unwrap().as_u64().unwrap() >= 1);
+    assert!(stats.get("resident_graphs").unwrap().as_u64().unwrap() <= 4);
+    let p99 = stats.get("total").unwrap().get("p99_us").unwrap().as_u64().unwrap();
+    println!(
+        "serve_demo: p50/p99 total latency {} / {} us, mean batch occupancy {:.2}",
+        stats.get("total").unwrap().get("p50_us").unwrap().as_u64().unwrap(),
+        p99,
+        stats.get("mean_batch_occupancy").unwrap().as_f64().unwrap(),
+    );
+
+    // -------- phase 3: a tenant at cap gets a typed reject ------------
+    // cap "metered" at 1 on a second daemon with a long window: the
+    // first query parks in the batcher, so the next two must bounce
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let registry = Arc::new(ServeRegistry::new(session, 4));
+    registry.register_edges("er", jgraph::graph::generate::erdos_renyi(2_000, 12_000, 7));
+    let config = ServeConfig {
+        batch_window: Duration::from_millis(400),
+        tenant_caps: vec![("metered".into(), 1)],
+        ..Default::default()
+    };
+    let capped = Server::start(config, registry)?;
+    let mut c = ServeClient::connect(capped.local_addr())?;
+    for _ in 0..3 {
+        c.send_query(&query("er", "bfs", 0, "metered"))?;
+    }
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    for _ in 0..3 {
+        let resp = c.recv()?;
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            served += 1;
+        } else {
+            let kind = resp.get("error").unwrap().get("kind").unwrap().as_str().unwrap();
+            assert_eq!(kind, "tenant_over_cap", "{}", resp.render());
+            rejected += 1;
+        }
+    }
+    assert_eq!(served, 1, "exactly the in-cap query runs");
+    assert_eq!(rejected, 2, "over-cap queries reject instead of hanging");
+    // capacity returns once the in-flight query finishes
+    let resp = c.query(&query("er", "bfs", 1, "metered"))?;
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    println!("serve_demo: tenant cap enforced (1 served, 2 typed rejects, then recovery)");
+    drop(c);
+    capped.join()?;
+
+    // -------- phase 4: graceful drain ---------------------------------
+    let ack = clients[0].shutdown()?;
+    assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+    drop(clients);
+    server.join()?;
+    println!("serve_demo: drained and joined cleanly");
+    Ok(())
+}

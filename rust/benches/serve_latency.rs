@@ -1,0 +1,178 @@
+//! Serve-path tail latency: an in-process `jgraph serve` daemon under
+//! open-loop load, measured from the client side of a real TCP socket.
+//! Client timestamps give *exact* per-query latencies (no histogram
+//! bucketing), so the p50/p95/p99 written to `BENCH_serve.json` are the
+//! ground truth the daemon's own HDR-style histograms approximate —
+//! the bench prints both so the approximation error is visible.
+//!
+//! Phases:
+//! * closed loop (1 in-flight) — pure round-trip floor, batches of 1;
+//! * windowed load (8 in-flight, pipelined) — the arrival batcher gets
+//!   company, so occupancy rises and per-query service cost amortizes.
+//!
+//! Modes:
+//! * default — 2^13-vertex graphs, 256 queries per phase;
+//! * `--quick` — tiny graphs, 32 queries: the CI smoke that keeps the
+//!   bench compiling and the JSON schema stable. No latency thresholds
+//!   in either mode — shared runners make wall-clock gates flake; the
+//!   artifact records the trajectory instead.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::*;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jgraph::engine::{Session, SessionConfig};
+use jgraph::graph::generate;
+use jgraph::serve::{QueryRequest, ServeClient, ServeConfig, ServeRegistry, Server};
+
+fn query(graph: &str, algo: &str, root: u32) -> QueryRequest {
+    QueryRequest {
+        graph: graph.into(),
+        algo: algo.into(),
+        root,
+        params: Vec::new(),
+        direction: None,
+        tenant: "bench".into(),
+        max_supersteps: None,
+    }
+}
+
+/// Exact percentile over client-side samples (nearest-rank).
+fn percentile_us(sorted: &[Duration], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank - 1].as_secs_f64() * 1e6
+}
+
+struct Load {
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    qps: f64,
+}
+
+/// Drive `n` queries with up to `window` pipelined in flight, returning
+/// exact client-side latency percentiles and achieved throughput.
+fn drive(client: &mut ServeClient, n: usize, window: usize, mix: &[QueryRequest]) -> Load {
+    let t0 = Instant::now();
+    let mut sent_at = std::collections::VecDeque::with_capacity(window);
+    let mut latencies = Vec::with_capacity(n);
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    while received < n {
+        while sent < n && sent_at.len() < window {
+            client.send_query(&mix[sent % mix.len()]).expect("send");
+            sent_at.push_back(Instant::now());
+            sent += 1;
+        }
+        let resp = client.recv().expect("recv");
+        let issued: Instant = sent_at.pop_front().expect("response without a send");
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "bench query failed: {}",
+            resp.render()
+        );
+        latencies.push(issued.elapsed());
+        received += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    latencies.sort();
+    Load {
+        p50_us: percentile_us(&latencies, 50.0),
+        p95_us: percentile_us(&latencies, 95.0),
+        p99_us: percentile_us(&latencies, 99.0),
+        qps: n as f64 / elapsed,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (vertices, edges, queries) = if quick {
+        (512usize, 4_096usize, 32usize)
+    } else {
+        (8_192usize, 65_536usize, 256usize)
+    };
+    let mode = if quick { "quick" } else { "full" };
+
+    section(&format!(
+        "serve tail latency ({vertices}v/{edges}e graphs, {queries} queries/phase, mode {mode})"
+    ));
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let registry = Arc::new(ServeRegistry::new(session, 4));
+    registry.register_edges("er", generate::erdos_renyi(vertices, edges, 11));
+    registry.register_edges("grid", generate::grid2d(64, 64, 11));
+    let config = ServeConfig { batch_window: Duration::from_millis(2), ..Default::default() };
+    let server = Server::start(config, registry).expect("server start");
+    let mut client = ServeClient::connect(server.local_addr()).expect("connect");
+
+    // mixed binding traffic: two graphs x two algorithms
+    let mix: Vec<QueryRequest> = (0..16u32)
+        .map(|i| {
+            let graph = if i % 2 == 0 { "er" } else { "grid" };
+            let algo = if i % 4 < 2 { "bfs" } else { "pagerank" };
+            query(graph, algo, i * 37 % vertices as u32)
+        })
+        .collect();
+
+    // warm the registry (graph prep + pipeline compile off the clock)
+    for q in &mix {
+        let resp = client.query(q).expect("warmup");
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.render());
+    }
+
+    // protocol floor: one line out, one line back, no execution
+    let ping = bench("ping round-trip", 8, 64, || client.ping().expect("ping"));
+    let ping_us = ping.as_secs_f64() * 1e6;
+
+    let closed = drive(&mut client, queries, 1, &mix);
+    report_metric("closed-loop p50", closed.p50_us, "us");
+    report_metric("closed-loop p99", closed.p99_us, "us");
+    report_metric("closed-loop throughput", closed.qps, "queries/s");
+
+    let windowed = drive(&mut client, queries, 8, &mix);
+    report_metric("windowed(8) p50", windowed.p50_us, "us");
+    report_metric("windowed(8) p99", windowed.p99_us, "us");
+    report_metric("windowed(8) throughput", windowed.qps, "queries/s");
+
+    // the daemon's own accounting, for comparison with the exact
+    // client-side numbers above (bucketed: <= 6.25% relative error)
+    let stats = client.stats().expect("stats");
+    let served = stats.get("served").and_then(|v| v.as_u64()).unwrap_or(0);
+    let occupancy = stats.get("mean_batch_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let server_p99 = stats
+        .get("total")
+        .and_then(|t| t.get("p99_us"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(f64::NAN);
+    report_metric("server-side total p99 (bucketed)", server_p99, "us");
+    report_metric("mean batch occupancy", occupancy, "queries/sweep");
+    assert_eq!(served as usize, mix.len() + 2 * queries, "daemon lost queries");
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_latency\",\n  \"mode\": \"{mode}\",\n  \
+         \"graphs\": {{ \"er_vertices\": {vertices}, \"er_edges\": {edges}, \"grid\": \"64x64\" }},\n  \
+         \"queries_per_phase\": {queries},\n  \"batch_window_us\": 2000,\n  \
+         \"ping_round_trip_us\": {ping_us:.1},\n  \
+         \"closed_loop\": {{ \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}, \"qps\": {:.1} }},\n  \
+         \"windowed_8\": {{ \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}, \"qps\": {:.1} }},\n  \
+         \"mean_batch_occupancy\": {occupancy:.2}\n}}\n",
+        closed.p50_us,
+        closed.p95_us,
+        closed.p99_us,
+        closed.qps,
+        windowed.p50_us,
+        windowed.p95_us,
+        windowed.p99_us,
+        windowed.qps,
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("writing BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json:\n{json}");
+
+    client.shutdown().expect("shutdown ack");
+    drop(client);
+    server.join().expect("clean join");
+}

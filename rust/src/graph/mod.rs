@@ -7,6 +7,7 @@
 //! datasets ([`generate`]), file I/O (the DSL's *FIFO* preprocessing stage,
 //! [`io`]), and structural statistics ([`properties`]).
 
+pub mod catalog;
 pub mod csr;
 pub mod edgelist;
 pub mod generate;

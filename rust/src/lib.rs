@@ -43,7 +43,10 @@
 //! pays the per-program costs (translate, schedule, modeled synthesis +
 //! flash, XLA artifact lookup) exactly once, `load` pays the per-graph
 //! costs (Reorder/Partition/Layout, transport) exactly once, and `run` is
-//! the cheap per-query call.
+//! the cheap per-query call. The [`serve`] subsystem (`jgraph serve`)
+//! keeps that lifecycle resident: an always-on daemon with a
+//! graph/pipeline registry, arrival batching into parallel sweeps, and
+//! tail-latency accounting.
 //!
 //! Quickstart (see `examples/quickstart.rs`; `examples/multi_query.rs`
 //! shows the amortization):
@@ -75,6 +78,7 @@ pub mod prep;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod translator;
 
 /// Convenience re-exports for the common flow: build graph → author DSL →

@@ -7,6 +7,8 @@
 //! ```text
 //! jgraph run --algo bfs --graph email --translator jgraph [--pipelines 8]
 //!            [--pes 1] [--root 0] [--reorder degree] [--no-xla] [--verbose]
+//! jgraph serve [--addr 127.0.0.1:7411] [--batch-window-us 2000]
+//!              [--register name=spec] [--tenant-cap tenant=N]
 //! jgraph translate --algo sssp [--translator vivado] [--emit hdl|chisel|host|library|isa|both|stats]
 //! jgraph report --table 5 | --fig 5 | --interfaces [--full]
 //! jgraph gen --preset slashdot --out /tmp/slashdot.bin [--seed 7]
@@ -18,7 +20,7 @@ use anyhow::{bail, Context, Result};
 use jgraph::dsl::algorithms;
 use jgraph::dsl::program::GasProgram;
 use jgraph::engine::{CompileError, RunOptions, Session, SessionConfig};
-use jgraph::graph::{edgelist::EdgeList, generate, io};
+use jgraph::graph::{edgelist::EdgeList, io};
 use jgraph::prep::prepared::PrepOptions;
 use jgraph::prep::reorder::ReorderStrategy;
 use jgraph::sched::ParallelismPlan;
@@ -34,7 +36,7 @@ struct Args {
 }
 
 /// Flags that may be passed more than once.
-const REPEATABLE: &[&str] = &["param"];
+const REPEATABLE: &[&str] = &["param", "register", "tenant-cap"];
 
 impl Args {
     fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
@@ -151,29 +153,20 @@ fn translator_of(name: &str) -> Result<TranslatorKind> {
 }
 
 fn load_graph(spec: &str, seed: u64) -> Result<(String, EdgeList)> {
-    Ok(match spec {
-        "email" => ("email-Eu-core (synthetic)".into(), generate::email_eu_core_like(seed)),
-        "slashdot" => ("soc-Slashdot0922 (synthetic)".into(), generate::soc_slashdot_like(seed)),
-        "grid" => ("grid 64x64".into(), generate::grid2d(64, 64, seed)),
-        "rmat" => ("rmat-13".into(), generate::rmat(13, 120_000, 0.57, 0.19, 0.19, seed)),
-        "er" => ("erdos-renyi".into(), generate::erdos_renyi(4_096, 65_536, seed)),
-        "chain" => ("chain-1k".into(), generate::chain(1_000)),
-        "star" => ("star-1k".into(), generate::star(1_000)),
-        // .db files are graph-store databases (the paper's "read data
-        // from database directly" FIFO path)
-        path if path.ends_with(".db") => (
-            path.to_string(),
-            jgraph::graph::store::GraphStore::load(path)?.to_edgelist(None),
-        ),
-        path => (path.to_string(), io::load(path)?),
-    })
+    // one resolver for the CLI and the serve registry: a graph name
+    // means the same dataset in `jgraph run` and in a daemon query
+    jgraph::graph::catalog::load_spec(spec, seed)
 }
 
 const USAGE: &str =
-    "usage: jgraph <run|translate|lint|partition|calibrate|report|gen|sweep|info> [--help]
+    "usage: jgraph <run|serve|translate|lint|partition|calibrate|report|gen|sweep|info> [--help]
   run       --algo A [--graph G] [--translator T] [--pipelines N] [--pes N]
             [--root V] [--param name=value]... [--reorder S] [--trace out.csv]
             [--no-xla] [--verbose]
+  serve     [--addr HOST:PORT] [--batch-window-us N] [--max-resident N]
+            [--tenant-cap-default N] [--tenant-cap tenant=N]...
+            [--register name=spec]... [--sweep-workers N] [--seed S] [--no-xla]
+            (always-on query daemon, line-delimited JSON; see docs/serving.md)
   translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
   lint      [--algo A] [--emit text|json]   (all library algorithms by default;
             exits nonzero on any deny-level JG*** diagnostic)
@@ -200,6 +193,7 @@ fn main() -> Result<()> {
     }
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "translate" => cmd_translate(rest),
         "lint" => cmd_lint(rest),
         "partition" => cmd_partition(rest),
@@ -269,6 +263,63 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
             println!("  {:>14?} | {:>10.1} MTEPS", s, r.simulated_mteps);
         }
     }
+    Ok(())
+}
+
+/// `jgraph serve`: the always-on query daemon. Every catalog preset is
+/// registered up front (deterministic under `--seed`), plus any
+/// `--register name=spec` pairs; queries arrive as line-delimited JSON
+/// (see `docs/serving.md`) and coalesce into parallel sweeps. Drains
+/// gracefully on SIGTERM/SIGINT or the wire `shutdown` op.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    use jgraph::serve::{self, ServeConfig, ServeRegistry, Server};
+    let args = Args::parse(argv, &["no-xla"])?;
+    let seed = args.get_num("seed", 42u64)?;
+    let session = Session::new(SessionConfig {
+        use_xla: !args.flag("no-xla"),
+        ..Default::default()
+    });
+    let registry =
+        std::sync::Arc::new(ServeRegistry::new(session, args.get_num("max-resident", 8usize)?));
+    for preset in jgraph::graph::catalog::PRESETS {
+        registry.register_spec(*preset, *preset, seed);
+    }
+    for spec in args.get_all("register") {
+        let (name, graph) = spec
+            .split_once('=')
+            .with_context(|| format!("--register {spec:?}: expected name=spec"))?;
+        registry.register_spec(name, graph, seed);
+    }
+    let mut tenant_caps = Vec::new();
+    for spec in args.get_all("tenant-cap") {
+        let (tenant, cap) = spec
+            .split_once('=')
+            .with_context(|| format!("--tenant-cap {spec:?}: expected tenant=cap"))?;
+        let cap: usize =
+            cap.parse().map_err(|e| anyhow::anyhow!("--tenant-cap {spec:?}: {e}"))?;
+        tenant_caps.push((tenant.to_string(), cap));
+    }
+    let config = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7411"),
+        batch_window: std::time::Duration::from_micros(args.get_num("batch-window-us", 2_000u64)?),
+        default_tenant_cap: args.get_num("tenant-cap-default", 64usize)?,
+        tenant_caps,
+        sweep_workers: args.get_num("sweep-workers", jgraph::sched::available_workers())?,
+    };
+    let server = Server::start(config, registry.clone())?;
+    println!(
+        "jgraph serve: listening on {} ({} graphs registered, {} resident max)",
+        server.local_addr(),
+        registry.graph_names().len(),
+        registry.max_resident(),
+    );
+    serve::install_termination_handler();
+    while !server.is_shutting_down() && !serve::termination_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("jgraph serve: draining");
+    server.join()?;
+    println!("jgraph serve: drained, exiting");
     Ok(())
 }
 

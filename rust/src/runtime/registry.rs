@@ -1,6 +1,12 @@
 //! Executable registry: (algorithm, bucket) → compiled [`Executable`],
 //! compiled lazily on first use and cached for the rest of the process.
 //! The paper's per-model-variant "one compiled executable" rule.
+//!
+//! One level up the stack, the serve daemon applies the same
+//! compile-on-first-use discipline to whole pipelines and prepared
+//! graphs: see [`crate::serve::registry::ServeRegistry`], which adds
+//! LRU residency bounds (graphs are the memory that matters) on top of
+//! this registry's cache-forever policy.
 
 use std::collections::HashMap;
 use std::path::PathBuf;

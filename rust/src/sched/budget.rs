@@ -201,6 +201,42 @@ mod tests {
     }
 
     #[test]
+    fn panicking_worker_releases_its_lease() {
+        // A shard/batch worker that panics while holding a lease must
+        // not leak it: `PoolLease` releases on unwind, so the ledger
+        // returns to zero once the panic has propagated.
+        let b = WorkerBudget::new(4);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _lease = b.lease(4);
+            assert_eq!(b.leased(), 3);
+            panic!("worker died mid-superstep");
+        }));
+        assert!(outcome.is_err());
+        assert_eq!(b.leased(), 0, "unwind must return every permit");
+        // the budget stays fully usable after the panic
+        assert_eq!(b.lease(4).workers(), 4);
+    }
+
+    #[test]
+    fn panic_in_a_scoped_worker_thread_releases_its_lease() {
+        // Same invariant across a thread boundary: the engine's pools
+        // lease inside `std::thread::scope` workers, and a panic there
+        // resurfaces at the scope join. The lease must already be back.
+        let b = WorkerBudget::new(4);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|scope| {
+                scope.spawn(|| {
+                    let _lease = b.lease(3);
+                    panic!("shard worker died");
+                });
+            });
+        }));
+        assert!(outcome.is_err(), "scope join must propagate the worker panic");
+        assert_eq!(b.leased(), 0, "the dead worker's lease must not leak");
+        assert_eq!(b.lease(2).workers(), 2);
+    }
+
+    #[test]
     fn concurrent_leases_never_exceed_the_limit() {
         let b = WorkerBudget::new(5);
         std::thread::scope(|scope| {

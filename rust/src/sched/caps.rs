@@ -1,0 +1,176 @@
+//! Admission-side concurrency caps: a non-blocking permit counter that
+//! bounds how many requests one principal (a tenant, a binding, a queue)
+//! may have in flight at once. Composes with [`super::WorkerBudget`]
+//! rather than duplicating it: the budget rations *threads* among pools
+//! that already hold work, while a [`ConcurrencyCap`] rations *admission*
+//! — whether a request may enter the system at all. A request admitted
+//! under its cap still executes inside whatever worker lease its sweep
+//! is granted.
+//!
+//! Caps never block. An over-cap acquire returns `None` immediately —
+//! the serving layer turns that into a typed reject on the wire (see
+//! [`crate::serve::tenant`]) instead of queueing unbounded work behind a
+//! slow tenant.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// A fixed in-flight limit with lock-free acquire/release and reject
+/// accounting. Cheap enough to keep one per tenant.
+#[derive(Debug)]
+pub struct ConcurrencyCap {
+    limit: usize,
+    inflight: AtomicUsize,
+    peak: AtomicUsize,
+    rejected: AtomicU64,
+}
+
+impl ConcurrencyCap {
+    /// A cap admitting at most `limit` concurrent holders (clamped ≥ 1:
+    /// a zero cap would deadlock every caller that retries).
+    pub fn new(limit: usize) -> Self {
+        ConcurrencyCap {
+            limit: limit.max(1),
+            inflight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured in-flight limit.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Permits currently held.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Self::inflight`].
+    pub fn peak_inflight(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Acquires rejected because the cap was full.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Raw acquire: returns `true` and counts one holder when under the
+    /// limit, `false` (and one reject) when full. Callers that prefer
+    /// RAII use [`Self::try_acquire`]; owners that must move the permit
+    /// across threads pair this with [`Self::release`] in their own
+    /// `Drop` (see [`crate::serve::tenant::TenantPermit`]).
+    pub fn try_begin(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Return one permit taken by [`Self::try_begin`].
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// RAII acquire: `None` when the cap is full (counted as a reject).
+    pub fn try_acquire(&self) -> Option<CapPermit<'_>> {
+        if self.try_begin() {
+            Some(CapPermit { cap: self })
+        } else {
+            None
+        }
+    }
+}
+
+/// RAII permit from [`ConcurrencyCap::try_acquire`]; releases on drop
+/// (unwind included).
+#[derive(Debug)]
+pub struct CapPermit<'a> {
+    cap: &'a ConcurrencyCap,
+}
+
+impl Drop for CapPermit<'_> {
+    fn drop(&mut self) {
+        self.cap.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn over_cap_acquires_reject_without_blocking() {
+        let cap = ConcurrencyCap::new(2);
+        let a = cap.try_acquire().unwrap();
+        let b = cap.try_acquire().unwrap();
+        assert_eq!(cap.inflight(), 2);
+        assert!(cap.try_acquire().is_none(), "third holder must be rejected");
+        assert_eq!(cap.rejected(), 1);
+        drop(a);
+        // a freed permit is immediately grantable again
+        let c = cap.try_acquire().unwrap();
+        assert_eq!(cap.inflight(), 2);
+        drop(b);
+        drop(c);
+        assert_eq!(cap.inflight(), 0);
+        assert_eq!(cap.peak_inflight(), 2);
+        assert_eq!(cap.rejected(), 1);
+    }
+
+    #[test]
+    fn zero_limit_is_clamped_to_one() {
+        let cap = ConcurrencyCap::new(0);
+        assert_eq!(cap.limit(), 1);
+        let p = cap.try_acquire().unwrap();
+        assert!(cap.try_acquire().is_none());
+        drop(p);
+    }
+
+    #[test]
+    fn permit_releases_on_panic() {
+        let cap = ConcurrencyCap::new(1);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _permit = cap.try_acquire().unwrap();
+            panic!("holder died");
+        }));
+        assert!(outcome.is_err());
+        assert_eq!(cap.inflight(), 0, "unwind must return the permit");
+        assert!(cap.try_acquire().is_some());
+    }
+
+    #[test]
+    fn concurrent_acquires_never_exceed_the_limit() {
+        let cap = ConcurrencyCap::new(3);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..200 {
+                        if let Some(p) = cap.try_acquire() {
+                            assert!(cap.inflight() <= 3);
+                            drop(p);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cap.inflight(), 0);
+        assert!(cap.peak_inflight() <= 3);
+    }
+}

@@ -4,9 +4,11 @@
 //! and PE for the program to achieve flexible parallelism."
 
 pub mod budget;
+pub mod caps;
 pub mod scheduler;
 
 pub use budget::{available_workers, PoolLease, WorkerBudget};
+pub use caps::{CapPermit, ConcurrencyCap};
 pub use scheduler::{auto_plan, AdmittedPlan, RuntimeScheduler, SchedulerEvent};
 
 

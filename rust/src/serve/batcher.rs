@@ -1,0 +1,214 @@
+//! Arrival batching: queries landing within one batch window coalesce
+//! into a single [`run_batch_parallel`] sweep per (graph, algorithm)
+//! binding, so a burst of BFS roots on the same graph pays one bind +
+//! one worker-pool lease instead of N. The window bounds added latency:
+//! a query waits at most `window` before its sweep dispatches (and not
+//! at all once the daemon is draining).
+//!
+//! The batcher owns only queueing and readiness; execution stays in the
+//! server (which holds the registry). A dispatcher thread loops on
+//! [`Batcher::next_ready`], which blocks until some binding's window has
+//! elapsed and hands back the whole queue for that binding.
+//!
+//! [`run_batch_parallel`]: crate::engine::BoundPipeline::run_batch_parallel
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{RunOptions, RunReport};
+
+use super::tenant::TenantPermit;
+
+/// The coalescing key: queries agreeing on both fields run in one sweep.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BindingKey {
+    pub graph: String,
+    pub algo: String,
+}
+
+/// What a query's connection gets back from its sweep.
+pub struct BatchOutcome {
+    /// The engine's report, or the per-query error text.
+    pub result: Result<RunReport, String>,
+    /// Admission → sweep dispatch.
+    pub queue: Duration,
+    /// Sweep dispatch → sweep done (batch-level: shared by the batch).
+    pub service: Duration,
+    /// Queries in the sweep this one rode in.
+    pub batch_size: usize,
+}
+
+/// One admitted query waiting for its sweep.
+pub struct Pending {
+    pub opts: RunOptions,
+    /// Held from admission until the response is written; dropping it
+    /// (after the reply sends) frees the tenant's slot.
+    pub permit: TenantPermit,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<BatchOutcome>,
+}
+
+struct QueueEntry {
+    /// When the oldest waiting query arrived — the window anchors here.
+    since: Instant,
+    items: Vec<Pending>,
+}
+
+struct State {
+    queues: HashMap<BindingKey, QueueEntry>,
+    draining: bool,
+}
+
+/// The arrival batcher. `submit` never blocks; `next_ready` blocks the
+/// dispatcher until a batch is due.
+pub struct Batcher {
+    state: Mutex<State>,
+    cv: Condvar,
+    window: Duration,
+}
+
+impl Batcher {
+    pub fn new(window: Duration) -> Self {
+        Batcher {
+            state: Mutex::new(State { queues: HashMap::new(), draining: false }),
+            cv: Condvar::new(),
+            window,
+        }
+    }
+
+    /// The configured batch window.
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Queue one admitted query. `Err` hands the query back when the
+    /// daemon is draining (the caller answers with a typed reject).
+    pub fn submit(&self, key: BindingKey, pending: Pending) -> Result<(), Pending> {
+        let mut state = self.state.lock().unwrap();
+        if state.draining {
+            return Err(pending);
+        }
+        let now = Instant::now();
+        state
+            .queues
+            .entry(key)
+            .or_insert_with(|| QueueEntry { since: now, items: Vec::new() })
+            .items
+            .push(pending);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop admitting; queued queries still dispatch (immediately, the
+    /// window no longer applies). After the last queue empties,
+    /// [`Self::next_ready`] returns `None` and the dispatcher exits.
+    pub fn drain(&self) {
+        self.state.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.state.lock().unwrap().draining
+    }
+
+    /// Block until one binding's batch is due, then hand its whole queue
+    /// over. `None` means drained and empty: the dispatcher's exit.
+    pub fn next_ready(&self) -> Option<(BindingKey, Vec<Pending>)> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let draining = state.draining;
+            let due = state
+                .queues
+                .iter()
+                .filter(|(_, q)| !q.items.is_empty())
+                .filter(|(_, q)| draining || now.duration_since(q.since) >= self.window)
+                .min_by_key(|(_, q)| q.since)
+                .map(|(k, _)| k.clone());
+            if let Some(key) = due {
+                let entry = state.queues.remove(&key).expect("due key is present");
+                return Some((key, entry.items));
+            }
+            let earliest =
+                state.queues.values().filter(|q| !q.items.is_empty()).map(|q| q.since).min();
+            match earliest {
+                Some(since) => {
+                    let timeout = (since + self.window).saturating_duration_since(now);
+                    state = self.cv.wait_timeout(state, timeout).unwrap().0;
+                }
+                None if draining => return None,
+                None => state = self.cv.wait(state).unwrap(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::tenant::TenantTable;
+
+    fn pending(table: &TenantTable) -> (Pending, mpsc::Receiver<BatchOutcome>) {
+        let (tx, rx) = mpsc::channel();
+        let p = Pending {
+            opts: RunOptions::default(),
+            permit: table.admit("test").unwrap(),
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        (p, rx)
+    }
+
+    fn key(graph: &str, algo: &str) -> BindingKey {
+        BindingKey { graph: graph.into(), algo: algo.into() }
+    }
+
+    #[test]
+    fn arrivals_within_the_window_coalesce_into_one_batch() {
+        let table = TenantTable::new(16, &[]);
+        let b = Batcher::new(Duration::from_millis(40));
+        for _ in 0..3 {
+            let (p, _rx) = pending(&table);
+            b.submit(key("g", "bfs"), p).unwrap();
+        }
+        let t0 = Instant::now();
+        let (k, items) = b.next_ready().unwrap();
+        assert_eq!(k, key("g", "bfs"));
+        assert_eq!(items.len(), 3, "one sweep for the burst");
+        assert!(t0.elapsed() >= Duration::from_millis(20), "the window applied");
+    }
+
+    #[test]
+    fn different_bindings_batch_separately() {
+        let table = TenantTable::new(16, &[]);
+        let b = Batcher::new(Duration::from_millis(5));
+        let (p, _r1) = pending(&table);
+        b.submit(key("g", "bfs"), p).unwrap();
+        let (p, _r2) = pending(&table);
+        b.submit(key("g", "pagerank"), p).unwrap();
+        let (_, first) = b.next_ready().unwrap();
+        let (_, second) = b.next_ready().unwrap();
+        assert_eq!(first.len(), 1);
+        assert_eq!(second.len(), 1);
+    }
+
+    #[test]
+    fn draining_rejects_new_work_and_flushes_the_queue() {
+        let table = TenantTable::new(16, &[]);
+        // a window long enough that only drain can flush it in test time
+        let b = Batcher::new(Duration::from_secs(600));
+        let (p, _r1) = pending(&table);
+        b.submit(key("g", "bfs"), p).unwrap();
+        let (p, _r2) = pending(&table);
+        b.submit(key("g", "bfs"), p).unwrap();
+        b.drain();
+        assert!(b.is_draining());
+        let (p, _r3) = pending(&table);
+        assert!(b.submit(key("g", "bfs"), p).is_err(), "draining admits nothing");
+        let (_, items) = b.next_ready().unwrap();
+        assert_eq!(items.len(), 2, "queued work still dispatches on drain");
+        assert!(b.next_ready().is_none(), "drained and empty ends the dispatcher");
+    }
+}

@@ -1,0 +1,80 @@
+//! A small blocking client for the serve wire protocol, used by the
+//! integration tests, the `serve_demo` example, and the
+//! `serve_latency` bench. One request line out, one response line back;
+//! pipelined use (several [`ServeClient::send_query`] calls before the
+//! first recv) is fine — the daemon answers in request order per
+//! connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{Json, QueryRequest};
+
+/// A connected client. Reads and writes share one socket; `recv` blocks
+/// until the daemon's next response line.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).context("connecting to the serve daemon")?;
+        let writer = stream.try_clone().context("cloning the client socket")?;
+        Ok(ServeClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one raw request line (the newline is added here).
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Receive the next response line, parsed.
+    pub fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("the daemon closed the connection");
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response line: {e}"))
+    }
+
+    /// Send one raw line and wait for its response.
+    pub fn request(&mut self, line: &str) -> Result<Json> {
+        self.send_line(line)?;
+        self.recv()
+    }
+
+    /// Send one query and wait for its response (success or typed
+    /// reject — inspect `ok`).
+    pub fn query(&mut self, q: &QueryRequest) -> Result<Json> {
+        self.request(&q.encode())
+    }
+
+    /// Send a query without waiting — pair with [`Self::recv`] later.
+    /// Pipelining is how a load generator keeps the batcher's window
+    /// busy from one connection.
+    pub fn send_query(&mut self, q: &QueryRequest) -> Result<()> {
+        self.send_line(&q.encode())
+    }
+
+    /// Fetch the daemon's rolling stats.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.request("{\"op\":\"stats\"}")
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<Json> {
+        self.request("{\"op\":\"ping\"}")
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.request("{\"op\":\"shutdown\"}")
+    }
+}

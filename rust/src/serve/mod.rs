@@ -1,0 +1,33 @@
+//! Always-on query service: the `jgraph serve` daemon.
+//!
+//! The compile-once/run-many lifecycle ([`crate::engine`]) amortizes
+//! translation and graph prep across queries *within one process*; this
+//! module keeps that process alive. A daemon owns a [`registry`] of
+//! named prepared graphs (LRU-bounded residency) and compiled pipelines
+//! (compile on first use), admits queries over a line-delimited JSON TCP
+//! protocol ([`wire`]), coalesces arrivals into
+//! [`run_batch_parallel`] sweeps ([`batcher`]), rations admission per
+//! tenant ([`tenant`]) and threads through the global
+//! [`WorkerBudget`](crate::sched::WorkerBudget), and accounts tail
+//! latency with rolling histograms ([`stats`]).
+//!
+//! See `docs/serving.md` for the wire spec and operational semantics,
+//! and `examples/serve_demo.rs` for an end-to-end smoke.
+//!
+//! [`run_batch_parallel`]: crate::engine::BoundPipeline::run_batch_parallel
+
+pub mod batcher;
+pub mod client;
+pub mod registry;
+pub mod server;
+pub mod stats;
+pub mod tenant;
+pub mod wire;
+
+pub use batcher::{BatchOutcome, Batcher, BindingKey};
+pub use client::ServeClient;
+pub use registry::ServeRegistry;
+pub use server::{install_termination_handler, termination_requested, ServeConfig, Server};
+pub use stats::{LatencyHistogram, ServeStats};
+pub use tenant::{TenantPermit, TenantTable};
+pub use wire::{QueryRequest, RejectKind, Request};

@@ -1,0 +1,363 @@
+//! The daemon's registry of named graphs and compiled pipelines —
+//! everything `jgraph serve` owns that outlives a single request.
+//!
+//! Graphs register as *sources* (a [`catalog`](crate::graph::catalog)
+//! spec or an in-memory edge list) and are prepared on first use; the
+//! resident [`PreparedGraph`] set is bounded by an LRU cap, so a daemon
+//! serving many graphs holds at most `max_resident` CSR/CSC/shard cache
+//! sets at once. Eviction only drops the registry's `Arc` — queries in
+//! flight keep their graph alive, and the next query on an evicted name
+//! reloads it transparently (paying `prep_seconds` again, visible in its
+//! reports).
+//!
+//! Pipelines compile on first use per algorithm name and are never
+//! evicted (a [`CompiledPipeline`] is a few kilobytes of design + program
+//! — the memory that matters is the graphs). This is the serving-layer
+//! analogue of the AOT artifact cache in
+//! [`crate::runtime::registry::KernelRegistry`]: same
+//! compile-on-first-use discipline, one level up the stack.
+//!
+//! Concurrency: first touches of the same name race on a per-slot
+//! [`OnceLock`], so the prep runs exactly once and both callers share
+//! one `Arc` (asserted by the serve integration tests). The expensive
+//! build happens outside the registry locks.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dsl::program::GasProgram;
+use crate::engine::{CompiledPipeline, Session};
+use crate::graph::catalog;
+use crate::graph::edgelist::EdgeList;
+use crate::prep::prepared::{PrepOptions, PreparedGraph};
+
+/// Where a registered graph's edges come from when it must be
+/// (re)prepared.
+#[derive(Clone)]
+pub enum GraphSource {
+    /// A [`catalog::load_spec`] spec (preset name or file path).
+    Spec { spec: String, seed: u64 },
+    /// An in-memory edge list (tests, embedders).
+    Edges(Arc<EdgeList>),
+}
+
+/// One resident graph: the source it rebuilds from plus the
+/// once-per-residency prepared form. Two threads racing on the first
+/// touch share the `OnceLock` build.
+struct GraphSlot {
+    name: String,
+    source: GraphSource,
+    prep: OnceLock<Result<Arc<PreparedGraph>, String>>,
+}
+
+impl GraphSlot {
+    fn prepare(&self) -> Result<Arc<PreparedGraph>, String> {
+        self.prep
+            .get_or_init(|| {
+                let built = match &self.source {
+                    GraphSource::Spec { spec, seed } => {
+                        let (_, el) = catalog::load_spec(spec, *seed)
+                            .map_err(|e| format!("loading graph {:?}: {e:#}", self.name))?;
+                        PreparedGraph::prepare(&el, &PrepOptions::named(self.name.clone()))
+                    }
+                    GraphSource::Edges(el) => {
+                        PreparedGraph::prepare(el, &PrepOptions::named(self.name.clone()))
+                    }
+                };
+                built
+                    .map(Arc::new)
+                    .map_err(|e| format!("preparing graph {:?}: {e:#}", self.name))
+            })
+            .clone()
+    }
+}
+
+/// LRU-ordered resident set: `order` front = least recently used.
+#[derive(Default)]
+struct Resident {
+    slots: HashMap<String, Arc<GraphSlot>>,
+    order: Vec<String>,
+}
+
+impl Resident {
+    fn touch(&mut self, name: &str) {
+        self.order.retain(|n| n != name);
+        self.order.push(name.to_string());
+    }
+}
+
+/// The registry. All methods take `&self`; every lock is internal and
+/// never held across a prepare/compile.
+pub struct ServeRegistry {
+    session: Mutex<Session>,
+    sources: Mutex<HashMap<String, GraphSource>>,
+    resident: Mutex<Resident>,
+    pipelines: Mutex<HashMap<String, Arc<CompiledPipeline>>>,
+    max_resident: usize,
+    evictions: AtomicU64,
+}
+
+impl ServeRegistry {
+    /// A registry compiling through `session`, holding at most
+    /// `max_resident` prepared graphs (clamped ≥ 1).
+    pub fn new(session: Session, max_resident: usize) -> Self {
+        ServeRegistry {
+            session: Mutex::new(session),
+            sources: Mutex::new(HashMap::new()),
+            resident: Mutex::new(Resident::default()),
+            pipelines: Mutex::new(HashMap::new()),
+            max_resident: max_resident.max(1),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Register `name` to resolve through the graph catalog (preset or
+    /// path), deterministically under `seed`. Re-registering replaces
+    /// the source but not an already-resident prep.
+    pub fn register_spec(&self, name: impl Into<String>, spec: impl Into<String>, seed: u64) {
+        let source = GraphSource::Spec { spec: spec.into(), seed };
+        self.sources.lock().unwrap().insert(name.into(), source);
+    }
+
+    /// Register `name` with in-memory edges.
+    pub fn register_edges(&self, name: impl Into<String>, edges: EdgeList) {
+        let source = GraphSource::Edges(Arc::new(edges));
+        self.sources.lock().unwrap().insert(name.into(), source);
+    }
+
+    /// Whether `name` has a registered source (resident or not).
+    pub fn is_registered(&self, name: &str) -> bool {
+        self.sources.lock().unwrap().contains_key(name)
+    }
+
+    /// Registered graph names, sorted.
+    pub fn graph_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.sources.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Resident (prepared) graph names in LRU order, least recent first.
+    pub fn resident_names(&self) -> Vec<String> {
+        self.resident.lock().unwrap().order.clone()
+    }
+
+    /// Resident prepared-graph count (always ≤ the configured cap).
+    pub fn resident_count(&self) -> usize {
+        self.resident.lock().unwrap().slots.len()
+    }
+
+    /// Graphs evicted over the registry's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The configured resident cap.
+    pub fn max_resident(&self) -> usize {
+        self.max_resident
+    }
+
+    /// Get (preparing on first use) the named graph. `Err(None)` means
+    /// the name is unregistered; `Err(Some(msg))` a load/prep failure.
+    #[allow(clippy::type_complexity)]
+    pub fn graph(&self, name: &str) -> Result<Arc<PreparedGraph>, Option<String>> {
+        let slot = {
+            let mut resident = self.resident.lock().unwrap();
+            match resident.slots.get(name) {
+                Some(slot) => {
+                    resident.touch(name);
+                    slot.clone()
+                }
+                None => {
+                    let source = self.sources.lock().unwrap().get(name).cloned();
+                    let Some(source) = source else { return Err(None) };
+                    // Make room before inserting: evict least-recently
+                    // used names until the new slot fits the cap.
+                    while resident.slots.len() >= self.max_resident {
+                        let Some(victim) = resident.order.first().cloned() else { break };
+                        resident.slots.remove(&victim);
+                        resident.order.retain(|n| n != &victim);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let slot = Arc::new(GraphSlot {
+                        name: name.to_string(),
+                        source,
+                        prep: OnceLock::new(),
+                    });
+                    resident.slots.insert(name.to_string(), slot.clone());
+                    resident.touch(name);
+                    slot
+                }
+            }
+        };
+        // Prepare outside the lock: concurrent callers of the same name
+        // share the slot's OnceLock; other names proceed unblocked.
+        match slot.prepare() {
+            Ok(prep) => Ok(prep),
+            Err(msg) => {
+                // Drop the failed slot so a later request can retry
+                // (e.g. the file appears); holders of the error keep it.
+                let mut resident = self.resident.lock().unwrap();
+                if resident
+                    .slots
+                    .get(name)
+                    .is_some_and(|s| Arc::ptr_eq(s, &slot))
+                {
+                    resident.slots.remove(name);
+                    resident.order.retain(|n| n != name);
+                }
+                Err(Some(msg))
+            }
+        }
+    }
+
+    /// Get (compiling on first use) the pipeline for `algo`. `Err(None)`
+    /// means no such algorithm; `Err(Some(msg))` a compile failure.
+    #[allow(clippy::type_complexity)]
+    pub fn pipeline(&self, algo: &str) -> Result<Arc<CompiledPipeline>, Option<String>> {
+        if let Some(p) = self.pipelines.lock().unwrap().get(algo) {
+            return Ok(p.clone());
+        }
+        let Some(program) = program_by_name(algo) else { return Err(None) };
+        // Compile outside the pipelines lock (the session lock
+        // serializes compiles; losers of a race just re-insert the same
+        // value).
+        let compiled = self
+            .session
+            .lock()
+            .unwrap()
+            .compile(&program)
+            .map_err(|e| Some(e.to_string()))?;
+        let compiled = Arc::new(compiled);
+        let mut pipelines = self.pipelines.lock().unwrap();
+        Ok(pipelines.entry(algo.to_string()).or_insert(compiled).clone())
+    }
+
+    /// Compiled pipeline names, sorted.
+    pub fn pipeline_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.pipelines.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// Algorithm lookup by wire/CLI name (the `jgraph run --algo` names).
+pub fn program_by_name(name: &str) -> Option<GasProgram> {
+    use crate::dsl::algorithms;
+    Some(match name {
+        "bfs" => algorithms::bfs(),
+        "pagerank" | "pr" => algorithms::pagerank(),
+        "sssp" => algorithms::sssp(),
+        "wcc" => algorithms::wcc(),
+        "spmv" => algorithms::spmv(),
+        "degree-count" => algorithms::degree_count(),
+        "widest-path" => algorithms::widest_path(),
+        "reachability" => algorithms::reachability(),
+        "max-label" => algorithms::max_label(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SessionConfig;
+    use crate::graph::generate;
+
+    fn registry(max_resident: usize) -> ServeRegistry {
+        let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+        ServeRegistry::new(session, max_resident)
+    }
+
+    #[test]
+    fn unknown_names_are_typed_not_errors_with_messages() {
+        let reg = registry(2);
+        assert!(matches!(reg.graph("nope"), Err(None)));
+        assert!(matches!(reg.pipeline("nope"), Err(None)));
+    }
+
+    #[test]
+    fn graphs_prepare_once_and_lru_evicts_over_cap() {
+        let reg = registry(2);
+        reg.register_edges("a", generate::erdos_renyi(64, 256, 1));
+        reg.register_edges("b", generate::erdos_renyi(64, 256, 2));
+        reg.register_edges("c", generate::erdos_renyi(64, 256, 3));
+        let a1 = reg.graph("a").unwrap();
+        let a2 = reg.graph("a").unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "repeat touches share one prep");
+        reg.graph("b").unwrap();
+        assert_eq!(reg.resident_count(), 2);
+        assert_eq!(reg.evictions(), 0);
+        // third graph evicts the least recently used ("a"? no — "a" was
+        // touched before "b", so "a" is LRU)
+        reg.graph("c").unwrap();
+        assert_eq!(reg.resident_count(), 2);
+        assert_eq!(reg.evictions(), 1);
+        assert_eq!(reg.resident_names(), vec!["b".to_string(), "c".to_string()]);
+        // the evicted graph reloads transparently as a fresh prep
+        let a3 = reg.graph("a").unwrap();
+        assert!(!Arc::ptr_eq(&a1, &a3), "reload is a new prepared graph");
+        assert_eq!(a3.num_vertices(), a1.num_vertices());
+        assert_eq!(reg.resident_count(), 2);
+        assert_eq!(reg.evictions(), 2);
+    }
+
+    #[test]
+    fn touch_order_protects_recently_used_graphs() {
+        let reg = registry(2);
+        reg.register_edges("a", generate::chain(32));
+        reg.register_edges("b", generate::chain(32));
+        reg.register_edges("c", generate::chain(32));
+        reg.graph("a").unwrap();
+        reg.graph("b").unwrap();
+        reg.graph("a").unwrap(); // "a" is now most recent
+        reg.graph("c").unwrap(); // evicts "b"
+        assert_eq!(reg.resident_names(), vec!["a".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn pipelines_compile_once_per_algo() {
+        let reg = registry(2);
+        let p1 = reg.pipeline("bfs").unwrap();
+        let p2 = reg.pipeline("bfs").unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.program().name, "bfs");
+        assert_eq!(reg.pipeline_names(), vec!["bfs".to_string()]);
+    }
+
+    #[test]
+    fn concurrent_first_touches_share_one_prepared_graph() {
+        // The satellite contract: two threads loading the same named
+        // graph race on the slot's OnceLock — CSR/CSC/auto-shard are
+        // built once and both callers hold the same Arc.
+        let reg = registry(2);
+        reg.register_edges("shared", generate::erdos_renyi(128, 1024, 7));
+        let barrier = std::sync::Barrier::new(2);
+        let (a, b) = std::thread::scope(|scope| {
+            let ta = scope.spawn(|| {
+                barrier.wait();
+                reg.graph("shared").unwrap()
+            });
+            let tb = scope.spawn(|| {
+                barrier.wait();
+                reg.graph("shared").unwrap()
+            });
+            (ta.join().unwrap(), tb.join().unwrap())
+        });
+        assert!(Arc::ptr_eq(&a, &b), "racing loads must share one prep");
+        // the lazily-built caches are the same objects through either Arc
+        assert!(std::ptr::eq(a.csc(), b.csc()));
+        assert!(std::ptr::eq(a.out_deg().as_ptr(), b.out_deg().as_ptr()));
+    }
+
+    #[test]
+    fn failed_loads_surface_and_do_not_poison_the_slot() {
+        let reg = registry(2);
+        reg.register_spec("ghost", "/nonexistent/ghost.txt", 1);
+        let Err(Some(msg)) = reg.graph("ghost") else { panic!("expected a load error") };
+        assert!(msg.contains("ghost"), "{msg}");
+        // the failed slot is not left resident
+        assert_eq!(reg.resident_count(), 0);
+    }
+}

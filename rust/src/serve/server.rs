@@ -1,0 +1,614 @@
+//! The `jgraph serve` daemon: a std-TCP front end over the registry,
+//! batcher, tenant table, and stats — line-delimited JSON in, one
+//! response line per request, in request order per connection.
+//!
+//! Threading: one accept loop (nonblocking + poll, so shutdown is
+//! observed), one batch dispatcher driving [`Batcher::next_ready`], and
+//! per connection a reader (decode + admission) and a writer (response
+//! ordering). Admission work — pipeline compile, param preflight,
+//! tenant cap — happens on the reader so a reject costs microseconds;
+//! graph prep and the sweep happen on the dispatcher.
+//!
+//! Graceful drain: the wire `shutdown` op, [`Server::shutdown`], or
+//! SIGTERM (via [`install_termination_handler`] + the serve CLI loop)
+//! all set one flag and drain the batcher — queued queries finish and
+//! get their responses, new queries earn a typed `draining` reject, and
+//! [`Server::join`] returns once every thread is down.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{RunOptions, RunReport};
+use crate::sched::available_workers;
+
+use super::batcher::{BatchOutcome, Batcher, BindingKey, Pending};
+use super::registry::ServeRegistry;
+use super::stats::ServeStats;
+use super::tenant::TenantTable;
+use super::wire::{self, Json, QueryRequest, RejectKind, Request};
+
+/// Daemon knobs. The registry (and its resident-graph cap) is built by
+/// the caller and passed to [`Server::start`] separately, so tests and
+/// embedders can pre-register graphs.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Bind address; `127.0.0.1:0` picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// How long the first query of a batch waits for company.
+    pub batch_window: Duration,
+    /// In-flight cap for tenants without an explicit entry.
+    pub default_tenant_cap: usize,
+    /// Explicit per-tenant caps.
+    pub tenant_caps: Vec<(String, usize)>,
+    /// Worker-thread target per sweep (leased from the global
+    /// [`WorkerBudget`](crate::sched::WorkerBudget) at dispatch).
+    pub sweep_workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_window: Duration::from_millis(2),
+            default_tenant_cap: 64,
+            tenant_caps: Vec::new(),
+            sweep_workers: available_workers(),
+        }
+    }
+}
+
+/// Everything the daemon's threads share.
+struct Shared {
+    registry: Arc<ServeRegistry>,
+    batcher: Batcher,
+    tenants: TenantTable,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    sweep_workers: usize,
+    /// Read-half clones of live connections, for EOF-ing idle readers at
+    /// join time.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// A running daemon. Drop order is irrelevant — call [`Server::join`]
+/// for a clean exit.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind, spawn the accept + dispatch threads, and return
+    /// immediately.
+    pub fn start(config: ServeConfig, registry: Arc<ServeRegistry>) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&config.addr).with_context(|| format!("binding {}", config.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            registry,
+            batcher: Batcher::new(config.batch_window),
+            tenants: TenantTable::new(config.default_tenant_cap, &config.tenant_caps),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+            sweep_workers: config.sweep_workers.max(1),
+            conns: Mutex::new(Vec::new()),
+        });
+        let dispatch = {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                while let Some((key, items)) = shared.batcher.next_ready() {
+                    execute_batch(&shared, &key, items);
+                }
+            })
+        };
+        let handlers = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let handlers = handlers.clone();
+            std::thread::spawn(move || {
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = stream.set_nonblocking(false);
+                            if let Ok(clone) = stream.try_clone() {
+                                shared.conns.lock().unwrap().push(clone);
+                            }
+                            let shared = shared.clone();
+                            let handler =
+                                std::thread::spawn(move || handle_connection(shared, stream));
+                            handlers.lock().unwrap().push(handler);
+                        }
+                        // nonblocking accept: poll so the shutdown flag
+                        // is observed within ~10ms
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+        };
+        Ok(Server { shared, addr, accept: Some(accept), dispatch: Some(dispatch), handlers })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful drain: stop accepting and admitting, finish what
+    /// is queued. Idempotent; also triggered by the wire `shutdown` op.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.batcher.drain();
+    }
+
+    /// Whether drain has begun (wire op, SIGTERM loop, or
+    /// [`Self::shutdown`]).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Drain and wait for every thread: accept loop, dispatcher (which
+    /// flushes all queued sweeps first), then the connection handlers
+    /// (their readers are EOF-ed; pending responses still get written).
+    pub fn join(mut self) -> Result<()> {
+        self.shutdown();
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        if let Some(h) = self.dispatch.take() {
+            h.join().map_err(|_| anyhow::anyhow!("dispatch thread panicked"))?;
+        }
+        // every outcome is delivered; unblock readers idling in
+        // read_line (writers flush their queues and follow)
+        for conn in self.shared.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        let handlers = std::mem::take(&mut *self.handlers.lock().unwrap());
+        for h in handlers {
+            h.join().map_err(|_| anyhow::anyhow!("connection handler panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// What the reader hands the writer for one request, preserving request
+/// order on the connection.
+enum Deliver {
+    /// A response that is already known (acks, stats, rejects).
+    Now(String),
+    /// A query waiting on its sweep.
+    Wait {
+        request: Box<QueryRequest>,
+        enqueued: Instant,
+        outcome_rx: mpsc::Receiver<BatchOutcome>,
+    },
+}
+
+fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<Deliver>();
+    let writer_shared = shared.clone();
+    let writer = std::thread::spawn(move || write_responses(&writer_shared, write_half, rx));
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if tx.send(dispatch_request(&shared, trimmed)).is_err() {
+            break;
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Decode one request line and run admission; never blocks on the sweep.
+fn dispatch_request(shared: &Arc<Shared>, line: &str) -> Deliver {
+    let request = match Request::decode(line) {
+        Ok(r) => r,
+        Err(msg) => return Deliver::Now(wire::encode_error(&RejectKind::BadRequest, &msg)),
+    };
+    match request {
+        Request::Ping => Deliver::Now(wire::encode_ack("ping")),
+        Request::Stats => Deliver::Now(stats_response(shared)),
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.batcher.drain();
+            Deliver::Now(wire::encode_ack("shutdown"))
+        }
+        Request::Query(q) => admit_query(shared, q),
+    }
+}
+
+/// Admission: typed rejects for unknown names, bad params, tenants at
+/// cap, and draining; otherwise queue the query and hand the writer a
+/// receiver for its outcome.
+fn admit_query(shared: &Arc<Shared>, q: Box<QueryRequest>) -> Deliver {
+    let reject = |kind: RejectKind, msg: String| Deliver::Now(wire::encode_error(&kind, &msg));
+    if shared.batcher.is_draining() {
+        return reject(RejectKind::Draining, "daemon is draining".into());
+    }
+    if !shared.registry.is_registered(&q.graph) {
+        return reject(RejectKind::UnknownGraph, format!("no graph registered as {:?}", q.graph));
+    }
+    let pipeline = match shared.registry.pipeline(&q.algo) {
+        Ok(p) => p,
+        Err(None) => {
+            return reject(RejectKind::UnknownAlgo, format!("no algorithm named {:?}", q.algo))
+        }
+        Err(Some(msg)) => return reject(RejectKind::CompileFailed, msg),
+    };
+    let mut params = crate::dsl::ParamSet::new();
+    for (name, value) in &q.params {
+        params.set(name.clone(), *value);
+    }
+    if let Err(e) = pipeline.program().resolve_params(&params) {
+        return reject(RejectKind::BadRequest, format!("params: {e}"));
+    }
+    let permit = match shared.tenants.admit(&q.tenant) {
+        Ok(p) => p,
+        Err(limit) => {
+            let msg = format!("tenant {:?} is at its cap of {limit} in-flight queries", q.tenant);
+            return reject(RejectKind::TenantOverCap, msg);
+        }
+    };
+    let mut opts = RunOptions { root: q.root, params, ..Default::default() };
+    if let Some(direction) = q.direction {
+        opts.direction = direction;
+    }
+    opts.max_supersteps = q.max_supersteps;
+    let enqueued = Instant::now();
+    let (outcome_tx, outcome_rx) = mpsc::channel();
+    let pending = Pending { opts, permit, enqueued, reply: outcome_tx };
+    let key = BindingKey { graph: q.graph.clone(), algo: q.algo.clone() };
+    match shared.batcher.submit(key, pending) {
+        Ok(()) => Deliver::Wait { request: q, enqueued, outcome_rx },
+        Err(_rejected) => reject(RejectKind::Draining, "daemon is draining".into()),
+    }
+}
+
+/// The dispatcher's body: resolve the binding, run one sweep for the
+/// whole batch, and send every query its outcome. A failing sweep falls
+/// back to serial execution so each query gets its *own* report or
+/// error.
+fn execute_batch(shared: &Arc<Shared>, key: &BindingKey, items: Vec<Pending>) {
+    let dispatch = Instant::now();
+    let batch_size = items.len();
+    shared.stats.record_batch(batch_size);
+    let fail = |items: Vec<Pending>, msg: String| {
+        let service = dispatch.elapsed();
+        for p in items {
+            let outcome = BatchOutcome {
+                result: Err(msg.clone()),
+                queue: dispatch.duration_since(p.enqueued),
+                service,
+                batch_size,
+            };
+            let _ = p.reply.send(outcome);
+        }
+    };
+    let graph = match shared.registry.graph(&key.graph) {
+        Ok(g) => g,
+        Err(e) => {
+            let msg = e.unwrap_or_else(|| format!("no graph registered as {:?}", key.graph));
+            return fail(items, msg);
+        }
+    };
+    let pipeline = match shared.registry.pipeline(&key.algo) {
+        Ok(p) => p,
+        Err(e) => {
+            let msg = e.unwrap_or_else(|| format!("no algorithm named {:?}", key.algo));
+            return fail(items, msg);
+        }
+    };
+    let bound = match pipeline.bind(graph) {
+        Ok(b) => b,
+        Err(e) => return fail(items, format!("{e:#}")),
+    };
+    let queries: Vec<RunOptions> = items.iter().map(|p| p.opts.clone()).collect();
+    match bound.run_batch_parallel(&queries, shared.sweep_workers) {
+        Ok(reports) => {
+            let service = dispatch.elapsed();
+            for (p, report) in items.into_iter().zip(reports) {
+                let outcome = BatchOutcome {
+                    result: Ok(report),
+                    queue: dispatch.duration_since(p.enqueued),
+                    service,
+                    batch_size,
+                };
+                let _ = p.reply.send(outcome);
+            }
+        }
+        Err(_) => {
+            for p in items {
+                let result = bound.query(&p.opts).map_err(|e| format!("{e:#}"));
+                let outcome = BatchOutcome {
+                    result,
+                    queue: dispatch.duration_since(p.enqueued),
+                    service: dispatch.elapsed(),
+                    batch_size,
+                };
+                let _ = p.reply.send(outcome);
+            }
+        }
+    }
+}
+
+/// The writer: one response line per Deliver, in order. Exits when the
+/// reader drops the channel (EOF) or the socket dies.
+fn write_responses(shared: &Shared, mut stream: TcpStream, rx: mpsc::Receiver<Deliver>) {
+    for deliver in rx {
+        let line = match deliver {
+            Deliver::Now(line) => line,
+            Deliver::Wait { request, enqueued, outcome_rx } => match outcome_rx.recv() {
+                Ok(outcome) => finish_query(shared, &request, enqueued, outcome),
+                Err(_) => {
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    wire::encode_error(&RejectKind::Draining, "query dropped during shutdown")
+                }
+            },
+        };
+        if stream.write_all(line.as_bytes()).is_err() || stream.write_all(b"\n").is_err() {
+            break;
+        }
+        let _ = stream.flush();
+    }
+}
+
+/// Record one finished query's latencies and render its response line.
+fn finish_query(
+    shared: &Shared,
+    req: &QueryRequest,
+    enqueued: Instant,
+    outcome: BatchOutcome,
+) -> String {
+    let total = enqueued.elapsed();
+    shared.stats.queue.record(outcome.queue);
+    shared.stats.service.record(outcome.service);
+    shared.stats.total.record(total);
+    match &outcome.result {
+        Ok(report) => {
+            shared.stats.served.fetch_add(1, Ordering::Relaxed);
+            Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("op".into(), Json::Str("query".into())),
+                ("graph".into(), Json::Str(req.graph.clone())),
+                ("algo".into(), Json::Str(req.algo.clone())),
+                ("root".into(), Json::Num(req.root as f64)),
+                ("tenant".into(), Json::Str(req.tenant.clone())),
+                ("report".into(), report_json(report)),
+                ("timing".into(), timing_json(&outcome, total)),
+            ])
+            .render()
+        }
+        Err(msg) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            Json::Obj(vec![
+                ("ok".into(), Json::Bool(false)),
+                (
+                    "error".into(),
+                    Json::Obj(vec![
+                        ("kind".into(), Json::Str("exec_failed".into())),
+                        ("message".into(), Json::Str(msg.clone())),
+                    ]),
+                ),
+                ("timing".into(), timing_json(&outcome, total)),
+            ])
+            .render()
+        }
+    }
+}
+
+fn timing_json(outcome: &BatchOutcome, total: Duration) -> Json {
+    Json::Obj(vec![
+        ("queue_us".into(), Json::Num(outcome.queue.as_micros() as f64)),
+        ("service_us".into(), Json::Num(outcome.service.as_micros() as f64)),
+        ("total_us".into(), Json::Num(total.as_micros() as f64)),
+        ("batch_size".into(), Json::Num(outcome.batch_size as f64)),
+    ])
+}
+
+/// The full [`RunReport`] as a wire object. Finite floats render
+/// shortest-round-trip, so every modeled field survives the wire
+/// bit-identically (the serve integration test's contract).
+pub fn report_json(report: &RunReport) -> Json {
+    let bound: Vec<(String, Json)> =
+        report.bound_params.iter().map(|(n, v)| (n.clone(), Json::Num(*v))).collect();
+    let deviation = match report.oracle_deviation {
+        Some(d) => Json::Num(d),
+        None => Json::Null,
+    };
+    Json::Obj(vec![
+        ("program".into(), Json::Str(report.program.clone())),
+        ("translator".into(), Json::Str(report.translator.into())),
+        ("graph_name".into(), Json::Str(report.graph_name.clone())),
+        ("num_vertices".into(), Json::Num(report.num_vertices as f64)),
+        ("num_edges".into(), Json::Num(report.num_edges as f64)),
+        ("supersteps".into(), Json::Num(report.supersteps as f64)),
+        ("push_supersteps".into(), Json::Num(report.push_supersteps as f64)),
+        ("pull_supersteps".into(), Json::Num(report.pull_supersteps as f64)),
+        ("edges_traversed".into(), Json::Num(report.edges_traversed as f64)),
+        ("shards".into(), Json::Num(report.shards as f64)),
+        ("auto_shards".into(), Json::Num(report.auto_shards as f64)),
+        ("crossing_msgs".into(), Json::Num(report.crossing_msgs as f64)),
+        ("exchange_seconds".into(), Json::Num(report.exchange_seconds)),
+        ("prep_seconds".into(), Json::Num(report.prep_seconds)),
+        ("compile_seconds".into(), Json::Num(report.compile_seconds)),
+        ("deploy_seconds".into(), Json::Num(report.deploy_seconds)),
+        ("setup_seconds".into(), Json::Num(report.setup_seconds)),
+        ("sim_exec_seconds".into(), Json::Num(report.sim_exec_seconds)),
+        ("functional_exec_seconds".into(), Json::Num(report.functional_exec_seconds)),
+        ("transfer_seconds".into(), Json::Num(report.transfer_seconds)),
+        ("query_seconds".into(), Json::Num(report.query_seconds)),
+        ("rt_seconds".into(), Json::Num(report.rt_seconds)),
+        ("simulated_mteps".into(), Json::Num(report.simulated_mteps)),
+        ("hdl_lines".into(), Json::Num(report.hdl_lines as f64)),
+        ("total_cycles".into(), Json::Num(report.sim.cycles.total() as f64)),
+        ("oracle_deviation".into(), deviation),
+        ("bound_params".into(), Json::Obj(bound)),
+    ])
+}
+
+/// The `stats` response: rolling latency histograms, batch occupancy,
+/// registry residency/evictions, and per-tenant counters.
+fn stats_response(shared: &Shared) -> String {
+    let mut fields = vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("stats".into())),
+    ];
+    fields.extend(shared.stats.to_json_fields());
+    let registry = &shared.registry;
+    let resident: Vec<Json> = registry.resident_names().into_iter().map(Json::Str).collect();
+    let pipelines: Vec<Json> = registry.pipeline_names().into_iter().map(Json::Str).collect();
+    fields.push(("resident_graphs".into(), Json::Num(registry.resident_count() as f64)));
+    fields.push(("max_resident_graphs".into(), Json::Num(registry.max_resident() as f64)));
+    fields.push(("resident".into(), Json::Arr(resident)));
+    fields.push(("evictions".into(), Json::Num(registry.evictions() as f64)));
+    fields.push(("pipelines".into(), Json::Arr(pipelines)));
+    fields.push(("tenants".into(), shared.tenants.snapshot()));
+    fields.push(("tenant_rejects".into(), Json::Num(shared.tenants.total_rejected() as f64)));
+    fields.push(("draining".into(), Json::Bool(shared.batcher.is_draining())));
+    Json::Obj(fields).render()
+}
+
+static TERMINATION: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGTERM/SIGINT to a graceful drain without a signal-handling
+/// dependency: a hand-declared `signal(2)` binding flips one atomic that
+/// the serve CLI loop polls (async-signal-safe — the handler only
+/// stores). No-op off Unix.
+#[cfg(unix)]
+pub fn install_termination_handler() {
+    use std::os::raw::c_int;
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+    extern "C" fn on_term(_sig: c_int) {
+        TERMINATION.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_term);
+        signal(SIGINT, on_term);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_termination_handler() {}
+
+/// Whether a termination signal has arrived since
+/// [`install_termination_handler`].
+pub fn termination_requested() -> bool {
+    TERMINATION.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Session, SessionConfig};
+    use crate::graph::generate;
+    use crate::serve::client::ServeClient;
+    use crate::serve::wire::DEFAULT_TENANT;
+
+    fn tiny_server(max_resident: usize, config: ServeConfig) -> Server {
+        let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+        let registry = Arc::new(ServeRegistry::new(session, max_resident));
+        registry.register_edges("er", generate::erdos_renyi(128, 1024, 5));
+        registry.register_edges("grid", generate::grid2d(16, 16, 5));
+        Server::start(config, registry).unwrap()
+    }
+
+    fn query(graph: &str, algo: &str, root: u32) -> QueryRequest {
+        QueryRequest {
+            graph: graph.into(),
+            algo: algo.into(),
+            root,
+            params: Vec::new(),
+            direction: None,
+            tenant: DEFAULT_TENANT.into(),
+            max_supersteps: None,
+        }
+    }
+
+    #[test]
+    fn ping_query_stats_shutdown_round_trip() {
+        let server = tiny_server(4, ServeConfig::default());
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        let pong = c.request(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        let resp = c.query(&query("er", "bfs", 1)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{}", resp.render());
+        let report = resp.get("report").unwrap();
+        assert!(report.get("supersteps").unwrap().as_u64().unwrap() > 0);
+        assert!(report.get("edges_traversed").unwrap().as_u64().unwrap() > 0);
+        let timing = resp.get("timing").unwrap();
+        assert!(timing.get("batch_size").unwrap().as_u64().unwrap() >= 1);
+        let stats = c.request(r#"{"op":"stats"}"#).unwrap();
+        assert_eq!(stats.get("served").unwrap().as_u64(), Some(1));
+        assert_eq!(stats.get("resident_graphs").unwrap().as_u64(), Some(1));
+        let ack = c.request(r#"{"op":"shutdown"}"#).unwrap();
+        assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_names_and_bad_lines_get_typed_rejects() {
+        let server = tiny_server(4, ServeConfig::default());
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        let resp = c.query(&query("nope", "bfs", 0)).unwrap();
+        assert_eq!(
+            resp.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("unknown_graph")
+        );
+        let resp = c.query(&query("er", "quantum", 0)).unwrap();
+        assert_eq!(
+            resp.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("unknown_algo")
+        );
+        let resp = c.request("this is not json").unwrap();
+        assert_eq!(resp.get("error").unwrap().get("kind").unwrap().as_str(), Some("bad_request"));
+        // the connection survives every reject
+        let resp = c.query(&query("er", "bfs", 0)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn draining_daemon_rejects_new_queries() {
+        let server = tiny_server(4, ServeConfig::default());
+        server.shutdown();
+        let mut c = ServeClient::connect(server.local_addr());
+        // the accept loop may already be down; if we got in, the reject
+        // must be typed
+        if let Ok(c) = c.as_mut() {
+            if let Ok(resp) = c.query(&query("er", "bfs", 0)) {
+                assert_eq!(
+                    resp.get("error").unwrap().get("kind").unwrap().as_str(),
+                    Some("draining")
+                );
+            }
+        }
+        drop(c);
+        server.join().unwrap();
+    }
+}

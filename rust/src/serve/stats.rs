@@ -1,0 +1,261 @@
+//! Tail-latency accounting for the serve daemon: rolling histograms of
+//! queue / service / total time per query, plus batch-occupancy and
+//! error counters. Everything is process-lifetime (no windowing) and
+//! cheap enough to record on every request; the `stats` wire op renders
+//! a snapshot.
+//!
+//! The histogram is HDR-style: log2 octaves of microseconds, 16
+//! sub-buckets per octave, so quantiles are exact below 16 µs and within
+//! 1/16 (≤ 6.25 %) relative error above — plenty for p50/p95/p99 over a
+//! latency range spanning microsecond cache hits to multi-second cold
+//! graph preps, in a fixed 1 KiB of counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::wire::Json;
+
+/// Octaves of microseconds covered (2^0 .. 2^63 µs — saturates far past
+/// any real latency).
+const OCTAVES: usize = 64;
+/// Sub-buckets per octave (relative error ≤ 1/SUBS above 16 µs).
+const SUBS: usize = 16;
+
+/// A log2-bucketed latency histogram over microseconds.
+pub struct LatencyHistogram {
+    inner: Mutex<Buckets>,
+}
+
+struct Buckets {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u128,
+    max_us: u64,
+}
+
+/// Bucket index for a microsecond value: exact below 16 µs, then
+/// 16 sub-buckets per power of two.
+fn bucket_of(us: u64) -> usize {
+    if us < SUBS as u64 {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros() as usize;
+    SUBS * (msb - 3) + ((us >> (msb - 4)) as usize - SUBS)
+}
+
+/// Lower bound (µs) of a bucket — what quantile queries report.
+fn bucket_floor(bucket: usize) -> u64 {
+    if bucket < SUBS {
+        return bucket as u64;
+    }
+    let msb = bucket / SUBS + 3;
+    let sub = bucket % SUBS;
+    (1u64 << msb) + ((sub as u64) << (msb - 4))
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            inner: Mutex::new(Buckets {
+                counts: vec![0; SUBS * (OCTAVES - 3)],
+                total: 0,
+                sum_us: 0,
+                max_us: 0,
+            }),
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, latency: Duration) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let mut b = self.inner.lock().unwrap();
+        let idx = bucket_of(us).min(b.counts.len() - 1);
+        b.counts[idx] += 1;
+        b.total += 1;
+        b.sum_us += us as u128;
+        b.max_us = b.max_us.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// The `p`-th percentile (0 < p ≤ 100) in microseconds: the lower
+    /// bound of the bucket holding the p-th sample. `None` when empty.
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
+        let b = self.inner.lock().unwrap();
+        if b.total == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * b.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in b.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_floor(idx));
+            }
+        }
+        Some(b.max_us)
+    }
+
+    /// Mean latency in microseconds (`None` when empty).
+    pub fn mean_us(&self) -> Option<f64> {
+        let b = self.inner.lock().unwrap();
+        if b.total == 0 {
+            None
+        } else {
+            Some(b.sum_us as f64 / b.total as f64)
+        }
+    }
+
+    /// Largest sample in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.inner.lock().unwrap().max_us
+    }
+
+    /// Histogram summary as a wire JSON object.
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<u64>| match v {
+            Some(us) => Json::Num(us as f64),
+            None => Json::Null,
+        };
+        Json::Obj(vec![
+            ("count".into(), Json::Num(self.count() as f64)),
+            ("p50_us".into(), opt(self.percentile_us(50.0))),
+            ("p95_us".into(), opt(self.percentile_us(95.0))),
+            ("p99_us".into(), opt(self.percentile_us(99.0))),
+            ("mean_us".into(), self.mean_us().map(Json::Num).unwrap_or(Json::Null)),
+            ("max_us".into(), Json::Num(self.max_us() as f64)),
+        ])
+    }
+}
+
+/// All rolling serve-side accounting, shared by the batcher and the
+/// connection handlers.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Admission → batch-dispatch wait per query.
+    pub queue: LatencyHistogram,
+    /// Batch execution time attributed to each query in the batch.
+    pub service: LatencyHistogram,
+    /// Admission → response-ready, per query.
+    pub total: LatencyHistogram,
+    /// Sweeps dispatched.
+    pub batches: AtomicU64,
+    /// Queries that went through a sweep (Σ batch sizes).
+    pub batched_queries: AtomicU64,
+    /// Largest single sweep.
+    pub max_batch: AtomicU64,
+    /// Queries answered `ok:true`.
+    pub served: AtomicU64,
+    /// Queries answered with an execution error (post-admission).
+    pub errors: AtomicU64,
+}
+
+impl ServeStats {
+    /// Record one dispatched sweep of `size` queries.
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    /// Mean queries per sweep (0.0 before the first sweep).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.batched_queries.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// The `stats` response body (everything except registry/tenant
+    /// fields, which the server layers in).
+    pub fn to_json_fields(&self) -> Vec<(String, Json)> {
+        vec![
+            ("served".into(), Json::Num(self.served.load(Ordering::Relaxed) as f64)),
+            ("errors".into(), Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("batches".into(), Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_occupancy".into(), Json::Num(self.mean_batch_occupancy())),
+            ("max_batch".into(), Json::Num(self.max_batch.load(Ordering::Relaxed) as f64)),
+            ("queue".into(), self.queue.to_json()),
+            ("service".into(), self.service.to_json()),
+            ("total".into(), self.total.to_json()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = LatencyHistogram::new();
+        for us in [0u64, 1, 5, 15] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile_us(25.0), Some(0));
+        assert_eq!(h.percentile_us(100.0), Some(15));
+        assert_eq!(h.max_us(), 15);
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_bounded_error() {
+        let mut prev = 0usize;
+        for us in 1..100_000u64 {
+            let b = bucket_of(us);
+            assert!(b >= prev, "bucket_of must be monotone at {us}");
+            prev = b;
+            let floor = bucket_floor(b);
+            assert!(floor <= us, "floor {floor} > {us}");
+            // relative error of the reported lower bound is ≤ 1/16
+            assert!((us - floor) as f64 <= us as f64 / 16.0 + 1.0, "{us} -> {floor}");
+        }
+    }
+
+    #[test]
+    fn percentiles_rank_correctly() {
+        let h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.percentile_us(50.0).unwrap();
+        let p99 = h.percentile_us(99.0).unwrap();
+        assert!((450..=500).contains(&p50), "p50 {p50}");
+        assert!((920..=990).contains(&p99), "p99 {p99}");
+        assert!(p50 < p99);
+        // p100 lands in the top occupied bucket, whose floor is ≤ max
+        assert!(h.percentile_us(100.0).unwrap() <= h.max_us());
+        let mean = h.mean_us().unwrap();
+        assert!((495.0..=506.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn empty_histogram_reports_none() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(50.0), None);
+        assert_eq!(h.mean_us(), None);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn stats_track_batch_occupancy() {
+        let s = ServeStats::default();
+        s.record_batch(4);
+        s.record_batch(8);
+        assert_eq!(s.mean_batch_occupancy(), 6.0);
+        assert_eq!(s.max_batch.load(Ordering::Relaxed), 8);
+        let fields = s.to_json_fields();
+        assert!(fields.iter().any(|(k, _)| k == "mean_batch_occupancy"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-tenant admission control for the serve daemon.
+//!
+//! Each tenant (the `tenant` field on a wire query, defaulting to
+//! `"default"`) gets its own [`ConcurrencyCap`]: a query is admitted only
+//! if its tenant is under cap, otherwise it earns a typed
+//! `tenant_over_cap` reject *immediately* — it never queues, so one
+//! tenant flooding the daemon cannot grow another tenant's tail.
+//!
+//! Composition with the scheduler (see [`crate::sched::caps`]): the cap
+//! rations *admission* (how many of a tenant's queries may be in flight),
+//! the global [`WorkerBudget`](crate::sched::WorkerBudget) rations
+//! *threads* once admitted. An admitted query holds its [`TenantPermit`]
+//! from admission until its sweep completes and its outcome is handed to
+//! the connection writer — the permit spans the batcher queue and the
+//! sweep, so "in flight" means admitted-but-unanswered.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::sched::ConcurrencyCap;
+
+use super::wire::Json;
+
+/// Tenant → cap table. Tenants appear on first use with the default
+/// cap unless an explicit cap was configured up front.
+pub struct TenantTable {
+    default_cap: usize,
+    tenants: Mutex<HashMap<String, Arc<ConcurrencyCap>>>,
+}
+
+impl TenantTable {
+    /// A table admitting up to `default_cap` in-flight queries per
+    /// tenant (clamped ≥ 1), with `explicit` per-tenant overrides.
+    pub fn new(default_cap: usize, explicit: &[(String, usize)]) -> Self {
+        let mut tenants = HashMap::new();
+        for (name, cap) in explicit {
+            tenants.insert(name.clone(), Arc::new(ConcurrencyCap::new(*cap)));
+        }
+        TenantTable { default_cap: default_cap.max(1), tenants: Mutex::new(tenants) }
+    }
+
+    fn cap_of(&self, tenant: &str) -> Arc<ConcurrencyCap> {
+        let mut tenants = self.tenants.lock().unwrap();
+        tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| Arc::new(ConcurrencyCap::new(self.default_cap)))
+            .clone()
+    }
+
+    /// Admit one query for `tenant`: a permit held until the response is
+    /// written, or `Err(limit)` when the tenant is at its cap (the
+    /// reject also bumps the tenant's rejected counter).
+    pub fn admit(&self, tenant: &str) -> Result<TenantPermit, usize> {
+        let cap = self.cap_of(tenant);
+        if cap.try_begin() {
+            Ok(TenantPermit { cap })
+        } else {
+            Err(cap.limit())
+        }
+    }
+
+    /// Per-tenant counters for the `stats` op, sorted by tenant name:
+    /// `{tenant: {cap, inflight, peak_inflight, rejected}}`.
+    pub fn snapshot(&self) -> Json {
+        let tenants = self.tenants.lock().unwrap();
+        let mut rows: Vec<(String, Json)> = tenants
+            .iter()
+            .map(|(name, cap)| {
+                let row = Json::Obj(vec![
+                    ("cap".into(), Json::Num(cap.limit() as f64)),
+                    ("inflight".into(), Json::Num(cap.inflight() as f64)),
+                    ("peak_inflight".into(), Json::Num(cap.peak_inflight() as f64)),
+                    ("rejected".into(), Json::Num(cap.rejected() as f64)),
+                ]);
+                (name.clone(), row)
+            })
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::Obj(rows)
+    }
+
+    /// Total rejects across all tenants.
+    pub fn total_rejected(&self) -> u64 {
+        self.tenants.lock().unwrap().values().map(|c| c.rejected()).sum()
+    }
+}
+
+/// An admitted query's slot under its tenant's cap; released on drop
+/// (outcome delivered, or the query failing anywhere in between).
+pub struct TenantPermit {
+    cap: Arc<ConcurrencyCap>,
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        self.cap.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn over_cap_tenants_get_typed_rejects_not_queueing() {
+        let table = TenantTable::new(2, &[]);
+        let a = table.admit("alice").unwrap();
+        let _b = table.admit("alice").unwrap();
+        assert_eq!(table.admit("alice").unwrap_err(), 2);
+        // another tenant is unaffected by alice being at cap
+        let _c = table.admit("bob").unwrap();
+        drop(a);
+        assert!(table.admit("alice").is_ok(), "release frees a slot");
+        assert_eq!(table.total_rejected(), 1);
+    }
+
+    #[test]
+    fn explicit_caps_override_the_default() {
+        let table = TenantTable::new(8, &[("metered".into(), 1)]);
+        let _only = table.admit("metered").unwrap();
+        assert_eq!(table.admit("metered").unwrap_err(), 1);
+        let _free = table.admit("anyone-else").unwrap();
+        assert!(table.admit("anyone-else").is_ok());
+    }
+
+    #[test]
+    fn snapshot_reports_per_tenant_counters() {
+        let table = TenantTable::new(1, &[]);
+        let _held = table.admit("t1").unwrap();
+        table.admit("t1").unwrap_err();
+        let snap = table.snapshot();
+        let t1 = snap.get("t1").unwrap();
+        assert_eq!(t1.get("inflight").unwrap().as_u64(), Some(1));
+        assert_eq!(t1.get("cap").unwrap().as_u64(), Some(1));
+        assert_eq!(t1.get("rejected").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,677 @@
+//! Line-delimited JSON wire format for `jgraph serve`. Hand-rolled — the
+//! build is hermetic (no serde): [`Json`] is a minimal value type with a
+//! recursive-descent parser and a compact renderer, and the typed
+//! [`Request`]/reject layer on top is the protocol `docs/serving.md`
+//! specifies.
+//!
+//! One request per line, one response line per request, in request order
+//! per connection. Finite numbers render via Rust's shortest-round-trip
+//! `Display`, so an `f64` survives encode → parse bit-identically — the
+//! property the serve integration test leans on to compare wire reports
+//! against direct [`run_batch_parallel`] runs.
+//!
+//! [`run_batch_parallel`]: crate::engine::BoundPipeline::run_batch_parallel
+
+use std::fmt;
+
+use crate::engine::DirectionPolicy;
+
+/// A parsed JSON value. Object fields keep arrival order (no map): the
+/// wire layer only ever looks fields up by name.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<Json, WireError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let value = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after the document"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Compact single-line rendering (valid JSON; non-finite numbers
+    /// become quoted `"inf"`/`"-inf"`/`"nan"` strings — JSON has no
+    /// spelling for them, and `bound_params` can carry `+inf` defaults).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => out.push_str(&render_num(*v)),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Render one number: shortest-round-trip decimal for finite values,
+/// quoted strings for the values JSON cannot spell.
+fn render_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "\"nan\"".into()
+    } else if v > 0.0 {
+        "\"inf\"".into()
+    } else {
+        "\"-inf\"".into()
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Wire-level decode error: byte position plus message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub pos: usize,
+    pub message: String,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire decode error at byte {}: {}", self.pos, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, message: &str) -> WireError {
+        WireError { pos: self.pos, message: message.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), WireError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, WireError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(&format!("expected {word:?}")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, WireError> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            Some(b) => Err(self.err(&format!("unexpected character {:?}", b as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, WireError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, WireError> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000C}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let c = self.unicode_escape()?;
+                            out.push(c);
+                            // hex digits are consumed; undo the generic
+                            // advance below
+                            self.pos -= 1;
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(b) if b < 0x20 => return Err(self.err("unescaped control character")),
+                Some(b) if b < 0x80 => {
+                    out.push(b as char);
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // multi-byte UTF-8: the input is a &str, so the
+                    // sequence is valid — copy it wholesale
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Decode a `\u` escape starting at its first hex digit, surrogate
+    /// pairs included; leaves `pos` just past the last digit consumed.
+    fn unicode_escape(&mut self) -> Result<char, WireError> {
+        let code = self.hex4()?;
+        if (0xD800..0xDC00).contains(&code) {
+            if !self.bytes[self.pos..].starts_with(b"\\u") {
+                return Err(self.err("lone high surrogate"));
+            }
+            self.pos += 2;
+            let low = self.hex4()?;
+            if !(0xDC00..0xE000).contains(&low) {
+                return Err(self.err("invalid low surrogate"));
+            }
+            let combined = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+            return char::from_u32(combined).ok_or_else(|| self.err("invalid \\u escape"));
+        }
+        char::from_u32(code).ok_or_else(|| self.err("invalid \\u escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, WireError> {
+        let end = self.pos + 4;
+        if end > self.bytes.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..end])
+            .map_err(|_| self.err("invalid \\u escape"))?;
+        let code = u32::from_str_radix(hex, 16).map_err(|_| self.err("invalid \\u escape"))?;
+        self.pos = end;
+        Ok(code)
+    }
+
+    fn number(&mut self) -> Result<Json, WireError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(b) = self.peek() {
+            if matches!(b, b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| WireError { pos: start, message: format!("invalid number {text:?}") })
+    }
+}
+
+/// Typed reject reasons a request can earn without ever executing.
+/// `code()` is the stable wire spelling (`error.kind` in the response).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectKind {
+    /// The request line was not valid JSON / not a known op shape.
+    BadRequest,
+    /// No graph registered under the requested name.
+    UnknownGraph,
+    /// No algorithm with the requested name.
+    UnknownAlgo,
+    /// The algorithm failed to compile (typed [`CompileError`] text).
+    ///
+    /// [`CompileError`]: crate::engine::CompileError
+    CompileFailed,
+    /// The tenant is at its concurrency cap.
+    TenantOverCap,
+    /// The daemon is draining; no new queries are admitted.
+    Draining,
+}
+
+impl RejectKind {
+    pub fn code(&self) -> &'static str {
+        match self {
+            RejectKind::BadRequest => "bad_request",
+            RejectKind::UnknownGraph => "unknown_graph",
+            RejectKind::UnknownAlgo => "unknown_algo",
+            RejectKind::CompileFailed => "compile_failed",
+            RejectKind::TenantOverCap => "tenant_over_cap",
+            RejectKind::Draining => "draining",
+        }
+    }
+}
+
+/// Tenant name used when a query omits the `tenant` field.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One query as it arrives on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRequest {
+    pub graph: String,
+    pub algo: String,
+    pub root: u32,
+    /// Runtime parameter bindings (`params` object: name → number).
+    pub params: Vec<(String, f64)>,
+    /// `"adaptive"` (default) | `"push"` | `"pull"`.
+    pub direction: Option<DirectionPolicy>,
+    pub tenant: String,
+    pub max_supersteps: Option<u32>,
+}
+
+impl QueryRequest {
+    /// Render this query as one request line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut fields = vec![
+            ("op".to_string(), Json::Str("query".into())),
+            ("graph".to_string(), Json::Str(self.graph.clone())),
+            ("algo".to_string(), Json::Str(self.algo.clone())),
+            ("root".to_string(), Json::Num(self.root as f64)),
+        ];
+        if !self.params.is_empty() {
+            let obj =
+                self.params.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+            fields.push(("params".to_string(), Json::Obj(obj)));
+        }
+        if let Some(d) = self.direction {
+            let name = match d {
+                DirectionPolicy::PushOnly => "push",
+                DirectionPolicy::Adaptive => "adaptive",
+                DirectionPolicy::ForcePull => "pull",
+            };
+            fields.push(("direction".to_string(), Json::Str(name.into())));
+        }
+        if self.tenant != DEFAULT_TENANT {
+            fields.push(("tenant".to_string(), Json::Str(self.tenant.clone())));
+        }
+        if let Some(cap) = self.max_supersteps {
+            fields.push(("max_supersteps".to_string(), Json::Num(cap as f64)));
+        }
+        Json::Obj(fields).render()
+    }
+}
+
+/// Every request shape the daemon accepts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Query(Box<QueryRequest>),
+    /// Rolling latency/occupancy/eviction counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Initiate graceful drain: queued queries finish, then the daemon
+    /// exits. Equivalent to SIGTERM.
+    Shutdown,
+}
+
+impl Request {
+    /// Decode one request line. Errors are [`RejectKind::BadRequest`]
+    /// material — the server answers them without dropping the
+    /// connection.
+    pub fn decode(line: &str) -> Result<Request, String> {
+        let doc = Json::parse(line).map_err(|e| e.to_string())?;
+        let op = doc.get("op").and_then(Json::as_str).unwrap_or("query");
+        match op {
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            "query" => {
+                let graph = doc
+                    .get("graph")
+                    .and_then(Json::as_str)
+                    .ok_or("query needs a \"graph\" string")?
+                    .to_string();
+                let algo = doc
+                    .get("algo")
+                    .and_then(Json::as_str)
+                    .ok_or("query needs an \"algo\" string")?
+                    .to_string();
+                let root = match doc.get("root") {
+                    None => 0,
+                    Some(v) => v
+                        .as_u64()
+                        .filter(|&r| r <= u32::MAX as u64)
+                        .ok_or("\"root\" must be a u32")? as u32,
+                };
+                let mut params = Vec::new();
+                if let Some(p) = doc.get("params") {
+                    let Json::Obj(fields) = p else {
+                        return Err("\"params\" must be an object".into());
+                    };
+                    for (name, value) in fields {
+                        let v = value
+                            .as_f64()
+                            .ok_or_else(|| format!("param {name:?} must be a number"))?;
+                        params.push((name.clone(), v));
+                    }
+                }
+                let direction = match doc.get("direction").and_then(Json::as_str) {
+                    None => None,
+                    Some("adaptive") => Some(DirectionPolicy::Adaptive),
+                    Some("push") => Some(DirectionPolicy::PushOnly),
+                    Some("pull") => Some(DirectionPolicy::ForcePull),
+                    Some(other) => {
+                        return Err(format!(
+                            "unknown direction {other:?} (adaptive|push|pull)"
+                        ))
+                    }
+                };
+                let tenant = doc
+                    .get("tenant")
+                    .and_then(Json::as_str)
+                    .unwrap_or(DEFAULT_TENANT)
+                    .to_string();
+                let max_supersteps = match doc.get("max_supersteps") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64()
+                            .filter(|&c| c <= u32::MAX as u64)
+                            .ok_or("\"max_supersteps\" must be a u32")?
+                            as u32,
+                    ),
+                };
+                Ok(Request::Query(Box::new(QueryRequest {
+                    graph,
+                    algo,
+                    root,
+                    params,
+                    direction,
+                    tenant,
+                    max_supersteps,
+                })))
+            }
+            other => Err(format!("unknown op {other:?} (query|stats|ping|shutdown)")),
+        }
+    }
+}
+
+/// Encode a typed reject/error response line.
+pub fn encode_error(kind: &RejectKind, message: &str) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        (
+            "error".to_string(),
+            Json::Obj(vec![
+                ("kind".to_string(), Json::Str(kind.code().into())),
+                ("message".to_string(), Json::Str(message.into())),
+            ]),
+        ),
+    ])
+    .render()
+}
+
+/// Encode a plain acknowledgement (`ping`/`shutdown`).
+pub fn encode_ack(op: &str) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str(op.into())),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_values() {
+        let text = r#"{"op":"query","graph":"email","root":7,"params":{"damping":0.85},
+                       "flags":[true,false,null],"note":"a\"b\\c\nd"}"#;
+        let doc = Json::parse(text).unwrap();
+        assert_eq!(doc.get("graph").unwrap().as_str(), Some("email"));
+        assert_eq!(doc.get("root").unwrap().as_u64(), Some(7));
+        assert_eq!(
+            doc.get("params").unwrap().get("damping").unwrap().as_f64(),
+            Some(0.85)
+        );
+        assert_eq!(doc.get("note").unwrap().as_str(), Some("a\"b\\c\nd"));
+        // render → parse is the identity on the value
+        let again = Json::parse(&doc.render()).unwrap();
+        assert_eq!(doc, again);
+    }
+
+    #[test]
+    fn finite_f64_survives_encode_parse_bit_identically() {
+        for v in [0.85, 1.0 / 3.0, 2.2250738585072014e-308, 1.7e308, -0.0, 123456.789] {
+            let line = Json::Num(v).render();
+            let back = Json::parse(&line).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {line}");
+        }
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_strings() {
+        assert_eq!(Json::Num(f64::INFINITY).render(), "\"inf\"");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).render(), "\"-inf\"");
+        assert_eq!(Json::Num(f64::NAN).render(), "\"nan\"");
+    }
+
+    #[test]
+    fn unicode_escapes_decode() {
+        let doc = Json::parse(r#""é😀""#).unwrap();
+        assert_eq!(doc.as_str(), Some("é😀"));
+    }
+
+    #[test]
+    fn malformed_documents_error_with_position() {
+        for bad in ["{", "[1,", "{\"a\":}", "tru", "\"unterminated", "1 2", "{\"a\" 1}"] {
+            let err = Json::parse(bad).unwrap_err();
+            assert!(!err.message.is_empty(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn query_request_decodes_with_defaults() {
+        let req = Request::decode(r#"{"op":"query","graph":"email","algo":"bfs"}"#).unwrap();
+        let Request::Query(q) = req else { panic!("expected query") };
+        assert_eq!(q.root, 0);
+        assert_eq!(q.tenant, DEFAULT_TENANT);
+        assert!(q.params.is_empty());
+        assert_eq!(q.direction, None);
+        assert_eq!(q.max_supersteps, None);
+    }
+
+    #[test]
+    fn query_request_encode_decode_round_trips() {
+        let q = QueryRequest {
+            graph: "grid".into(),
+            algo: "pagerank".into(),
+            root: 12,
+            params: vec![("damping".into(), 0.9), ("tolerance".into(), 1e-4)],
+            direction: Some(DirectionPolicy::PushOnly),
+            tenant: "alice".into(),
+            max_supersteps: Some(64),
+        };
+        let Request::Query(back) = Request::decode(&q.encode()).unwrap() else {
+            panic!("expected query");
+        };
+        assert_eq!(*back, q);
+    }
+
+    #[test]
+    fn control_ops_decode() {
+        assert_eq!(Request::decode(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(Request::decode(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(Request::decode(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+        assert!(Request::decode(r#"{"op":"reboot"}"#).is_err());
+        assert!(Request::decode("not json").is_err());
+    }
+
+    #[test]
+    fn reject_kinds_have_stable_codes() {
+        assert_eq!(RejectKind::TenantOverCap.code(), "tenant_over_cap");
+        let line = encode_error(&RejectKind::TenantOverCap, "tenant \"t\" at cap 2");
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            doc.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("tenant_over_cap")
+        );
+    }
+}

@@ -1,0 +1,323 @@
+//! Integration tests for the `jgraph serve` daemon: the wire answers
+//! must be *the same answers* the embedded API gives. 256 queries across
+//! 2 graphs x 2 pipelines x 3 tenants go through a real TCP socket and
+//! every modeled `RunReport` field must match a direct
+//! `run_batch_parallel` bit for bit; residency stays under the LRU cap
+//! with transparent reload; tenants at cap get typed rejects; drain
+//! answers everything queued before exiting.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jgraph::dsl::ParamSet;
+use jgraph::engine::{RunOptions, RunReport, Session, SessionConfig};
+use jgraph::graph::generate;
+use jgraph::prep::prepared::{PrepOptions, PreparedGraph};
+use jgraph::serve::registry::program_by_name;
+use jgraph::serve::wire::{Json, QueryRequest};
+use jgraph::serve::{ServeClient, ServeConfig, ServeRegistry, Server};
+
+const ER_VERTICES: usize = 512;
+const GRID_SIDE: usize = 24;
+
+fn er_edges() -> jgraph::graph::edgelist::EdgeList {
+    generate::erdos_renyi(ER_VERTICES, 4_096, 13)
+}
+
+fn grid_edges() -> jgraph::graph::edgelist::EdgeList {
+    generate::grid2d(GRID_SIDE, GRID_SIDE, 13)
+}
+
+fn vertices(graph: &str) -> u32 {
+    if graph == "er" {
+        ER_VERTICES as u32
+    } else {
+        (GRID_SIDE * GRID_SIDE) as u32
+    }
+}
+
+fn start_server(max_resident: usize, config: ServeConfig) -> Server {
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let registry = Arc::new(ServeRegistry::new(session, max_resident));
+    registry.register_edges("er", er_edges());
+    registry.register_edges("grid", grid_edges());
+    Server::start(config, registry).unwrap()
+}
+
+fn request(graph: &str, algo: &str, root: u32, tenant: &str) -> QueryRequest {
+    QueryRequest {
+        graph: graph.into(),
+        algo: algo.into(),
+        root,
+        params: Vec::new(),
+        direction: None,
+        tenant: tenant.into(),
+        max_supersteps: None,
+    }
+}
+
+/// Every modeled (threading- and placement-independent) report field,
+/// wire vs direct. Wall-clock fields (prep, functional exec) are
+/// measured and legitimately differ; everything else must not.
+fn assert_report_matches(wire: &Json, reference: &RunReport, what: &str) {
+    let u = |key: &str| {
+        wire.get(key)
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("{what}: missing numeric field {key}"))
+    };
+    let f = |key: &str| {
+        wire.get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("{what}: missing float field {key}"))
+    };
+    assert_eq!(u("num_vertices"), reference.num_vertices as u64, "{what}: num_vertices");
+    assert_eq!(u("num_edges"), reference.num_edges as u64, "{what}: num_edges");
+    assert_eq!(u("supersteps"), reference.supersteps as u64, "{what}: supersteps");
+    assert_eq!(u("push_supersteps"), reference.push_supersteps as u64, "{what}: push");
+    assert_eq!(u("pull_supersteps"), reference.pull_supersteps as u64, "{what}: pull");
+    assert_eq!(u("edges_traversed"), reference.edges_traversed, "{what}: edges_traversed");
+    assert_eq!(u("shards"), reference.shards as u64, "{what}: shards");
+    assert_eq!(u("auto_shards"), reference.auto_shards as u64, "{what}: auto_shards");
+    assert_eq!(u("crossing_msgs"), reference.crossing_msgs, "{what}: crossing_msgs");
+    assert_eq!(u("hdl_lines"), reference.hdl_lines as u64, "{what}: hdl_lines");
+    assert_eq!(u("total_cycles"), reference.sim.cycles.total(), "{what}: total_cycles");
+    for (key, value) in [
+        ("query_seconds", reference.query_seconds),
+        ("transfer_seconds", reference.transfer_seconds),
+        ("exchange_seconds", reference.exchange_seconds),
+        ("simulated_mteps", reference.simulated_mteps),
+    ] {
+        assert_eq!(f(key).to_bits(), value.to_bits(), "{what}: {key} must survive the wire");
+    }
+    let bound = wire.get("bound_params").unwrap_or_else(|| panic!("{what}: bound_params"));
+    for (name, value) in &reference.bound_params {
+        let wired = bound
+            .get(name)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("{what}: bound param {name}"));
+        assert_eq!(wired.to_bits(), value.to_bits(), "{what}: bound param {name}");
+    }
+}
+
+/// The acceptance contract: 256 queries through the wire, one pipelined
+/// connection per tenant, bit-identical to the embedded batch API.
+#[test]
+fn wire_reports_match_direct_batch_parallel_bit_for_bit() {
+    let config = ServeConfig { batch_window: Duration::from_millis(5), ..Default::default() };
+    let server = start_server(4, config);
+
+    const TENANTS: [&str; 3] = ["alpha", "beta", "gamma"];
+    const N: usize = 256;
+
+    // plan the mix: 2 graphs x 2 algorithms x 3 tenants
+    let mut plan: Vec<(usize, &str, &str, u32)> = Vec::with_capacity(N);
+    for i in 0..N {
+        let graph = if i % 2 == 0 { "er" } else { "grid" };
+        let algo = if (i / 2) % 2 == 0 { "bfs" } else { "pagerank" };
+        let root = (i as u32 * 37) % vertices(graph);
+        plan.push((i % TENANTS.len(), graph, algo, root));
+    }
+
+    // send everything pipelined, one connection per tenant
+    let mut clients: Vec<ServeClient> = TENANTS
+        .iter()
+        .map(|_| ServeClient::connect(server.local_addr()).unwrap())
+        .collect();
+    let mut per_client: Vec<Vec<(usize, &str, &str, u32)>> = vec![Vec::new(); TENANTS.len()];
+    for &(tenant, graph, algo, root) in &plan {
+        clients[tenant].send_query(&request(graph, algo, root, TENANTS[tenant])).unwrap();
+        per_client[tenant].push((tenant, graph, algo, root));
+    }
+
+    // collect responses (in request order per connection)
+    let mut wire_reports: Vec<((&str, &str, u32), Json)> = Vec::with_capacity(N);
+    for (tenant, client) in clients.iter_mut().enumerate() {
+        for &(_, graph, algo, root) in &per_client[tenant] {
+            let resp = client.recv().unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "query ({graph}, {algo}, {root}) failed: {}",
+                resp.render()
+            );
+            assert_eq!(resp.get("tenant").unwrap().as_str(), Some(TENANTS[tenant]));
+            wire_reports.push(((graph, algo, root), resp.get("report").unwrap().clone()));
+        }
+    }
+    assert_eq!(wire_reports.len(), N);
+
+    // direct reference: same sources, same prep, same bind, the embedded
+    // run_batch_parallel — no server in the loop
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let prepared: HashMap<&str, Arc<PreparedGraph>> = [("er", er_edges()), ("grid", grid_edges())]
+        .into_iter()
+        .map(|(name, el)| {
+            (name, Arc::new(PreparedGraph::prepare(&el, &PrepOptions::named(name)).unwrap()))
+        })
+        .collect();
+    let mut reference: HashMap<(&str, &str, u32), RunReport> = HashMap::new();
+    for graph in ["er", "grid"] {
+        for algo in ["bfs", "pagerank"] {
+            let mut roots: Vec<u32> = plan
+                .iter()
+                .filter(|(_, g, a, _)| *g == graph && *a == algo)
+                .map(|&(_, _, _, root)| root)
+                .collect();
+            roots.sort_unstable();
+            roots.dedup();
+            let pipeline = session.compile(&program_by_name(algo).unwrap()).unwrap();
+            let bound = pipeline.bind(prepared[graph].clone()).unwrap();
+            let queries: Vec<RunOptions> = roots
+                .iter()
+                .map(|&root| RunOptions { root, params: ParamSet::new(), ..Default::default() })
+                .collect();
+            let reports = bound.run_batch_parallel(&queries, 2).unwrap();
+            for (&root, report) in roots.iter().zip(reports) {
+                reference.insert((graph, algo, root), report);
+            }
+        }
+    }
+
+    for ((graph, algo, root), wire) in &wire_reports {
+        let what = format!("({graph}, {algo}, root {root})");
+        assert_report_matches(wire, &reference[&(*graph, *algo, *root)], &what);
+    }
+
+    // the daemon's accounting saw all of it
+    let stats = clients[0].stats().unwrap();
+    assert_eq!(stats.get("served").unwrap().as_u64(), Some(N as u64));
+    assert_eq!(stats.get("errors").unwrap().as_u64(), Some(0));
+    assert!(stats.get("batches").unwrap().as_u64().unwrap() >= 4, "4 bindings => >= 4 sweeps");
+    assert!(stats.get("mean_batch_occupancy").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(stats.get("tenant_rejects").unwrap().as_u64(), Some(0));
+
+    drop(clients);
+    server.join().unwrap();
+}
+
+/// Residency never exceeds the cap; evicted graphs reload transparently
+/// and keep giving the same modeled answers.
+#[test]
+fn lru_cap_bounds_residency_and_reloads_transparently() {
+    let server = start_server(1, ServeConfig::default());
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+    let mut first_er_supersteps = None;
+    for round in 0..3 {
+        for graph in ["er", "grid"] {
+            let resp = c.query(&request(graph, "bfs", 3, "solo")).unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "round {round} on {graph}: {}",
+                resp.render()
+            );
+            let supersteps =
+                resp.get("report").unwrap().get("supersteps").unwrap().as_u64().unwrap();
+            if graph == "er" {
+                // reloads after eviction are deterministic: same graph,
+                // same root, same modeled traversal
+                match first_er_supersteps {
+                    None => first_er_supersteps = Some(supersteps),
+                    Some(first) => assert_eq!(supersteps, first, "reload drifted"),
+                }
+            }
+            let stats = c.stats().unwrap();
+            let resident = stats.get("resident_graphs").unwrap().as_u64().unwrap();
+            assert!(resident <= 1, "cap 1 exceeded: {resident} resident");
+        }
+    }
+    let stats = c.stats().unwrap();
+    // 6 alternating loads against a cap of 1: every switch evicts
+    assert!(
+        stats.get("evictions").unwrap().as_u64().unwrap() >= 5,
+        "alternating bindings must churn the LRU: {}",
+        stats.render()
+    );
+    assert_eq!(stats.get("served").unwrap().as_u64(), Some(6));
+    drop(c);
+    server.join().unwrap();
+}
+
+/// A tenant at its cap gets the typed reject, the wire stays usable, and
+/// capacity returns once the in-flight query finishes.
+#[test]
+fn tenant_over_cap_gets_typed_reject_and_recovers() {
+    // long window: the first admitted query parks in the batcher,
+    // pinning the tenant at its cap while the next two arrive
+    let config = ServeConfig {
+        batch_window: Duration::from_millis(300),
+        tenant_caps: vec![("metered".into(), 1)],
+        ..Default::default()
+    };
+    let server = start_server(4, config);
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+    for root in 0..3 {
+        c.send_query(&request("er", "bfs", root, "metered")).unwrap();
+    }
+    let (mut served, mut rejected) = (0, 0);
+    for _ in 0..3 {
+        let resp = c.recv().unwrap();
+        if resp.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            served += 1;
+        } else {
+            let kind = resp.get("error").unwrap().get("kind").unwrap().as_str().unwrap();
+            assert_eq!(kind, "tenant_over_cap", "{}", resp.render());
+            rejected += 1;
+        }
+    }
+    assert_eq!((served, rejected), (1, 2));
+    // an unrelated tenant was never blocked, and the capped tenant
+    // recovers once its query completes
+    let resp = c.query(&request("er", "bfs", 9, "other")).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let resp = c.query(&request("er", "bfs", 9, "metered")).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("tenant_rejects").unwrap().as_u64(), Some(2));
+    let metered = stats.get("tenants").unwrap().get("metered").unwrap();
+    assert_eq!(metered.get("cap").unwrap().as_u64(), Some(1));
+    assert_eq!(metered.get("rejected").unwrap().as_u64(), Some(2));
+    drop(c);
+    server.join().unwrap();
+}
+
+/// Drain: everything admitted before the shutdown op still gets its
+/// response, then every daemon thread joins.
+#[test]
+fn drain_answers_queued_queries_then_joins() {
+    let config = ServeConfig { batch_window: Duration::from_millis(50), ..Default::default() };
+    let server = start_server(4, config);
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+    for i in 0..8u32 {
+        let graph = if i % 2 == 0 { "er" } else { "grid" };
+        c.send_query(&request(graph, "bfs", i, "drainer")).unwrap();
+    }
+    // the shutdown op lands behind the 8 queries on the same connection,
+    // so all of them are admitted before the drain begins
+    c.send_line(r#"{"op":"shutdown"}"#).unwrap();
+    for i in 0..8 {
+        let resp = c.recv().unwrap();
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "queued query {i} lost in drain: {}",
+            resp.render()
+        );
+    }
+    let ack = c.recv().unwrap();
+    assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(ack.get("op").unwrap().as_str(), Some("shutdown"));
+    // post-drain queries get the typed reject (if the daemon still
+    // answers at all — the reader may already be EOF-ed by join)
+    if c.send_query(&request("er", "bfs", 0, "late")).is_ok() {
+        if let Ok(resp) = c.recv() {
+            assert_eq!(
+                resp.get("error").unwrap().get("kind").unwrap().as_str(),
+                Some("draining")
+            );
+        }
+    }
+    drop(c);
+    server.join().unwrap();
+}
