@@ -37,6 +37,7 @@ fn query(graph: &str, algo: &str, root: u32) -> QueryRequest {
         direction: None,
         tenant: "bench".into(),
         max_supersteps: None,
+        deadline_us: None,
     }
 }
 

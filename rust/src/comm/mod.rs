@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::graph::csr::Csr;
+use crate::sched::{Deadline, FaultPlan, Seam};
 
 pub use pcie::PcieModel;
 pub use xrt::{DeviceStatus, XrtShell};
@@ -127,6 +128,33 @@ impl CommManager {
         ledger.bytes_moved += record.bytes;
     }
 
+    /// Commit a query's planned transfer records behind the
+    /// fault-tolerance guards (ISSUE 10): re-check the deadline and trip
+    /// the [`Seam::Commit`] fault seam **before** any record lands, so a
+    /// cancelled or faulted query leaves the shared ledger untouched —
+    /// all-or-nothing, keeping sibling queries' accounting bit-identical.
+    /// With `deadline`/`faults` both `None` this is exactly a plain
+    /// [`Self::commit`] loop.
+    pub fn commit_guarded(
+        &self,
+        records: &[TransferRecord],
+        deadline: Option<&Deadline>,
+        faults: Option<&FaultPlan>,
+        token: u64,
+        supersteps_completed: u32,
+    ) -> Result<()> {
+        if let Some(deadline) = deadline {
+            deadline.check(supersteps_completed)?;
+        }
+        if let Some(plan) = faults {
+            plan.trip(Seam::Commit, token)?;
+        }
+        for record in records {
+            self.commit(record);
+        }
+        Ok(())
+    }
+
     /// DMA raw result buffers back (vertex values): plan + commit.
     pub fn read_back(&self, bytes: u64) -> TransferRecord {
         let record = self.plan_read_back(bytes);
@@ -196,6 +224,27 @@ mod tests {
         }
         assert_eq!(direct.bytes_moved(), deferred.bytes_moved());
         assert_eq!(direct.transfer_seconds().to_bits(), deferred.transfer_seconds().to_bits());
+    }
+
+    #[test]
+    fn guarded_commits_are_all_or_nothing() {
+        let cm = CommManager::new();
+        let recs = [cm.plan_read_back(400), cm.plan_read_back(4_096)];
+        // no guards: exactly a plain commit loop
+        cm.commit_guarded(&recs, None, None, 0, 0).unwrap();
+        assert_eq!(cm.bytes_moved(), 400 + 4_096);
+        let before = (cm.bytes_moved(), cm.transfer_seconds().to_bits());
+        // a tripped commit seam leaves the ledger untouched
+        let plan = FaultPlan::parse("transfer_error@commit#9").unwrap();
+        let err = cm.commit_guarded(&recs, None, Some(&plan), 9, 0).unwrap_err();
+        assert!(err.downcast_ref::<crate::sched::InjectedFault>().is_some());
+        assert_eq!((cm.bytes_moved(), cm.transfer_seconds().to_bits()), before);
+        // an expired deadline likewise, with partial accounting stamped
+        let d = Deadline::in_duration(std::time::Duration::ZERO);
+        let err = cm.commit_guarded(&recs, Some(&d), None, 0, 3).unwrap_err();
+        let de = err.downcast_ref::<crate::sched::DeadlineExceeded>().unwrap();
+        assert_eq!(de.supersteps_completed, 3);
+        assert_eq!((cm.bytes_moved(), cm.transfer_seconds().to_bits()), before);
     }
 
     #[test]

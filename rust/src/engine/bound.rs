@@ -13,6 +13,8 @@
 //! [`BoundPipeline::run`]/[`BoundPipeline::run_batch`] remain as thin
 //! `&mut self` compatibility wrappers producing identical reports.
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -23,8 +25,10 @@ use crate::accel::simulator::{AccelSimulator, EdgeBatch, LAUNCH_SECONDS};
 use crate::accel::stats::{CycleBreakdown, SimStats, SuperstepSim};
 use crate::comm::{CommManager, TransferRecord};
 use crate::prep::prepared::PreparedGraph;
+use crate::sched::faults::{self, Seam};
 use crate::sched::{
-    available_workers, AdmittedPlan, ParallelismPlan, RuntimeScheduler, WorkerBudget,
+    available_workers, AdmittedPlan, Deadline, DeadlineExceeded, FaultPlan, InjectedFault,
+    ParallelismPlan, RuntimeScheduler, WorkerBudget, WorkerPanic,
 };
 
 use crate::dsl::program::{Direction, GasProgram};
@@ -33,7 +37,7 @@ use super::compiled::{CompiledPipeline, RunOptions};
 use super::executor::ORACLE_TOLERANCE;
 use super::gas::{self, SuperstepTrace};
 use super::metrics::{FunctionalPath, RunReport};
-use super::sharded::{run_sharded, ShardedSuperstepTrace};
+use super::sharded::{run_sharded_with_faults, ShardedSuperstepTrace};
 use super::trace::Trace;
 use super::xla_engine;
 
@@ -70,10 +74,17 @@ pub struct QueryContext {
     bytes_per_edge: u64,
     avg_edge_gap: f64,
     want_trace: bool,
+    /// This query's wall-clock budget, checked at every superstep
+    /// boundary (all three engines route through one of the observer
+    /// methods below).
+    deadline: Option<Deadline>,
+    /// This query's fault-injection schedule (superstep seam).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl QueryContext {
-    fn new(bound: &BoundPipeline<'_>, cap: u32, want_trace: bool) -> Self {
+    fn new(bound: &BoundPipeline<'_>, cap: u32, opts: &RunOptions) -> Self {
+        let want_trace = opts.trace_path.is_some();
         let pipeline = bound.pipeline;
         // Sharded queries route every shard's destination stream into its
         // own PE's reduce banks; boundary messages serialize on the
@@ -101,13 +112,32 @@ impl QueryContext {
             bytes_per_edge: if pipeline.program.uses_weights { 12 } else { 8 },
             avg_edge_gap: bound.graph.avg_edge_gap,
             want_trace,
+            deadline: opts.deadline,
+            faults: opts.faults.clone(),
         }
     }
 
+    /// The cooperative cancellation point every engine shares: deadline
+    /// check (typed [`DeadlineExceeded`] with supersteps-completed
+    /// accounting) plus the superstep fault seam. Runs right after
+    /// scheduler admission of superstep `index`, on all three engine
+    /// paths (monolithic, sharded, auto-sharded).
+    fn guard_superstep(&self, index: u32) -> Result<()> {
+        if let Some(deadline) = &self.deadline {
+            deadline.check(self.scheduler.supersteps())?;
+        }
+        if let Some(plan) = &self.faults {
+            plan.trip(Seam::Superstep, index as u64)?;
+        }
+        Ok(())
+    }
+
     /// Lockstep observer body: account one superstep in the scheduler and
-    /// the cycle simulator. Errors (the iteration cap) abort the run.
+    /// the cycle simulator. Errors (the iteration cap, an expired
+    /// deadline) abort the run.
     fn superstep(&mut self, trace: &SuperstepTrace<'_>) -> Result<()> {
         self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        self.guard_superstep(trace.index)?;
         let step = self.sim.superstep(&EdgeBatch {
             dsts: trace.dsts,
             active_rows: trace.active_rows,
@@ -127,6 +157,7 @@ impl QueryContext {
     /// per-shard destination streams and boundary-message counts.
     fn sharded_superstep(&mut self, trace: &ShardedSuperstepTrace<'_>) -> Result<()> {
         self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        self.guard_superstep(trace.index)?;
         let (mp, pe_of_shard) =
             self.multipe.as_mut().expect("sharded superstep requires a partitioned binding");
         let step = mp.superstep_shards(trace.shard_dsts, trace.shard_crossing, pe_of_shard);
@@ -166,6 +197,7 @@ impl QueryContext {
     /// accounting.
     fn auto_sharded_superstep(&mut self, trace: &ShardedSuperstepTrace<'_>) -> Result<()> {
         self.scheduler.begin_superstep(trace.active_rows as usize)?;
+        self.guard_superstep(trace.index)?;
         self.merged.clear();
         for dsts in trace.shard_dsts {
             self.merged.extend_from_slice(dsts);
@@ -281,6 +313,18 @@ impl<'p> BoundPipeline<'p> {
         let design = &pipeline.design;
         let csr = &self.graph.csr;
 
+        // --- fault-tolerance preamble: an already-expired deadline (e.g.
+        //     deadline_us=0, or a long queue wait) aborts before any work,
+        //     and the exec fault seam fires here. The exec token folds in
+        //     the attempt number, so `#root` rules hit the first attempt
+        //     only and a retry runs clean.
+        if let Some(deadline) = &opts.deadline {
+            deadline.check(0)?;
+        }
+        if let Some(plan) = &opts.faults {
+            plan.trip(Seam::Exec, faults::exec_token(opts.root, opts.attempt))?;
+        }
+
         // --- bind runtime parameters: resolve the query's ParamSet
         //     against the declared signature and specialize the program.
         //     This is the *only* per-value work — the compiled design,
@@ -309,7 +353,7 @@ impl<'p> BoundPipeline<'p> {
         //     simulator through the trace. Push-only-pinned queries never
         //     touch (or build) those caches.
         let cap = self.cap_for(opts);
-        let mut ctx = QueryContext::new(self, cap, opts.trace_path.is_some());
+        let mut ctx = QueryContext::new(self, cap, opts);
         // Partitioned bindings execute the sharded engine: one shard per
         // part, per-shard push/pull decisions, threaded shard workers —
         // bit-identical values to the monolithic interpreter (the
@@ -354,13 +398,14 @@ impl<'p> BoundPipeline<'p> {
                     .unwrap_or_else(|| sg.num_shards.min(available_workers()))
                     .max(1);
                 let lease = WorkerBudget::global().lease(want);
-                let run = run_sharded(
+                let run = run_sharded_with_faults(
                     program,
                     &view,
                     sg,
                     opts.root,
                     opts.direction,
                     lease.workers(),
+                    opts.faults.as_deref(),
                     |t| ctx.sharded_superstep(t),
                 )?;
                 crossing_msgs = run.crossing_msgs;
@@ -377,13 +422,14 @@ impl<'p> BoundPipeline<'p> {
                     .unwrap_or_else(available_workers)
                     .clamp(1, sg.num_shards);
                 let lease = WorkerBudget::global().lease(want);
-                let run = run_sharded(
+                let run = run_sharded_with_faults(
                     program,
                     &view,
                     sg,
                     opts.root,
                     opts.direction,
                     lease.workers(),
+                    opts.faults.as_deref(),
                     |t| ctx.auto_sharded_superstep(t),
                 )?;
                 run.result
@@ -557,9 +603,13 @@ impl<'p> BoundPipeline<'p> {
     /// DMA. Safe to call from many threads at once.
     pub fn query(&self, opts: &RunOptions) -> Result<RunReport> {
         let (report, transfers) = self.run_query(opts)?;
-        for record in &transfers {
-            self.comm.commit(record);
-        }
+        self.comm.commit_guarded(
+            &transfers,
+            opts.deadline.as_ref(),
+            opts.faults.as_deref(),
+            faults::exec_token(opts.root, opts.attempt),
+            report.supersteps,
+        )?;
         Ok(report)
     }
 
@@ -642,13 +692,17 @@ impl<'p> BoundPipeline<'p> {
         // merge: commit each query's DMA records in batch order so the shared
         // ledger is bit-identical to the sequential path
         let mut reports = Vec::with_capacity(queries.len());
-        for slot in slots {
+        for (slot, opts) in slots.into_iter().zip(queries) {
             match slot.into_inner().unwrap() {
                 Some(outcome) => {
                     let (report, transfers) = outcome?;
-                    for record in &transfers {
-                        self.comm.commit(record);
-                    }
+                    self.comm.commit_guarded(
+                        &transfers,
+                        opts.deadline.as_ref(),
+                        opts.faults.as_deref(),
+                        faults::exec_token(opts.root, opts.attempt),
+                        report.supersteps,
+                    )?;
                     reports.push(report);
                 }
                 // Indexes are claimed in strictly increasing order and every
@@ -660,7 +714,141 @@ impl<'p> BoundPipeline<'p> {
         }
         Ok(reports)
     }
+
+    /// Run a batch with **per-query fault isolation**: every query
+    /// executes behind its own `catch_unwind` fence and returns its own
+    /// `Result`, so one poisoned query — a panic, an expired deadline, an
+    /// injected fault — never aborts its siblings (unlike
+    /// [`Self::run_batch_parallel`], which fail-fasts the whole sweep).
+    /// Successful queries' reports and the shared DMA ledger stay
+    /// bit-identical to a fault-free sweep: failed queries commit nothing
+    /// (the commit guard is all-or-nothing), and successes commit in
+    /// batch order exactly as the fail-fast path does.
+    pub fn run_batch_isolated(
+        &self,
+        queries: &[RunOptions],
+        num_workers: usize,
+    ) -> Vec<Result<RunReport, QueryFailure>> {
+        let want = num_workers.clamp(1, queries.len().max(1));
+        let lease = WorkerBudget::global().lease(want);
+        let workers = lease.workers();
+
+        let next = AtomicUsize::new(0);
+        type Slot = Mutex<Option<Result<(RunReport, Vec<TransferRecord>), QueryFailure>>>;
+        let slots: Vec<Slot> = queries.iter().map(|_| Mutex::new(None)).collect();
+        let work = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= queries.len() {
+                break;
+            }
+            // The isolation fence: an unwinding query (injected panic at
+            // the exec seam, or an organic bug) becomes a typed failure
+            // in its own slot. Shard-worker panics already arrive typed
+            // (the engine's own fences), so classify() sees them as
+            // WorkerPanic errors, not unwinds.
+            let outcome = match catch_unwind(AssertUnwindSafe(|| self.run_query(&queries[i]))) {
+                Ok(Ok(pair)) => Ok(pair),
+                Ok(Err(err)) => Err(QueryFailure::classify(err)),
+                Err(payload) => {
+                    Err(QueryFailure::Panicked(faults::panic_message(payload.as_ref())))
+                }
+            };
+            *slots[i].lock().unwrap() = Some(outcome);
+        };
+        if workers == 1 {
+            work();
+        } else {
+            std::thread::scope(|scope| {
+                for _ in 1..workers {
+                    scope.spawn(&work);
+                }
+                work();
+            });
+        }
+        drop(lease);
+
+        // merge in batch order: successes commit their DMA behind the
+        // commit guard (deadline re-check + commit fault seam); failures
+        // leave the shared ledger untouched.
+        let mut results = Vec::with_capacity(queries.len());
+        for (slot, opts) in slots.into_iter().zip(queries) {
+            let outcome = slot
+                .into_inner()
+                .unwrap()
+                .expect("every index is claimed and finished before the scope joins");
+            results.push(outcome.and_then(|(report, transfers)| {
+                match self.comm.commit_guarded(
+                    &transfers,
+                    opts.deadline.as_ref(),
+                    opts.faults.as_deref(),
+                    faults::exec_token(opts.root, opts.attempt),
+                    report.supersteps,
+                ) {
+                    Ok(()) => Ok(report),
+                    Err(err) => Err(QueryFailure::classify(err)),
+                }
+            }));
+        }
+        results
+    }
 }
+
+/// Why one query in an isolated sweep ([`BoundPipeline::run_batch_isolated`])
+/// failed — typed so the serve layer can map it to the right wire reject
+/// and the retry policy can tell transient failures from permanent ones.
+#[derive(Debug, Clone)]
+pub enum QueryFailure {
+    /// The query panicked inside its isolation fence (including a shard
+    /// worker's typed [`WorkerPanic`]). Retryable: an injected panic is
+    /// keyed to its attempt, so the retry re-runs clean, and an organic
+    /// panic just fails typed again.
+    Panicked(String),
+    /// The wall-clock budget expired (cooperative, with partial
+    /// accounting). Never retried — the budget is already spent.
+    DeadlineExceeded(DeadlineExceeded),
+    /// Any other execution error; `transient` marks injected
+    /// exec/transfer faults worth retrying.
+    Error {
+        message: String,
+        transient: bool,
+    },
+}
+
+impl QueryFailure {
+    /// Classify an engine error into the typed failure shape by
+    /// downcasting the fault-tolerance error types through `anyhow`.
+    pub fn classify(err: anyhow::Error) -> QueryFailure {
+        if let Some(de) = err.downcast_ref::<DeadlineExceeded>() {
+            return QueryFailure::DeadlineExceeded(de.clone());
+        }
+        if let Some(wp) = err.downcast_ref::<WorkerPanic>() {
+            return QueryFailure::Panicked(wp.to_string());
+        }
+        let transient = err.downcast_ref::<InjectedFault>().is_some_and(|f| f.transient());
+        QueryFailure::Error { message: format!("{err:#}"), transient }
+    }
+
+    /// Is a retry worth attempting?
+    pub fn transient(&self) -> bool {
+        match self {
+            QueryFailure::Panicked(_) => true,
+            QueryFailure::DeadlineExceeded(_) => false,
+            QueryFailure::Error { transient, .. } => *transient,
+        }
+    }
+}
+
+impl fmt::Display for QueryFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QueryFailure::Panicked(msg) => write!(f, "query panicked: {msg}"),
+            QueryFailure::DeadlineExceeded(de) => de.fmt(f),
+            QueryFailure::Error { message, .. } => f.write_str(message),
+        }
+    }
+}
+
+impl std::error::Error for QueryFailure {}
 
 #[cfg(test)]
 mod tests {
@@ -1034,6 +1222,103 @@ mod tests {
             budget.peak_leased(),
             budget.total_workers()
         );
+    }
+
+    #[test]
+    fn expired_deadline_fails_typed_before_any_work() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(200, 2_000, 7);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        let before = bound.comm().transfer_seconds().to_bits();
+        let dead = Deadline::in_duration(std::time::Duration::ZERO);
+        let err = bound.query(&RunOptions::from_root(0).with_deadline(dead)).unwrap_err();
+        let de = err.downcast_ref::<DeadlineExceeded>().expect("typed DeadlineExceeded");
+        assert_eq!(de.supersteps_completed, 0, "expired before any superstep");
+        assert_eq!(bound.comm().transfer_seconds().to_bits(), before, "no DMA committed");
+        // the binding stays usable and an unbudgeted query still succeeds
+        let ok = bound
+            .query(
+                &RunOptions::from_root(0)
+                    .with_deadline(Deadline::in_duration(std::time::Duration::from_secs(3600))),
+            )
+            .unwrap();
+        assert!(ok.supersteps > 0);
+    }
+
+    #[test]
+    fn isolated_sweep_contains_one_poisoned_query() {
+        // Satellite: one injected panic in a sweep fails typed while every
+        // sibling's report — and the shared DMA ledger — stays
+        // bit-identical to the fault-free run.
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::rmat(9, 8_000, 0.57, 0.19, 0.19, 11);
+        let clean_bound = c.load(&g, PrepOptions::named("rmat")).unwrap();
+        let chaos_bound = c.load(&g, PrepOptions::named("rmat")).unwrap();
+        let plain: Vec<RunOptions> = (0..6).map(RunOptions::from_root).collect();
+        let clean = clean_bound.run_batch_parallel(&plain, 3).unwrap();
+
+        // panic@exec#3 fires on root 3's first attempt only
+        let plan = Arc::new(FaultPlan::parse("panic@exec#3").unwrap());
+        let queries: Vec<RunOptions> =
+            (0..6).map(|r| RunOptions::from_root(r).with_faults(plan.clone())).collect();
+        let outcomes = chaos_bound.run_batch_isolated(&queries, 3);
+        assert_eq!(outcomes.len(), 6);
+        for (i, outcome) in outcomes.iter().enumerate() {
+            if i == 3 {
+                let failure = outcome.as_ref().unwrap_err();
+                assert!(matches!(failure, QueryFailure::Panicked(_)), "{failure}");
+                assert!(failure.transient(), "panics earn a retry");
+                assert!(failure.to_string().contains("injected fault: panic@exec"));
+            } else {
+                let r = outcome.as_ref().unwrap();
+                assert_eq!(r.supersteps, clean[i].supersteps, "query {i}");
+                assert_eq!(r.edges_traversed, clean[i].edges_traversed);
+                assert_eq!(r.query_seconds.to_bits(), clean[i].query_seconds.to_bits());
+                assert_eq!(r.simulated_mteps.to_bits(), clean[i].simulated_mteps.to_bits());
+            }
+        }
+        assert_eq!(plan.injected_total(), 1);
+
+        // the retry (attempt 1) misses the attempt-keyed rule, re-runs
+        // clean, and lands the poisoned query's report bit-identical too —
+        // after which the ledgers of both bindings agree exactly
+        let retried = chaos_bound.run_batch_isolated(&[queries[3].clone().with_attempt(1)], 1);
+        let r = retried[0].as_ref().unwrap();
+        assert_eq!(r.query_seconds.to_bits(), clean[3].query_seconds.to_bits());
+        assert_eq!(chaos_bound.comm().bytes_moved(), clean_bound.comm().bytes_moved());
+        assert_eq!(
+            chaos_bound.comm().transfer_seconds().to_bits(),
+            clean_bound.comm().transfer_seconds().to_bits()
+        );
+    }
+
+    #[test]
+    fn injected_transfer_error_is_transient_and_commits_nothing() {
+        let s = session();
+        let c = s.compile(&algorithms::bfs()).unwrap();
+        let g = generate::erdos_renyi(150, 1_200, 3);
+        let bound = c.load(&g, PrepOptions::named("er")).unwrap();
+        let before = bound.comm().bytes_moved();
+        let plan = Arc::new(FaultPlan::parse("transfer_error@commit#5").unwrap());
+        let outcomes = bound
+            .run_batch_isolated(&[RunOptions::from_root(5).with_faults(plan.clone())], 1);
+        match outcomes[0].as_ref().unwrap_err() {
+            QueryFailure::Error { transient, message } => {
+                assert!(*transient, "injected transfer errors are retryable");
+                assert!(message.contains("transfer_error@commit"), "{message}");
+            }
+            other => panic!("expected transient Error, got {other}"),
+        }
+        assert_eq!(bound.comm().bytes_moved(), before, "failed commit must be all-or-nothing");
+        // retry (attempt 1) commits normally
+        let retried = bound.run_batch_isolated(
+            &[RunOptions::from_root(5).with_faults(plan).with_attempt(1)],
+            1,
+        );
+        assert!(retried[0].is_ok());
+        assert!(bound.comm().bytes_moved() > before);
     }
 
     #[test]

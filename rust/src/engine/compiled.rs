@@ -18,7 +18,7 @@ use crate::graph::edgelist::EdgeList;
 use crate::graph::VertexId;
 use crate::prep::prepared::{PrepOptions, PreparedGraph};
 use crate::runtime::KernelRegistry;
-use crate::sched::{AdmittedPlan, ParallelismPlan};
+use crate::sched::{AdmittedPlan, Deadline, FaultPlan, ParallelismPlan};
 use crate::translator::Design;
 
 use super::bound::BoundPipeline;
@@ -70,6 +70,23 @@ pub struct RunOptions {
     /// multiplying. Results are bit-identical for every worker count
     /// (property-tested) — the budget only shapes timing.
     pub shard_workers: Option<usize>,
+    /// Wall-clock budget for this query. Checked cooperatively at every
+    /// superstep boundary (monolithic, sharded, and auto-sharded engines)
+    /// and before transfer commit; expiry aborts with a typed
+    /// [`DeadlineExceeded`] carrying partial accounting instead of
+    /// running forever. `None` = no deadline.
+    ///
+    /// [`DeadlineExceeded`]: crate::sched::DeadlineExceeded
+    pub deadline: Option<Deadline>,
+    /// Deterministic fault-injection schedule for chaos testing (see
+    /// [`crate::sched::FaultPlan`]). `None` = no injection. Carried on
+    /// the options (not process-global state) so concurrent queries and
+    /// tests stay isolated.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Retry attempt number (0 = first try). The serve layer bumps this
+    /// on retries; the exec-seam fault token folds it in, so `#root`
+    /// rules fire on the first attempt only and a retry re-runs clean.
+    pub attempt: u32,
 }
 
 impl Default for RunOptions {
@@ -84,6 +101,9 @@ impl Default for RunOptions {
             max_supersteps: None,
             direction: DirectionPolicy::Adaptive,
             shard_workers: None,
+            deadline: None,
+            faults: None,
+            attempt: 0,
         }
     }
 }
@@ -138,6 +158,27 @@ impl RunOptions {
     /// budget).
     pub fn with_shard_workers(mut self, workers: usize) -> Self {
         self.shard_workers = Some(workers);
+        self
+    }
+
+    /// Give this query a wall-clock budget; expiry aborts the run with a
+    /// typed [`crate::sched::DeadlineExceeded`].
+    pub fn with_deadline(mut self, deadline: Deadline) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a deterministic fault-injection schedule (chaos testing).
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Mark this query as retry attempt `attempt` (0 = first try):
+    /// attempt-keyed fault rules then skip it, so a retried transient
+    /// failure re-runs clean.
+    pub fn with_attempt(mut self, attempt: u32) -> Self {
+        self.attempt = attempt;
         self
     }
 }

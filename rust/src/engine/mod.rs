@@ -64,7 +64,7 @@ pub mod sharded;
 pub mod trace;
 pub mod xla_engine;
 
-pub use bound::BoundPipeline;
+pub use bound::{BoundPipeline, QueryFailure};
 pub use compiled::{CompiledPipeline, RunOptions};
 #[allow(deprecated)]
 pub use executor::{Executor, ExecutorConfig};
@@ -72,6 +72,6 @@ pub use frontier::Frontier;
 pub use gas::{Crossover, DirectionPolicy, EngineGraph, GasResult, SuperstepTrace};
 pub use metrics::{FunctionalPath, RunReport};
 pub use session::{CompileError, Session, SessionConfig};
-pub use sharded::{run_sharded, ShardedRun, ShardedSuperstepTrace};
+pub use sharded::{run_sharded, run_sharded_with_faults, ShardedRun, ShardedSuperstepTrace};
 pub use trace::Trace;
 pub use xla_engine::XlaRunResult;

@@ -36,9 +36,12 @@
 //! actually traversed, the volume the comm layer ledgers as exchange.
 
 use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
+use std::sync::{Mutex, PoisonError};
 
 use crate::analysis::ParallelSafety;
+use crate::sched::faults::{panic_message, shard_token, FaultPlan, InjectedFault, Seam, WorkerPanic};
 use crate::dsl::apply::{ApplyEnv, CompiledApply};
 use crate::dsl::params::ParamSet;
 use crate::dsl::program::{
@@ -100,6 +103,26 @@ pub fn run_sharded(
     root: VertexId,
     policy: DirectionPolicy,
     workers: usize,
+    observer: impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
+) -> Result<ShardedRun> {
+    run_sharded_with_faults(program, g, sg, root, policy, workers, None, observer)
+}
+
+/// [`run_sharded`] with an optional fault-injection plan: every shard
+/// dispatch (serial or threaded) runs behind a panic-isolation fence
+/// that first trips the [`Seam::Shard`] seam. A worker panic — injected
+/// or organic — surfaces as a typed [`WorkerPanic`] error for the whole
+/// query (partial shard scratch can never be merged bit-identically)
+/// instead of tearing down the process.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_with_faults(
+    program: &GasProgram,
+    g: &EngineGraph<'_>,
+    sg: &ShardedGraph,
+    root: VertexId,
+    policy: DirectionPolicy,
+    workers: usize,
+    faults: Option<&FaultPlan>,
     mut observer: impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
 ) -> Result<ShardedRun> {
     let owned;
@@ -111,9 +134,51 @@ pub fn run_sharded(
     };
     let facts = crate::analysis::analyze(program);
     if facts.damped_iteration {
-        return run_pagerank_sharded(program, g, sg, policy, workers, &mut observer);
+        return run_pagerank_sharded(program, g, sg, root, policy, workers, faults, &mut observer);
     }
-    run_generic_sharded(program, &facts, g, sg, root, policy, workers, &mut observer)
+    run_generic_sharded(program, &facts, g, sg, root, policy, workers, faults, &mut observer)
+}
+
+/// Run one shard's share of a superstep behind the panic-isolation
+/// fence: trip the shard fault seam, then do the work. A panic inside
+/// (injected or organic) is caught and rendered as a typed
+/// [`WorkerPanic`]; an injected error fault comes back typed as
+/// [`InjectedFault`]. Used identically on worker threads and on the
+/// serial fallback path, so the failure shape does not depend on the
+/// dispatch gate.
+fn fence_shard(
+    s: usize,
+    root: VertexId,
+    faults: Option<&FaultPlan>,
+    work: impl FnOnce(),
+) -> Result<()> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<(), InjectedFault> {
+        if let Some(plan) = faults {
+            plan.trip(Seam::Shard, shard_token(root, s))?;
+        }
+        work();
+        Ok(())
+    }));
+    match outcome {
+        Ok(Ok(())) => Ok(()),
+        Ok(Err(injected)) => Err(injected.into()),
+        Err(payload) => {
+            Err(WorkerPanic { shard: s, message: panic_message(payload.as_ref()) }.into())
+        }
+    }
+}
+
+/// First failure wins; later workers' failures are dropped (the query is
+/// already lost, and first-wins keeps the reported cause stable).
+fn record_failure(slot: &Mutex<Option<anyhow::Error>>, err: anyhow::Error) {
+    let mut slot = slot.lock().unwrap_or_else(PoisonError::into_inner);
+    if slot.is_none() {
+        *slot = Some(err);
+    }
+}
+
+fn take_failure(slot: &Mutex<Option<anyhow::Error>>) -> Option<anyhow::Error> {
+    slot.lock().unwrap_or_else(PoisonError::into_inner).take()
 }
 
 /// Per-shard reusable scratch: the sharded split of the monolithic
@@ -278,6 +343,7 @@ fn run_generic_sharded(
     root: VertexId,
     policy: DirectionPolicy,
     workers: usize,
+    faults: Option<&FaultPlan>,
     observer: &mut impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
 ) -> Result<ShardedRun> {
     let csr = g.csr;
@@ -376,26 +442,29 @@ fn run_generic_sharded(
         // the scatter. Serial and threaded supersteps fill the same
         // scratch, so the gate never changes values or traces.
         if w <= 1 || frontier_len < SHARD_DISPATCH_MIN_FRONTIER {
+            let values_ref: &[f64] = &values;
             for (s, scr) in scratch.iter_mut().enumerate() {
-                process_shard(
-                    s,
-                    &sg.shards[s],
-                    scr,
-                    sg,
-                    program,
-                    compiled,
-                    const_msg,
-                    iter,
-                    &values,
-                    &cur,
-                    n,
-                    active_policy,
-                    policy,
-                    g.crossover,
-                    early_exit_ok,
-                    sweep_unvisited_only,
-                    unvisited,
-                );
+                fence_shard(s, root, faults, || {
+                    process_shard(
+                        s,
+                        &sg.shards[s],
+                        scr,
+                        sg,
+                        program,
+                        compiled,
+                        const_msg,
+                        iter,
+                        values_ref,
+                        &cur,
+                        n,
+                        active_policy,
+                        policy,
+                        g.crossover,
+                        early_exit_ok,
+                        sweep_unvisited_only,
+                        unvisited,
+                    )
+                })?;
             }
         } else {
             // Static bucketing: shard s runs on worker s % w — placement
@@ -410,6 +479,12 @@ fn run_generic_sharded(
             for (s, scr) in scratch.iter_mut().enumerate() {
                 buckets[s % w].push((s, scr));
             }
+            // Panic-isolation fence (ISSUE 10): a shard worker that dies
+            // records its failure here and stops sending — the scope
+            // still joins every thread, then the query fails typed
+            // below instead of unwinding across the scope boundary.
+            let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            let failure_ref = &failure;
             std::thread::scope(|scope| {
                 let mut buckets = buckets.into_iter();
                 let mine = buckets.next().unwrap_or_default();
@@ -417,53 +492,78 @@ fn run_generic_sharded(
                     let tx = tx.clone();
                     scope.spawn(move || {
                         for (s, scr) in bucket {
-                            process_shard(
-                                s,
-                                &sg.shards[s],
-                                scr,
-                                sg,
-                                program,
-                                compiled,
-                                const_msg,
-                                iter,
-                                values_ref,
-                                cur_ref,
-                                n,
-                                active_policy,
-                                policy,
-                                g.crossover,
-                                early_exit_ok,
-                                sweep_unvisited_only,
-                                unvisited,
-                            );
-                            let _ = tx.send(s);
+                            let fenced = fence_shard(s, root, faults, || {
+                                process_shard(
+                                    s,
+                                    &sg.shards[s],
+                                    scr,
+                                    sg,
+                                    program,
+                                    compiled,
+                                    const_msg,
+                                    iter,
+                                    values_ref,
+                                    cur_ref,
+                                    n,
+                                    active_policy,
+                                    policy,
+                                    g.crossover,
+                                    early_exit_ok,
+                                    sweep_unvisited_only,
+                                    unvisited,
+                                )
+                            });
+                            match fenced {
+                                Ok(()) => {
+                                    let _ = tx.send(s);
+                                }
+                                Err(err) => {
+                                    record_failure(failure_ref, err);
+                                    return;
+                                }
+                            }
                         }
                     });
                 }
                 for (s, scr) in mine {
-                    process_shard(
-                        s,
-                        &sg.shards[s],
-                        scr,
-                        sg,
-                        program,
-                        compiled,
-                        const_msg,
-                        iter,
-                        values_ref,
-                        cur_ref,
-                        n,
-                        active_policy,
-                        policy,
-                        g.crossover,
-                        early_exit_ok,
-                        sweep_unvisited_only,
-                        unvisited,
-                    );
-                    let _ = tx.send(s);
+                    let fenced = fence_shard(s, root, faults, || {
+                        process_shard(
+                            s,
+                            &sg.shards[s],
+                            scr,
+                            sg,
+                            program,
+                            compiled,
+                            const_msg,
+                            iter,
+                            values_ref,
+                            cur_ref,
+                            n,
+                            active_policy,
+                            policy,
+                            g.crossover,
+                            early_exit_ok,
+                            sweep_unvisited_only,
+                            unvisited,
+                        )
+                    });
+                    match fenced {
+                        Ok(()) => {
+                            let _ = tx.send(s);
+                        }
+                        Err(err) => {
+                            record_failure(failure_ref, err);
+                            break;
+                        }
+                    }
                 }
             });
             drop(tx);
+            if let Some(err) = take_failure(&failure) {
+                // The merge below must not run on partial scratch; the
+                // completion-order drain would also come up short of k.
+                return Err(err);
+            }
             if !pinned {
                 // BitExact: merge in completion order. All sends landed
                 // before the scope closed, so this drains exactly k.
@@ -601,12 +701,15 @@ fn pr_gather(shard: &Shard, scr: &mut PrShardScratch, contrib: &[f64], base: f64
 /// monolithic engine. Dangling mass, base, and the L1 delta are computed
 /// serially ascending-vertex on the merge thread — never as shard-major
 /// partial sums, which would reassociate the float reduction.
+#[allow(clippy::too_many_arguments)]
 fn run_pagerank_sharded(
     program: &GasProgram,
     g: &EngineGraph<'_>,
     sg: &ShardedGraph,
+    root: VertexId,
     policy: DirectionPolicy,
     workers: usize,
+    faults: Option<&FaultPlan>,
     observer: &mut impl FnMut(&ShardedSuperstepTrace<'_>) -> Result<()>,
 ) -> Result<ShardedRun> {
     let damping = match &program.writeback {
@@ -679,8 +782,11 @@ fn run_pagerank_sharded(
         }
 
         if w <= 1 {
+            let contrib_ref: &[f64] = &contrib;
             for (s, scr) in scratch.iter_mut().enumerate() {
-                pr_gather(&sg.shards[s], scr, &contrib, base, damping);
+                fence_shard(s, root, faults, || {
+                    pr_gather(&sg.shards[s], scr, contrib_ref, base, damping)
+                })?;
             }
         } else {
             let contrib_ref: &[f64] = &contrib;
@@ -691,20 +797,39 @@ fn run_pagerank_sharded(
             }
             // Worker 0's bucket runs on the calling thread (see the
             // generic loop): `w` workers spawn only `w - 1` threads.
+            // Same panic-isolation discipline as the generic loop: a
+            // dead worker fails the query typed, never the process.
+            let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            let failure_ref = &failure;
             std::thread::scope(|scope| {
                 let mut buckets = buckets.into_iter();
                 let mine = buckets.next().unwrap_or_default();
                 for bucket in buckets {
                     scope.spawn(move || {
                         for (s, scr) in bucket {
-                            pr_gather(&sg.shards[s], scr, contrib_ref, base, damping);
+                            let fenced = fence_shard(s, root, faults, || {
+                                pr_gather(&sg.shards[s], scr, contrib_ref, base, damping)
+                            });
+                            if let Err(err) = fenced {
+                                record_failure(failure_ref, err);
+                                return;
+                            }
                         }
                     });
                 }
                 for (s, scr) in mine {
-                    pr_gather(&sg.shards[s], scr, contrib_ref, base, damping);
+                    let fenced = fence_shard(s, root, faults, || {
+                        pr_gather(&sg.shards[s], scr, contrib_ref, base, damping)
+                    });
+                    if let Err(err) = fenced {
+                        record_failure(failure_ref, err);
+                        break;
+                    }
                 }
             });
+            if let Some(err) = take_failure(&failure) {
+                return Err(err);
+            }
         }
 
         // Merge: disjoint scatter of each shard's owned slice, then the
@@ -907,5 +1032,47 @@ mod tests {
         })
         .unwrap();
         assert_bit_identical(&sh.result, &mono, "n == k");
+    }
+
+    #[test]
+    fn injected_shard_faults_fail_typed_and_leave_clean_runs_bit_identical() {
+        let el = generate::rmat(9, 6_000, 0.57, 0.19, 0.19, 7);
+        let (csr, csc, sg) = sharded_setup(&el, 4, PartitionStrategy::DegreeBalanced);
+        let out_deg = csr.out_degrees();
+        let g = EngineGraph::with_csc(&csr, &csc, Some(&out_deg));
+        let bfs = algorithms::bfs();
+
+        // An injected panic at shard 1 of root 0 comes back as a typed
+        // WorkerPanic error — never an unwind across the engine.
+        let plan = FaultPlan::parse(&format!("panic@shard#{}", shard_token(0, 1))).unwrap();
+        let err = run_sharded_with_faults(
+            &bfs, &g, &sg, 0, DirectionPolicy::Adaptive, 4, Some(&plan), |_| Ok(()),
+        )
+        .unwrap_err();
+        let wp = err.downcast_ref::<WorkerPanic>().expect("typed WorkerPanic");
+        assert_eq!(wp.shard, 1);
+        assert!(wp.message.contains("injected fault: panic@shard"), "{}", wp.message);
+        assert_eq!(plan.injected_total(), 1);
+
+        // An injected error fault stays typed too (threaded PageRank path).
+        let pr = algorithms::pagerank().instantiate(&ParamSet::new()).unwrap();
+        let plan = FaultPlan::parse(&format!("exec_fail@shard#{}", shard_token(0, 2))).unwrap();
+        let err = run_sharded_with_faults(
+            &pr, &g, &sg, 0, DirectionPolicy::Adaptive, 3, Some(&plan), |_| Ok(()),
+        )
+        .unwrap_err();
+        let inj = err.downcast_ref::<InjectedFault>().expect("typed InjectedFault");
+        assert!(inj.transient());
+
+        // A plan keyed to a different root never fires: the run completes
+        // bit-identical to a fault-free run.
+        let clean = run_sharded(&bfs, &g, &sg, 0, DirectionPolicy::Adaptive, 4, |_| Ok(())).unwrap();
+        let miss = FaultPlan::parse(&format!("panic@shard#{}", shard_token(7, 1))).unwrap();
+        let sh = run_sharded_with_faults(
+            &bfs, &g, &sg, 0, DirectionPolicy::Adaptive, 4, Some(&miss), |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(miss.injected_total(), 0);
+        assert_bit_identical(&sh.result, &clean.result, "non-matching plan");
     }
 }

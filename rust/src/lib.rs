@@ -45,8 +45,11 @@
 //! costs (Reorder/Partition/Layout, transport) exactly once, and `run` is
 //! the cheap per-query call. The [`serve`] subsystem (`jgraph serve`)
 //! keeps that lifecycle resident: an always-on daemon with a
-//! graph/pipeline registry, arrival batching into parallel sweeps, and
-//! tail-latency accounting.
+//! graph/pipeline registry, arrival batching into parallel sweeps,
+//! tail-latency accounting, and a fault-tolerant query core — per-query
+//! deadlines ([`sched::Deadline`]), panic isolation, retry with seeded
+//! backoff, and a deterministic fault-injection harness
+//! ([`sched::FaultPlan`]) for chaos drills.
 //!
 //! Quickstart (see `examples/quickstart.rs`; `examples/multi_query.rs`
 //! shows the amortization):
@@ -95,11 +98,11 @@ pub mod prelude {
     pub use crate::engine::{Executor, ExecutorConfig};
     pub use crate::engine::{
         BoundPipeline, CompileError, CompiledPipeline, DirectionPolicy, FunctionalPath,
-        RunOptions, RunReport, Session, SessionConfig,
+        QueryFailure, RunOptions, RunReport, Session, SessionConfig,
     };
     pub use crate::graph::csr::Csr;
     pub use crate::graph::edgelist::EdgeList;
     pub use crate::prep::prepared::{PrepOptions, PreparedGraph};
-    pub use crate::sched::ParallelismPlan;
+    pub use crate::sched::{Deadline, FaultPlan, ParallelismPlan};
     pub use crate::translator::{Translator, TranslatorKind};
 }

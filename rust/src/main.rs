@@ -166,7 +166,12 @@ const USAGE: &str =
   serve     [--addr HOST:PORT] [--batch-window-us N] [--max-resident N]
             [--tenant-cap-default N] [--tenant-cap tenant=N]...
             [--register name=spec]... [--sweep-workers N] [--seed S] [--no-xla]
-            (always-on query daemon, line-delimited JSON; see docs/serving.md)
+            [--retry-limit N] [--retry-budget N] [--read-timeout-ms N]
+            [--idle-timeout-s N] [--fault-plan PLAN]
+            (always-on query daemon, line-delimited JSON; see docs/serving.md.
+            PLAN is a deterministic fault-injection plan, e.g.
+            \"seed=7;panic@exec%101;transfer_error@commit#9\"; the
+            JGRAPH_FAULT_PLAN env var is the fallback when the flag is absent)
   translate --algo A [--translator T] [--pipelines N] [--pes N] [--emit M]
   lint      [--algo A] [--emit text|json]   (all library algorithms by default;
             exits nonzero on any deny-level JG*** diagnostic)
@@ -271,7 +276,14 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
 /// `--register name=spec` pairs; queries arrive as line-delimited JSON
 /// (see `docs/serving.md`) and coalesce into parallel sweeps. Drains
 /// gracefully on SIGTERM/SIGINT or the wire `shutdown` op.
+///
+/// Fault tolerance (ISSUE 10): `--retry-limit` / `--retry-budget` bound
+/// the transient-failure retry machinery, `--read-timeout-ms` /
+/// `--idle-timeout-s` reap dead client connections, and `--fault-plan`
+/// (falling back to the `JGRAPH_FAULT_PLAN` env var) arms the
+/// deterministic fault-injection harness for chaos drills.
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    use jgraph::sched::FaultPlan;
     use jgraph::serve::{self, ServeConfig, ServeRegistry, Server};
     let args = Args::parse(argv, &["no-xla"])?;
     let seed = args.get_num("seed", 42u64)?;
@@ -299,12 +311,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             cap.parse().map_err(|e| anyhow::anyhow!("--tenant-cap {spec:?}: {e}"))?;
         tenant_caps.push((tenant.to_string(), cap));
     }
+    // --fault-plan wins; otherwise JGRAPH_FAULT_PLAN arms the harness.
+    let fault_plan = match args.get("fault-plan") {
+        Some(spec) => Some(std::sync::Arc::new(
+            FaultPlan::parse(spec).with_context(|| format!("--fault-plan {spec:?}"))?,
+        )),
+        None => FaultPlan::from_env()?,
+    };
     let config = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7411"),
         batch_window: std::time::Duration::from_micros(args.get_num("batch-window-us", 2_000u64)?),
         default_tenant_cap: args.get_num("tenant-cap-default", 64usize)?,
         tenant_caps,
         sweep_workers: args.get_num("sweep-workers", jgraph::sched::available_workers())?,
+        read_timeout: std::time::Duration::from_millis(args.get_num("read-timeout-ms", 250u64)?),
+        idle_timeout: std::time::Duration::from_secs(args.get_num("idle-timeout-s", 300u64)?),
+        retry_limit: args.get_num("retry-limit", 2u32)?,
+        retry_budget_per_tenant: args.get_num("retry-budget", 256u64)?,
+        fault_plan: fault_plan.clone(),
     };
     let server = Server::start(config, registry.clone())?;
     println!(
@@ -313,6 +337,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         registry.graph_names().len(),
         registry.max_resident(),
     );
+    if let Some(plan) = &fault_plan {
+        println!(
+            "jgraph serve: fault-injection plan armed: {} (seed {})",
+            plan.source(),
+            plan.seed()
+        );
+    }
     serve::install_termination_handler();
     while !server.is_shutting_down() && !serve::termination_requested() {
         std::thread::sleep(std::time::Duration::from_millis(50));

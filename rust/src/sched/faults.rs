@@ -1,0 +1,649 @@
+//! Query deadlines and deterministic fault injection.
+//!
+//! Two small primitives every layer of the fault-tolerant query core
+//! leases from (the robustness analogue of [`super::budget::WorkerBudget`]):
+//!
+//! * [`Deadline`] — a wall-clock budget carried on
+//!   `RunOptions`/the wire (`deadline_us`), checked cooperatively at
+//!   superstep boundaries and transfer commits. Expiry is a **typed**
+//!   [`DeadlineExceeded`] with partial accounting (supersteps completed,
+//!   elapsed), never a silent hang.
+//! * [`FaultPlan`] — a seeded schedule of injected faults for chaos
+//!   testing. A fault decision is a **pure function of
+//!   `(seed, seam, token)`** — no mutable hit counters — so the same
+//!   plan string produces the same fault sequence regardless of thread
+//!   interleaving, worker count, or batch composition. Same seed → same
+//!   faults → reproducible chaos tests.
+//!
+//! # Fault-plan grammar
+//!
+//! ```text
+//! plan  := [ "seed=" u64 ";" ] rule { ";" rule }
+//! rule  := kind "@" seam [ "#" token | "%" modulus ] [ "~" millis ]
+//! kind  := panic | exec_fail | transfer_error | compile_fail | slow
+//! seam  := compile | exec | superstep | commit | shard
+//! token := u64 | identifier        (identifiers hash via token_of_name)
+//! ```
+//!
+//! * a bare rule fires on **every** hit of its seam;
+//! * `#token` fires when the seam's token matches exactly (the exec
+//!   seam's token is [`exec_token`]`(root, attempt)`, so `#root` hits
+//!   attempt 0 only and a retry re-runs clean);
+//! * `%modulus` fires pseudo-randomly on ~1/modulus of hits, derived
+//!   from `mix(seed ^ seam ^ token)`;
+//! * `~millis` sets the sleep for `slow` faults (wall-clock only —
+//!   modeled report fields are never perturbed).
+//!
+//! Example: `seed=7;panic@exec#41;transfer_error@commit%13;slow@superstep%50~3`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable read by [`FaultPlan::from_env`] (and honored by
+/// `jgraph serve` when `--fault-plan` is absent).
+pub const FAULT_PLAN_ENV: &str = "JGRAPH_FAULT_PLAN";
+
+// ---------------------------------------------------------------------------
+// Deadlines
+// ---------------------------------------------------------------------------
+
+/// A per-query wall-clock budget. Cheap to copy, checked cooperatively
+/// (superstep boundaries, transfer commits) — expiry yields a typed
+/// [`DeadlineExceeded`] carrying partial accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn in_duration(budget: Duration) -> Self {
+        let start = Instant::now();
+        // saturate absurd budgets (u64::MAX µs overflows Instant math)
+        let at = start.checked_add(budget).unwrap_or(start + Duration::from_secs(86_400 * 365));
+        Deadline { start, at }
+    }
+
+    /// Has the budget elapsed?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Time left before expiry (zero once expired).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+
+    /// The typed expiry error, stamped with what completed before it.
+    pub fn exceeded(&self, supersteps_completed: u32) -> DeadlineExceeded {
+        DeadlineExceeded {
+            supersteps_completed,
+            elapsed: self.start.elapsed(),
+            budget: self.at.saturating_duration_since(self.start),
+        }
+    }
+
+    /// Cooperative check: `Err(DeadlineExceeded)` once expired.
+    pub fn check(&self, supersteps_completed: u32) -> Result<(), DeadlineExceeded> {
+        if self.expired() {
+            Err(self.exceeded(supersteps_completed))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Typed deadline expiry with partial accounting — downcastable through
+/// `anyhow` so the serve layer can map it to a `deadline_exceeded` wire
+/// reject instead of a generic execution failure.
+#[derive(Debug, Clone)]
+pub struct DeadlineExceeded {
+    /// Supersteps that completed before the budget ran out.
+    pub supersteps_completed: u32,
+    /// Wall-clock time the query had been running.
+    pub elapsed: Duration,
+    /// The budget the query was admitted with.
+    pub budget: Duration,
+}
+
+impl fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "deadline exceeded after {} supersteps ({:.0} us elapsed of a {:.0} us budget)",
+            self.supersteps_completed,
+            self.elapsed.as_secs_f64() * 1e6,
+            self.budget.as_secs_f64() * 1e6,
+        )
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+// ---------------------------------------------------------------------------
+// Fault kinds, seams, tokens
+// ---------------------------------------------------------------------------
+
+/// What an injected fault does at its seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// `panic!` at the seam (caught by the nearest isolation fence).
+    Panic,
+    /// A typed, transient execution error (retryable).
+    ExecFail,
+    /// A typed, transient transfer/commit error (retryable).
+    TransferError,
+    /// A persistent compile failure (keyed by algorithm-name token).
+    CompileFail,
+    /// A wall-clock sleep — latency only, modeled results untouched.
+    Slow,
+}
+
+impl FaultKind {
+    /// Every kind, in stable counter order.
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::Panic,
+        FaultKind::ExecFail,
+        FaultKind::TransferError,
+        FaultKind::CompileFail,
+        FaultKind::Slow,
+    ];
+
+    /// The grammar keyword for this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::ExecFail => "exec_fail",
+            FaultKind::TransferError => "transfer_error",
+            FaultKind::CompileFail => "compile_fail",
+            FaultKind::Slow => "slow",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            FaultKind::Panic => 0,
+            FaultKind::ExecFail => 1,
+            FaultKind::TransferError => 2,
+            FaultKind::CompileFail => 3,
+            FaultKind::Slow => 4,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "panic" => FaultKind::Panic,
+            "exec_fail" => FaultKind::ExecFail,
+            "transfer_error" => FaultKind::TransferError,
+            "compile_fail" => FaultKind::CompileFail,
+            "slow" => FaultKind::Slow,
+            other => bail!(
+                "unknown fault kind {other:?} (panic|exec_fail|transfer_error|compile_fail|slow)"
+            ),
+        })
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A named seam where faults can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Seam {
+    /// Pipeline compile (token: [`token_of_name`] of the algorithm).
+    Compile,
+    /// Query execution start (token: [`exec_token`]`(root, attempt)`).
+    Exec,
+    /// Superstep boundary (token: superstep index).
+    Superstep,
+    /// Transfer commit (token: [`exec_token`]`(root, attempt)`, so
+    /// `#root` commit faults hit attempt 0 only and a retry commits).
+    Commit,
+    /// Shard worker, inside its isolation fence (token:
+    /// [`shard_token`]`(root, shard)`).
+    Shard,
+}
+
+impl Seam {
+    /// The grammar keyword for this seam.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Seam::Compile => "compile",
+            Seam::Exec => "exec",
+            Seam::Superstep => "superstep",
+            Seam::Commit => "commit",
+            Seam::Shard => "shard",
+        }
+    }
+
+    fn tag(&self) -> u64 {
+        // arbitrary distinct constants folded into the decision hash so
+        // the same token behaves independently at different seams
+        match self {
+            Seam::Compile => 0x636f_6d70,
+            Seam::Exec => 0x6578_6563,
+            Seam::Superstep => 0x7375_7072,
+            Seam::Commit => 0x636f_6d6d,
+            Seam::Shard => 0x7368_6172,
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "compile" => Seam::Compile,
+            "exec" => Seam::Exec,
+            "superstep" => Seam::Superstep,
+            "commit" => Seam::Commit,
+            "shard" => Seam::Shard,
+            other => bail!("unknown fault seam {other:?} (compile|exec|superstep|commit|shard)"),
+        })
+    }
+}
+
+impl fmt::Display for Seam {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// splitmix64 finalizer — the pure decision hash behind `%modulus` rules.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Stable hash of a name into a fault token (`#wcc` in the grammar).
+pub fn token_of_name(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The exec seam's token: `#root` rules hit attempt 0 only, so a retried
+/// query naturally re-runs clean — no per-rule mutable state needed.
+pub fn exec_token(root: u32, attempt: u32) -> u64 {
+    root as u64 | ((attempt as u64) << 32)
+}
+
+/// The shard seam's token: one `(root, shard)` pair per worker dispatch.
+pub fn shard_token(root: u32, shard: usize) -> u64 {
+    root as u64 | ((shard as u64) << 32)
+}
+
+/// Deterministic retry backoff: `base * 2^attempt` plus a seeded jitter
+/// of up to one `base`, pure in `(seed, root, attempt)` — so a chaos
+/// test replays the exact same waits the daemon took. The exponent is
+/// clamped so absurd attempt counts saturate instead of overflowing.
+pub fn retry_backoff(seed: u64, root: u32, attempt: u32, base: Duration) -> Duration {
+    let scaled = base.saturating_mul(1u32 << attempt.min(16));
+    let span_us = base.as_micros().min(u64::MAX as u128) as u64;
+    let jitter_us = if span_us == 0 { 0 } else { mix(seed ^ exec_token(root, attempt)) % span_us };
+    scaled.saturating_add(Duration::from_micros(jitter_us))
+}
+
+// ---------------------------------------------------------------------------
+// The plan
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Selector {
+    Always,
+    Token(u64),
+    Modulus(u64),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Rule {
+    kind: FaultKind,
+    seam: Seam,
+    selector: Selector,
+    slow: Duration,
+}
+
+/// A decided fault at a seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    /// What fires.
+    pub kind: FaultKind,
+    /// Sleep duration for [`FaultKind::Slow`] (the `~millis` suffix).
+    pub slow: Duration,
+}
+
+/// A seeded, deterministic fault schedule. See the module docs for the
+/// grammar. Decisions are pure functions of `(seed, seam, token)`;
+/// only the injection **counters** are mutable (relaxed atomics,
+/// surfaced through the serve `stats` op).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    source: String,
+    injected: [AtomicU64; FaultKind::ALL.len()],
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see the module-level grammar).
+    pub fn parse(plan: &str) -> Result<FaultPlan> {
+        let mut seed = 42u64;
+        let mut rules = Vec::new();
+        for (i, raw) in plan.split(';').enumerate() {
+            let part = raw.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(value) = part.strip_prefix("seed=") {
+                if i != 0 {
+                    bail!("fault plan: seed= must be the first segment, got {part:?}");
+                }
+                seed = value.trim().parse().with_context(|| format!("fault plan seed {value:?}"))?;
+                continue;
+            }
+            rules.push(Self::parse_rule(part)?);
+        }
+        if rules.is_empty() {
+            bail!("fault plan {plan:?} declares no rules");
+        }
+        Ok(FaultPlan {
+            seed,
+            rules,
+            source: plan.to_string(),
+            injected: Default::default(),
+        })
+    }
+
+    fn parse_rule(part: &str) -> Result<Rule> {
+        let (mut head, slow) = match part.split_once('~') {
+            Some((head, ms)) => {
+                let ms: u64 =
+                    ms.trim().parse().with_context(|| format!("fault rule {part:?}: ~millis"))?;
+                (head.trim(), Duration::from_millis(ms))
+            }
+            None => (part, Duration::from_millis(2)),
+        };
+        let mut selector = Selector::Always;
+        if let Some((h, tok)) = head.split_once('#') {
+            selector = Selector::Token(match tok.trim().parse::<u64>() {
+                Ok(n) => n,
+                Err(_) => token_of_name(tok.trim()),
+            });
+            head = h;
+        } else if let Some((h, m)) = head.split_once('%') {
+            let m: u64 =
+                m.trim().parse().with_context(|| format!("fault rule {part:?}: %modulus"))?;
+            if m == 0 {
+                bail!("fault rule {part:?}: %modulus must be >= 1");
+            }
+            selector = Selector::Modulus(m);
+            head = h;
+        }
+        let (kind, seam) = head
+            .split_once('@')
+            .with_context(|| format!("fault rule {part:?}: expected kind@seam"))?;
+        Ok(Rule {
+            kind: FaultKind::parse(kind.trim())?,
+            seam: Seam::parse(seam.trim())?,
+            selector,
+            slow,
+        })
+    }
+
+    /// Parse `$JGRAPH_FAULT_PLAN` if set (`Ok(None)` when unset).
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(plan) if !plan.trim().is_empty() => {
+                Ok(Some(Arc::new(Self::parse(&plan).with_context(|| {
+                    format!("parsing {FAULT_PLAN_ENV}")
+                })?)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// The plan string this was parsed from.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// The determinism seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Decide whether a fault fires at `(seam, token)` — a pure function
+    /// of the plan and its arguments (first matching rule wins), plus a
+    /// relaxed counter bump when one does.
+    pub fn decide(&self, seam: Seam, token: u64) -> Option<Fault> {
+        for rule in self.rules.iter().filter(|r| r.seam == seam) {
+            let hit = match rule.selector {
+                Selector::Always => true,
+                Selector::Token(t) => token == t,
+                Selector::Modulus(m) => mix(self.seed ^ seam.tag() ^ token) % m == 0,
+            };
+            if hit {
+                self.injected[rule.kind.index()].fetch_add(1, Ordering::Relaxed);
+                return Some(Fault { kind: rule.kind, slow: rule.slow });
+            }
+        }
+        None
+    }
+
+    /// Decide **and act**: sleep on `slow`, `panic!` on `panic` (for the
+    /// nearest isolation fence to catch), return a typed
+    /// [`InjectedFault`] for the error kinds.
+    pub fn trip(&self, seam: Seam, token: u64) -> Result<(), InjectedFault> {
+        let Some(fault) = self.decide(seam, token) else {
+            return Ok(());
+        };
+        match fault.kind {
+            FaultKind::Slow => {
+                std::thread::sleep(fault.slow);
+                Ok(())
+            }
+            FaultKind::Panic => panic!("{}", InjectedFault { kind: FaultKind::Panic, seam }),
+            kind => Err(InjectedFault { kind, seam }),
+        }
+    }
+
+    /// Faults injected so far, by kind (stable [`FaultKind::ALL`] order).
+    pub fn injected_by_kind(&self) -> [(FaultKind, u64); FaultKind::ALL.len()] {
+        let mut out = [(FaultKind::Panic, 0); FaultKind::ALL.len()];
+        for (slot, kind) in out.iter_mut().zip(FaultKind::ALL) {
+            *slot = (kind, self.injected[kind.index()].load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// Total faults injected so far.
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed fault errors
+// ---------------------------------------------------------------------------
+
+/// A typed injected-fault error, downcastable through `anyhow` so the
+/// retry policy can tell transient injected failures from real ones.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    /// The fault kind that fired.
+    pub kind: FaultKind,
+    /// Where it fired.
+    pub seam: Seam,
+}
+
+impl InjectedFault {
+    /// Is this fault worth retrying? (Exec/transfer faults are keyed by
+    /// attempt, so a retry re-rolls; compile faults are persistent.)
+    pub fn transient(&self) -> bool {
+        matches!(self.kind, FaultKind::ExecFail | FaultKind::TransferError)
+    }
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault: {}@{}", self.kind, self.seam)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A shard worker died mid-superstep (real bug or injected panic). The
+/// whole query fails typed — partial shard scratch can never be merged
+/// bit-identically — while sibling queries in the sweep are untouched.
+#[derive(Debug, Clone)]
+pub struct WorkerPanic {
+    /// Which shard's worker panicked.
+    pub shard: usize,
+    /// The stringified panic payload.
+    pub message: String,
+}
+
+impl fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard worker {} panicked: {}", self.shard, self.message)
+    }
+}
+
+impl std::error::Error for WorkerPanic {}
+
+/// Render a caught panic payload (`Box<dyn Any>`) as a message.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_every_form() {
+        let plan = FaultPlan::parse(
+            "seed=7;panic@exec#41;transfer_error@commit%13;slow@superstep%50~3;compile_fail@compile#wcc;exec_fail@shard",
+        )
+        .unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(plan.rules.len(), 5);
+        assert_eq!(plan.rules[0].selector, Selector::Token(41));
+        assert_eq!(plan.rules[1].selector, Selector::Modulus(13));
+        assert_eq!(plan.rules[2].slow, Duration::from_millis(3));
+        assert_eq!(plan.rules[3].selector, Selector::Token(token_of_name("wcc")));
+        assert_eq!(plan.rules[4].selector, Selector::Always);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_rules() {
+        for bad in [
+            "",
+            "panic@nowhere",
+            "meteor@exec",
+            "panic@exec%0",
+            "panic@exec~lots",
+            "panic",
+            "exec_fail@exec;seed=3",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    /// The determinism contract: the same plan string replayed over the
+    /// same token sequence yields the identical fault sequence, counters
+    /// included — decisions are pure in (seed, seam, token).
+    #[test]
+    fn same_seed_produces_identical_fault_sequence() {
+        let src = "seed=99;panic@exec%17;transfer_error@commit%29;slow@superstep%7~1";
+        let a = FaultPlan::parse(src).unwrap();
+        let b = FaultPlan::parse(src).unwrap();
+        let seams = [Seam::Exec, Seam::Commit, Seam::Superstep, Seam::Shard];
+        let decisions = |plan: &FaultPlan| {
+            let mut out = Vec::new();
+            for &seam in &seams {
+                for token in 0..4096u64 {
+                    out.push(plan.decide(seam, token));
+                }
+            }
+            out
+        };
+        let da = decisions(&a);
+        assert_eq!(da, decisions(&b), "same plan must replay the same fault sequence");
+        assert!(da.iter().flatten().count() > 100, "moduli must actually fire");
+        assert_eq!(a.injected_total(), b.injected_total());
+        // and a different seed reshuffles the modulus hits
+        let c = FaultPlan::parse(&src.replace("seed=99", "seed=100")).unwrap();
+        assert_ne!(da, decisions(&c), "a different seed must reshuffle modulus rules");
+    }
+
+    #[test]
+    fn exec_token_keys_faults_to_the_first_attempt() {
+        let plan = FaultPlan::parse("exec_fail@exec#41").unwrap();
+        assert!(plan.decide(Seam::Exec, exec_token(41, 0)).is_some());
+        assert!(plan.decide(Seam::Exec, exec_token(41, 1)).is_none(), "retry re-runs clean");
+        assert!(plan.decide(Seam::Exec, exec_token(40, 0)).is_none(), "other roots untouched");
+        assert!(plan.decide(Seam::Commit, exec_token(41, 0)).is_none(), "other seams untouched");
+        assert_eq!(plan.injected_total(), 1);
+        assert_eq!(plan.injected_by_kind()[FaultKind::ExecFail.index()].1, 1);
+    }
+
+    #[test]
+    fn trip_maps_kinds_to_behaviours() {
+        let plan = FaultPlan::parse("exec_fail@exec#1;slow@superstep#2~1").unwrap();
+        let err = plan.trip(Seam::Exec, 1).unwrap_err();
+        assert_eq!(err.kind, FaultKind::ExecFail);
+        assert!(err.transient());
+        plan.trip(Seam::Superstep, 2).unwrap(); // sleeps, then Ok
+        plan.trip(Seam::Superstep, 3).unwrap(); // no rule, no-op
+        let panicking = FaultPlan::parse("panic@exec#9").unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = panicking.trip(Seam::Exec, 9);
+        }));
+        let payload = caught.unwrap_err();
+        assert!(panic_message(payload.as_ref()).contains("injected fault: panic@exec"));
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_and_scales_with_attempt() {
+        let base = Duration::from_millis(2);
+        let a = retry_backoff(7, 41, 1, base);
+        assert_eq!(a, retry_backoff(7, 41, 1, base), "pure in (seed, root, attempt)");
+        assert!(a >= base * 2 && a < base * 3, "{a:?}");
+        assert!(retry_backoff(7, 41, 2, base) >= base * 4, "exponential in attempt");
+        assert_eq!(retry_backoff(7, 41, 3, Duration::ZERO), Duration::ZERO);
+    }
+
+    #[test]
+    fn deadline_checks_and_partial_accounting() {
+        let d = Deadline::in_duration(Duration::from_secs(3600));
+        assert!(!d.expired());
+        d.check(3).unwrap();
+        let expired = Deadline::in_duration(Duration::ZERO);
+        let err = expired.check(5).unwrap_err();
+        assert_eq!(err.supersteps_completed, 5);
+        let msg = err.to_string();
+        assert!(msg.contains("deadline exceeded after 5 supersteps"), "{msg}");
+        // absurd budgets saturate instead of panicking
+        let far = Deadline::in_duration(Duration::from_micros(u64::MAX));
+        assert!(!far.expired());
+    }
+}

@@ -5,10 +5,14 @@
 
 pub mod budget;
 pub mod caps;
+pub mod faults;
 pub mod scheduler;
 
 pub use budget::{available_workers, PoolLease, WorkerBudget};
 pub use caps::{CapPermit, ConcurrencyCap};
+pub use faults::{
+    Deadline, DeadlineExceeded, Fault, FaultKind, FaultPlan, InjectedFault, Seam, WorkerPanic,
+};
 pub use scheduler::{auto_plan, AdmittedPlan, RuntimeScheduler, SchedulerEvent};
 
 

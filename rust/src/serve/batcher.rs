@@ -14,11 +14,12 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
-use crate::engine::{RunOptions, RunReport};
+use crate::engine::{QueryFailure, RunOptions, RunReport};
 
+use super::lock_recover;
 use super::tenant::TenantPermit;
 
 /// The coalescing key: queries agreeing on both fields run in one sweep.
@@ -30,8 +31,10 @@ pub struct BindingKey {
 
 /// What a query's connection gets back from its sweep.
 pub struct BatchOutcome {
-    /// The engine's report, or the per-query error text.
-    pub result: Result<RunReport, String>,
+    /// The engine's report, or the query's own typed failure — one
+    /// poisoned query in a sweep fails alone (per-query isolation
+    /// fences), and the writer maps the failure kind to its wire reject.
+    pub result: Result<RunReport, QueryFailure>,
     /// Admission → sweep dispatch.
     pub queue: Duration,
     /// Sweep dispatch → sweep done (batch-level: shared by the batch).
@@ -43,6 +46,9 @@ pub struct BatchOutcome {
 /// One admitted query waiting for its sweep.
 pub struct Pending {
     pub opts: RunOptions,
+    /// The tenant this query was admitted under — the dispatcher charges
+    /// retries to this tenant's budget.
+    pub tenant: String,
     /// Held from admission until the response is written; dropping it
     /// (after the reply sends) frees the tenant's slot.
     pub permit: TenantPermit,
@@ -86,7 +92,7 @@ impl Batcher {
     /// Queue one admitted query. `Err` hands the query back when the
     /// daemon is draining (the caller answers with a typed reject).
     pub fn submit(&self, key: BindingKey, pending: Pending) -> Result<(), Pending> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         if state.draining {
             return Err(pending);
         }
@@ -105,18 +111,18 @@ impl Batcher {
     /// window no longer applies). After the last queue empties,
     /// [`Self::next_ready`] returns `None` and the dispatcher exits.
     pub fn drain(&self) {
-        self.state.lock().unwrap().draining = true;
+        lock_recover(&self.state).draining = true;
         self.cv.notify_all();
     }
 
     pub fn is_draining(&self) -> bool {
-        self.state.lock().unwrap().draining
+        lock_recover(&self.state).draining
     }
 
     /// Block until one binding's batch is due, then hand its whole queue
     /// over. `None` means drained and empty: the dispatcher's exit.
     pub fn next_ready(&self) -> Option<(BindingKey, Vec<Pending>)> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = lock_recover(&self.state);
         loop {
             let now = Instant::now();
             let draining = state.draining;
@@ -136,16 +142,23 @@ impl Batcher {
             match earliest {
                 Some(since) => {
                     let timeout = (since + self.window).saturating_duration_since(now);
-                    state = self.cv.wait_timeout(state, timeout).unwrap().0;
+                    state = self
+                        .cv
+                        .wait_timeout(state, timeout)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
                 }
                 None if draining => return None,
-                None => state = self.cv.wait(state).unwrap(),
+                None => {
+                    state = self.cv.wait(state).unwrap_or_else(PoisonError::into_inner);
+                }
             }
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::serve::tenant::TenantTable;
@@ -154,6 +167,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let p = Pending {
             opts: RunOptions::default(),
+            tenant: "test".into(),
             permit: table.admit("test").unwrap(),
             enqueued: Instant::now(),
             reply: tx,

@@ -11,10 +11,31 @@
 //! [`WorkerBudget`](crate::sched::WorkerBudget), and accounts tail
 //! latency with rolling histograms ([`stats`]).
 //!
+//! Fault tolerance (ISSUE 10): queries carry optional wall-clock
+//! deadlines (`deadline_us` on the wire), execute behind per-query
+//! panic-isolation fences
+//! ([`run_batch_isolated`](crate::engine::BoundPipeline::run_batch_isolated)),
+//! and transient failures retry with deterministic exponential backoff
+//! under a per-tenant retry budget. A seeded
+//! [`FaultPlan`](crate::sched::FaultPlan) (the `--fault-plan` flag or
+//! `$JGRAPH_FAULT_PLAN`) injects panics, transfer errors, slow
+//! supersteps, and compile failures for chaos testing — see
+//! `docs/serving.md` § "Failure modes and fault injection".
+//!
+//! The daemon must never die to a poisoned query: this module tree is
+//! compiled under `warn(clippy::unwrap_used)`, and shared mutexes are
+//! taken through [`lock_recover`], which recovers a poisoned lock
+//! instead of cascading the panic (every guarded structure is a
+//! counter/queue that stays internally consistent across a poisoning
+//! unwind).
+//!
 //! See `docs/serving.md` for the wire spec and operational semantics,
 //! and `examples/serve_demo.rs` for an end-to-end smoke.
 //!
 //! [`run_batch_parallel`]: crate::engine::BoundPipeline::run_batch_parallel
+#![warn(clippy::unwrap_used)]
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 pub mod batcher;
 pub mod client;
@@ -31,3 +52,12 @@ pub use server::{install_termination_handler, termination_requested, ServeConfig
 pub use stats::{LatencyHistogram, ServeStats};
 pub use tenant::{TenantPermit, TenantTable};
 pub use wire::{QueryRequest, RejectKind, Request};
+
+/// Take a shared mutex, recovering from poison instead of propagating
+/// the panic: a worker that unwound while holding a stats histogram or
+/// the batcher queue must not take the whole daemon down with it. Every
+/// structure guarded this way is update-atomic (counters, maps, vecs),
+/// so the recovered state is consistent — at worst one sample short.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

@@ -32,6 +32,8 @@ use crate::graph::catalog;
 use crate::graph::edgelist::EdgeList;
 use crate::prep::prepared::{PrepOptions, PreparedGraph};
 
+use super::lock_recover;
+
 /// Where a registered graph's edges come from when it must be
 /// (re)prepared.
 #[derive(Clone)]
@@ -117,35 +119,35 @@ impl ServeRegistry {
     /// the source but not an already-resident prep.
     pub fn register_spec(&self, name: impl Into<String>, spec: impl Into<String>, seed: u64) {
         let source = GraphSource::Spec { spec: spec.into(), seed };
-        self.sources.lock().unwrap().insert(name.into(), source);
+        lock_recover(&self.sources).insert(name.into(), source);
     }
 
     /// Register `name` with in-memory edges.
     pub fn register_edges(&self, name: impl Into<String>, edges: EdgeList) {
         let source = GraphSource::Edges(Arc::new(edges));
-        self.sources.lock().unwrap().insert(name.into(), source);
+        lock_recover(&self.sources).insert(name.into(), source);
     }
 
     /// Whether `name` has a registered source (resident or not).
     pub fn is_registered(&self, name: &str) -> bool {
-        self.sources.lock().unwrap().contains_key(name)
+        lock_recover(&self.sources).contains_key(name)
     }
 
     /// Registered graph names, sorted.
     pub fn graph_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.sources.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = lock_recover(&self.sources).keys().cloned().collect();
         names.sort();
         names
     }
 
     /// Resident (prepared) graph names in LRU order, least recent first.
     pub fn resident_names(&self) -> Vec<String> {
-        self.resident.lock().unwrap().order.clone()
+        lock_recover(&self.resident).order.clone()
     }
 
     /// Resident prepared-graph count (always ≤ the configured cap).
     pub fn resident_count(&self) -> usize {
-        self.resident.lock().unwrap().slots.len()
+        lock_recover(&self.resident).slots.len()
     }
 
     /// Graphs evicted over the registry's lifetime.
@@ -163,14 +165,14 @@ impl ServeRegistry {
     #[allow(clippy::type_complexity)]
     pub fn graph(&self, name: &str) -> Result<Arc<PreparedGraph>, Option<String>> {
         let slot = {
-            let mut resident = self.resident.lock().unwrap();
+            let mut resident = lock_recover(&self.resident);
             match resident.slots.get(name) {
                 Some(slot) => {
                     resident.touch(name);
                     slot.clone()
                 }
                 None => {
-                    let source = self.sources.lock().unwrap().get(name).cloned();
+                    let source = lock_recover(&self.sources).get(name).cloned();
                     let Some(source) = source else { return Err(None) };
                     // Make room before inserting: evict least-recently
                     // used names until the new slot fits the cap.
@@ -198,7 +200,7 @@ impl ServeRegistry {
             Err(msg) => {
                 // Drop the failed slot so a later request can retry
                 // (e.g. the file appears); holders of the error keep it.
-                let mut resident = self.resident.lock().unwrap();
+                let mut resident = lock_recover(&self.resident);
                 if resident
                     .slots
                     .get(name)
@@ -216,27 +218,24 @@ impl ServeRegistry {
     /// means no such algorithm; `Err(Some(msg))` a compile failure.
     #[allow(clippy::type_complexity)]
     pub fn pipeline(&self, algo: &str) -> Result<Arc<CompiledPipeline>, Option<String>> {
-        if let Some(p) = self.pipelines.lock().unwrap().get(algo) {
+        if let Some(p) = lock_recover(&self.pipelines).get(algo) {
             return Ok(p.clone());
         }
         let Some(program) = program_by_name(algo) else { return Err(None) };
         // Compile outside the pipelines lock (the session lock
         // serializes compiles; losers of a race just re-insert the same
         // value).
-        let compiled = self
-            .session
-            .lock()
-            .unwrap()
+        let compiled = lock_recover(&self.session)
             .compile(&program)
             .map_err(|e| Some(e.to_string()))?;
         let compiled = Arc::new(compiled);
-        let mut pipelines = self.pipelines.lock().unwrap();
+        let mut pipelines = lock_recover(&self.pipelines);
         Ok(pipelines.entry(algo.to_string()).or_insert(compiled).clone())
     }
 
     /// Compiled pipeline names, sorted.
     pub fn pipeline_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.pipelines.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = lock_recover(&self.pipelines).keys().cloned().collect();
         names.sort();
         names
     }
@@ -260,6 +259,7 @@ pub fn program_by_name(name: &str) -> Option<GasProgram> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::engine::SessionConfig;

@@ -15,8 +15,9 @@
 //! get their responses, new queries earn a typed `draining` reject, and
 //! [`Server::join`] returns once every thread is down.
 
-use std::io::{BufRead, BufReader, Write as _};
+use std::io::{BufRead, BufReader, ErrorKind, Write as _};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,14 +25,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::{RunOptions, RunReport};
-use crate::sched::available_workers;
+use crate::engine::{QueryFailure, RunOptions, RunReport};
+use crate::sched::faults::{self, retry_backoff, token_of_name};
+use crate::sched::{available_workers, Deadline, FaultPlan, Seam};
 
 use super::batcher::{BatchOutcome, Batcher, BindingKey, Pending};
+use super::lock_recover;
 use super::registry::ServeRegistry;
 use super::stats::ServeStats;
 use super::tenant::TenantTable;
 use super::wire::{self, Json, QueryRequest, RejectKind, Request};
+
+/// Base delay for the deterministic retry backoff: attempt `n` waits
+/// `base * 2^n` plus a seeded jitter of up to one base (see
+/// [`retry_backoff`]). Small on purpose — the sweeps being retried are
+/// millisecond-scale and the dispatcher sleeps through the backoff.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(1);
 
 /// Daemon knobs. The registry (and its resident-graph cap) is built by
 /// the caller and passed to [`Server::start`] separately, so tests and
@@ -50,6 +59,22 @@ pub struct ServeConfig {
     /// Worker-thread target per sweep (leased from the global
     /// [`WorkerBudget`](crate::sched::WorkerBudget) at dispatch).
     pub sweep_workers: usize,
+    /// Socket read timeout per connection: how often an idle reader
+    /// wakes to observe shutdown (and to advance its idle clock).
+    pub read_timeout: Duration,
+    /// Reap a connection after this much continuous silence — a client
+    /// that died without closing its socket stops pinning a reader
+    /// thread (ISSUE 10 satellite).
+    pub idle_timeout: Duration,
+    /// Retry attempts per query beyond the first run (transient
+    /// failures only; each retry also spends tenant retry budget).
+    pub retry_limit: u32,
+    /// Process-lifetime retry budget per tenant.
+    pub retry_budget_per_tenant: u64,
+    /// Deterministic fault-injection schedule for chaos testing (the
+    /// `--fault-plan` flag / `$JGRAPH_FAULT_PLAN`); `None` in
+    /// production.
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -60,6 +85,11 @@ impl Default for ServeConfig {
             default_tenant_cap: 64,
             tenant_caps: Vec::new(),
             sweep_workers: available_workers(),
+            read_timeout: Duration::from_millis(250),
+            idle_timeout: Duration::from_secs(300),
+            retry_limit: 2,
+            retry_budget_per_tenant: 256,
+            fault_plan: None,
         }
     }
 }
@@ -72,6 +102,10 @@ struct Shared {
     stats: ServeStats,
     shutdown: AtomicBool,
     sweep_workers: usize,
+    read_timeout: Duration,
+    idle_timeout: Duration,
+    retry_limit: u32,
+    fault_plan: Option<Arc<FaultPlan>>,
     /// Read-half clones of live connections, for EOF-ing idle readers at
     /// join time.
     conns: Mutex<Vec<TcpStream>>,
@@ -98,17 +132,31 @@ impl Server {
         let shared = Arc::new(Shared {
             registry,
             batcher: Batcher::new(config.batch_window),
-            tenants: TenantTable::new(config.default_tenant_cap, &config.tenant_caps),
+            tenants: TenantTable::new(config.default_tenant_cap, &config.tenant_caps)
+                .with_retry_budget(config.retry_budget_per_tenant),
             stats: ServeStats::default(),
             shutdown: AtomicBool::new(false),
             sweep_workers: config.sweep_workers.max(1),
+            read_timeout: config.read_timeout.max(Duration::from_millis(1)),
+            idle_timeout: config.idle_timeout,
+            retry_limit: config.retry_limit,
+            fault_plan: config.fault_plan.clone(),
             conns: Mutex::new(Vec::new()),
         });
         let dispatch = {
             let shared = shared.clone();
             std::thread::spawn(move || {
                 while let Some((key, items)) = shared.batcher.next_ready() {
-                    execute_batch(&shared, &key, items);
+                    // The dispatcher outlives any single batch: a panic
+                    // escaping every inner fence drops that batch (its
+                    // clients get typed dropped-query responses when the
+                    // reply senders drop) but the daemon keeps serving.
+                    let fenced = catch_unwind(AssertUnwindSafe(|| {
+                        execute_batch(&shared, &key, items);
+                    }));
+                    if fenced.is_err() {
+                        shared.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             })
         };
@@ -122,12 +170,12 @@ impl Server {
                         Ok((stream, _peer)) => {
                             let _ = stream.set_nonblocking(false);
                             if let Ok(clone) = stream.try_clone() {
-                                shared.conns.lock().unwrap().push(clone);
+                                lock_recover(&shared.conns).push(clone);
                             }
                             let shared = shared.clone();
                             let handler =
                                 std::thread::spawn(move || handle_connection(shared, stream));
-                            handlers.lock().unwrap().push(handler);
+                            lock_recover(&handlers).push(handler);
                         }
                         // nonblocking accept: poll so the shutdown flag
                         // is observed within ~10ms
@@ -170,10 +218,10 @@ impl Server {
         }
         // every outcome is delivered; unblock readers idling in
         // read_line (writers flush their queues and follow)
-        for conn in self.shared.conns.lock().unwrap().drain(..) {
+        for conn in lock_recover(&self.shared.conns).drain(..) {
             let _ = conn.shutdown(Shutdown::Read);
         }
-        let handlers = std::mem::take(&mut *self.handlers.lock().unwrap());
+        let handlers = std::mem::take(&mut *lock_recover(&self.handlers));
         for h in handlers {
             h.join().map_err(|_| anyhow::anyhow!("connection handler panicked"))?;
         }
@@ -196,23 +244,59 @@ enum Deliver {
 
 fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     let Ok(write_half) = stream.try_clone() else { return };
+    // Bounded reads: a silent or dead client wakes the reader every
+    // `read_timeout` so it can observe shutdown, and after `idle_timeout`
+    // of continuous silence the connection is reaped — a client that
+    // died without closing its socket no longer pins a reader thread
+    // forever.
+    let _ = stream.set_read_timeout(Some(shared.read_timeout));
     let (tx, rx) = mpsc::channel::<Deliver>();
     let writer_shared = shared.clone();
     let writer = std::thread::spawn(move || write_responses(&writer_shared, write_half, rx));
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let mut idle = Duration::ZERO;
     loop {
-        line.clear();
         match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        if tx.send(dispatch_request(&shared, trimmed)).is_err() {
-            break;
+            Ok(0) => break,
+            Ok(_) => {
+                idle = Duration::ZERO;
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    // Fence the request: an injected panic in admission
+                    // (e.g. a `panic@compile` fault rule) becomes a typed
+                    // response instead of a dead connection.
+                    let deliver =
+                        match catch_unwind(AssertUnwindSafe(|| dispatch_request(&shared, trimmed)))
+                        {
+                            Ok(deliver) => deliver,
+                            Err(payload) => {
+                                shared.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+                                let msg = format!(
+                                    "request handling panicked: {}",
+                                    faults::panic_message(payload.as_ref())
+                                );
+                                Deliver::Now(wire::encode_error(&RejectKind::ExecFailed, &msg))
+                            }
+                        };
+                    if tx.send(deliver).is_err() {
+                        break;
+                    }
+                }
+                line.clear();
+            }
+            // A timed-out read is an idle tick, not an error. Any bytes
+            // of a partial line already read stay accumulated in `line`.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                idle += shared.read_timeout;
+                if idle >= shared.idle_timeout {
+                    break;
+                }
+            }
+            Err(_) => break,
         }
     }
     drop(tx);
@@ -248,6 +332,14 @@ fn admit_query(shared: &Arc<Shared>, q: Box<QueryRequest>) -> Deliver {
     if !shared.registry.is_registered(&q.graph) {
         return reject(RejectKind::UnknownGraph, format!("no graph registered as {:?}", q.graph));
     }
+    // The compile fault seam, keyed by algorithm name — a
+    // `compile_fail@compile#wcc` rule turns every wcc admission into a
+    // typed compile reject while other algorithms stay clean.
+    if let Some(plan) = &shared.fault_plan {
+        if let Err(fault) = plan.trip(Seam::Compile, token_of_name(&q.algo)) {
+            return reject(RejectKind::CompileFailed, format!("{fault} (algo {:?})", q.algo));
+        }
+    }
     let pipeline = match shared.registry.pipeline(&q.algo) {
         Ok(p) => p,
         Err(None) => {
@@ -274,9 +366,19 @@ fn admit_query(shared: &Arc<Shared>, q: Box<QueryRequest>) -> Deliver {
         opts.direction = direction;
     }
     opts.max_supersteps = q.max_supersteps;
+    // The deadline clock starts at admission, so queue time spends the
+    // budget too — a query that waited its whole budget out in the
+    // batcher fails typed before a single superstep runs.
+    if let Some(us) = q.deadline_us {
+        opts = opts.with_deadline(Deadline::in_duration(Duration::from_micros(us)));
+    }
+    if let Some(plan) = &shared.fault_plan {
+        opts = opts.with_faults(plan.clone());
+    }
     let enqueued = Instant::now();
     let (outcome_tx, outcome_rx) = mpsc::channel();
-    let pending = Pending { opts, permit, enqueued, reply: outcome_tx };
+    let pending =
+        Pending { opts, tenant: q.tenant.clone(), permit, enqueued, reply: outcome_tx };
     let key = BindingKey { graph: q.graph.clone(), algo: q.algo.clone() };
     match shared.batcher.submit(key, pending) {
         Ok(()) => Deliver::Wait { request: q, enqueued, outcome_rx },
@@ -284,19 +386,21 @@ fn admit_query(shared: &Arc<Shared>, q: Box<QueryRequest>) -> Deliver {
     }
 }
 
-/// The dispatcher's body: resolve the binding, run one sweep for the
-/// whole batch, and send every query its outcome. A failing sweep falls
-/// back to serial execution so each query gets its *own* report or
-/// error.
+/// The dispatcher's body: resolve the binding, run one **isolated**
+/// sweep for the whole batch (per-query panic fences — one poisoned
+/// query fails alone, its siblings' reports stay bit-identical to a
+/// fault-free sweep), retry transient failures with deterministic
+/// backoff under the tenant's retry budget, and send every query its
+/// own outcome.
 fn execute_batch(shared: &Arc<Shared>, key: &BindingKey, items: Vec<Pending>) {
     let dispatch = Instant::now();
     let batch_size = items.len();
     shared.stats.record_batch(batch_size);
-    let fail = |items: Vec<Pending>, msg: String| {
+    let fail_all = |items: Vec<Pending>, failure: QueryFailure| {
         let service = dispatch.elapsed();
         for p in items {
             let outcome = BatchOutcome {
-                result: Err(msg.clone()),
+                result: Err(failure.clone()),
                 queue: dispatch.duration_since(p.enqueued),
                 service,
                 batch_size,
@@ -304,50 +408,129 @@ fn execute_batch(shared: &Arc<Shared>, key: &BindingKey, items: Vec<Pending>) {
             let _ = p.reply.send(outcome);
         }
     };
+    let batch_failure = |message: String| QueryFailure::Error { message, transient: false };
     let graph = match shared.registry.graph(&key.graph) {
         Ok(g) => g,
         Err(e) => {
             let msg = e.unwrap_or_else(|| format!("no graph registered as {:?}", key.graph));
-            return fail(items, msg);
+            return fail_all(items, batch_failure(msg));
         }
     };
     let pipeline = match shared.registry.pipeline(&key.algo) {
         Ok(p) => p,
         Err(e) => {
             let msg = e.unwrap_or_else(|| format!("no algorithm named {:?}", key.algo));
-            return fail(items, msg);
+            return fail_all(items, batch_failure(msg));
         }
     };
     let bound = match pipeline.bind(graph) {
         Ok(b) => b,
-        Err(e) => return fail(items, format!("{e:#}")),
+        Err(e) => return fail_all(items, batch_failure(format!("{e:#}"))),
     };
     let queries: Vec<RunOptions> = items.iter().map(|p| p.opts.clone()).collect();
-    match bound.run_batch_parallel(&queries, shared.sweep_workers) {
-        Ok(reports) => {
-            let service = dispatch.elapsed();
-            for (p, report) in items.into_iter().zip(reports) {
-                let outcome = BatchOutcome {
-                    result: Ok(report),
-                    queue: dispatch.duration_since(p.enqueued),
-                    service,
-                    batch_size,
-                };
-                let _ = p.reply.send(outcome);
-            }
+    // The isolated sweep already fences each query; this outer fence
+    // covers the sweep *scaffolding* (worker spawn, merge). If it trips,
+    // fall back to one-by-one execution — and when a query's fallback
+    // fails too, its response carries BOTH causes, the per-query error
+    // and the original sweep failure, so neither is lost.
+    let mut outcomes = match catch_unwind(AssertUnwindSafe(|| {
+        bound.run_batch_isolated(&queries, shared.sweep_workers)
+    })) {
+        Ok(outcomes) => outcomes,
+        Err(payload) => {
+            shared.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+            let sweep_cause = faults::panic_message(payload.as_ref());
+            queries
+                .iter()
+                .map(|opts| match catch_unwind(AssertUnwindSafe(|| bound.query(opts))) {
+                    Ok(Ok(report)) => Ok(report),
+                    Ok(Err(err)) => {
+                        Err(attach_sweep_cause(QueryFailure::classify(err), &sweep_cause))
+                    }
+                    Err(p) => {
+                        shared.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+                        Err(attach_sweep_cause(
+                            QueryFailure::Panicked(faults::panic_message(p.as_ref())),
+                            &sweep_cause,
+                        ))
+                    }
+                })
+                .collect()
         }
-        Err(_) => {
-            for p in items {
-                let result = bound.query(&p.opts).map_err(|e| format!("{e:#}"));
-                let outcome = BatchOutcome {
-                    result,
-                    queue: dispatch.duration_since(p.enqueued),
-                    service: dispatch.elapsed(),
-                    batch_size,
-                };
-                let _ = p.reply.send(outcome);
+    };
+    // Deterministic retry: transient failures re-run attempt-keyed (so
+    // injected attempt-0 faults clear on the retry) after a seeded
+    // exponential backoff, each retry spending one unit of the tenant's
+    // budget. Deadline expiries are never retried — the budget is spent.
+    let seed = shared.fault_plan.as_ref().map(|p| p.seed()).unwrap_or(0);
+    for (i, outcome) in outcomes.iter_mut().enumerate() {
+        let mut attempt: u32 = 1;
+        loop {
+            let failure = match outcome {
+                Ok(_) => break,
+                Err(f) => f.clone(),
+            };
+            observe_failure(&shared.stats, &failure);
+            if !failure.transient() || attempt > shared.retry_limit {
+                if failure.transient() {
+                    shared.stats.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
             }
+            if !shared.tenants.try_spend_retry(&items[i].tenant) {
+                shared.stats.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            shared.stats.retries_attempted.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(retry_backoff(seed, queries[i].root, attempt, RETRY_BACKOFF_BASE));
+            let retried =
+                bound.run_batch_isolated(&[queries[i].clone().with_attempt(attempt)], 1);
+            *outcome = retried.into_iter().next().unwrap_or_else(|| {
+                Err(QueryFailure::Error {
+                    message: "retry produced no outcome".into(),
+                    transient: false,
+                })
+            });
+            attempt += 1;
         }
+    }
+    let service = dispatch.elapsed();
+    for (p, result) in items.into_iter().zip(outcomes) {
+        let outcome = BatchOutcome {
+            result,
+            queue: dispatch.duration_since(p.enqueued),
+            service,
+            batch_size,
+        };
+        let _ = p.reply.send(outcome);
+    }
+}
+
+/// Keep the original whole-sweep failure attached when a query's serial
+/// fallback fails as well — losing the first cause made the old
+/// fallback undiagnosable.
+fn attach_sweep_cause(failure: QueryFailure, sweep_cause: &str) -> QueryFailure {
+    let join = |message: String| format!("{message}; batch sweep also failed: {sweep_cause}");
+    match failure {
+        QueryFailure::Error { message, transient } => {
+            QueryFailure::Error { message: join(message), transient }
+        }
+        QueryFailure::Panicked(message) => QueryFailure::Panicked(join(message)),
+        other => other,
+    }
+}
+
+/// Bump the fault-tolerance counters for one observed failure (each
+/// attempt's failure is observed exactly once, retried or not).
+fn observe_failure(stats: &ServeStats, failure: &QueryFailure) {
+    match failure {
+        QueryFailure::Panicked(_) => {
+            stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+        }
+        QueryFailure::DeadlineExceeded(_) => {
+            stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        }
+        QueryFailure::Error { .. } => {}
     }
 }
 
@@ -398,15 +581,20 @@ fn finish_query(
             ])
             .render()
         }
-        Err(msg) => {
+        Err(failure) => {
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let kind = match failure {
+                QueryFailure::Panicked(_) => RejectKind::WorkerPanicked,
+                QueryFailure::DeadlineExceeded(_) => RejectKind::DeadlineExceeded,
+                QueryFailure::Error { .. } => RejectKind::ExecFailed,
+            };
             Json::Obj(vec![
                 ("ok".into(), Json::Bool(false)),
                 (
                     "error".into(),
                     Json::Obj(vec![
-                        ("kind".into(), Json::Str("exec_failed".into())),
-                        ("message".into(), Json::Str(msg.clone())),
+                        ("kind".into(), Json::Str(kind.code().into())),
+                        ("message".into(), Json::Str(failure.to_string())),
                     ]),
                 ),
                 ("timing".into(), timing_json(&outcome, total)),
@@ -469,6 +657,11 @@ pub fn report_json(report: &RunReport) -> Json {
 /// The `stats` response: rolling latency histograms, batch occupancy,
 /// registry residency/evictions, and per-tenant counters.
 fn stats_response(shared: &Shared) -> String {
+    // mirror the fault plan's injection counter into the stats gauge
+    // before rendering, so `faults_injected` is current at snapshot time
+    if let Some(plan) = &shared.fault_plan {
+        shared.stats.faults_injected.store(plan.injected_total(), Ordering::Relaxed);
+    }
     let mut fields = vec![
         ("ok".to_string(), Json::Bool(true)),
         ("op".to_string(), Json::Str("stats".into())),
@@ -484,6 +677,14 @@ fn stats_response(shared: &Shared) -> String {
     fields.push(("pipelines".into(), Json::Arr(pipelines)));
     fields.push(("tenants".into(), shared.tenants.snapshot()));
     fields.push(("tenant_rejects".into(), Json::Num(shared.tenants.total_rejected() as f64)));
+    fields.push(("retry_budget_per_tenant".into(), Json::Num(shared.tenants.retry_budget() as f64)));
+    fields.push((
+        "fault_plan".into(),
+        match &shared.fault_plan {
+            Some(plan) => Json::Str(plan.source().into()),
+            None => Json::Null,
+        },
+    ));
     fields.push(("draining".into(), Json::Bool(shared.batcher.is_draining())));
     Json::Obj(fields).render()
 }
@@ -521,6 +722,7 @@ pub fn termination_requested() -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::engine::{Session, SessionConfig};
@@ -545,6 +747,7 @@ mod tests {
             direction: None,
             tenant: DEFAULT_TENANT.into(),
             max_supersteps: None,
+            deadline_us: None,
         }
     }
 
@@ -589,6 +792,131 @@ mod tests {
         // the connection survives every reject
         let resp = c.query(&query("er", "bfs", 0)).unwrap();
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn idle_connections_are_reaped_by_the_read_timeout() {
+        let config = ServeConfig {
+            read_timeout: Duration::from_millis(10),
+            idle_timeout: Duration::from_millis(60),
+            ..Default::default()
+        };
+        let server = tiny_server(4, config);
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        // an active request works normally and resets the idle clock
+        let pong = c.ping().unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        // then go silent: the daemon reaps the connection (the reader
+        // thread exits and the socket closes) instead of pinning a
+        // thread on a client that will never speak again
+        let reaped = c.recv();
+        assert!(reaped.is_err(), "the reaped connection must read EOF, got {reaped:?}");
+        // and join() does not hang on the long-dead connection
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn expired_deadlines_reject_typed_with_partial_accounting() {
+        let server = tiny_server(4, ServeConfig::default());
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        let mut q = query("er", "bfs", 1);
+        q.deadline_us = Some(0);
+        let resp = c.query(&q).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let error = resp.get("error").unwrap();
+        assert_eq!(error.get("kind").unwrap().as_str(), Some("deadline_exceeded"));
+        let msg = error.get("message").unwrap().as_str().unwrap();
+        assert!(msg.contains("deadline exceeded after"), "{msg}");
+        // a sane budget on the same connection still serves
+        q.deadline_us = Some(60_000_000);
+        let resp = c.query(&q).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{}", resp.render());
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("deadline_exceeded").unwrap().as_u64(), Some(1));
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn injected_faults_retry_to_success_and_count() {
+        // roots 1 and 2 fault on attempt 0 (a panic and a transfer
+        // error); the retry runs attempt 1, which the plan does not
+        // match, so both queries ultimately succeed
+        let plan = FaultPlan::parse("panic@exec#1;transfer_error@commit#2").unwrap();
+        let config = ServeConfig { fault_plan: Some(Arc::new(plan)), ..Default::default() };
+        let server = tiny_server(4, config);
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        for root in [1, 2] {
+            let resp = c.query(&query("er", "bfs", root)).unwrap();
+            assert_eq!(
+                resp.get("ok").unwrap().as_bool(),
+                Some(true),
+                "root {root} must succeed after its retry: {}",
+                resp.render()
+            );
+        }
+        let stats = c.stats().unwrap();
+        assert!(stats.get("retries_attempted").unwrap().as_u64().unwrap() >= 2);
+        assert!(stats.get("panics_caught").unwrap().as_u64().unwrap() >= 1);
+        assert!(stats.get("faults_injected").unwrap().as_u64().unwrap() >= 2);
+        assert_eq!(stats.get("retries_exhausted").unwrap().as_u64(), Some(0));
+        let tenants = stats.get("tenants").unwrap();
+        let used = tenants.get(DEFAULT_TENANT).unwrap().get("retries_used").unwrap();
+        assert!(used.as_u64().unwrap() >= 2, "retries must spend tenant budget");
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn injected_compile_failures_are_typed_and_keyed_by_algorithm() {
+        let plan = FaultPlan::parse("compile_fail@compile#wcc").unwrap();
+        let config = ServeConfig { fault_plan: Some(Arc::new(plan)), ..Default::default() };
+        let server = tiny_server(4, config);
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        let resp = c.query(&query("er", "wcc", 0)).unwrap();
+        assert_eq!(
+            resp.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("compile_failed"),
+            "{}",
+            resp.render()
+        );
+        // other algorithms on the same daemon are untouched
+        let resp = c.query(&query("er", "bfs", 0)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn exhausted_retry_budgets_surface_the_failure() {
+        // every exec attempt of root 3 faults (bare #3 matches attempt 0
+        // only — use a modulus-free rule keyed to each attempt instead):
+        // attempts 0..=2 are tokens 3, 3+2^32, 3+2^33 — key all three so
+        // the query can never succeed, then give the tenant budget 1
+        let plan = FaultPlan::parse(&format!(
+            "exec_fail@exec#3;exec_fail@exec#{};exec_fail@exec#{}",
+            3u64 + (1u64 << 32),
+            3u64 + (2u64 << 32),
+        ))
+        .unwrap();
+        let config = ServeConfig {
+            fault_plan: Some(Arc::new(plan)),
+            retry_budget_per_tenant: 1,
+            ..Default::default()
+        };
+        let server = tiny_server(4, config);
+        let mut c = ServeClient::connect(server.local_addr()).unwrap();
+        let resp = c.query(&query("er", "bfs", 3)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            resp.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("exec_failed")
+        );
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("retries_attempted").unwrap().as_u64(), Some(1));
+        assert!(stats.get("retries_exhausted").unwrap().as_u64().unwrap() >= 1);
         drop(c);
         server.join().unwrap();
     }

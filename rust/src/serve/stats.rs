@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::lock_recover;
 use super::wire::Json;
 
 /// Octaves of microseconds covered (2^0 .. 2^63 µs — saturates far past
@@ -75,7 +76,7 @@ impl LatencyHistogram {
     /// Record one latency sample.
     pub fn record(&self, latency: Duration) {
         let us = latency.as_micros().min(u64::MAX as u128) as u64;
-        let mut b = self.inner.lock().unwrap();
+        let mut b = lock_recover(&self.inner);
         let idx = bucket_of(us).min(b.counts.len() - 1);
         b.counts[idx] += 1;
         b.total += 1;
@@ -85,13 +86,13 @@ impl LatencyHistogram {
 
     /// Samples recorded.
     pub fn count(&self) -> u64 {
-        self.inner.lock().unwrap().total
+        lock_recover(&self.inner).total
     }
 
     /// The `p`-th percentile (0 < p ≤ 100) in microseconds: the lower
     /// bound of the bucket holding the p-th sample. `None` when empty.
     pub fn percentile_us(&self, p: f64) -> Option<u64> {
-        let b = self.inner.lock().unwrap();
+        let b = lock_recover(&self.inner);
         if b.total == 0 {
             return None;
         }
@@ -108,7 +109,7 @@ impl LatencyHistogram {
 
     /// Mean latency in microseconds (`None` when empty).
     pub fn mean_us(&self) -> Option<f64> {
-        let b = self.inner.lock().unwrap();
+        let b = lock_recover(&self.inner);
         if b.total == 0 {
             None
         } else {
@@ -118,7 +119,7 @@ impl LatencyHistogram {
 
     /// Largest sample in microseconds.
     pub fn max_us(&self) -> u64 {
-        self.inner.lock().unwrap().max_us
+        lock_recover(&self.inner).max_us
     }
 
     /// Histogram summary as a wire JSON object.
@@ -158,6 +159,21 @@ pub struct ServeStats {
     pub served: AtomicU64,
     /// Queries answered with an execution error (post-admission).
     pub errors: AtomicU64,
+    /// Queries that ran out of their wall-clock budget (a subset of
+    /// `errors`, answered with a `deadline_exceeded` reject).
+    pub deadline_exceeded: AtomicU64,
+    /// Transient failures re-run with backoff.
+    pub retries_attempted: AtomicU64,
+    /// Transient failures that exhausted the retry limit or their
+    /// tenant's retry budget and were answered with the failure.
+    pub retries_exhausted: AtomicU64,
+    /// Panics caught by an isolation fence (injected or organic) —
+    /// each one a query that died without taking the daemon with it.
+    pub panics_caught: AtomicU64,
+    /// Faults injected by the active fault plan (a gauge mirrored from
+    /// [`FaultPlan::injected_total`](crate::sched::FaultPlan::injected_total)
+    /// at snapshot time; 0 when no plan is loaded).
+    pub faults_injected: AtomicU64,
 }
 
 impl ServeStats {
@@ -180,9 +196,15 @@ impl ServeStats {
     /// The `stats` response body (everything except registry/tenant
     /// fields, which the server layers in).
     pub fn to_json_fields(&self) -> Vec<(String, Json)> {
+        let counter = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
         vec![
-            ("served".into(), Json::Num(self.served.load(Ordering::Relaxed) as f64)),
-            ("errors".into(), Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("served".into(), counter(&self.served)),
+            ("errors".into(), counter(&self.errors)),
+            ("deadline_exceeded".into(), counter(&self.deadline_exceeded)),
+            ("retries_attempted".into(), counter(&self.retries_attempted)),
+            ("retries_exhausted".into(), counter(&self.retries_exhausted)),
+            ("panics_caught".into(), counter(&self.panics_caught)),
+            ("faults_injected".into(), counter(&self.faults_injected)),
             ("batches".into(), Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
             ("mean_batch_occupancy".into(), Json::Num(self.mean_batch_occupancy())),
             ("max_batch".into(), Json::Num(self.max_batch.load(Ordering::Relaxed) as f64)),
@@ -194,6 +216,7 @@ impl ServeStats {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -257,5 +280,52 @@ mod tests {
         assert_eq!(s.max_batch.load(Ordering::Relaxed), 8);
         let fields = s.to_json_fields();
         assert!(fields.iter().any(|(k, _)| k == "mean_batch_occupancy"));
+    }
+
+    /// Pins the `stats` counter schema (ISSUE 10 satellite): the exact
+    /// key list, in order, including the five fault-tolerance counters —
+    /// a renamed or dropped counter is a wire-protocol break, not a
+    /// refactor.
+    #[test]
+    fn fault_tolerance_counters_pin_the_stats_schema() {
+        let s = ServeStats::default();
+        s.deadline_exceeded.fetch_add(2, Ordering::Relaxed);
+        s.retries_attempted.fetch_add(3, Ordering::Relaxed);
+        s.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+        s.panics_caught.fetch_add(4, Ordering::Relaxed);
+        s.faults_injected.store(9, Ordering::Relaxed);
+        let fields = s.to_json_fields();
+        let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "served",
+                "errors",
+                "deadline_exceeded",
+                "retries_attempted",
+                "retries_exhausted",
+                "panics_caught",
+                "faults_injected",
+                "batches",
+                "mean_batch_occupancy",
+                "max_batch",
+                "queue",
+                "service",
+                "total",
+            ],
+            "the stats schema is pinned — additions go at a deliberate spot, renames are breaks"
+        );
+        let num = |name: &str| {
+            fields
+                .iter()
+                .find(|(k, _)| k == name)
+                .and_then(|(_, v)| v.as_u64())
+                .unwrap_or_else(|| panic!("{name} must render as a number"))
+        };
+        assert_eq!(num("deadline_exceeded"), 2);
+        assert_eq!(num("retries_attempted"), 3);
+        assert_eq!(num("retries_exhausted"), 1);
+        assert_eq!(num("panics_caught"), 4);
+        assert_eq!(num("faults_injected"), 9);
     }
 }

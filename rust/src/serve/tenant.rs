@@ -13,37 +13,75 @@
 //! from admission until its sweep completes and its outcome is handed to
 //! the connection writer — the permit spans the batcher queue and the
 //! sweep, so "in flight" means admitted-but-unanswered.
+//!
+//! Tenants also carry a **retry budget** (ISSUE 10): transient query
+//! failures retry with backoff, but each retry spends one unit of the
+//! tenant's process-lifetime budget — a tenant whose queries fault
+//! persistently (or who aims at a fault-heavy chaos plan) runs dry and
+//! gets its failures surfaced instead of amplifying load, without
+//! dimming another tenant's retries.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::sched::ConcurrencyCap;
 
+use super::lock_recover;
 use super::wire::Json;
+
+/// One tenant's admission state: the in-flight cap plus the retries it
+/// has spent so far.
+struct TenantEntry {
+    cap: Arc<ConcurrencyCap>,
+    retries_used: AtomicU64,
+}
 
 /// Tenant → cap table. Tenants appear on first use with the default
 /// cap unless an explicit cap was configured up front.
 pub struct TenantTable {
     default_cap: usize,
-    tenants: Mutex<HashMap<String, Arc<ConcurrencyCap>>>,
+    retry_budget: u64,
+    tenants: Mutex<HashMap<String, Arc<TenantEntry>>>,
 }
 
 impl TenantTable {
     /// A table admitting up to `default_cap` in-flight queries per
     /// tenant (clamped ≥ 1), with `explicit` per-tenant overrides.
+    /// Every tenant starts with an effectively unlimited retry budget;
+    /// see [`Self::with_retry_budget`].
     pub fn new(default_cap: usize, explicit: &[(String, usize)]) -> Self {
         let mut tenants = HashMap::new();
         for (name, cap) in explicit {
-            tenants.insert(name.clone(), Arc::new(ConcurrencyCap::new(*cap)));
+            let entry = TenantEntry {
+                cap: Arc::new(ConcurrencyCap::new(*cap)),
+                retries_used: AtomicU64::new(0),
+            };
+            tenants.insert(name.clone(), Arc::new(entry));
         }
-        TenantTable { default_cap: default_cap.max(1), tenants: Mutex::new(tenants) }
+        TenantTable {
+            default_cap: default_cap.max(1),
+            retry_budget: u64::MAX,
+            tenants: Mutex::new(tenants),
+        }
     }
 
-    fn cap_of(&self, tenant: &str) -> Arc<ConcurrencyCap> {
-        let mut tenants = self.tenants.lock().unwrap();
+    /// Cap each tenant's process-lifetime retry spend at `budget`.
+    pub fn with_retry_budget(mut self, budget: u64) -> Self {
+        self.retry_budget = budget;
+        self
+    }
+
+    fn entry_of(&self, tenant: &str) -> Arc<TenantEntry> {
+        let mut tenants = lock_recover(&self.tenants);
         tenants
             .entry(tenant.to_string())
-            .or_insert_with(|| Arc::new(ConcurrencyCap::new(self.default_cap)))
+            .or_insert_with(|| {
+                Arc::new(TenantEntry {
+                    cap: Arc::new(ConcurrencyCap::new(self.default_cap)),
+                    retries_used: AtomicU64::new(0),
+                })
+            })
             .clone()
     }
 
@@ -51,26 +89,58 @@ impl TenantTable {
     /// written, or `Err(limit)` when the tenant is at its cap (the
     /// reject also bumps the tenant's rejected counter).
     pub fn admit(&self, tenant: &str) -> Result<TenantPermit, usize> {
-        let cap = self.cap_of(tenant);
-        if cap.try_begin() {
-            Ok(TenantPermit { cap })
+        let entry = self.entry_of(tenant);
+        if entry.cap.try_begin() {
+            Ok(TenantPermit { cap: entry.cap.clone() })
         } else {
-            Err(cap.limit())
+            Err(entry.cap.limit())
         }
     }
 
+    /// Spend one retry from `tenant`'s budget: `true` (and the unit is
+    /// spent) while under budget, `false` once dry — the caller answers
+    /// with the underlying failure instead of re-running. Lock-free on
+    /// the hot path; the CAS loop never over-spends under contention.
+    pub fn try_spend_retry(&self, tenant: &str) -> bool {
+        let entry = self.entry_of(tenant);
+        let mut used = entry.retries_used.load(Ordering::Relaxed);
+        loop {
+            if used >= self.retry_budget {
+                return false;
+            }
+            match entry.retries_used.compare_exchange_weak(
+                used,
+                used + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => used = actual,
+            }
+        }
+    }
+
+    /// The configured per-tenant retry budget.
+    pub fn retry_budget(&self) -> u64 {
+        self.retry_budget
+    }
+
     /// Per-tenant counters for the `stats` op, sorted by tenant name:
-    /// `{tenant: {cap, inflight, peak_inflight, rejected}}`.
+    /// `{tenant: {cap, inflight, peak_inflight, rejected, retries_used}}`.
     pub fn snapshot(&self) -> Json {
-        let tenants = self.tenants.lock().unwrap();
+        let tenants = lock_recover(&self.tenants);
         let mut rows: Vec<(String, Json)> = tenants
             .iter()
-            .map(|(name, cap)| {
+            .map(|(name, entry)| {
                 let row = Json::Obj(vec![
-                    ("cap".into(), Json::Num(cap.limit() as f64)),
-                    ("inflight".into(), Json::Num(cap.inflight() as f64)),
-                    ("peak_inflight".into(), Json::Num(cap.peak_inflight() as f64)),
-                    ("rejected".into(), Json::Num(cap.rejected() as f64)),
+                    ("cap".into(), Json::Num(entry.cap.limit() as f64)),
+                    ("inflight".into(), Json::Num(entry.cap.inflight() as f64)),
+                    ("peak_inflight".into(), Json::Num(entry.cap.peak_inflight() as f64)),
+                    ("rejected".into(), Json::Num(entry.cap.rejected() as f64)),
+                    (
+                        "retries_used".into(),
+                        Json::Num(entry.retries_used.load(Ordering::Relaxed) as f64),
+                    ),
                 ]);
                 (name.clone(), row)
             })
@@ -81,7 +151,7 @@ impl TenantTable {
 
     /// Total rejects across all tenants.
     pub fn total_rejected(&self) -> u64 {
-        self.tenants.lock().unwrap().values().map(|c| c.rejected()).sum()
+        lock_recover(&self.tenants).values().map(|e| e.cap.rejected()).sum()
     }
 }
 
@@ -98,6 +168,7 @@ impl Drop for TenantPermit {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -133,5 +204,20 @@ mod tests {
         assert_eq!(t1.get("inflight").unwrap().as_u64(), Some(1));
         assert_eq!(t1.get("cap").unwrap().as_u64(), Some(1));
         assert_eq!(t1.get("rejected").unwrap().as_u64(), Some(1));
+        assert_eq!(t1.get("retries_used").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn retry_budgets_are_per_tenant_and_run_dry() {
+        let table = TenantTable::new(4, &[]).with_retry_budget(2);
+        assert_eq!(table.retry_budget(), 2);
+        assert!(table.try_spend_retry("alice"));
+        assert!(table.try_spend_retry("alice"));
+        assert!(!table.try_spend_retry("alice"), "the third retry is over budget");
+        // bob's budget is his own
+        assert!(table.try_spend_retry("bob"));
+        let snap = table.snapshot();
+        assert_eq!(snap.get("alice").unwrap().get("retries_used").unwrap().as_u64(), Some(2));
+        assert_eq!(snap.get("bob").unwrap().get("retries_used").unwrap().as_u64(), Some(1));
     }
 }

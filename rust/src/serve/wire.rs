@@ -316,7 +316,9 @@ impl Parser<'_> {
                     // sequence is valid — copy it wholesale
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("invalid utf-8"));
+                    };
                     out.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -393,6 +395,14 @@ pub enum RejectKind {
     TenantOverCap,
     /// The daemon is draining; no new queries are admitted.
     Draining,
+    /// The query ran and failed (engine error; retries, if any, are
+    /// already spent).
+    ExecFailed,
+    /// The query's `deadline_us` budget expired before it finished.
+    DeadlineExceeded,
+    /// A shard worker panicked mid-query; the query failed typed while
+    /// its sweep siblings were untouched.
+    WorkerPanicked,
 }
 
 impl RejectKind {
@@ -404,6 +414,9 @@ impl RejectKind {
             RejectKind::CompileFailed => "compile_failed",
             RejectKind::TenantOverCap => "tenant_over_cap",
             RejectKind::Draining => "draining",
+            RejectKind::ExecFailed => "exec_failed",
+            RejectKind::DeadlineExceeded => "deadline_exceeded",
+            RejectKind::WorkerPanicked => "worker_panicked",
         }
     }
 }
@@ -423,6 +436,10 @@ pub struct QueryRequest {
     pub direction: Option<DirectionPolicy>,
     pub tenant: String,
     pub max_supersteps: Option<u32>,
+    /// Wall-clock budget in microseconds; expiry earns a typed
+    /// `deadline_exceeded` reject with partial accounting. `None` = no
+    /// deadline.
+    pub deadline_us: Option<u64>,
 }
 
 impl QueryRequest {
@@ -452,6 +469,9 @@ impl QueryRequest {
         }
         if let Some(cap) = self.max_supersteps {
             fields.push(("max_supersteps".to_string(), Json::Num(cap as f64)));
+        }
+        if let Some(us) = self.deadline_us {
+            fields.push(("deadline_us".to_string(), Json::Num(us as f64)));
         }
         Json::Obj(fields).render()
     }
@@ -536,6 +556,10 @@ impl Request {
                             as u32,
                     ),
                 };
+                let deadline_us = match doc.get("deadline_us") {
+                    None => None,
+                    Some(v) => Some(v.as_u64().ok_or("\"deadline_us\" must be a u64")?),
+                };
                 Ok(Request::Query(Box::new(QueryRequest {
                     graph,
                     algo,
@@ -544,6 +568,7 @@ impl Request {
                     direction,
                     tenant,
                     max_supersteps,
+                    deadline_us,
                 })))
             }
             other => Err(format!("unknown op {other:?} (query|stats|ping|shutdown)")),
@@ -576,6 +601,7 @@ pub fn encode_ack(op: &str) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -635,6 +661,7 @@ mod tests {
         assert!(q.params.is_empty());
         assert_eq!(q.direction, None);
         assert_eq!(q.max_supersteps, None);
+        assert_eq!(q.deadline_us, None);
     }
 
     #[test]
@@ -647,6 +674,7 @@ mod tests {
             direction: Some(DirectionPolicy::PushOnly),
             tenant: "alice".into(),
             max_supersteps: Some(64),
+            deadline_us: Some(250_000),
         };
         let Request::Query(back) = Request::decode(&q.encode()).unwrap() else {
             panic!("expected query");
@@ -666,6 +694,9 @@ mod tests {
     #[test]
     fn reject_kinds_have_stable_codes() {
         assert_eq!(RejectKind::TenantOverCap.code(), "tenant_over_cap");
+        assert_eq!(RejectKind::ExecFailed.code(), "exec_failed");
+        assert_eq!(RejectKind::DeadlineExceeded.code(), "deadline_exceeded");
+        assert_eq!(RejectKind::WorkerPanicked.code(), "worker_panicked");
         let line = encode_error(&RejectKind::TenantOverCap, "tenant \"t\" at cap 2");
         let doc = Json::parse(&line).unwrap();
         assert_eq!(doc.get("ok").unwrap().as_bool(), Some(false));

@@ -1,0 +1,222 @@
+//! Chaos acceptance for the fault-tolerant query core (ISSUE 10): a
+//! 256-query multi-tenant sweep through a real TCP socket against a
+//! daemon armed with a deterministic fault plan. The plan injects
+//! panics, transfer errors, and compile failures; extra queries carry
+//! already-expired deadlines. The contract:
+//!
+//! * every query unaffected by a fault answers `ok:true` with a report
+//!   **bit-identical** to the same query against a fault-free daemon
+//!   (transient-faulted queries retry to success and must match too —
+//!   the modeled numbers are attempt-independent);
+//! * faulted queries earn *typed* rejects (`deadline_exceeded`,
+//!   `compile_failed`), never a dead daemon or a hung connection;
+//! * the stats counters prove the harness actually fired;
+//! * drain-then-join completes while the plan is still injecting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jgraph::engine::{Session, SessionConfig};
+use jgraph::graph::generate;
+use jgraph::sched::FaultPlan;
+use jgraph::serve::wire::{Json, QueryRequest};
+use jgraph::serve::{ServeClient, ServeConfig, ServeRegistry, Server};
+
+const VERTICES: usize = 512;
+const N: u32 = 256;
+const TENANTS: [&str; 4] = ["t0", "t1", "t2", "t3"];
+
+/// Six transient faults (attempt-0-keyed, so one retry clears each:
+/// `exec` tokens and `commit` tokens are both `root | attempt << 32`)
+/// plus a compile failure keyed to the `wcc` algorithm. With the three
+/// expired-deadline queries below, that is >= 8 injected faults across
+/// four classes: panic, exec/transfer error, compile failure, deadline.
+const PLAN: &str = "seed=11;panic@exec#5;exec_fail@exec#23;transfer_error@commit#57;\
+                    exec_fail@exec#91;panic@exec#133;transfer_error@commit#171;\
+                    compile_fail@compile#wcc";
+
+fn start_server(fault_plan: Option<Arc<FaultPlan>>) -> Server {
+    let session = Session::new(SessionConfig { use_xla: false, ..Default::default() });
+    let registry = Arc::new(ServeRegistry::new(session, 4));
+    registry.register_edges("er", generate::erdos_renyi(VERTICES, 4_096, 13));
+    let config = ServeConfig {
+        batch_window: Duration::from_millis(2),
+        fault_plan,
+        ..Default::default()
+    };
+    Server::start(config, registry).unwrap()
+}
+
+fn request(algo: &str, root: u32, tenant: &str) -> QueryRequest {
+    QueryRequest {
+        graph: "er".into(),
+        algo: algo.into(),
+        root,
+        params: Vec::new(),
+        direction: None,
+        tenant: tenant.into(),
+        max_supersteps: None,
+        deadline_us: None,
+    }
+}
+
+/// Drive the canonical multi-tenant sweep — roots `0..N`, tenant by
+/// `root % 4`, one pipelined connection per tenant — and hand back every
+/// report in root order.
+fn run_sweep(server: &Server) -> Vec<Json> {
+    let mut clients: Vec<ServeClient> = TENANTS
+        .iter()
+        .map(|_| ServeClient::connect(server.local_addr()).unwrap())
+        .collect();
+    let mut per_client: Vec<Vec<u32>> = vec![Vec::new(); TENANTS.len()];
+    for root in 0..N {
+        let t = (root as usize) % TENANTS.len();
+        clients[t].send_query(&request("bfs", root, TENANTS[t])).unwrap();
+        per_client[t].push(root);
+    }
+    let mut reports: Vec<Option<Json>> = (0..N).map(|_| None).collect();
+    for (t, client) in clients.iter_mut().enumerate() {
+        for &root in &per_client[t] {
+            let resp = client.recv().unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "root {root} (tenant {}) failed: {}",
+                TENANTS[t],
+                resp.render()
+            );
+            reports[root as usize] = Some(resp.get("report").unwrap().clone());
+        }
+    }
+    reports.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Modeled (wall-clock-independent) report fields, two wire answers
+/// compared bit for bit — f64s via `to_bits`, so "close" is a failure.
+fn assert_reports_identical(chaos: &Json, baseline: &Json, what: &str) {
+    for key in [
+        "num_vertices",
+        "num_edges",
+        "supersteps",
+        "push_supersteps",
+        "pull_supersteps",
+        "edges_traversed",
+        "shards",
+        "auto_shards",
+        "crossing_msgs",
+        "hdl_lines",
+        "total_cycles",
+    ] {
+        let get = |j: &Json| {
+            j.get(key)
+                .and_then(|v| v.as_u64())
+                .unwrap_or_else(|| panic!("{what}: missing numeric field {key}"))
+        };
+        assert_eq!(get(chaos), get(baseline), "{what}: {key} diverged under faults");
+    }
+    for key in ["query_seconds", "transfer_seconds", "exchange_seconds", "simulated_mteps"] {
+        let get = |j: &Json| {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("{what}: missing float field {key}"))
+        };
+        assert_eq!(
+            get(chaos).to_bits(),
+            get(baseline).to_bits(),
+            "{what}: {key} must be bit-identical under faults"
+        );
+    }
+}
+
+#[test]
+fn chaos_sweep_is_bit_identical_and_the_daemon_survives() {
+    // ---- baseline: the same 256 queries with no plan armed ----------
+    let clean = start_server(None);
+    let baseline = run_sweep(&clean);
+    let mut c = ServeClient::connect(clean.local_addr()).unwrap();
+    c.shutdown().unwrap();
+    drop(c);
+    clean.join().unwrap();
+
+    // ---- chaos: same sweep, plan armed ------------------------------
+    let plan = Arc::new(FaultPlan::parse(PLAN).unwrap());
+    let server = start_server(Some(plan.clone()));
+    let reports = run_sweep(&server);
+    for (root, (chaos, base)) in reports.iter().zip(&baseline).enumerate() {
+        assert_reports_identical(chaos, base, &format!("root {root}"));
+    }
+
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+
+    // expired deadlines: typed reject, partial accounting in the message
+    for root in [300u32, 301, 302] {
+        let mut q = request("bfs", root, "deadliner");
+        q.deadline_us = Some(0);
+        let resp = c.query(&q).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false), "{}", resp.render());
+        let err = resp.get("error").unwrap();
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("deadline_exceeded"));
+        assert!(
+            err.get("message").unwrap().as_str().unwrap().contains("deadline exceeded after"),
+            "the reject reports how far the query got: {}",
+            resp.render()
+        );
+    }
+
+    // injected compile failures: typed, keyed by algorithm, bfs unharmed
+    for root in 0..3u32 {
+        let resp = c.query(&request("wcc", root, "compiler")).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false), "{}", resp.render());
+        assert_eq!(
+            resp.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("compile_failed"),
+            "{}",
+            resp.render()
+        );
+    }
+
+    // the counters prove the harness fired and retries absorbed it all
+    let stats = c.stats().unwrap();
+    let n = |key: &str| {
+        stats
+            .get(key)
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("stats missing {key}: {}", stats.render()))
+    };
+    assert_eq!(n("served"), N as u64, "every sweep query was answered ok");
+    assert!(n("faults_injected") >= 8, "plan must have fired: {}", stats.render());
+    assert!(n("retries_attempted") >= 6, "six transient faults retried: {}", stats.render());
+    assert_eq!(n("retries_exhausted"), 0, "attempt-0 faults never exhaust the budget");
+    assert!(n("panics_caught") >= 2, "two injected panics were fenced: {}", stats.render());
+    assert!(n("deadline_exceeded") >= 3, "three expired deadlines: {}", stats.render());
+    assert_eq!(
+        stats.get("fault_plan").unwrap().as_str(),
+        Some(PLAN),
+        "stats names the armed plan"
+    );
+    assert_eq!(plan.injected_total(), n("faults_injected"), "gauge mirrors the plan");
+
+    // ---- drain under active injection -------------------------------
+    // a pipelined burst that re-trips the attempt-0 fault tokens (the
+    // plan is pure in (seam, token), so roots 5 and 23 fault again),
+    // then the shutdown op behind it: everything queued still answers,
+    // then every daemon thread joins.
+    for root in 0..32u32 {
+        c.send_query(&request("bfs", root, "drainer")).unwrap();
+    }
+    c.send_line(r#"{"op":"shutdown"}"#).unwrap();
+    for root in 0..32u32 {
+        let resp = c.recv().unwrap();
+        assert_eq!(
+            resp.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "burst root {root} lost in drain: {}",
+            resp.render()
+        );
+    }
+    let ack = c.recv().unwrap();
+    assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(ack.get("op").unwrap().as_str(), Some("shutdown"));
+    drop(c);
+    server.join().unwrap();
+}

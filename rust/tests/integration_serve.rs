@@ -54,6 +54,7 @@ fn request(graph: &str, algo: &str, root: u32, tenant: &str) -> QueryRequest {
         direction: None,
         tenant: tenant.into(),
         max_supersteps: None,
+        deadline_us: None,
     }
 }
 
